@@ -1,0 +1,37 @@
+//! Quickstart: load the AOT-compiled model and generate text under dense
+//! and FloE-compressed experts.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use floe::config::ExpertMode;
+use floe::engine::{Engine, NoObserver};
+use floe::model::tokenizer::ByteTokenizer;
+
+fn main() -> anyhow::Result<()> {
+    let art = floe::artifacts_dir();
+    println!("loading artifacts from {} ...", art.display());
+    let mut eng = Engine::load(&art)?;
+    let c = eng.cfg().clone();
+    println!(
+        "model: {} — d={} layers={} experts={} (top-{}), vocab {}",
+        c.name, c.d_model, c.n_layers, c.n_experts, c.top_k, c.vocab
+    );
+
+    for (name, mode) in [
+        ("dense fp32", ExpertMode::Dense),
+        ("FloE 70% + INT2 up", ExpertMode::Floe { level: 0.7 }),
+        ("FloE 90% + INT2 up", ExpertMode::Floe { level: 0.9 }),
+    ] {
+        let prompt = b"the capital of albor is ";
+        let t0 = std::time::Instant::now();
+        let out = eng.generate(prompt, 32, mode, 0.0, 0, &mut NoObserver)?;
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "\n[{name}] {:.1} tok/s\n  {}{}",
+            (prompt.len() + out.len()) as f64 / dt,
+            String::from_utf8_lossy(prompt),
+            ByteTokenizer::decode(&out)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,65 @@
+//! Serve + client demo of the line-JSON TCP protocol: spawns the server
+//! with a request cap, then a client thread that sends three requests and
+//! prints the streamed responses.
+//!
+//!   make artifacts && cargo run --release --example serve_chat
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use floe::coordinator::policy::{SystemConfig, SystemKind};
+use floe::server::{serve, ServerOpts};
+
+fn main() -> anyhow::Result<()> {
+    let art = floe::artifacts_dir();
+    let port = 7399u16;
+
+    let client = std::thread::spawn(move || -> anyhow::Result<()> {
+        // wait for the server socket
+        let mut tries = 0;
+        let stream = loop {
+            match TcpStream::connect(("127.0.0.1", port)) {
+                Ok(s) => break s,
+                Err(e) => {
+                    tries += 1;
+                    if tries > 100 {
+                        return Err(e.into());
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(200));
+                }
+            }
+        };
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        for prompt in [
+            "the capital of elim is ",
+            "say crag: ",
+            "7+2=",
+        ] {
+            writeln!(
+                writer,
+                "{{\"prompt\":\"{prompt}\",\"max_tokens\":16,\"temperature\":0.0}}"
+            )?;
+            let mut line = String::new();
+            reader.read_line(&mut line)?;
+            println!("<- {}", line.trim());
+        }
+        Ok(())
+    });
+
+    // server runs on the main thread (PJRT engine is not Send); exits
+    // after one connection's worth of requests
+    let mut system = SystemConfig::new(SystemKind::Floe);
+    system.sparsity = 0.8;
+    serve(
+        &art,
+        ServerOpts {
+            port,
+            system,
+            vram_budget_bytes: 512 * 1024,
+            max_requests: 3,
+        },
+    )?;
+    client.join().unwrap()?;
+    Ok(())
+}

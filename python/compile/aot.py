@@ -1,0 +1,204 @@
+"""AOT entrypoint: train → calibrate → quantize → export → lower to HLO.
+
+`make artifacts` runs this once; Python never runs on the request path.
+HLO *text* (not serialized HloModuleProto) is the interchange format: jax
+≥0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import calibrate as calibrate_mod
+from . import model as model_mod
+from . import train as train_mod
+from .configs import QuantConfig, get_config
+from .export import export_artifacts
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower(fn, *args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def u8(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.uint8)
+
+
+def i32():
+    return jax.ShapeDtypeStruct((), jnp.int32)
+
+
+def lower_all(cfg, qcfg, out_dir: str, batch_sizes=(1, 4)) -> dict:
+    d, f, e_, v = cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.vocab
+    h, hd, s = cfg.n_heads, cfg.head_dim, cfg.max_seq
+    g = qcfg.group_size
+    graphs = {}
+
+    for b in batch_sizes:
+        graphs[f"attn_step_b{b}"] = lower(
+            model_mod.attn_step_fn(cfg),
+            f32(b, d), f32(b, h, s, hd), f32(b, h, s, hd), i32(),
+            f32(d, d), f32(d, d), f32(d, d), f32(d, d),
+            f32(d), f32(d), f32(d, e_))
+        graphs[f"expert_dense_b{b}"] = lower(
+            model_mod.expert_dense_fn(cfg),
+            f32(b, d), f32(d, f), f32(d, f), f32(f, d))
+        graphs[f"expert_sparse_b{b}"] = lower(
+            model_mod.expert_sparse_fn(cfg),
+            f32(b, d), f32(d, f), f32(d, f), f32(f, d), f32())
+        graphs[f"expert_floe_b{b}"] = lower(
+            model_mod.expert_floe_fn(cfg, g),
+            f32(b, d), f32(d, f), u8(d // 4, f), f32(d // g, f),
+            f32(d // g, f), f32(f, d), f32())
+        graphs[f"logits_b{b}"] = lower(
+            model_mod.logits_fn(cfg), f32(b, d), f32(d), f32(d, v))
+
+    # L1 Pallas variants (B=1 hot path) — same math through the fused kernel
+    graphs["expert_sparse_pallas_b1"] = lower(
+        model_mod.expert_sparse_pallas_fn(cfg),
+        f32(1, d), f32(d, f), f32(d, f), f32(f, d), f32())
+    graphs["expert_floe_pallas_b1"] = lower(
+        model_mod.expert_floe_pallas_fn(cfg, g),
+        f32(1, d), f32(d, f), u8(d // 4, f), f32(d // g, f),
+        f32(d // g, f), f32(f, d), f32())
+    # uniform-quant expert (baselines: Mixtral-Offloading INT3/INT2)
+    graphs["expert_q_b1"] = lower(
+        model_mod.expert_dequant_fn(cfg, g),
+        f32(1, d),
+        u8(d, f), f32(d // g, f), f32(d // g, f),
+        u8(d, f), f32(d // g, f), f32(d // g, f),
+        u8(f, d), f32(f // g, d), f32(f // g, d))
+    # intra-expert reuse predictor probe (§3.3.2)
+    graphs["up_probe_b1"] = lower(
+        model_mod.up_probe_fn(cfg, g),
+        f32(1, d), u8(d // 4, f), f32(d // g, f), f32(d // g, f))
+
+    paths = {}
+    for name, text in graphs.items():
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as fh:
+            fh.write(text)
+        paths[name] = os.path.basename(path)
+    return paths
+
+
+def make_test_vectors(params, cfg, qcfg, calib) -> dict:
+    """Deterministic input→output vectors the Rust integration tests check
+    against the compiled HLO executables (oracle = ref.py numerics)."""
+    d, f = cfg.d_model, cfg.d_ff
+    g = qcfg.group_size
+    rng = np.random.default_rng(42)
+    x = rng.standard_normal((1, d)).astype(np.float32)
+    p = {k: np.asarray(v) for k, v in params.items()}
+    wg = p["layer0.wg"][0]
+    wu = p["layer0.wu"][0]
+    wd = p["layer0.wd"][0]
+    qt = calib["up_q"][(0, 0)]
+    t = float(calib["thresholds"]["up"][0][0][2])    # level 0.7
+
+    xd = jnp.asarray(x)
+    dense = np.asarray(ref.dense_expert(xd, wg, wu, wd))
+    sparse = np.asarray(ref.sparse_expert(xd, wg, wu, wd, t))
+    floe = np.asarray(ref.floe_expert(
+        xd, jnp.asarray(wg), jnp.asarray(qt.packed_int2()),
+        jnp.asarray(qt.scale), jnp.asarray(qt.zero), jnp.asarray(wd),
+        t, g))
+    # attention step at pos=0 with zero caches, layer 0 weights
+    kc = np.zeros((1, cfg.n_heads, cfg.max_seq, cfg.head_dim), np.float32)
+    x2, hmid, rl, _, _ = model_mod.attn_step_fn(cfg)(
+        xd, jnp.asarray(kc), jnp.asarray(kc), jnp.int32(0),
+        p["layer0.wq"], p["layer0.wk"], p["layer0.wv"], p["layer0.wo"],
+        p["layer0.norm1"], p["layer0.norm2"], p["layer0.router"])
+    logits = np.asarray(model_mod.logits_fn(cfg)(
+        xd, p["final_norm"], p["lm_head"])[0])
+    return {
+        "x": x.reshape(-1).tolist(),
+        "threshold": t,
+        "expert_dense": dense.reshape(-1).tolist(),
+        "expert_sparse": sparse.reshape(-1).tolist(),
+        "expert_floe": floe.reshape(-1).tolist(),
+        "attn_x2": np.asarray(x2).reshape(-1).tolist(),
+        "attn_hmid": np.asarray(hmid).reshape(-1).tolist(),
+        "attn_router_logits": np.asarray(rl).reshape(-1).tolist(),
+        "logits_head": logits.reshape(-1)[:32].tolist(),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="tiny")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--calib-chunks", type=int, default=4)
+    ap.add_argument("--retrain", action="store_true")
+    a = ap.parse_args()
+
+    cfg = get_config(a.config)
+    qcfg = QuantConfig()
+    os.makedirs(a.out_dir, exist_ok=True)
+    params_path = os.path.join(a.out_dir, f"params_{cfg.name}.npz")
+
+    train_meta = {}
+    if a.retrain or not os.path.exists(params_path):
+        print(f"[aot] training {cfg.name} for {a.steps} steps ...")
+        params, train_meta = train_mod.train(cfg, steps=a.steps)
+        train_mod.save_params(params, params_path, train_meta)
+    else:
+        print(f"[aot] reusing {params_path}")
+        params = train_mod.load_params(params_path)
+
+    print("[aot] calibrating (thresholds, predictors, HQQ INT2) ...")
+    calib = calibrate_mod.calibrate(params, cfg, qcfg,
+                                    n_chunks=a.calib_chunks)
+    print("  inter-predictor hit-rate:",
+          [round(h, 3) for h in calib["predictor"]["hit_rate"]])
+    print("  next-layer cosine sim:   ",
+          [round(s, 3) for s in calib["analysis"]["fig4_cosine_similarity"]])
+    print("  intra-reuse recall:      ",
+          [round(r, 3) for r in calib["analysis"]["fig4_intra_predictor_recall"]])
+
+    print("[aot] exporting weights.bin + manifest.json ...")
+    export_artifacts(a.out_dir, params, cfg, qcfg, calib, train_meta)
+
+    print("[aot] lowering HLO graphs ...")
+    paths = lower_all(cfg, qcfg, a.out_dir)
+    print(f"  wrote {len(paths)} HLO modules")
+
+    tv = make_test_vectors(params, cfg, qcfg, calib)
+    with open(os.path.join(a.out_dir, "testvec.json"), "w") as fh:
+        json.dump(tv, fh)
+    # eval corpus + probe instances for the Rust efficacy experiments
+    from . import corpus as corpus_mod
+    _, eval_data = corpus_mod.train_eval_split()
+    with open(os.path.join(a.out_dir, "eval.txt"), "wb") as fh:
+        fh.write(eval_data)
+    probes = {task: corpus_mod.probe_instances(task, 40, seed=7000 + i)
+              for i, task in enumerate(sorted(corpus_mod.PROBES))}
+    with open(os.path.join(a.out_dir, "probes.json"), "w") as fh:
+        json.dump(probes, fh)
+    with open(os.path.join(a.out_dir, "graphs.json"), "w") as fh:
+        json.dump(paths, fh)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,241 @@
+"""Offline calibration (paper §3.2.1, §3.3) run once at build time.
+
+Produces, from activation traces of the trained model over held-out text:
+
+  * per-(layer, expert, projection) magnitude thresholds at each target
+    sparsity level — paper Eq. (6): t = min{t' : F(t') >= k} with F the
+    empirical CDF of |activation| (projections: up / gate / down, plus
+    CHESS-style per-channel gate thresholds for the baseline);
+  * the inter-expert predictor (§3.3.1): per layer i, a linear probe
+    h_mid(i) -> top-k experts of layer i+1, trained with BCE;
+  * Fig-2/Fig-4 analysis data: activation histograms, next-layer cosine
+    similarity, inter-predictor hit rate, intra-predictor (reuse) recall.
+"""
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .configs import ModelConfig, QuantConfig, SPARSITY_LEVELS
+from .hqq import QuantizedTensor, quantize
+from .model import Params, forward_collect
+from .kernels import ref
+
+
+def collect_traces(params: Params, cfg: ModelConfig, data: bytes,
+                   batch: int = 4, seq: int = 96, n_chunks: int = 4):
+    """Run forward_collect over `n_chunks` batches; concat numpy traces."""
+    arr = np.frombuffer(data, np.uint8).astype(np.int32)
+    fwd = jax.jit(lambda t: forward_collect(params, t, cfg))
+    acc: Dict[str, List] = {}
+    per_tok = batch * seq
+    for c in range(n_chunks):
+        base = c * per_tok
+        tok = np.stack([arr[base + i * seq: base + i * seq + seq]
+                        for i in range(batch)])
+        _, tr = fwd(jnp.asarray(tok))
+        for k, v in tr.items():
+            acc.setdefault(k, [])
+            acc[k].append([np.asarray(x) for x in v])
+    # merge: traces[k][layer] = concat over chunks, flattened over B,S
+    out = {}
+    for k, chunks in acc.items():
+        nl = len(chunks[0])
+        out[k] = [np.concatenate([ch[l].reshape(-1, *ch[l].shape[2:])
+                                  for ch in chunks], axis=0)
+                  for l in range(nl)]
+    return out
+
+
+def _expert_samples(tr, layer: int, key: str, expert: int, cfg: ModelConfig):
+    """|activation| samples of `expert` at `layer` from gathered top-k trace."""
+    a = tr[key][layer]                       # [N, K, f]
+    idx = tr["top_idx"][layer]               # [N, K]
+    sel = (idx == expert)
+    return np.abs(a[sel])                    # [n_sel, f]
+
+
+def thresholds_from_traces(tr, cfg: ModelConfig,
+                           levels=SPARSITY_LEVELS) -> Dict:
+    """Empirical-CDF thresholds per layer/expert/projection/level."""
+    th = {"up": [], "gate": [], "down": [], "chess_gate": []}
+    for l in range(cfg.n_layers):
+        for key, out_key in (("a_up", "up"), ("a_gate", "gate"),
+                             ("a_down", "down")):
+            per_expert = []
+            for e in range(cfg.n_experts):
+                s = _expert_samples(tr, l, key, e, cfg)
+                flat = s.reshape(-1)
+                if flat.size == 0:
+                    per_expert.append([0.0] * len(levels))
+                    continue
+                per_expert.append([float(np.quantile(flat, k)) for k in levels])
+            th[out_key].append(per_expert)
+        # CHESS: per-channel thresholds on the gate activations
+        per_expert_ch = []
+        for e in range(cfg.n_experts):
+            s = _expert_samples(tr, l, "a_gate", e, cfg)   # [n, f]
+            if s.shape[0] == 0:
+                per_expert_ch.append([[0.0] * cfg.d_ff for _ in levels])
+                continue
+            per_expert_ch.append(
+                [np.quantile(s, k, axis=0).astype(float).tolist()
+                 for k in levels])
+        th["chess_gate"].append(per_expert_ch)
+    th["levels"] = list(levels)
+    return th
+
+
+# ------------------------------------------------- inter-expert predictor
+
+def train_inter_predictor(tr, cfg: ModelConfig, steps: int = 300,
+                          lr: float = 0.05, seed: int = 3):
+    """Per layer i in [0, L-2]: linear probe h_mid(i) -> layer i+1 top-k.
+
+    Returns (weights [L-1][d, E], biases [L-1][E], hit_rate per layer).
+    The paper scales predictor capacity with depth (32K..2M params); at our
+    scale a linear probe already reaches the paper's ~0.9 hit-rate regime.
+    """
+    rng = np.random.default_rng(seed)
+    ws, bs, hits = [], [], []
+    for l in range(cfg.n_layers - 1):
+        X = tr["hmid"][l]                                  # [N, d]
+        idx = tr["top_idx"][l + 1]                         # [N, K]
+        Y = np.zeros((X.shape[0], cfg.n_experts), np.float32)
+        np.put_along_axis(Y, idx, 1.0, axis=1)
+        Xj, Yj = jnp.asarray(X), jnp.asarray(Y)
+        w = jnp.asarray(rng.standard_normal((cfg.d_model, cfg.n_experts))
+                        * 0.01, jnp.float32)
+        b = jnp.zeros((cfg.n_experts,), jnp.float32)
+
+        def bce(wb):
+            w, b = wb
+            logits = Xj @ w + b
+            return jnp.mean(jnp.clip(logits, 0) - logits * Yj
+                            + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+        grad = jax.jit(jax.value_and_grad(bce))
+        m = (jnp.zeros_like(w), jnp.zeros_like(b))
+        v = (jnp.zeros_like(w), jnp.zeros_like(b))
+        wb = (w, b)
+        for t in range(1, steps + 1):
+            _, g = grad(wb)
+            m = tuple(0.9 * mi + 0.1 * gi for mi, gi in zip(m, g))
+            v = tuple(0.99 * vi + 0.01 * gi * gi for vi, gi in zip(v, g))
+            wb = tuple(p - lr * (mi / (1 - 0.9 ** t))
+                       / (jnp.sqrt(vi / (1 - 0.99 ** t)) + 1e-8)
+                       for p, mi, vi in zip(wb, m, v))
+        w, b = wb
+        scores = np.asarray(Xj @ w + b)
+        pred = np.argsort(-scores, axis=1)[:, :cfg.top_k]
+        hit = np.mean([len(set(pred[i]) & set(idx[i])) / cfg.top_k
+                       for i in range(len(pred))])
+        ws.append(np.asarray(w))
+        bs.append(np.asarray(b))
+        hits.append(float(hit))
+    return ws, bs, hits
+
+
+# --------------------------------------------------- analysis (Fig 2 / 4)
+
+def cosine_similarity(tr, cfg: ModelConfig) -> List[float]:
+    """Mean cos(h_mid(i), h_mid(i+1)) per layer — paper Fig 4 blue line."""
+    sims = []
+    for l in range(cfg.n_layers - 1):
+        a, b = tr["hmid"][l], tr["hmid"][l + 1]
+        num = np.sum(a * b, axis=1)
+        den = np.linalg.norm(a, axis=1) * np.linalg.norm(b, axis=1) + 1e-9
+        sims.append(float(np.mean(num / den)))
+    return sims
+
+
+def intra_predictor_recall(tr, params: Params, cfg: ModelConfig,
+                           up_q: Dict, qcfg: QuantConfig,
+                           level: float = 0.7,
+                           levels=SPARSITY_LEVELS) -> List[float]:
+    """Recall of the reuse predictor (§3.3.2), per predicted layer i>=1.
+
+    Predicted mask: |h_mid(i-1) · W_up_q(i, e)| >= t(i, e)
+    True mask:      |h_mid(i)   · W_up(i, e)|   >= t(i, e)
+    averaged over tokens and their routed experts.
+    """
+    recalls = []
+    for l in range(1, cfg.n_layers):
+        h_prev = tr["hmid"][l - 1]
+        h_true = tr["hmid"][l]
+        idx = tr["top_idx"][l]
+        wu = np.asarray(params[f"layer{l}.wu"])            # [E, d, f]
+        tot_hit, tot_true = 0, 0
+        for e in range(cfg.n_experts):
+            sel = np.any(idx == e, axis=1)
+            if not sel.any():
+                continue
+            qt: QuantizedTensor = up_q[(l, e)]
+            v_pred = np.abs(h_prev[sel] @ qt.dequant())
+            v_true = np.abs(h_true[sel] @ wu[e])
+            # threshold from the true distribution at `level`
+            tq = np.quantile(v_true, level)
+            pred = v_pred >= tq
+            true = v_true >= tq
+            tot_hit += int(np.logical_and(pred, true).sum())
+            tot_true += int(true.sum())
+        recalls.append(tot_hit / max(tot_true, 1))
+    return recalls
+
+
+def activation_histograms(tr, cfg: ModelConfig, bins: int = 41,
+                          lo: float = -2.0, hi: float = 2.0) -> Dict:
+    """Fig-2 analog: per-layer histograms of gate/up/down activations for
+    the expert with most samples (shallow/middle/deep layers all stored)."""
+    edges = np.linspace(lo, hi, bins + 1)
+    out = {"edges": edges.tolist(), "layers": {}}
+    for l in range(cfg.n_layers):
+        idx = tr["top_idx"][l]
+        e = int(np.bincount(idx.reshape(-1), minlength=cfg.n_experts).argmax())
+        entry = {"expert": e}
+        for key in ("a_gate", "a_up", "a_down"):
+            a = tr[key][l]
+            sel = (idx == e)
+            vals = a[sel].reshape(-1)
+            hist, _ = np.histogram(vals, bins=edges)
+            entry[key] = hist.astype(int).tolist()
+        out["layers"][str(l)] = entry
+    return out
+
+
+def quantize_all_up(params: Params, cfg: ModelConfig,
+                    qcfg: QuantConfig) -> Dict:
+    """HQQ-INT2 quantize every expert's up projection."""
+    up_q = {}
+    for l in range(cfg.n_layers):
+        wu = np.asarray(params[f"layer{l}.wu"])
+        for e in range(cfg.n_experts):
+            up_q[(l, e)] = quantize(wu[e], bits=qcfg.bits, qcfg=qcfg)
+    return up_q
+
+
+def calibrate(params: Params, cfg: ModelConfig, qcfg: QuantConfig,
+              n_chunks: int = 4) -> Dict:
+    """Full calibration pass; returns everything export.py needs."""
+    _, eval_data = corpus.train_eval_split()
+    tr = collect_traces(params, cfg, eval_data, n_chunks=n_chunks)
+    th = thresholds_from_traces(tr, cfg)
+    ws, bs, hits = train_inter_predictor(tr, cfg)
+    up_q = quantize_all_up(params, cfg, qcfg)
+    sims = cosine_similarity(tr, cfg)
+    recalls = intra_predictor_recall(tr, params, cfg, up_q, qcfg)
+    hists = activation_histograms(tr, cfg)
+    return {
+        "thresholds": th,
+        "predictor": {"weights": ws, "biases": bs, "hit_rate": hits},
+        "up_q": up_q,
+        "analysis": {
+            "fig4_cosine_similarity": sims,
+            "fig4_inter_predictor_precision": hits,
+            "fig4_intra_predictor_recall": recalls,
+            "fig2_histograms": hists,
+        },
+    }

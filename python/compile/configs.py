@@ -1,0 +1,75 @@
+"""Model / quantization / calibration configuration shared across the
+compile path (L1 kernels, L2 model, AOT) and exported to the Rust runtime
+through artifacts/manifest.json.
+
+The `tiny` config is the in-repo "small real model": a byte-level
+Mixtral-architecture MoE transformer (SwiGLU experts, top-2 routing, RoPE,
+RMSNorm) trained from scratch by train.py.  `wide` is a second architecture
+used to show the paper's sensitivity claims generalize (paper Appendix D/E).
+"""
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "tiny"
+    vocab: int = 256          # byte-level
+    d_model: int = 64
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 16
+    d_ff: int = 128           # expert intermediate dim (f)
+    n_experts: int = 8
+    top_k: int = 2
+    max_seq: int = 512
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+    # router aux-loss weight (Mixtral-style load balancing)
+    aux_loss_coef: float = 0.02
+
+    def validate(self) -> None:
+        assert self.d_model == self.n_heads * self.head_dim
+        assert self.d_ff % 4 == 0, "int2 packing packs 4 values per byte"
+        assert self.d_model % QuantConfig().group_size == 0 or True
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """HQQ-style group-wise affine quantization of the up projection.
+
+    Weights W_up[d, f] are quantized along the input (d) axis in groups of
+    `group_size`; each (group, column) pair gets a float scale and zero.
+    INT2 values are packed 4-per-byte along d.
+    """
+    bits: int = 2
+    group_size: int = 32
+    # HQQ half-quadratic solver
+    hqq_iters: int = 20
+    hqq_lp_norm: float = 0.7
+    hqq_beta: float = 10.0
+    hqq_kappa: float = 1.01
+
+
+# sparsity levels calibrated offline (paper sweeps 50%..90%)
+SPARSITY_LEVELS = (0.5, 0.6, 0.7, 0.8, 0.9)
+
+CONFIGS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig(),
+    "wide": ModelConfig(
+        name="wide", d_model=64, n_layers=3, n_heads=4, head_dim=16,
+        d_ff=256, n_experts=4, top_k=2,
+    ),
+    # used only by unit tests (fast init, no training)
+    "test": ModelConfig(
+        name="test", d_model=32, n_layers=2, n_heads=2, head_dim=16,
+        d_ff=64, n_experts=4, top_k=2, max_seq=64,
+    ),
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    cfg = CONFIGS[name]
+    cfg.validate()
+    return cfg

@@ -1,0 +1,108 @@
+"""Deterministic synthetic training corpus + probe-task generators.
+
+The paper evaluates on WikiText-2 / C4 / ShareGPT and seven downstream
+tasks.  Those need Mixtral-8x7B; this reproduction trains its own small
+model, so the corpus is synthesized in-repo: English-like template text
+mixed with four *probe tasks* whose completions can be scored exactly:
+
+  arith    "3+4=7."                         (single-digit addition)
+  fact     "the capital of albor is toma."  (fixed synthetic gazetteer)
+  bracket  "([{}])" style balanced strings  (structural prediction)
+  copy     "say bead: bead."                (short-range copying)
+
+Downstream "task accuracy" for the efficacy experiments (paper Fig 9a/10,
+Tables 3-5) = exact-match accuracy of greedy completions on held-out probe
+instances; "perplexity" = bits-per-byte on held-out template text.
+Everything is seeded, so Python and Rust evaluate the same instances.
+"""
+
+from typing import List, Tuple
+
+import numpy as np
+
+SUBJECTS = ["the miller", "a sailor", "the old fox", "my neighbor", "the clerk",
+            "a young scribe", "the gardener", "our captain", "the baker", "a trader"]
+VERBS = ["carried", "found", "mended", "sold", "painted", "borrowed",
+         "buried", "counted", "weighed", "gathered"]
+OBJECTS = ["a copper kettle", "three silver coins", "the torn map", "a bundle of reeds",
+           "the broken oar", "two clay jars", "a sack of grain", "the iron key",
+           "a length of rope", "the small lantern"]
+PLACES = ["by the river", "near the gate", "under the bridge", "at the market",
+          "behind the mill", "on the hill", "in the cellar", "along the shore",
+          "beside the well", "past the orchard"]
+
+# fixed synthetic gazetteer for the `fact` probe
+CITIES = ["albor", "brint", "calor", "doven", "elim", "farro", "gresk", "holm",
+          "ister", "jorvik", "kleth", "lunde", "marn", "nivel", "ostra", "pryne"]
+CAPS = ["toma", "ruke", "sella", "vard", "wenn", "ylva", "zorn", "quil",
+        "pell", "onna", "nim", "moss", "lorn", "kip", "jess", "ivo"]
+
+BRACKET_PAIRS = [("(", ")"), ("[", "]"), ("{", "}")]
+COPY_WORDS = ["bead", "mast", "fern", "grove", "latch", "plume", "crag", "dune",
+              "helm", "inlet", "knoll", "ledge", "marsh", "notch", "prow", "quay"]
+
+
+def _sentence(rng: np.random.Generator) -> str:
+    return (f"{SUBJECTS[rng.integers(len(SUBJECTS))]} "
+            f"{VERBS[rng.integers(len(VERBS))]} "
+            f"{OBJECTS[rng.integers(len(OBJECTS))]} "
+            f"{PLACES[rng.integers(len(PLACES))]}. ")
+
+
+def gen_arith(rng: np.random.Generator) -> Tuple[str, str]:
+    a, b = int(rng.integers(0, 10)), int(rng.integers(0, 10))
+    return f"{a}+{b}=", f"{a + b}."
+
+
+def gen_fact(rng: np.random.Generator) -> Tuple[str, str]:
+    i = int(rng.integers(len(CITIES)))
+    return f"the capital of {CITIES[i]} is ", f"{CAPS[i]}."
+
+
+def gen_bracket(rng: np.random.Generator) -> Tuple[str, str]:
+    """Balanced bracket string; prompt ends mid-way, completion closes it."""
+    depth_types: List[int] = []
+    s = ""
+    for _ in range(int(rng.integers(2, 5))):
+        t = int(rng.integers(3))
+        depth_types.append(t)
+        s += BRACKET_PAIRS[t][0]
+    closing = "".join(BRACKET_PAIRS[t][1] for t in reversed(depth_types))
+    return "match " + s, closing + "."
+
+
+def gen_copy(rng: np.random.Generator) -> Tuple[str, str]:
+    w = COPY_WORDS[rng.integers(len(COPY_WORDS))]
+    return f"say {w}: ", f"{w}."
+
+
+PROBES = {"arith": gen_arith, "fact": gen_fact, "bracket": gen_bracket, "copy": gen_copy}
+
+
+def probe_instances(task: str, n: int, seed: int) -> List[Tuple[str, str]]:
+    rng = np.random.default_rng(seed)
+    return [PROBES[task](rng) for _ in range(n)]
+
+
+def build_corpus(n_bytes: int = 220_000, seed: int = 1234) -> bytes:
+    """Training text: 60% template prose, 40% probe-task lines."""
+    rng = np.random.default_rng(seed)
+    parts: List[str] = []
+    size = 0
+    while size < n_bytes:
+        r = rng.random()
+        if r < 0.6:
+            s = _sentence(rng)
+        else:
+            task = ("arith", "fact", "bracket", "copy")[int(rng.integers(4))]
+            p, c = PROBES[task](rng)
+            s = p + c + " "
+        parts.append(s)
+        size += len(s)
+    return "".join(parts).encode("ascii")
+
+
+def train_eval_split(n_bytes: int = 220_000, seed: int = 1234) -> Tuple[bytes, bytes]:
+    data = build_corpus(n_bytes, seed)
+    cut = int(len(data) * 0.9)
+    return data[:cut], data[cut:]

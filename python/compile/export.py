@@ -1,0 +1,113 @@
+"""Export trained weights + calibration to artifacts/ for the Rust runtime.
+
+Format (DESIGN.md §2): `weights.bin` is a concatenation of raw
+little-endian tensors (f32 or u8), 8-byte aligned; `manifest.json` maps
+tensor names to (dtype, shape, offset, nbytes) and embeds the model config,
+quantization config, thresholds, predictor metadata and analysis blobs.
+Rust parses the JSON with its own in-repo parser (no serde offline).
+"""
+
+import json
+import os
+from typing import Dict, Tuple
+
+import numpy as np
+
+from .configs import ModelConfig, QuantConfig
+from .hqq import QuantizedTensor, quantize
+from .model import Params
+
+UNIFORM_BITS = (8, 4, 3, 2, 1)
+
+
+class BinWriter:
+    def __init__(self):
+        self.buf = bytearray()
+        self.index: Dict[str, dict] = {}
+
+    def add(self, name: str, arr: np.ndarray):
+        assert name not in self.index, name
+        if arr.dtype == np.float32:
+            dtype = "f32"
+        elif arr.dtype == np.uint8:
+            dtype = "u8"
+        elif arr.dtype == np.int32:
+            dtype = "i32"
+        else:
+            raise ValueError(f"{name}: unsupported dtype {arr.dtype}")
+        pad = (-len(self.buf)) % 8
+        self.buf.extend(b"\0" * pad)
+        off = len(self.buf)
+        raw = np.ascontiguousarray(arr).tobytes()
+        self.buf.extend(raw)
+        self.index[name] = {"dtype": dtype, "shape": list(arr.shape),
+                            "offset": off, "nbytes": len(raw)}
+
+
+def _add_quant(w: BinWriter, name: str, qt: QuantizedTensor,
+               packed: bool = False):
+    if packed:
+        w.add(name, qt.packed_int2())
+    else:
+        w.add(name, qt.codes)
+    w.add(name + "_scale", qt.scale)
+    w.add(name + "_zero", qt.zero)
+
+
+def export_artifacts(out_dir: str, params: Params, cfg: ModelConfig,
+                     qcfg: QuantConfig, calib: Dict,
+                     train_meta: Dict = None) -> Tuple[str, str]:
+    w = BinWriter()
+    p = {k: np.asarray(v) for k, v in params.items()}
+
+    w.add("embed", p["embed"])
+    w.add("final_norm", p["final_norm"])
+    w.add("lm_head", p["lm_head"])
+    for l in range(cfg.n_layers):
+        pre = f"layer{l}."
+        for t in ("norm1", "norm2", "wq", "wk", "wv", "wo", "router"):
+            w.add(pre + t, p[pre + t])
+        for e in range(cfg.n_experts):
+            epre = f"{pre}expert{e}."
+            wg, wu, wd = p[pre + "wg"][e], p[pre + "wu"][e], p[pre + "wd"][e]
+            w.add(epre + "wg", wg)
+            w.add(epre + "wu", wu)
+            w.add(epre + "wd", wd)
+            # FloE INT2 up projection (HQQ), 4 codes/byte
+            _add_quant(w, epre + "up_q", calib["up_q"][(l, e)], packed=True)
+            # uniform-quant variants for baselines + Table 7 sweeps
+            for bits in UNIFORM_BITS:
+                for proj, mat in (("wg", wg), ("wu", wu), ("wd", wd)):
+                    qt = quantize(mat, bits=bits, qcfg=qcfg)
+                    _add_quant(w, f"{epre}q{bits}.{proj}", qt)
+    for l, (pw, pb) in enumerate(zip(calib["predictor"]["weights"],
+                                     calib["predictor"]["biases"])):
+        w.add(f"pred{l}.w", pw.astype(np.float32))
+        w.add(f"pred{l}.b", pb.astype(np.float32))
+
+    os.makedirs(out_dir, exist_ok=True)
+    bin_path = os.path.join(out_dir, "weights.bin")
+    with open(bin_path, "wb") as f:
+        f.write(bytes(w.buf))
+
+    manifest = {
+        "config": {
+            "name": cfg.name, "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim, "d_ff": cfg.d_ff,
+            "n_experts": cfg.n_experts, "top_k": cfg.top_k,
+            "max_seq": cfg.max_seq, "rope_theta": cfg.rope_theta,
+            "rms_eps": cfg.rms_eps,
+        },
+        "quant": {"bits": qcfg.bits, "group_size": qcfg.group_size,
+                  "uniform_bits": list(UNIFORM_BITS)},
+        "thresholds": calib["thresholds"],
+        "predictor": {"hit_rate": calib["predictor"]["hit_rate"]},
+        "analysis": calib["analysis"],
+        "train_meta": train_meta or {},
+        "tensors": w.index,
+    }
+    man_path = os.path.join(out_dir, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f)
+    return bin_path, man_path

@@ -1,0 +1,102 @@
+"""Half-Quadratic Quantization (HQQ, Badri & Shaji 2023) — calibration-free
+group-wise affine weight quantization with a proximal solver for the
+zero-point.
+
+The paper quantizes the expert up projection to INT2 with HQQ (§3.2.2) and
+sweeps INT8..INT1 per projection for the sensitivity study (Fig 3b,
+Table 7).  This is a from-scratch JAX/numpy implementation of the official
+`optimize_weights_proximal` loop:
+
+    minimize_{W_e, z}  ||W_e||_p^p + beta/2 ||W_e - (W - W_dq(z))||_2^2
+
+alternating a generalized soft-threshold (shrinkage) on W_e with a
+closed-form zero-point update, beta annealed by kappa each iteration.
+"""
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+from .configs import QuantConfig
+
+
+@dataclasses.dataclass
+class QuantizedTensor:
+    """Group-wise affine quantized matrix (codes in [0, 2^bits - 1]).
+
+    dequant: w[i, j] = (codes[i, j] - zero[i // g, j]) * scale[i // g, j]
+    """
+    codes: np.ndarray       # u8 [d, f]
+    scale: np.ndarray       # f32 [d / g, f]
+    zero: np.ndarray        # f32 [d / g, f]
+    bits: int
+    group_size: int
+
+    def dequant(self) -> np.ndarray:
+        d, f = self.codes.shape
+        g = self.group_size
+        c = self.codes.astype(np.float32).reshape(d // g, g, f)
+        return ((c - self.zero[:, None, :]) * self.scale[:, None, :]
+                ).reshape(d, f)
+
+    def packed_int2(self) -> np.ndarray:
+        """4 codes per byte along the input axis (bits must be 2)."""
+        assert self.bits == 2
+        d, f = self.codes.shape
+        q = self.codes.reshape(d // 4, 4, f).astype(np.uint8)
+        return (q[:, 0] | (q[:, 1] << 2) | (q[:, 2] << 4) | (q[:, 3] << 6))
+
+    def nbytes_transfer(self) -> int:
+        """Bytes moved over PCIe for this tensor (codes at `bits` wide +
+        fp16 scale/zero), matching the paper's compression accounting."""
+        return (self.codes.size * self.bits + 7) // 8 + 2 * 2 * self.scale.size
+
+
+def _shrink_lp(x: np.ndarray, beta: float, p: float) -> np.ndarray:
+    """Generalized soft-threshold: prox of the l_p quasi-norm (0<p<1)."""
+    return np.sign(x) * np.maximum(
+        np.abs(x) - (1.0 / beta) * np.power(np.abs(x) + 1e-8, p - 1.0), 0.0)
+
+
+def quantize(w: np.ndarray, bits: int, qcfg: QuantConfig = QuantConfig()
+             ) -> QuantizedTensor:
+    """HQQ-quantize w[d, f] group-wise along axis 0."""
+    d, f = w.shape
+    g = qcfg.group_size
+    assert d % g == 0, (d, g)
+    wg = w.astype(np.float32).reshape(d // g, g, f)
+    qmax = float(2 ** bits - 1)
+
+    wmin = wg.min(axis=1, keepdims=True)                    # [d/g, 1, f]
+    wmax = wg.max(axis=1, keepdims=True)
+    rng = np.maximum(wmax - wmin, 1e-8)
+    s = qmax / rng                                          # quant scale
+    z = -wmin * s                                           # zero point
+
+    beta = qcfg.hqq_beta
+    best_err = np.inf
+    best = None
+    for _ in range(qcfg.hqq_iters):
+        q = np.clip(np.round(wg * s + z), 0, qmax)
+        w_r = (q - z) / s
+        w_e = _shrink_lp(wg - w_r, beta, qcfg.hqq_lp_norm)
+        z = np.mean(q - (wg - w_e) * s, axis=1, keepdims=True)
+        beta *= qcfg.hqq_kappa
+        err = float(np.mean(np.abs(wg - w_r) ** qcfg.hqq_lp_norm))
+        if err < best_err:
+            best_err = err
+            best = (q.copy(), s.copy(), z.copy())
+    q, s, z = best
+    return QuantizedTensor(
+        codes=q.reshape(d, f).astype(np.uint8),
+        scale=(1.0 / s).reshape(d // g, f).astype(np.float32),
+        zero=z.repeat(1, axis=1).reshape(d // g, f).astype(np.float32),
+        bits=bits, group_size=g)
+
+
+def quant_error(w: np.ndarray, qt: QuantizedTensor) -> Tuple[float, float]:
+    """(relative fro error, max abs error) of the dequantized matrix."""
+    dq = qt.dequant()
+    rel = float(np.linalg.norm(dq - w) / (np.linalg.norm(w) + 1e-12))
+    return rel, float(np.abs(dq - w).max())

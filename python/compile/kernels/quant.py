@@ -1,0 +1,85 @@
+"""Pallas kernels for INT2 group-wise dequantization (HQQ weight layout).
+
+The intra-expert reuse predictor (paper §3.3.2) multiplies the *previous*
+layer's hidden state with the next layer's VRAM-resident INT2 up projection
+to precompute the channel mask.  That multiply is this kernel: a fused
+unpack→dequant→GEMV, tiled over the output (f) dimension so each grid step
+stages one [d/4, F_T] packed tile in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _int2_matmul_kernel(group_size, x_ref, up_ref, sc_ref, zp_ref, o_ref):
+    x = x_ref[...]                        # [B, d]
+    packed = up_ref[...]                  # u8 [d/4, F_T]
+    parts = [(packed >> s) & 3 for s in (0, 2, 4, 6)]
+    codes = jnp.stack(parts, axis=1)      # [d/4, 4, F_T]
+    d4, _, ft = codes.shape
+    codes = codes.reshape(d4 * 4, ft).astype(jnp.float32)
+    d = d4 * 4
+    g = group_size
+    w = ((codes.reshape(d // g, g, ft) - zp_ref[...][:, None, :])
+         * sc_ref[...][:, None, :]).reshape(d, ft)
+    o_ref[...] = x @ w
+
+
+def int2_matmul_pallas(x, packed, scale, zero, *, group_size: int = 32,
+                       block_f: int = 32):
+    """x[B, d] @ dequant(packed u8[d/4, f]) with per-(group, column) affine."""
+    b, d = x.shape
+    f = packed.shape[1]
+    assert f % block_f == 0
+    grid = (f // block_f,)
+    kern = functools.partial(_int2_matmul_kernel, group_size)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, d), lambda j: (0, 0)),
+            pl.BlockSpec((d // 4, block_f), lambda j: (0, j)),
+            pl.BlockSpec((d // group_size, block_f), lambda j: (0, j)),
+            pl.BlockSpec((d // group_size, block_f), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((b, block_f), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, f), x.dtype),
+        interpret=True,
+    )(x, packed, scale, zero)
+
+
+def _dequant_kernel(group_size, up_ref, sc_ref, zp_ref, o_ref):
+    packed = up_ref[...]
+    parts = [(packed >> s) & 3 for s in (0, 2, 4, 6)]
+    codes = jnp.stack(parts, axis=1)
+    d4, _, ft = codes.shape
+    codes = codes.reshape(d4 * 4, ft).astype(jnp.float32)
+    d = d4 * 4
+    g = group_size
+    o_ref[...] = ((codes.reshape(d // g, g, ft) - zp_ref[...][:, None, :])
+                  * sc_ref[...][:, None, :]).reshape(d, ft)
+
+
+def dequant_int2_pallas(packed, scale, zero, *, group_size: int = 32,
+                        block_f: int = 32):
+    """Materialize f32 weights from an INT2-packed matrix (tile-wise)."""
+    d4, f = packed.shape
+    d = d4 * 4
+    assert f % block_f == 0
+    grid = (f // block_f,)
+    kern = functools.partial(_dequant_kernel, group_size)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d // 4, block_f), lambda j: (0, j)),
+            pl.BlockSpec((d // group_size, block_f), lambda j: (0, j)),
+            pl.BlockSpec((d // group_size, block_f), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((d, block_f), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((d, f), jnp.float32),
+        interpret=True,
+    )(packed, scale, zero)

@@ -1,0 +1,143 @@
+"""Pure-jnp reference oracles for every L1 kernel and L2 building block.
+
+These are the correctness ground truth: pytest checks the Pallas kernels
+(sparse_expert.py, quant.py) against these, and the Rust integration tests
+check the compiled HLO artifacts against values exported from these.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def rmsnorm(x, w, eps: float = 1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+# ---------------------------------------------------------------- experts
+
+def dense_expert(x, wg, wu, wd):
+    """Paper Eq. (1): a_E(x) = (SiLU(x Wg) ⊙ (x Wu)) Wd."""
+    return (silu(x @ wg) * (x @ wu)) @ wd
+
+
+def sparse_expert(x, wg, wu, wd, t):
+    """Paper Eq. (11) / Algorithm 1: contextual sparsity from |x Wu| >= t.
+
+    Numerically identical to the column-skipping kernel: channels with
+    |v| < t contribute exactly zero to the down projection.
+    """
+    v = x @ wu
+    mask = (jnp.abs(v) >= t).astype(x.dtype)
+    h = silu(x @ wg) * v * mask
+    return h @ wd
+
+
+def sparsify(a, t):
+    """Paper Eq. (5): magnitude thresholding S_t."""
+    return jnp.where(jnp.abs(a) >= t, a, jnp.zeros_like(a))
+
+
+def gate_sparse_expert(x, wg, wu, wd, t):
+    """CATS-style: threshold on SiLU(x Wg) (paper's L_gate variant)."""
+    g = sparsify(silu(x @ wg), t)
+    return (g * (x @ wu)) @ wd
+
+
+def down_sparse_expert(x, wg, wu, wd, t):
+    """Threshold on the down-projection input (paper's L_down variant)."""
+    h = sparsify(silu(x @ wg) * (x @ wu), t)
+    return h @ wd
+
+
+# ------------------------------------------------------------ quantization
+
+def pack_int2(q):
+    """Pack int2 codes q[d, f] (values 0..3) 4-per-byte along axis 0."""
+    d, f = q.shape
+    assert d % 4 == 0
+    q = q.astype(jnp.uint8).reshape(d // 4, 4, f)
+    return (q[:, 0] | (q[:, 1] << 2) | (q[:, 2] << 4) | (q[:, 3] << 6)).astype(jnp.uint8)
+
+
+def unpack_int2(packed):
+    """Inverse of pack_int2: u8[d/4, f] -> int codes [d, f]."""
+    parts = [(packed >> s) & 3 for s in (0, 2, 4, 6)]
+    stacked = jnp.stack(parts, axis=1)          # [d/4, 4, f]
+    d4, _, f = stacked.shape
+    return stacked.reshape(d4 * 4, f)
+
+
+def dequant_groupwise(codes, scale, zero, group_size: int):
+    """w[i, j] = (codes[i, j] - zero[i//g, j]) * scale[i//g, j]."""
+    d, f = codes.shape
+    g = group_size
+    c = codes.astype(jnp.float32).reshape(d // g, g, f)
+    return ((c - zero[:, None, :]) * scale[:, None, :]).reshape(d, f)
+
+
+def int2_matmul(x, packed, scale, zero, group_size: int):
+    """x[B, d] @ dequant(int2-packed W[d, f])."""
+    w = dequant_groupwise(unpack_int2(packed).astype(jnp.float32), scale, zero, group_size)
+    return x @ w
+
+
+def floe_expert(x, wg, packed_up, scale, zero, wd, t, group_size: int):
+    """FloE hybrid expert: INT2 up projection + contextual sparse gate/down."""
+    v = int2_matmul(x, packed_up, scale, zero, group_size)
+    mask = (jnp.abs(v) >= t).astype(x.dtype)
+    h = silu(x @ wg) * v * mask
+    return h @ wd
+
+
+# ---------------------------------------------------------------- routing
+
+def router_topk(logits, k: int):
+    """Mixtral routing: softmax over the top-k logits only.
+
+    Returns (weights[B, k], indices[B, k]); weights sum to 1.
+    """
+    vals, idx = jax.lax.top_k(logits, k)
+    w = jax.nn.softmax(vals, axis=-1)
+    return w, idx
+
+
+# -------------------------------------------------------------- attention
+
+def rope(x, pos, theta: float = 10000.0):
+    """Rotary embedding over the last axis. x: [..., hd]; pos broadcastable."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = jnp.asarray(pos, jnp.float32)[..., None] * freqs      # [..., half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def attn_decode_step(x, k_cache, v_cache, pos, wq, wk, wv, wo,
+                     n_heads: int, head_dim: int, theta: float = 10000.0):
+    """Single-token causal attention with KV cache.
+
+    x: [B, d]; caches: [B, H, S, hd]; pos: scalar int32 (0-based position).
+    Returns (attn_out[B, d], k_cache', v_cache').
+    """
+    b, d = x.shape
+    s = k_cache.shape[2]
+    q = (x @ wq).reshape(b, n_heads, head_dim)
+    k = (x @ wk).reshape(b, n_heads, head_dim)
+    v = (x @ wv).reshape(b, n_heads, head_dim)
+    q = rope(q, pos, theta)
+    k = rope(k, pos, theta)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k[:, :, None, :], (0, 0, pos, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v[:, :, None, :], (0, 0, pos, 0))
+    scores = jnp.einsum("bhd,bhsd->bhs", q, k_cache) / jnp.sqrt(float(head_dim))
+    mask = jnp.arange(s) <= pos
+    scores = jnp.where(mask[None, None, :], scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bhsd->bhd", probs, v_cache).reshape(b, d)
+    return out @ wo, k_cache, v_cache

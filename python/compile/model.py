@@ -1,0 +1,274 @@
+"""L2: Mixtral-architecture MoE transformer in JAX.
+
+Two faces of the same model:
+
+  * `forward_train` — full-sequence training forward (dense expert dispatch,
+    Mixtral top-2 routing + load-balancing aux loss) used by train.py;
+  * graph builders (`attn_step_fn`, `expert_*_fn`, `logits_fn`) — the
+    decode-time computations AOT-lowered to HLO text for the Rust runtime.
+    All weights are *arguments* so one compiled executable serves every
+    (layer, expert) pair and Rust decides which bytes are "VRAM-resident".
+
+The FloE expert graphs call the L1 Pallas kernels (interpret=True) so the
+kernels lower into the same HLO the Rust coordinator executes.
+"""
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels import ref
+from .kernels.sparse_expert import sparse_expert_pallas, floe_expert_pallas
+
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ------------------------------------------------------------------ init
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    rng = np.random.default_rng(seed)
+
+    def randn(*shape, scale):
+        return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    p: Params = {
+        "embed": randn(cfg.vocab, d, scale=0.02),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "lm_head": randn(d, cfg.vocab, scale=0.02),
+    }
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        p[pre + "norm1"] = jnp.ones((d,), jnp.float32)
+        p[pre + "norm2"] = jnp.ones((d,), jnp.float32)
+        for w in ("wq", "wk", "wv", "wo"):
+            p[pre + w] = randn(d, d, scale=d ** -0.5)
+        p[pre + "router"] = randn(d, e, scale=0.02)
+        # experts stacked on a leading E axis for vmapped training dispatch
+        p[pre + "wg"] = randn(e, d, f, scale=d ** -0.5)
+        p[pre + "wu"] = randn(e, d, f, scale=d ** -0.5)
+        p[pre + "wd"] = randn(e, f, d, scale=f ** -0.5)
+    return p
+
+
+# -------------------------------------------------------------- training
+
+def _attn_full(x, wq, wk, wv, wo, cfg: ModelConfig):
+    """Full-sequence causal attention with RoPE. x: [B, S, d]."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ wq).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    pos = jnp.arange(s)
+    q = ref.rope(q, pos[None, None, :], cfg.rope_theta)
+    k = ref.rope(k, pos[None, None, :], cfg.rope_theta)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    scores = jnp.where(causal[None, None], scores, jnp.float32(-1e30))
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, d) @ wo
+
+
+def _moe_block(h, router_w, wg, wu, wd, cfg: ModelConfig):
+    """Top-k MoE with dense dispatch (fine at this scale).
+
+    h: [B, S, d]; wg/wu: [E, d, f]; wd: [E, f, d].
+    Returns (out [B, S, d], aux_loss scalar).
+    """
+    logits = h @ router_w                              # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(logits, cfg.top_k)
+    top_w = jax.nn.softmax(top_w, axis=-1)             # renormalize over top-k
+    # dense per-token expert weights [B, S, E]
+    weights = jnp.zeros_like(probs)
+    weights = jnp.take_along_axis(weights, top_i, axis=-1)  # dummy to get shape
+    onehot = jax.nn.one_hot(top_i, cfg.n_experts, dtype=h.dtype)  # [B,S,K,E]
+    weights = jnp.einsum("bsk,bske->bse", top_w, onehot)
+    # all-expert forward, vmapped over the E axis
+    outs = jax.vmap(lambda g, u, dn: ref.dense_expert(h, g, u, dn))(wg, wu, wd)
+    out = jnp.einsum("bse,ebsd->bsd", weights, outs)
+    # Mixtral-style load-balancing loss
+    frac = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))       # tokens per expert
+    mean_p = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.n_experts * jnp.sum(frac / cfg.top_k * mean_p)
+    return out, aux
+
+
+def forward_train(params: Params, tokens, cfg: ModelConfig):
+    """tokens: int32 [B, S]. Returns (logits [B, S, V], aux_loss)."""
+    x = params["embed"][tokens]
+    aux_total = 0.0
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        hn = ref.rmsnorm(x, params[pre + "norm1"], cfg.rms_eps)
+        x = x + _attn_full(hn, params[pre + "wq"], params[pre + "wk"],
+                           params[pre + "wv"], params[pre + "wo"], cfg)
+        h = ref.rmsnorm(x, params[pre + "norm2"], cfg.rms_eps)
+        mo, aux = _moe_block(h, params[pre + "router"], params[pre + "wg"],
+                             params[pre + "wu"], params[pre + "wd"], cfg)
+        x = x + mo
+        aux_total = aux_total + aux
+    x = ref.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    return x @ params["lm_head"], aux_total / cfg.n_layers
+
+
+def loss_fn(params: Params, tokens, cfg: ModelConfig):
+    """Next-byte cross entropy (nats) + aux loss. tokens: [B, S+1]."""
+    logits, aux = forward_train(params, tokens[:, :-1], cfg)
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1).mean()
+    return nll + cfg.aux_loss_coef * aux, nll
+
+
+# ------------------------------------------------- decode-step AOT graphs
+
+def attn_step_fn(cfg: ModelConfig):
+    """Per-layer decode step: norm → attention(+cache) → residual → norm →
+    router logits.  One executable serves all layers (weights are inputs).
+
+    Signature: (x[B,d], kc[B,H,S,hd], vc[B,H,S,hd], pos i32,
+                wq, wk, wv, wo [d,d], norm1[d], norm2[d], router[d,E])
+      → (x_resid[B,d], h_mid[B,d], router_logits[B,E], kc', vc')
+    """
+    def fn(x, kc, vc, pos, wq, wk, wv, wo, n1, n2, wr):
+        hn = ref.rmsnorm(x, n1, cfg.rms_eps)
+        attn, kc2, vc2 = ref.attn_decode_step(
+            hn, kc, vc, pos, wq, wk, wv, wo,
+            cfg.n_heads, cfg.head_dim, cfg.rope_theta)
+        x2 = x + attn
+        h = ref.rmsnorm(x2, n2, cfg.rms_eps)
+        return x2, h, h @ wr, kc2, vc2
+    return fn
+
+
+def expert_dense_fn(cfg: ModelConfig):
+    """(x, wg[d,f], wu[d,f], wd[f,d]) → y[B,d] — paper Eq. (1)."""
+    def fn(x, wg, wu, wd):
+        return (ref.dense_expert(x, wg, wu, wd),)
+    return fn
+
+
+def expert_sparse_fn(cfg: ModelConfig):
+    """(x, wg, wu, wd, t) → y — paper Eq. (11), fp up projection."""
+    def fn(x, wg, wu, wd, t):
+        return (ref.sparse_expert(x, wg, wu, wd, t),)
+    return fn
+
+
+def expert_sparse_pallas_fn(cfg: ModelConfig):
+    """Same as expert_sparse_fn but through the L1 Pallas kernel."""
+    def fn(x, wg, wu, wd, t):
+        return (sparse_expert_pallas(x, wg, wu, wd, t,
+                                     block_f=min(32, cfg.d_ff)),)
+    return fn
+
+
+def expert_floe_fn(cfg: ModelConfig, group_size: int):
+    """FloE hybrid expert: in-graph INT2 dequant + contextual sparsity."""
+    def fn(x, wg, packed, scale, zero, wd, t):
+        return (ref.floe_expert(x, wg, packed, scale, zero, wd, t, group_size),)
+    return fn
+
+
+def expert_floe_pallas_fn(cfg: ModelConfig, group_size: int):
+    """FloE hybrid expert through the fused L1 Pallas kernel."""
+    def fn(x, wg, packed, scale, zero, wd, t):
+        return (floe_expert_pallas(x, wg, packed, scale, zero, wd, t,
+                                   group_size=group_size,
+                                   block_f=min(32, cfg.d_ff)),)
+    return fn
+
+
+def expert_dequant_fn(cfg: ModelConfig, group_size: int):
+    """Uniform-quantized expert (baseline: Mixtral-Offloading INT3/INT2).
+
+    All three matrices arrive as u8 codes + per-group scale/zero; dequant
+    happens in-graph, then the dense Eq. (1) forward.
+    """
+    def fn(x, gq, gs, gz, uq, us, uz, dq, ds, dz):
+        wg = ref.dequant_groupwise(gq.astype(jnp.float32), gs, gz, group_size)
+        wu = ref.dequant_groupwise(uq.astype(jnp.float32), us, uz, group_size)
+        wd = ref.dequant_groupwise(dq.astype(jnp.float32), ds, dz, group_size)
+        return (ref.dense_expert(x, wg, wu, wd),)
+    return fn
+
+
+def logits_fn(cfg: ModelConfig):
+    """(x[B,d], final_norm[d], lm_head[d,V]) → logits[B,V]."""
+    def fn(x, nw, wlm):
+        return (ref.rmsnorm(x, nw, cfg.rms_eps) @ wlm,)
+    return fn
+
+
+def up_probe_fn(cfg: ModelConfig, group_size: int):
+    """Intra-expert reuse predictor (§3.3.2): |h_prev · W_up_q| per channel.
+
+    (h[B,d], packed, scale, zero) → |v|[B,f] — Rust compares against t to
+    build the prefetch mask.
+    """
+    def fn(h, packed, scale, zero):
+        v = ref.int2_matmul(h, packed, scale, zero, group_size)
+        return (jnp.abs(v),)
+    return fn
+
+
+# ----------------------------------------------------- eval-time forward
+# (python-side oracle used by calibrate.py and cross-checks; the production
+#  path is the Rust engine over the AOT artifacts)
+
+def forward_collect(params: Params, tokens, cfg: ModelConfig):
+    """Training-style forward that also returns per-layer traces:
+
+    hidden[i]   = hidden state entering layer i (pre-norm residual stream)
+    router[i]   = router logits at layer i
+    a_up[i]     = up-projection activations for the top-k experts, gathered
+                  as [B, S, K, f] (the channels FloE thresholds)
+    a_gate/a_down similarly.
+    """
+    x = params["embed"][tokens]
+    hidden, hmid, router_l = [], [], []
+    a_up, a_gate, a_down, top_idx = [], [], [], []
+    for i in range(cfg.n_layers):
+        pre = f"layer{i}."
+        hidden.append(x)
+        hn = ref.rmsnorm(x, params[pre + "norm1"], cfg.rms_eps)
+        x = x + _attn_full(hn, params[pre + "wq"], params[pre + "wk"],
+                           params[pre + "wv"], params[pre + "wo"], cfg)
+        h = ref.rmsnorm(x, params[pre + "norm2"], cfg.rms_eps)
+        hmid.append(h)
+        logits = h @ params[pre + "router"]
+        router_l.append(logits)
+        top_w, top_i = jax.lax.top_k(logits, cfg.top_k)
+        top_w = jax.nn.softmax(top_w, axis=-1)
+        wg, wu, wd = params[pre + "wg"], params[pre + "wu"], params[pre + "wd"]
+        # gather per-token expert weights [B,S,K,d,f]: too big — loop experts
+        outs = jax.vmap(lambda g, u, dn: ref.dense_expert(h, g, u, dn))(wg, wu, wd)
+        gates = jax.vmap(lambda g: ref.silu(h @ g))(wg)          # [E,B,S,f]
+        ups = jax.vmap(lambda u: h @ u)(wu)                      # [E,B,S,f]
+        onehot = jax.nn.one_hot(top_i, cfg.n_experts, dtype=h.dtype)
+        weights = jnp.einsum("bsk,bske->bse", top_w, onehot)
+        x = x + jnp.einsum("bse,ebsd->bsd", weights, outs)
+        # gather top-k activations: [B,S,K,f]
+        gat = jnp.einsum("bske,ebsf->bskf", onehot, gates)
+        upt = jnp.einsum("bske,ebsf->bskf", onehot, ups)
+        a_gate.append(gat)
+        a_up.append(upt)
+        a_down.append(gat * upt)
+        top_idx.append(top_i)
+    x = ref.rmsnorm(x, params["final_norm"], cfg.rms_eps)
+    logits = x @ params["lm_head"]
+    return logits, dict(hidden=hidden, hmid=hmid, router=router_l, a_up=a_up,
+                        a_gate=a_gate, a_down=a_down, top_idx=top_idx)
+
+
+# parameter count helper
+def param_count(params: Params) -> int:
+    return int(sum(np.prod(v.shape) for v in params.values()))

@@ -1,0 +1,98 @@
+"""AOT path: HLO text well-formedness and export/manifest integrity on a
+small config (full-size artifacts are produced by `make artifacts`)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, calibrate as C, corpus
+from compile.configs import QuantConfig, get_config
+from compile.export import export_artifacts
+from compile.model import attn_step_fn, expert_sparse_fn, init_params
+
+CFG = get_config("test")
+QCFG = QuantConfig()
+
+
+def test_lower_expert_hlo_text():
+    d, f = CFG.d_model, CFG.d_ff
+    text = aot.lower(expert_sparse_fn(CFG),
+                     aot.f32(1, d), aot.f32(d, f), aot.f32(d, f),
+                     aot.f32(f, d), aot.f32())
+    assert "ENTRY" in text
+    assert "HloModule" in text
+
+
+def test_lower_attn_hlo_text():
+    d, h, hd, s, e = (CFG.d_model, CFG.n_heads, CFG.head_dim,
+                      CFG.max_seq, CFG.n_experts)
+    text = aot.lower(attn_step_fn(CFG),
+                     aot.f32(1, d), aot.f32(1, h, s, hd), aot.f32(1, h, s, hd),
+                     aot.i32(), aot.f32(d, d), aot.f32(d, d), aot.f32(d, d),
+                     aot.f32(d, d), aot.f32(d), aot.f32(d), aot.f32(d, e))
+    assert "ENTRY" in text
+    # the tuple return convention the Rust loader relies on
+    assert "tuple" in text
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("art"))
+    params = init_params(CFG, seed=0)
+    _, ev = corpus.train_eval_split(60_000)
+    tr = C.collect_traces(params, CFG, ev, batch=2, seq=48, n_chunks=1)
+    th = C.thresholds_from_traces(tr, CFG)
+    ws, bs, hits = C.train_inter_predictor(tr, CFG, steps=50)
+    up_q = C.quantize_all_up(params, CFG, QCFG)
+    calib = {"thresholds": th,
+             "predictor": {"weights": ws, "biases": bs, "hit_rate": hits},
+             "up_q": up_q,
+             "analysis": {"fig4_cosine_similarity": C.cosine_similarity(tr, CFG),
+                          "fig4_inter_predictor_precision": hits,
+                          "fig4_intra_predictor_recall": [],
+                          "fig2_histograms": {}}}
+    bin_path, man_path = export_artifacts(out, params, CFG, QCFG, calib)
+    return params, bin_path, man_path
+
+
+def test_manifest_tensor_index(exported):
+    params, bin_path, man_path = exported
+    man = json.load(open(man_path))
+    blob = open(bin_path, "rb").read()
+    assert man["config"]["d_model"] == CFG.d_model
+    # every tensor's extent lies inside the blob and offsets are 8-aligned
+    for name, t in man["tensors"].items():
+        assert t["offset"] % 8 == 0, name
+        assert t["offset"] + t["nbytes"] <= len(blob), name
+    # spot-check round trip of a tensor
+    t = man["tensors"]["layer0.expert0.wg"]
+    arr = np.frombuffer(blob, np.float32,
+                        count=t["nbytes"] // 4, offset=t["offset"]
+                        ).reshape(t["shape"])
+    np.testing.assert_array_equal(arr, np.asarray(params["layer0.wg"][0]))
+
+
+def test_manifest_has_all_quant_variants(exported):
+    _, _, man_path = exported
+    man = json.load(open(man_path))
+    names = man["tensors"]
+    for bits in (8, 4, 3, 2, 1):
+        for proj in ("wg", "wu", "wd"):
+            key = f"layer0.expert0.q{bits}.{proj}"
+            assert key in names and key + "_scale" in names, key
+    assert "layer0.expert0.up_q" in names
+    # packed int2: d/4 rows
+    assert names["layer0.expert0.up_q"]["shape"] == [CFG.d_model // 4, CFG.d_ff]
+
+
+def test_thresholds_json_shape(exported):
+    _, _, man_path = exported
+    man = json.load(open(man_path))
+    th = man["thresholds"]
+    assert len(th["up"]) == CFG.n_layers
+    assert len(th["up"][0]) == CFG.n_experts
+    assert len(th["up"][0][0]) == len(th["levels"])

@@ -1,0 +1,90 @@
+"""Calibration properties: CDF thresholds (paper Eq. 6), predictor quality
+above chance, analysis outputs well-formed."""
+
+import numpy as np
+import pytest
+
+from compile import corpus
+from compile.configs import QuantConfig, SPARSITY_LEVELS, get_config
+from compile import calibrate as C
+from compile.model import init_params
+
+CFG = get_config("test")
+QCFG = QuantConfig()
+
+
+@pytest.fixture(scope="module")
+def traces():
+    params = init_params(CFG, seed=0)
+    _, eval_data = corpus.train_eval_split(60_000)
+    tr = C.collect_traces(params, CFG, eval_data, batch=2, seq=48, n_chunks=2)
+    return params, tr
+
+
+def test_trace_shapes(traces):
+    params, tr = traces
+    n = 2 * 48 * 2
+    assert tr["hmid"][0].shape == (n, CFG.d_model)
+    assert tr["top_idx"][0].shape == (n, CFG.top_k)
+    assert tr["a_up"][0].shape == (n, CFG.top_k, CFG.d_ff)
+    assert len(tr["hmid"]) == CFG.n_layers
+
+
+def test_thresholds_monotonic_and_quantile(traces):
+    params, tr = traces
+    th = C.thresholds_from_traces(tr, CFG)
+    for proj in ("up", "gate", "down"):
+        for l in range(CFG.n_layers):
+            for e in range(CFG.n_experts):
+                ts = th[proj][l][e]
+                assert all(b >= a - 1e-9 for a, b in zip(ts, ts[1:])), \
+                    (proj, l, e, ts)
+    # quantile property: fraction of |a_up| below t(0.7) ≈ 0.7
+    l, e = 0, int(np.bincount(tr["top_idx"][0].reshape(-1),
+                              minlength=CFG.n_experts).argmax())
+    s = C._expert_samples(tr, l, "a_up", e, CFG).reshape(-1)
+    t = th["up"][l][e][SPARSITY_LEVELS.index(0.7)]
+    frac = float((s < t).mean())
+    assert abs(frac - 0.7) < 0.05
+
+
+def test_chess_thresholds_per_channel(traces):
+    params, tr = traces
+    th = C.thresholds_from_traces(tr, CFG)
+    ch = th["chess_gate"][0][0]
+    assert len(ch) == len(SPARSITY_LEVELS)
+    assert len(ch[0]) == CFG.d_ff
+
+
+def test_inter_predictor_beats_chance(traces):
+    params, tr = traces
+    ws, bs, hits = C.train_inter_predictor(tr, CFG, steps=150)
+    assert len(ws) == CFG.n_layers - 1
+    chance = CFG.top_k / CFG.n_experts
+    for h in hits:
+        assert h > chance + 0.1, hits
+
+
+def test_cosine_sims_valid(traces):
+    params, tr = traces
+    sims = C.cosine_similarity(tr, CFG)
+    assert len(sims) == CFG.n_layers - 1
+    assert all(-1.0 <= s <= 1.0 for s in sims)
+
+
+def test_intra_recall_in_range(traces):
+    params, tr = traces
+    up_q = C.quantize_all_up(params, CFG, QCFG)
+    rec = C.intra_predictor_recall(tr, params, CFG, up_q, QCFG)
+    assert len(rec) == CFG.n_layers - 1
+    assert all(0.0 <= r <= 1.0 for r in rec)
+
+
+def test_histograms_counts(traces):
+    params, tr = traces
+    h = C.activation_histograms(tr, CFG)
+    assert len(h["edges"]) == 42
+    for l, entry in h["layers"].items():
+        for k in ("a_gate", "a_up", "a_down"):
+            assert len(entry[k]) == 41
+            assert sum(entry[k]) > 0

@@ -1,0 +1,56 @@
+"""Corpus determinism + probe-task well-formedness (Rust evaluates the same
+seeded instances, so determinism across runs is load-bearing)."""
+
+import numpy as np
+
+from compile import corpus
+
+
+def test_corpus_deterministic():
+    a = corpus.build_corpus(30_000, seed=1234)
+    b = corpus.build_corpus(30_000, seed=1234)
+    assert a == b
+    c = corpus.build_corpus(30_000, seed=99)
+    assert a != c
+
+
+def test_corpus_ascii_printable():
+    data = corpus.build_corpus(20_000)
+    assert all(32 <= b < 127 for b in data)
+
+
+def test_split_sizes():
+    tr, ev = corpus.train_eval_split(50_000)
+    assert len(ev) > 3_000
+    assert abs(len(tr) / (len(tr) + len(ev)) - 0.9) < 0.01
+
+
+def test_probe_instances_deterministic_and_scored():
+    for task in corpus.PROBES:
+        a = corpus.probe_instances(task, 20, seed=7)
+        b = corpus.probe_instances(task, 20, seed=7)
+        assert a == b
+        for prompt, completion in a:
+            assert completion.endswith(".")
+            assert 0 < len(completion) <= 16
+
+
+def test_fact_consistency():
+    """Every occurrence of a city maps to the same capital."""
+    for p, c in corpus.probe_instances("fact", 50, seed=3):
+        city = p.split("of ")[1].split(" is")[0]
+        i = corpus.CITIES.index(city)
+        assert c == corpus.CAPS[i] + "."
+
+
+def test_bracket_balanced():
+    for p, c in corpus.probe_instances("bracket", 50, seed=4):
+        s = p.replace("match ", "") + c[:-1]
+        stack = []
+        pairs = {")": "(", "]": "[", "}": "{"}
+        for ch in s:
+            if ch in "([{":
+                stack.append(ch)
+            else:
+                assert stack and stack.pop() == pairs[ch]
+        assert not stack

@@ -1,0 +1,85 @@
+"""HQQ quantizer properties: code range, reconstruction quality vs bits,
+packing layout, and the transfer-size accounting the paper's 9.3x
+compression claim rests on."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import QuantConfig
+from compile.hqq import QuantizedTensor, quant_error, quantize
+
+
+@settings(max_examples=8, deadline=None)
+@given(d=st.sampled_from([32, 64]),
+       f=st.sampled_from([32, 128]),
+       bits=st.sampled_from([8, 4, 3, 2, 1]),
+       seed=st.integers(0, 2 ** 16))
+def test_codes_in_range(d, f, bits, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((d, f)).astype(np.float32) * 0.1
+    qt = quantize(w, bits)
+    assert qt.codes.min() >= 0
+    assert qt.codes.max() <= 2 ** bits - 1
+    assert qt.codes.shape == (d, f)
+    assert qt.scale.shape == (d // qt.group_size, f)
+
+
+def test_error_monotonic_in_bits():
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((64, 128)).astype(np.float32) * 0.2
+    errs = [quant_error(w, quantize(w, b))[0] for b in (8, 4, 3, 2, 1)]
+    assert errs == sorted(errs), errs
+    assert errs[0] < 0.01            # INT8 is near-lossless
+    assert errs[3] < 0.55            # INT2 with HQQ stays usable
+
+
+def test_hqq_beats_roundtrip_minmax_int2():
+    """The proximal solver should not be worse than naive min-max init."""
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((64, 128)).astype(np.float32) * 0.3
+    qcfg = QuantConfig()
+    hqq = quant_error(w, quantize(w, 2, qcfg))[0]
+
+    # naive min/max affine INT2, same grouping
+    g = qcfg.group_size
+    wg = w.reshape(-1, g, w.shape[1])
+    wmin, wmax = wg.min(1, keepdims=True), wg.max(1, keepdims=True)
+    s = 3.0 / np.maximum(wmax - wmin, 1e-8)
+    z = -wmin * s
+    q = np.clip(np.round(wg * s + z), 0, 3)
+    naive_dq = ((q - z) / s).reshape(w.shape)
+    naive = float(np.linalg.norm(naive_dq - w) / np.linalg.norm(w))
+    assert hqq <= naive * 1.02
+
+
+def test_packed_int2_layout():
+    rng = np.random.default_rng(2)
+    w = rng.standard_normal((32, 16)).astype(np.float32)
+    qt = quantize(w, 2)
+    packed = qt.packed_int2()
+    assert packed.shape == (8, 16)
+    # unpack manually and compare
+    un = np.zeros((32, 16), np.uint8)
+    for k, s in enumerate((0, 2, 4, 6)):
+        un[k::4] = (packed >> s) & 3
+    np.testing.assert_array_equal(un, qt.codes)
+
+
+def test_transfer_bytes_accounting():
+    qt = quantize(np.ones((64, 128), np.float32), 2)
+    # 64*128 int2 = 2048 B codes + 2 * (2 groups * 128) fp16 = 1024 B
+    assert qt.nbytes_transfer() == 64 * 128 // 4 + 2 * 2 * (64 // 32) * 128
+
+
+def test_compression_ratio_vs_fp16():
+    """Paper §1: ~9.3x per-expert compression (INT2 up + 90%-sparse
+    gate/down vs 3 fp16 matrices).  Check the arithmetic at our scale."""
+    d, f = 64, 128
+    fp16 = 3 * d * f * 2
+    qt = quantize(np.random.default_rng(3).standard_normal((d, f))
+                  .astype(np.float32), 2)
+    sparse_gd = 2 * int(0.1 * f) * d * 2          # 10% of channels, fp16
+    floe = qt.nbytes_transfer() + sparse_gd
+    ratio = fp16 / floe
+    assert ratio > 6.0, ratio

@@ -1,0 +1,140 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, thresholds and data; every kernel must match the
+reference to float32 tolerance for all of them.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.quant import dequant_int2_pallas, int2_matmul_pallas
+from compile.kernels.sparse_expert import floe_expert_pallas, sparse_expert_pallas
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def rand_expert(rng, b, d, f):
+    x = jnp.asarray(rng.standard_normal((b, d)), jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((d, f)) * 0.2, jnp.float32)
+    wu = jnp.asarray(rng.standard_normal((d, f)) * 0.2, jnp.float32)
+    wd = jnp.asarray(rng.standard_normal((f, d)) * 0.2, jnp.float32)
+    return x, wg, wu, wd
+
+
+@settings(max_examples=12, deadline=None)
+@given(b=st.sampled_from([1, 2, 4]),
+       d=st.sampled_from([32, 64]),
+       f=st.sampled_from([64, 128]),
+       block_f=st.sampled_from([16, 32]),
+       t=st.floats(0.0, 3.0),
+       seed=st.integers(0, 2 ** 16))
+def test_sparse_expert_matches_ref(b, d, f, block_f, t, seed):
+    rng = np.random.default_rng(seed)
+    x, wg, wu, wd = rand_expert(rng, b, d, f)
+    out = sparse_expert_pallas(x, wg, wu, wd, t, block_f=block_f)
+    exp = ref.sparse_expert(x, wg, wu, wd, t)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), **TOL)
+
+
+def test_sparse_expert_t0_equals_dense():
+    rng = np.random.default_rng(0)
+    x, wg, wu, wd = rand_expert(rng, 2, 64, 128)
+    out = sparse_expert_pallas(x, wg, wu, wd, 0.0)
+    exp = ref.dense_expert(x, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), **TOL)
+
+
+def test_sparse_expert_huge_t_is_zero():
+    rng = np.random.default_rng(1)
+    x, wg, wu, wd = rand_expert(rng, 1, 32, 64)
+    out = sparse_expert_pallas(x, wg, wu, wd, 1e9)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=st.sampled_from([32, 64]),
+       f=st.sampled_from([64, 128]),
+       g=st.sampled_from([16, 32]),
+       seed=st.integers(0, 2 ** 16))
+def test_int2_pack_unpack_roundtrip(d, f, g, seed):
+    rng = np.random.default_rng(seed)
+    codes = jnp.asarray(rng.integers(0, 4, (d, f)), jnp.uint8)
+    packed = ref.pack_int2(codes)
+    assert packed.shape == (d // 4, f)
+    un = ref.unpack_int2(packed)
+    np.testing.assert_array_equal(np.asarray(un), np.asarray(codes))
+
+
+@settings(max_examples=10, deadline=None)
+@given(b=st.sampled_from([1, 3]),
+       d=st.sampled_from([32, 64]),
+       f=st.sampled_from([64, 128]),
+       g=st.sampled_from([16, 32]),
+       seed=st.integers(0, 2 ** 16))
+def test_int2_matmul_pallas_matches_ref(b, d, f, g, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((b, d)), jnp.float32)
+    codes = jnp.asarray(rng.integers(0, 4, (d, f)), jnp.uint8)
+    packed = ref.pack_int2(codes)
+    scale = jnp.asarray(rng.random((d // g, f)) * 0.2 + 0.01, jnp.float32)
+    zero = jnp.asarray(rng.random((d // g, f)) * 3, jnp.float32)
+    out = int2_matmul_pallas(x, packed, scale, zero, group_size=g)
+    exp = ref.int2_matmul(x, packed, scale, zero, g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_dequant_pallas_exact():
+    rng = np.random.default_rng(5)
+    d, f, g = 64, 96, 32
+    codes = jnp.asarray(rng.integers(0, 4, (d, f)), jnp.uint8)
+    packed = ref.pack_int2(codes)
+    scale = jnp.asarray(rng.random((d // g, f)) + 0.01, jnp.float32)
+    zero = jnp.asarray(rng.random((d // g, f)), jnp.float32)
+    out = dequant_int2_pallas(packed, scale, zero, group_size=g)
+    exp = ref.dequant_groupwise(ref.unpack_int2(packed).astype(jnp.float32),
+                                scale, zero, g)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+@settings(max_examples=8, deadline=None)
+@given(b=st.sampled_from([1, 2]),
+       d=st.sampled_from([32, 64]),
+       f=st.sampled_from([64, 128]),
+       t=st.floats(0.0, 2.0),
+       seed=st.integers(0, 2 ** 16))
+def test_floe_expert_pallas_matches_ref(b, d, f, t, seed):
+    g = 32
+    rng = np.random.default_rng(seed)
+    x, wg, _, wd = rand_expert(rng, b, d, f)
+    codes = jnp.asarray(rng.integers(0, 4, (d, f)), jnp.uint8)
+    packed = ref.pack_int2(codes)
+    scale = jnp.asarray(rng.random((d // g, f)) * 0.1 + 0.01, jnp.float32)
+    zero = jnp.asarray(rng.random((d // g, f)) * 3, jnp.float32)
+    out = floe_expert_pallas(x, wg, packed, scale, zero, wd, t, group_size=g)
+    exp = ref.floe_expert(x, wg, packed, scale, zero, wd, t, g)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), **TOL)
+
+
+def test_sparsify_matches_masking():
+    """Eq. (11) (mask form) == Eq. (5) composition (sparsify form)."""
+    rng = np.random.default_rng(9)
+    x, wg, wu, wd = rand_expert(rng, 2, 32, 64)
+    t = 0.4
+    a = ref.silu(x @ wg) * ref.sparsify(x @ wu, t)
+    exp = a @ wd
+    out = ref.sparse_expert(x, wg, wu, wd, t)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), **TOL)
+
+
+def test_router_topk_weights():
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(rng.standard_normal((5, 8)), jnp.float32)
+    w, idx = ref.router_topk(logits, 2)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), np.ones(5), rtol=1e-6)
+    # indices are the argmax-2
+    order = np.argsort(-np.asarray(logits), axis=1)[:, :2]
+    np.testing.assert_array_equal(np.sort(np.asarray(idx), 1), np.sort(order, 1))

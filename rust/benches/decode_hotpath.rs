@@ -1,0 +1,55 @@
+//! cargo bench decode_hotpath — the perf-pass microbenchmark: per-token
+//! decode latency through each compute path and expert mode, plus the
+//! breakdown used to drive optimization (EXPERIMENTS.md §Perf).
+
+use floe::config::ExpertMode;
+use floe::engine::{ComputePath, DecodeState, Engine, NoObserver};
+use floe::util::table::{f2, Table};
+use floe::util::timing::bench_budget;
+
+fn main() {
+    let art = floe::artifacts_dir();
+    if !art.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return;
+    }
+    let mut eng = Engine::load(&art).expect("engine");
+    let mut t = Table::new(
+        "decode hot path — per-token latency (ms) and tokens/sec",
+        &["path", "mode", "ms/token", "tok/s"],
+    );
+    let cases: Vec<(&str, ComputePath, ExpertMode)> = vec![
+        ("hlo", ComputePath::Hlo, ExpertMode::Dense),
+        ("hlo", ComputePath::Hlo, ExpertMode::Sparse { level: 0.8 }),
+        ("hlo", ComputePath::Hlo, ExpertMode::Floe { level: 0.8 }),
+        ("hlo", ComputePath::Hlo, ExpertMode::Uniform { bits: 2 }),
+        ("pallas", ComputePath::HloPallas, ExpertMode::Floe { level: 0.8 }),
+        ("native", ComputePath::Native, ExpertMode::Dense),
+        ("native", ComputePath::Native, ExpertMode::Floe { level: 0.8 }),
+    ];
+    for (pname, path, mode) in cases {
+        eng.path = path;
+        let mut st = DecodeState::new(&eng.w).expect("state");
+        let mut tok = b'a';
+        let stats = bench_budget(8, 1500, || {
+            if st.pos + 1 >= eng.w.cfg.max_seq {
+                st = DecodeState::new(&eng.w).unwrap();
+            }
+            let logits = eng
+                .decode_token(&mut st, tok, mode, &mut NoObserver)
+                .expect("decode");
+            tok = floe::engine::sampler::argmax(&logits) as u8;
+        });
+        t.row(vec![
+            pname.to_string(),
+            format!("{mode:?}"),
+            format!("{:.3}", stats.p50_ns / 1e6),
+            f2(1e9 / stats.p50_ns),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nPJRT executions so far: {} (engine exec_count)",
+        eng.rt.exec_count.get()
+    );
+}

@@ -1,0 +1,13 @@
+//! cargo bench fig6 — paper Fig 6: end-to-end decode TPS, FloE vs the four
+//! baselines at 12 GB VRAM (simulated Mixtral-8x7B scale) plus a measured
+//! run of the real serving pipeline on the in-repo model.
+
+fn main() {
+    floe::experiments::fig6::run(12.0).expect("fig6 sim");
+    let art = floe::artifacts_dir();
+    if art.join("manifest.json").exists() {
+        floe::experiments::fig6::run_real(&art, 32).expect("fig6 real");
+    } else {
+        eprintln!("(artifacts missing — skipping real-engine leg)");
+    }
+}

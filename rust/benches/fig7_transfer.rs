@@ -1,0 +1,11 @@
+//! cargo bench fig7 — paper Fig 7: compact asynchronous transfer latency
+//! and bus utilization vs chunk size (real packing + simulated PCIe).
+
+fn main() {
+    let art = floe::artifacts_dir();
+    if art.join("manifest.json").exists() {
+        floe::experiments::fig7::run(&art).expect("fig7");
+    } else {
+        eprintln!("artifacts missing — run `make artifacts` first");
+    }
+}

@@ -1,0 +1,6 @@
+//! cargo bench fig8 — paper Fig 8: decode TPS vs VRAM budget (12..24 GB),
+//! all systems, simulated Mixtral-8x7B on RTX-3090.
+
+fn main() {
+    floe::experiments::fig8::run().expect("fig8");
+}

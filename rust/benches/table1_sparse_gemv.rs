@@ -1,0 +1,8 @@
+//! cargo bench table1 — paper Table 1: single-expert sparse GEMV latency
+//! across sparsity levels (measured native CPU + modeled GPUs).
+//! Custom harness (criterion unavailable offline) via floe::util::timing.
+
+fn main() {
+    let art = floe::artifacts_dir();
+    floe::experiments::table1::run(&art).expect("table1");
+}

@@ -1,0 +1,147 @@
+//! Model / quantization configuration parsed from artifacts/manifest.json
+//! plus the serving-system configuration (CLI / TOML-subset file).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub rms_eps: f64,
+}
+
+impl ModelConfig {
+    pub fn from_manifest(m: &Json) -> Result<Self> {
+        let c = m.get("config").ok_or_else(|| anyhow!("manifest: no config"))?;
+        let u = |k: &str| -> Result<usize> {
+            c.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("config.{k}"))
+        };
+        let f = |k: &str| -> Result<f64> {
+            c.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("config.{k}"))
+        };
+        Ok(ModelConfig {
+            name: c.get("name").and_then(Json::as_str).unwrap_or("tiny").into(),
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            head_dim: u("head_dim")?,
+            d_ff: u("d_ff")?,
+            n_experts: u("n_experts")?,
+            top_k: u("top_k")?,
+            max_seq: u("max_seq")?,
+            rope_theta: f("rope_theta")?,
+            rms_eps: f("rms_eps")?,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct QuantInfo {
+    pub bits: u8,
+    pub group_size: usize,
+    pub uniform_bits: Vec<u8>,
+}
+
+impl QuantInfo {
+    pub fn from_manifest(m: &Json) -> Result<Self> {
+        let q = m.get("quant").context("manifest: no quant")?;
+        Ok(QuantInfo {
+            bits: q.get("bits").and_then(Json::as_usize).context("quant.bits")? as u8,
+            group_size: q
+                .get("group_size")
+                .and_then(Json::as_usize)
+                .context("quant.group_size")?,
+            uniform_bits: q
+                .get("uniform_bits")
+                .and_then(Json::as_f64_vec)
+                .context("quant.uniform_bits")?
+                .into_iter()
+                .map(|b| b as u8)
+                .collect(),
+        })
+    }
+}
+
+/// How an expert's weights are compressed for transfer + compute.
+/// This is the policy axis the paper's Figures 3/9/10 sweep.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ExpertMode {
+    /// fp32 compute, fp16-accounted transfer (DeepSpeed-MII-style naive).
+    Dense,
+    /// Eq. (11): contextual sparsity on gate/down at `level`, fp up.
+    Sparse { level: f64 },
+    /// FloE hybrid: INT2 HQQ up + contextual sparse gate/down.
+    Floe { level: f64 },
+    /// CATS baseline: threshold on SiLU(gate) output.
+    CatsGate { level: f64 },
+    /// CHESS baseline: per-channel thresholds on the gate output.
+    ChessGate { level: f64 },
+    /// Threshold on the down-projection input (paper's L_down variant).
+    DownSparse { level: f64 },
+    /// Uniform HQQ quantization of all three matrices (Mixtral-Offloading).
+    Uniform { bits: u8 },
+    /// Per-projection quantization sweep (Fig 3b / Table 7).
+    QuantProj { proj: Proj, bits: u8 },
+    /// Per-projection sparsification sweep (Fig 3a / Table 5).
+    SparseProj { proj: Proj, level: f64 },
+    /// FloE with a variable up-projection bit width (Fig 9b): HQQ-`bits`
+    /// up projection + contextual sparsity at `level`.
+    FloeVar { level: f64, bits: u8 },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Proj {
+    Gate,
+    Up,
+    Down,
+}
+
+impl Proj {
+    pub fn key(&self) -> &'static str {
+        match self {
+            Proj::Gate => "gate",
+            Proj::Up => "up",
+            Proj::Down => "down",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn parse_config() {
+        let j = parse(
+            r#"{"config":{"name":"t","vocab":256,"d_model":64,"n_layers":4,
+                "n_heads":4,"head_dim":16,"d_ff":128,"n_experts":8,"top_k":2,
+                "max_seq":512,"rope_theta":10000.0,"rms_eps":1e-5},
+                "quant":{"bits":2,"group_size":32,"uniform_bits":[8,4,3,2,1]}}"#,
+        )
+        .unwrap();
+        let c = ModelConfig::from_manifest(&j).unwrap();
+        assert_eq!(c.d_model, 64);
+        assert_eq!(c.n_experts, 8);
+        let q = QuantInfo::from_manifest(&j).unwrap();
+        assert_eq!(q.bits, 2);
+        assert_eq!(q.uniform_bits, vec![8, 4, 3, 2, 1]);
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        let j = parse(r#"{"config":{"vocab":256}}"#).unwrap();
+        assert!(ModelConfig::from_manifest(&j).is_err());
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 coordination — the paper's system contribution.
+//!
+//! * `policy` — the system design space: FloE vs the four baselines
+//!   (DeepSpeed-MII-style naive offload, Mixtral-Offloading-style advanced
+//!   offload, Fiddler CPU co-execution, fully GPU-resident INT2).
+//! * `sim` — discrete-event end-to-end decode simulation at arbitrary
+//!   model scale over the hwsim hardware models; regenerates Figs 6/8.
+//! * `serve` — the *real* serving pipeline on the in-repo model: request
+//!   queue, interleaved continuous batching, FloE prefetch pipeline
+//!   (dual predictors + expert cache + compact transfers) driving the
+//!   PJRT engine, with a simulated PCIe clock accounted alongside real
+//!   compute time.
+
+pub mod policy;
+pub mod serve;
+pub mod sim;

@@ -1,0 +1,96 @@
+//! The offloading-system design space (paper §4.1 baselines + FloE).
+
+use crate::config::ExpertMode;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemKind {
+    /// FloE (paper): INT2 up resident, contextual-sparse gate/down
+    /// streamed via dual predictors + compact async transfer.
+    Floe,
+    /// DeepSpeed-MII-style: fp16 experts streamed on demand, no
+    /// prediction, no expert cache beyond what trivially fits.
+    NaiveOffload,
+    /// Mixtral-Offloading-style: uniformly INT3-quantized experts, LRU
+    /// GPU cache, speculative same-hidden-state prefetch (no overlap
+    /// with next-layer compute — the paper's §2 criticism).
+    AdvancedOffload,
+    /// Fiddler-style: missing experts are computed on the CPU from DRAM
+    /// weights instead of being transferred.
+    Fiddler,
+    /// Upper bound: everything INT2, fully VRAM-resident (Mixtral-GPU).
+    GpuResident,
+}
+
+impl SystemKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SystemKind::Floe => "FloE",
+            SystemKind::NaiveOffload => "DeepSpeed-MII (naive)",
+            SystemKind::AdvancedOffload => "Mixtral-Offloading",
+            SystemKind::Fiddler => "Fiddler",
+            SystemKind::GpuResident => "Mixtral-GPU (resident)",
+        }
+    }
+
+    pub const ALL: [SystemKind; 5] = [
+        SystemKind::Floe,
+        SystemKind::NaiveOffload,
+        SystemKind::AdvancedOffload,
+        SystemKind::Fiddler,
+        SystemKind::GpuResident,
+    ];
+}
+
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    pub kind: SystemKind,
+    /// FloE contextual-sparsity level (paper default 0.7-0.9)
+    pub sparsity: f64,
+    /// uniform quant bits for AdvancedOffload
+    pub quant_bits: u8,
+    /// intra-predictor safety margin (fraction below threshold prefetched)
+    pub intra_margin: f64,
+    /// transfer chunk size in channels (paper Fig 7 optimum ≈ 50)
+    pub chunk_channels: usize,
+}
+
+impl SystemConfig {
+    pub fn new(kind: SystemKind) -> Self {
+        SystemConfig {
+            kind,
+            // the paper's deployment operating point (Fig 6/8, 9.3x)
+            sparsity: 0.9,
+            quant_bits: 3,
+            intra_margin: 0.15,
+            chunk_channels: 50,
+        }
+    }
+
+    /// The ExpertMode the engine computes with under this system.
+    pub fn expert_mode(&self) -> ExpertMode {
+        match self.kind {
+            SystemKind::Floe => ExpertMode::Floe { level: self.sparsity },
+            SystemKind::NaiveOffload => ExpertMode::Dense,
+            SystemKind::AdvancedOffload => ExpertMode::Uniform { bits: self.quant_bits },
+            SystemKind::Fiddler => ExpertMode::Dense,
+            SystemKind::GpuResident => ExpertMode::Uniform { bits: 2 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modes_match_systems() {
+        assert_eq!(
+            SystemConfig::new(SystemKind::Floe).expert_mode(),
+            ExpertMode::Floe { level: 0.9 }
+        );
+        assert_eq!(
+            SystemConfig::new(SystemKind::GpuResident).expert_mode(),
+            ExpertMode::Uniform { bits: 2 }
+        );
+    }
+}

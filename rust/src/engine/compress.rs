@@ -1,0 +1,227 @@
+//! Native-Rust expert forward with every compression strategy the paper's
+//! efficacy evaluation sweeps (Figs 3/9/10, Tables 3-7): per-projection
+//! sparsification (up / gate / down), CATS and CHESS baselines, uniform
+//! and per-projection HQQ quantization, and the FloE hybrid.
+//!
+//! The serving hot path uses the HLO graphs; these native experts exist
+//! because the sweep space (projection x level x bits) is combinatorial
+//! and numerics here are bit-comparable to the references (tested).
+//! Materialized (dequantized, channel-major) experts are cached.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{ExpertMode, Proj};
+use crate::model::Weights;
+use crate::tensor::{axpy, dot, silu, ExpertWeights, Mat};
+
+/// Sparsification rule applied inside the expert forward.
+enum Rule {
+    None,
+    /// skip channel when |x·Wu_j| < t (paper Eq. 11)
+    Up(f32),
+    /// zero SiLU(x·Wg_j) when |SiLU(x·Wg_j)| < t (CATS / L_gate)
+    Gate(f32),
+    /// per-channel gate thresholds (CHESS)
+    GateChannel(Vec<f32>),
+    /// zero h_j = g_j * v_j when |h_j| < t (L_down)
+    Down(f32),
+}
+
+struct NativeExpert {
+    w: ExpertWeights,
+    rule: Rule,
+}
+
+impl NativeExpert {
+    fn forward(&self, x: &[f32], y: &mut [f32]) {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        let f = self.w.f();
+        for j in 0..f {
+            let (g, v, h) = match &self.rule {
+                Rule::Up(t) => {
+                    let v = dot(x, self.w.wu_t.row(j));
+                    if v.abs() < *t {
+                        continue;
+                    }
+                    let g = silu(dot(x, self.w.wg_t.row(j)));
+                    (g, v, g * v)
+                }
+                Rule::Gate(t) => {
+                    let g = silu(dot(x, self.w.wg_t.row(j)));
+                    if g.abs() < *t {
+                        continue;
+                    }
+                    let v = dot(x, self.w.wu_t.row(j));
+                    (g, v, g * v)
+                }
+                Rule::GateChannel(ts) => {
+                    let g = silu(dot(x, self.w.wg_t.row(j)));
+                    if g.abs() < ts[j] {
+                        continue;
+                    }
+                    let v = dot(x, self.w.wu_t.row(j));
+                    (g, v, g * v)
+                }
+                Rule::Down(t) => {
+                    let g = silu(dot(x, self.w.wg_t.row(j)));
+                    let v = dot(x, self.w.wu_t.row(j));
+                    let h = g * v;
+                    if h.abs() < *t {
+                        continue;
+                    }
+                    (g, v, h)
+                }
+                Rule::None => {
+                    let g = silu(dot(x, self.w.wg_t.row(j)));
+                    let v = dot(x, self.w.wu_t.row(j));
+                    (g, v, g * v)
+                }
+            };
+            let _ = (g, v);
+            axpy(y, h, self.w.wd.row(j));
+        }
+    }
+}
+
+/// Modes the HLO graph set does not cover (evaluation-only sweeps).
+pub fn requires_native(mode: ExpertMode) -> bool {
+    matches!(
+        mode,
+        ExpertMode::CatsGate { .. }
+            | ExpertMode::ChessGate { .. }
+            | ExpertMode::DownSparse { .. }
+            | ExpertMode::QuantProj { .. }
+            | ExpertMode::SparseProj { .. }
+            | ExpertMode::FloeVar { .. }
+    )
+}
+
+fn mode_key(mode: ExpertMode) -> (u8, u32, u8) {
+    let lv = |l: f64| (l * 1000.0).round() as u32;
+    match mode {
+        ExpertMode::Dense => (0, 0, 0),
+        ExpertMode::Sparse { level } => (1, lv(level), 0),
+        ExpertMode::Floe { level } => (2, lv(level), 0),
+        ExpertMode::CatsGate { level } => (3, lv(level), 0),
+        ExpertMode::ChessGate { level } => (4, lv(level), 0),
+        ExpertMode::DownSparse { level } => (5, lv(level), 0),
+        ExpertMode::Uniform { bits } => (6, 0, bits),
+        ExpertMode::QuantProj { proj, bits } => {
+            (7 + proj as u8, 0, bits)
+        }
+        ExpertMode::SparseProj { proj, level } => (10 + proj as u8, lv(level), 0),
+        ExpertMode::FloeVar { level, bits } => (13, lv(level), bits),
+    }
+}
+
+pub struct NativeExpertCache {
+    w: Arc<Weights>,
+    cache: HashMap<(usize, usize, (u8, u32, u8)), NativeExpert>,
+    scratch: Vec<f32>,
+}
+
+impl NativeExpertCache {
+    pub fn new(w: Arc<Weights>) -> Self {
+        NativeExpertCache { w, cache: HashMap::new(), scratch: Vec::new() }
+    }
+
+    pub fn clear(&mut self) {
+        self.cache.clear();
+    }
+
+    fn dequant_mat(&self, layer: usize, expert: usize, proj: &str, bits: u8) -> Result<Mat> {
+        let qv = self.w.proj_q(layer, expert, proj, bits)?;
+        let mut out = vec![0.0f32; qv.d * qv.f];
+        qv.dequant(&mut out);
+        Ok(Mat::from_vec(qv.d, qv.f, out))
+    }
+
+    fn materialize(&self, layer: usize, expert: usize, mode: ExpertMode) -> Result<NativeExpert> {
+        let cfg = &self.w.cfg;
+        let (d, f) = (cfg.d_model, cfg.d_ff);
+        let en = |t: &str| Weights::expert_name(layer, expert, t);
+        let fp = |name: &str| -> Result<Mat> {
+            Ok(Mat::from_vec(
+                if name.ends_with("wd") { f } else { d },
+                if name.ends_with("wd") { d } else { f },
+                self.w.f32(name)?.to_vec(),
+            ))
+        };
+        // start from fp32 matrices, substitute per mode
+        let mut wg = fp(&en("wg"))?;
+        let mut wu = fp(&en("wu"))?;
+        let mut wd = fp(&en("wd"))?;
+        let mut rule = Rule::None;
+        match mode {
+            ExpertMode::Dense => {}
+            ExpertMode::Sparse { level } => {
+                rule = Rule::Up(self.w.threshold("up", layer, expert, level)?);
+            }
+            ExpertMode::Floe { level } => {
+                // INT2 HQQ up projection + contextual sparsity
+                let qv = self.w.up_q(layer, expert)?;
+                let mut dq = vec![0.0f32; d * f];
+                qv.dequant(&mut dq);
+                wu = Mat::from_vec(d, f, dq);
+                rule = Rule::Up(self.w.threshold("up", layer, expert, level)?);
+            }
+            ExpertMode::CatsGate { level } => {
+                rule = Rule::Gate(self.w.threshold("gate", layer, expert, level)?);
+            }
+            ExpertMode::ChessGate { level } => {
+                rule = Rule::GateChannel(self.w.chess_thresholds(layer, expert, level)?);
+            }
+            ExpertMode::DownSparse { level } => {
+                rule = Rule::Down(self.w.threshold("down", layer, expert, level)?);
+            }
+            ExpertMode::Uniform { bits } => {
+                wg = self.dequant_mat(layer, expert, "wg", bits)?;
+                wu = self.dequant_mat(layer, expert, "wu", bits)?;
+                wd = self.dequant_mat(layer, expert, "wd", bits)?;
+            }
+            ExpertMode::QuantProj { proj, bits } => match proj {
+                Proj::Gate => wg = self.dequant_mat(layer, expert, "wg", bits)?,
+                Proj::Up => wu = self.dequant_mat(layer, expert, "wu", bits)?,
+                Proj::Down => wd = self.dequant_mat(layer, expert, "wd", bits)?,
+            },
+            ExpertMode::SparseProj { proj, level } => {
+                let t = self.w.threshold(proj.key(), layer, expert, level)?;
+                rule = match proj {
+                    Proj::Up => Rule::Up(t),
+                    Proj::Gate => Rule::Gate(t),
+                    Proj::Down => Rule::Down(t),
+                };
+            }
+            ExpertMode::FloeVar { level, bits } => {
+                wu = self.dequant_mat(layer, expert, "wu", bits)?;
+                rule = Rule::Up(self.w.threshold("up", layer, expert, level)?);
+            }
+        }
+        Ok(NativeExpert {
+            w: ExpertWeights { wg_t: wg.t(), wu_t: wu.t(), wd },
+            rule,
+        })
+    }
+
+    pub fn forward(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        h: &[f32],
+        mode: ExpertMode,
+    ) -> Result<Vec<f32>> {
+        let key = (layer, expert, mode_key(mode));
+        if !self.cache.contains_key(&key) {
+            let ne = self.materialize(layer, expert, mode)?;
+            self.cache.insert(key, ne);
+        }
+        let ne = self.cache.get(&key).unwrap();
+        self.scratch.resize(self.w.cfg.d_model, 0.0);
+        let mut y = vec![0.0f32; self.w.cfg.d_model];
+        ne.forward(h, &mut y);
+        Ok(y)
+    }
+}

@@ -1,0 +1,336 @@
+//! Decode engine: drives the AOT-compiled HLO graphs (attention step,
+//! expert variants, logits head) token by token, with expert selection and
+//! combination on the host — the computation Fig 1(c) places on the GPU.
+//!
+//! The engine is *pure compute*: which expert weights are "VRAM-resident",
+//! what transfers cost, and when prefetches are issued are the
+//! coordinator's concern (coordinator/). An observer hook exposes each
+//! layer's hidden state + routing so the coordinator can drive the dual
+//! predictors and the simulated clock without touching the math.
+//!
+//! Perf notes (EXPERIMENTS.md §Perf): all weight tensors are uploaded to
+//! device buffers once at load and executions run through `execute_b`
+//! (the literal-argument `execute` path in the xla crate leaks its
+//! internally created input buffers).
+
+pub mod compress;
+pub mod sampler;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+use xla::PjRtBuffer;
+
+use crate::config::ExpertMode;
+use crate::model::Weights;
+use crate::runtime::{to_vec_f32, Runtime};
+use crate::tensor::{softmax_inplace, top_k};
+
+/// Which compiled graph family executes the expert math.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ComputePath {
+    /// plain-jnp lowered graphs (XLA-fused; the default hot path)
+    Hlo,
+    /// the L1 Pallas kernels lowered into HLO (validation + comparison)
+    HloPallas,
+    /// native Rust expert math (baseline sweeps + Fiddler CPU path)
+    Native,
+}
+
+/// Per-request decode state. KV caches live as host vectors, uploaded to
+/// device buffers per step (CPU PJRT: the "device" is host memory, so the
+/// upload is a memcpy).
+pub struct DecodeState {
+    pub x: Vec<f32>,
+    pub pos: usize,
+    kv_dims: [usize; 4],
+    kc: Vec<Vec<f32>>,
+    vc: Vec<Vec<f32>>,
+}
+
+impl DecodeState {
+    pub fn new(w: &Weights) -> Result<Self> {
+        let c = &w.cfg;
+        let dims = [1, c.n_heads, c.max_seq, c.head_dim];
+        let n: usize = dims.iter().product();
+        Ok(DecodeState {
+            x: vec![0.0; c.d_model],
+            pos: 0,
+            kv_dims: dims,
+            kc: vec![vec![0.0; n]; c.n_layers],
+            vc: vec![vec![0.0; n]; c.n_layers],
+        })
+    }
+}
+
+/// Layer-step information surfaced to the coordinator.
+pub struct LayerEvent<'a> {
+    pub layer: usize,
+    /// hidden state entering the MoE block (router/up-projection input)
+    pub h_mid: &'a [f32],
+    /// (expert, weight) pairs actually routed to
+    pub routed: &'a [(usize, f32)],
+}
+
+pub trait StepObserver {
+    fn on_layer(&mut self, ev: &LayerEvent<'_>);
+}
+
+/// No-op observer for plain generation.
+pub struct NoObserver;
+impl StepObserver for NoObserver {
+    fn on_layer(&mut self, _ev: &LayerEvent<'_>) {}
+}
+
+pub struct Engine {
+    pub rt: Runtime,
+    pub w: Arc<Weights>,
+    /// all weight tensors uploaded once as device buffers. The xla
+    /// crate's literal-argument `execute` leaks its internally created
+    /// input buffers (~arg bytes per call); `execute_b` over pre-uploaded
+    /// buffers is both leak-free and copy-free (EXPERIMENTS.md §Perf).
+    bufs: HashMap<String, PjRtBuffer>,
+    /// eval-mode materialized native experts
+    native: compress::NativeExpertCache,
+    pub path: ComputePath,
+}
+
+impl Engine {
+    /// Load artifacts, compile the decode graphs, prewarm weight literals.
+    pub fn load(art_dir: &Path) -> Result<Self> {
+        let w = Arc::new(Weights::load(art_dir)?);
+        let mut rt = Runtime::new(art_dir)?;
+        rt.load_all(&[
+            "attn_step_b1",
+            "expert_dense_b1",
+            "expert_sparse_b1",
+            "expert_floe_b1",
+            "expert_q_b1",
+            "logits_b1",
+            "up_probe_b1",
+        ])?;
+        // Pallas variants are optional (validation path)
+        let _ = rt.load("expert_sparse_pallas_b1");
+        let _ = rt.load("expert_floe_pallas_b1");
+
+        let mut bufs = HashMap::new();
+        let names: Vec<String> = w.names().cloned().collect();
+        for name in names {
+            let shape = w.shape(&name)?.to_vec();
+            let buf = match w.meta(&name)?.dtype {
+                crate::model::Dtype::F32 => rt.upload_f32(w.f32(&name)?, &shape)?,
+                crate::model::Dtype::U8 => rt.upload_u8(w.u8(&name)?, &shape)?,
+                crate::model::Dtype::I32 => continue,
+            };
+            bufs.insert(name, buf);
+        }
+        Ok(Engine {
+            rt,
+            w: Arc::clone(&w),
+            bufs,
+            native: compress::NativeExpertCache::new(w),
+            path: ComputePath::Hlo,
+        })
+    }
+
+    pub fn cfg(&self) -> &crate::config::ModelConfig {
+        &self.w.cfg
+    }
+
+    fn buf(&self, name: &str) -> Result<&PjRtBuffer> {
+        self.bufs
+            .get(name)
+            .ok_or_else(|| anyhow!("no buffer for tensor {name}"))
+    }
+
+    /// One expert forward through the selected compute path.
+    pub fn expert_forward(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        h: &[f32],
+        mode: ExpertMode,
+    ) -> Result<Vec<f32>> {
+        if self.path == ComputePath::Native || compress::requires_native(mode) {
+            return self.native.forward(layer, expert, h, mode);
+        }
+        let d = self.w.cfg.d_model;
+        let x = self.rt.upload_f32(h, &[1, d])?;
+        let en = |t: &str| Weights::expert_name(layer, expert, t);
+        let out = match mode {
+            ExpertMode::Dense => self.rt.exec_b(
+                "expert_dense_b1",
+                &[&x, self.buf(&en("wg"))?, self.buf(&en("wu"))?, self.buf(&en("wd"))?],
+            )?,
+            ExpertMode::Sparse { level } => {
+                let t = self.rt.upload_scalar_f32(
+                    self.w.threshold("up", layer, expert, level)?)?;
+                let name = if self.path == ComputePath::HloPallas
+                    && self.rt.loaded("expert_sparse_pallas_b1")
+                {
+                    "expert_sparse_pallas_b1"
+                } else {
+                    "expert_sparse_b1"
+                };
+                self.rt.exec_b(
+                    name,
+                    &[&x, self.buf(&en("wg"))?, self.buf(&en("wu"))?,
+                      self.buf(&en("wd"))?, &t],
+                )?
+            }
+            ExpertMode::Floe { level } => {
+                let t = self.rt.upload_scalar_f32(
+                    self.w.threshold("up", layer, expert, level)?)?;
+                let name = if self.path == ComputePath::HloPallas
+                    && self.rt.loaded("expert_floe_pallas_b1")
+                {
+                    "expert_floe_pallas_b1"
+                } else {
+                    "expert_floe_b1"
+                };
+                self.rt.exec_b(
+                    name,
+                    &[&x, self.buf(&en("wg"))?, self.buf(&en("up_q"))?,
+                      self.buf(&en("up_q_scale"))?, self.buf(&en("up_q_zero"))?,
+                      self.buf(&en("wd"))?, &t],
+                )?
+            }
+            ExpertMode::Uniform { bits } => {
+                let q = |p: &str| en(&format!("q{bits}.{p}"));
+                self.rt.exec_b(
+                    "expert_q_b1",
+                    &[&x,
+                      self.buf(&q("wg"))?, self.buf(&format!("{}_scale", q("wg")))?,
+                      self.buf(&format!("{}_zero", q("wg")))?,
+                      self.buf(&q("wu"))?, self.buf(&format!("{}_scale", q("wu")))?,
+                      self.buf(&format!("{}_zero", q("wu")))?,
+                      self.buf(&q("wd"))?, self.buf(&format!("{}_scale", q("wd")))?,
+                      self.buf(&format!("{}_zero", q("wd")))?],
+                )?
+            }
+            other => return self.native.forward(layer, expert, h, other),
+        };
+        to_vec_f32(&out[0])
+    }
+
+    /// Run one token through all layers. Returns the logits.
+    pub fn decode_token(
+        &mut self,
+        st: &mut DecodeState,
+        token: u8,
+        mode: ExpertMode,
+        obs: &mut dyn StepObserver,
+    ) -> Result<Vec<f32>> {
+        let c = self.w.cfg.clone();
+        anyhow::ensure!(st.pos < c.max_seq, "KV cache full");
+        let mut x = self.w.embed_row(token)?.to_vec();
+        let pos = self.rt.upload_scalar_i32(st.pos as i32)?;
+        for l in 0..c.n_layers {
+            let pre = format!("layer{l}.");
+            let xl = self.rt.upload_f32(&x, &[1, c.d_model])?;
+            let kcb = self.rt.upload_f32(&st.kc[l], &st.kv_dims)?;
+            let vcb = self.rt.upload_f32(&st.vc[l], &st.kv_dims)?;
+            let mut out = self.rt.exec_b(
+                "attn_step_b1",
+                &[&xl, &kcb, &vcb, &pos,
+                  self.buf(&format!("{pre}wq"))?, self.buf(&format!("{pre}wk"))?,
+                  self.buf(&format!("{pre}wv"))?, self.buf(&format!("{pre}wo"))?,
+                  self.buf(&format!("{pre}norm1"))?, self.buf(&format!("{pre}norm2"))?,
+                  self.buf(&format!("{pre}router"))?],
+            )?;
+            // (x2, h_mid, router_logits, kc', vc')
+            let vc = to_vec_f32(&out.pop().context("vc")?)?;
+            let kc = to_vec_f32(&out.pop().context("kc")?)?;
+            let rl = to_vec_f32(&out.pop().context("rl")?)?;
+            let h_mid = to_vec_f32(&out.pop().context("h")?)?;
+            let x2 = to_vec_f32(&out.pop().context("x2")?)?;
+            st.kc[l] = kc;
+            st.vc[l] = vc;
+
+            // Mixtral routing: softmax over the top-k logits
+            let idx = top_k(&rl, c.top_k);
+            let mut wts: Vec<f32> = idx.iter().map(|&i| rl[i]).collect();
+            softmax_inplace(&mut wts);
+            let routed: Vec<(usize, f32)> =
+                idx.into_iter().zip(wts.into_iter()).collect();
+
+            obs.on_layer(&LayerEvent { layer: l, h_mid: &h_mid, routed: &routed });
+
+            let mut moe = vec![0.0f32; c.d_model];
+            for &(e, wgt) in &routed {
+                let y = self.expert_forward(l, e, &h_mid, mode)?;
+                for (m, yi) in moe.iter_mut().zip(&y) {
+                    *m += wgt * yi;
+                }
+            }
+            for i in 0..c.d_model {
+                x[i] = x2[i] + moe[i];
+            }
+        }
+        st.pos += 1;
+        st.x.copy_from_slice(&x);
+        let xl = self.rt.upload_f32(&x, &[1, c.d_model])?;
+        let out = self.rt.exec_b(
+            "logits_b1",
+            &[&xl, self.buf("final_norm")?, self.buf("lm_head")?],
+        )?;
+        to_vec_f32(&out[0])
+    }
+
+    /// Feed a prompt; returns the logits after the last prompt token.
+    pub fn prefill(
+        &mut self,
+        st: &mut DecodeState,
+        prompt: &[u8],
+        mode: ExpertMode,
+        obs: &mut dyn StepObserver,
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+        let mut logits = Vec::new();
+        for &t in prompt {
+            logits = self.decode_token(st, t, mode, obs)?;
+        }
+        Ok(logits)
+    }
+
+    /// Greedy/temperature generation of `n_tokens` after `prompt`.
+    pub fn generate(
+        &mut self,
+        prompt: &[u8],
+        n_tokens: usize,
+        mode: ExpertMode,
+        temperature: f32,
+        seed: u64,
+        obs: &mut dyn StepObserver,
+    ) -> Result<Vec<u8>> {
+        let mut st = DecodeState::new(&self.w)?;
+        let mut logits = self.prefill(&mut st, prompt, mode, obs)?;
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut out = Vec::with_capacity(n_tokens);
+        for _ in 0..n_tokens {
+            let tok = sampler::sample(&logits, temperature, &mut rng);
+            out.push(tok);
+            if st.pos >= self.w.cfg.max_seq {
+                break;
+            }
+            logits = self.decode_token(&mut st, tok, mode, obs)?;
+        }
+        Ok(out)
+    }
+
+    /// Intra-expert reuse probe through the AOT `up_probe` graph:
+    /// |h · W_up_q| for (layer, expert).
+    pub fn up_probe(&mut self, layer: usize, expert: usize, h: &[f32]) -> Result<Vec<f32>> {
+        let d = self.w.cfg.d_model;
+        let en = |t: &str| Weights::expert_name(layer, expert, t);
+        let x = self.rt.upload_f32(h, &[1, d])?;
+        let out = self.rt.exec_b(
+            "up_probe_b1",
+            &[&x, self.buf(&en("up_q"))?, self.buf(&en("up_q_scale"))?,
+              self.buf(&en("up_q_zero"))?],
+        )?;
+        to_vec_f32(&out[0])
+    }
+}

@@ -1,0 +1,86 @@
+//! Token sampling: greedy (temperature 0) or softmax-with-temperature.
+
+use crate::util::rng::Rng;
+
+pub fn sample(logits: &[f32], temperature: f32, rng: &mut Rng) -> u8 {
+    if temperature <= 0.0 {
+        return argmax(logits) as u8;
+    }
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut probs: Vec<f32> = logits
+        .iter()
+        .map(|l| ((l - m) / temperature).exp())
+        .collect();
+    let sum: f32 = probs.iter().sum();
+    for p in probs.iter_mut() {
+        *p /= sum;
+    }
+    let r = rng.f32();
+    let mut acc = 0.0;
+    for (i, p) in probs.iter().enumerate() {
+        acc += p;
+        if r < acc {
+            return i as u8;
+        }
+    }
+    (probs.len() - 1) as u8
+}
+
+pub fn argmax(x: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, v) in x.iter().enumerate() {
+        if *v > x[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Next-token negative log-likelihood (nats) from raw logits.
+pub fn nll(logits: &[f32], target: u8) -> f64 {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f64 = logits
+        .iter()
+        .map(|l| ((l - m) as f64).exp())
+        .sum::<f64>()
+        .ln()
+        + m as f64;
+    lse - logits[target as usize] as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        let mut rng = Rng::new(0);
+        let logits = vec![0.0f32, 3.0, 1.0];
+        assert_eq!(sample(&logits, 0.0, &mut rng), 1);
+    }
+
+    #[test]
+    fn temperature_sampling_covers_support() {
+        let mut rng = Rng::new(1);
+        let logits = vec![1.0f32, 1.0];
+        let mut seen = [false; 2];
+        for _ in 0..100 {
+            seen[sample(&logits, 1.0, &mut rng) as usize] = true;
+        }
+        assert!(seen[0] && seen[1]);
+    }
+
+    #[test]
+    fn nll_uniform() {
+        let logits = vec![0.0f32; 4];
+        let e = nll(&logits, 2);
+        assert!((e - (4f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nll_confident() {
+        let mut logits = vec![-10.0f32; 8];
+        logits[3] = 10.0;
+        assert!(nll(&logits, 3) < 1e-6);
+    }
+}

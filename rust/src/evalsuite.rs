@@ -1,0 +1,123 @@
+//! Efficacy evaluation through the Rust engine (paper §4.2): held-out
+//! perplexity (nats/byte — the repo's WikiText-2 analog) and exact-match
+//! accuracy on the four seeded probe tasks (the downstream-task analog).
+//! Both consume artifacts exported at build time (eval.txt, probes.json),
+//! so Python and Rust evaluate identical data.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::ExpertMode;
+use crate::engine::{sampler, DecodeState, Engine, NoObserver};
+use crate::util::json::{parse, Json};
+
+pub struct EvalData {
+    pub eval_bytes: Vec<u8>,
+    /// task -> [(prompt, completion)]
+    pub probes: Vec<(String, Vec<(String, String)>)>,
+}
+
+impl EvalData {
+    pub fn load(art_dir: &Path) -> Result<Self> {
+        let eval_bytes = std::fs::read(art_dir.join("eval.txt"))
+            .context("artifacts/eval.txt (re-run `make artifacts`)")?;
+        let text = std::fs::read_to_string(art_dir.join("probes.json"))
+            .context("artifacts/probes.json")?;
+        let j = parse(&text).map_err(|e| anyhow!("probes.json: {e}"))?;
+        let mut probes = Vec::new();
+        for (task, arr) in j.as_obj().context("probes obj")? {
+            let mut insts = Vec::new();
+            for inst in arr.as_arr().context("task arr")? {
+                let p = inst.idx(0).and_then(Json::as_str).context("prompt")?;
+                let c = inst.idx(1).and_then(Json::as_str).context("completion")?;
+                insts.push((p.to_string(), c.to_string()));
+            }
+            probes.push((task.clone(), insts));
+        }
+        Ok(EvalData { eval_bytes, probes })
+    }
+}
+
+/// Held-out next-byte NLL in nats/byte under `mode`.
+///
+/// Evaluates `n_bytes` of eval text in fresh-state windows of `window`
+/// bytes, skipping the first `burn_in` positions of each window.
+pub fn perplexity(
+    engine: &mut Engine,
+    data: &EvalData,
+    mode: ExpertMode,
+    n_bytes: usize,
+    window: usize,
+    burn_in: usize,
+) -> Result<f64> {
+    let bytes = &data.eval_bytes[..n_bytes.min(data.eval_bytes.len())];
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    let mut start = 0;
+    while start + burn_in + 2 < bytes.len() {
+        let end = (start + window).min(bytes.len());
+        let chunk = &bytes[start..end];
+        let mut st = DecodeState::new(&engine.w)?;
+        for i in 0..chunk.len() - 1 {
+            let logits = engine.decode_token(&mut st, chunk[i], mode, &mut NoObserver)?;
+            if i >= burn_in {
+                total += sampler::nll(&logits, chunk[i + 1]);
+                count += 1;
+            }
+        }
+        start = end;
+    }
+    anyhow::ensure!(count > 0, "no eval positions");
+    Ok(total / count as f64)
+}
+
+#[derive(Debug, Clone)]
+pub struct ProbeScore {
+    pub task: String,
+    pub correct: usize,
+    pub total: usize,
+}
+
+impl ProbeScore {
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.total.max(1) as f64
+    }
+}
+
+/// Exact-match accuracy of greedy completions on each probe task.
+pub fn probe_accuracy(
+    engine: &mut Engine,
+    data: &EvalData,
+    mode: ExpertMode,
+    max_instances: usize,
+) -> Result<Vec<ProbeScore>> {
+    let mut out = Vec::new();
+    for (task, insts) in &data.probes {
+        let mut correct = 0;
+        let n = insts.len().min(max_instances);
+        for (prompt, completion) in insts.iter().take(n) {
+            let gen = engine.generate(
+                prompt.as_bytes(),
+                completion.len(),
+                mode,
+                0.0,
+                0,
+                &mut NoObserver,
+            )?;
+            if gen == completion.as_bytes() {
+                correct += 1;
+            }
+        }
+        out.push(ProbeScore { task: task.clone(), correct, total: n });
+    }
+    Ok(out)
+}
+
+/// Mean accuracy across probe tasks (the paper's "average" column).
+pub fn mean_accuracy(scores: &[ProbeScore]) -> f64 {
+    if scores.is_empty() {
+        return 0.0;
+    }
+    scores.iter().map(|s| s.accuracy()).sum::<f64>() / scores.len() as f64
+}

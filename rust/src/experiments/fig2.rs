@@ -1,0 +1,81 @@
+//! Fig 2 analog: activation distributions inside experts (gate / up /
+//! down) at shallow, middle and deep layers, from the calibration traces.
+//! The paper's observation — activations concentrate around zero, which is
+//! what magnitude sparsification exploits — is summarized as the fraction
+//! of mass in the central bins plus distribution moments.
+
+use anyhow::{Context, Result};
+
+use crate::model::Weights;
+use crate::util::json::Json;
+use crate::util::table::{f3, pct, Table};
+
+use super::{jnum, jobj, save_json};
+
+pub fn run(art_dir: &std::path::Path) -> Result<()> {
+    let w = Weights::load(art_dir)?;
+    let h = w
+        .manifest
+        .get("analysis")
+        .and_then(|a| a.get("fig2_histograms"))
+        .context("manifest analysis.fig2_histograms")?;
+    let edges: Vec<f64> = h.get("edges").and_then(Json::as_f64_vec).context("edges")?;
+    let layers = h.get("layers").and_then(Json::as_obj).context("layers")?;
+
+    let mut t = Table::new(
+        "Fig 2 — activation distributions (per layer, most-visited expert)",
+        &["layer", "expert", "proj", "frac |a|<0.1", "frac |a|<0.25", "std"],
+    );
+    let mut out_rows = Vec::new();
+    for (layer, entry) in layers {
+        let e = entry.get("expert").and_then(Json::as_usize).unwrap_or(0);
+        for proj in ["a_gate", "a_up", "a_down"] {
+            let counts: Vec<f64> = entry
+                .get(proj)
+                .and_then(Json::as_f64_vec)
+                .context("hist counts")?;
+            let total: f64 = counts.iter().sum();
+            let centers: Vec<f64> = edges
+                .windows(2)
+                .map(|w| 0.5 * (w[0] + w[1]))
+                .collect();
+            let frac = |lim: f64| -> f64 {
+                centers
+                    .iter()
+                    .zip(&counts)
+                    .filter(|(c, _)| c.abs() < lim)
+                    .map(|(_, n)| *n)
+                    .sum::<f64>()
+                    / total
+            };
+            let mean: f64 =
+                centers.iter().zip(&counts).map(|(c, n)| c * n).sum::<f64>() / total;
+            let var: f64 = centers
+                .iter()
+                .zip(&counts)
+                .map(|(c, n)| (c - mean) * (c - mean) * n)
+                .sum::<f64>()
+                / total;
+            t.row(vec![
+                layer.clone(),
+                e.to_string(),
+                proj.trim_start_matches("a_").to_string(),
+                pct(frac(0.1)),
+                pct(frac(0.25)),
+                f3(var.sqrt()),
+            ]);
+            out_rows.push(jobj(vec![
+                ("layer", super::jstr(layer)),
+                ("proj", super::jstr(proj)),
+                ("frac_lt_0.1", jnum(frac(0.1))),
+                ("std", jnum(var.sqrt())),
+            ]));
+        }
+    }
+    t.print();
+    println!(
+        "\npaper: activations concentrate near zero across shallow/middle/deep \
+         layers, motivating magnitude sparsification (Observation 1)."
+    );
+    save_json("fig2", &super::jarr(out_rows))
+}

@@ -1,0 +1,113 @@
+//! Fig 3 (+ Tables 5/6/7 appendix analogs): compression sensitivity of
+//! expert parameters, measured as held-out perplexity (nats/byte) through
+//! the Rust engine.
+//!
+//!   fig3a — sparsification sensitivity: threshold each projection's
+//!           activations (gate / up / down) at 50..90% sparsity.
+//!           Expected ordering (paper Thm 3.1): down ≤ up < gate.
+//!   fig3b — quantization sensitivity: HQQ INT8/4/3/2/1 per projection.
+//!           Expected: up least sensitive (Observation 2).
+
+use anyhow::Result;
+
+use crate::config::{ExpertMode, Proj};
+use crate::engine::Engine;
+use crate::evalsuite::{perplexity, EvalData};
+use crate::util::table::{f4, Table};
+
+use super::{jarr, jnum, jobj, jstr, save_json};
+
+const LEVELS: [f64; 5] = [0.5, 0.6, 0.7, 0.8, 0.9];
+const BITS: [u8; 5] = [8, 4, 3, 2, 1];
+
+pub struct EvalBudget {
+    pub n_bytes: usize,
+    pub window: usize,
+    pub burn_in: usize,
+}
+
+impl Default for EvalBudget {
+    fn default() -> Self {
+        // window matches the training context length (96); longer windows
+        // leak out-of-distribution RoPE positions into the metric
+        EvalBudget { n_bytes: 768, window: 96, burn_in: 16 }
+    }
+}
+
+pub fn run_fig3a(art_dir: &std::path::Path, budget: &EvalBudget) -> Result<()> {
+    let mut eng = Engine::load(art_dir)?;
+    let data = EvalData::load(art_dir)?;
+    let base = perplexity(&mut eng, &data, ExpertMode::Dense,
+                          budget.n_bytes, budget.window, budget.burn_in)?;
+    let mut t = Table::new(
+        "Fig 3a / Table 5 — sparsification sensitivity (held-out nats/byte)",
+        &["projection", "0%", "50%", "60%", "70%", "80%", "90%"],
+    );
+    let mut js = Vec::new();
+    for proj in [Proj::Gate, Proj::Up, Proj::Down] {
+        let mut cells = vec![proj.key().to_string(), f4(base)];
+        let mut vals = vec![base];
+        for level in LEVELS {
+            let p = perplexity(
+                &mut eng,
+                &data,
+                ExpertMode::SparseProj { proj, level },
+                budget.n_bytes,
+                budget.window,
+                budget.burn_in,
+            )?;
+            cells.push(f4(p));
+            vals.push(p);
+        }
+        t.row(cells);
+        js.push(jobj(vec![
+            ("proj", jstr(proj.key())),
+            ("nll", jarr(vals.into_iter().map(jnum).collect())),
+        ]));
+    }
+    t.print();
+    println!(
+        "\npaper Thm 3.1 / Fig 3a: expect nll(down) <= nll(up) < nll(gate) \
+         at matched sparsity."
+    );
+    save_json("fig3a", &jarr(js))
+}
+
+pub fn run_fig3b(art_dir: &std::path::Path, budget: &EvalBudget) -> Result<()> {
+    let mut eng = Engine::load(art_dir)?;
+    let data = EvalData::load(art_dir)?;
+    let base = perplexity(&mut eng, &data, ExpertMode::Dense,
+                          budget.n_bytes, budget.window, budget.burn_in)?;
+    let mut t = Table::new(
+        "Fig 3b / Table 7 — quantization sensitivity (held-out nats/byte)",
+        &["projection", "fp32", "INT8", "INT4", "INT3", "INT2", "INT1"],
+    );
+    let mut js = Vec::new();
+    for proj in [Proj::Gate, Proj::Up, Proj::Down] {
+        let mut cells = vec![proj.key().to_string(), f4(base)];
+        let mut vals = vec![base];
+        for bits in BITS {
+            let p = perplexity(
+                &mut eng,
+                &data,
+                ExpertMode::QuantProj { proj, bits },
+                budget.n_bytes,
+                budget.window,
+                budget.burn_in,
+            )?;
+            cells.push(f4(p));
+            vals.push(p);
+        }
+        t.row(cells);
+        js.push(jobj(vec![
+            ("proj", jstr(proj.key())),
+            ("nll", jarr(vals.into_iter().map(jnum).collect())),
+        ]));
+    }
+    t.print();
+    println!(
+        "\npaper Fig 3b / Table 7: up projection should be least sensitive at \
+         ultra-low bits (INT2/INT1); down most sensitive."
+    );
+    save_json("fig3b", &jarr(js))
+}

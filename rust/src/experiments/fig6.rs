@@ -1,0 +1,138 @@
+//! Fig 6: end-to-end generation speed (TPS) under a 12 GB VRAM constraint,
+//! FloE vs DeepSpeed-MII / Mixtral-Offloading / Fiddler / Mixtral-GPU,
+//! across input/output length combinations — via the discrete-event
+//! simulator at Mixtral-8x7B scale on RTX-3090 hardware models.
+
+use anyhow::Result;
+
+use crate::coordinator::policy::{SystemConfig, SystemKind};
+use crate::coordinator::sim::{simulate, SimParams};
+use crate::hwsim::RTX3090;
+use crate::util::table::{f2, Table};
+
+use super::{jarr, jnum, jobj, jstr, save_json};
+
+pub const LENGTHS: [(usize, usize); 4] = [(32, 64), (64, 128), (64, 256), (128, 512)];
+
+pub fn run(vram_gb: f64) -> Result<()> {
+    let mut t = Table::new(
+        &format!(
+            "Fig 6 — decode TPS, Mixtral-8x7B on RTX-3090 @ {vram_gb:.0} GB VRAM (simulated)"
+        ),
+        &["system", "in32/out64", "in64/out128", "in64/out256", "in128/out512",
+          "vs GPU-resident", "vs DeepSpeed"],
+    );
+    let mut js = Vec::new();
+    let mut results: Vec<(SystemKind, Vec<f64>)> = Vec::new();
+    for kind in SystemKind::ALL {
+        let p = SimParams::mixtral_on(RTX3090.clone(), SystemConfig::new(kind), vram_gb);
+        let tps: Vec<f64> = LENGTHS
+            .iter()
+            .map(|&(i, o)| simulate(&p, i, o).tps)
+            .collect();
+        results.push((kind, tps));
+    }
+    let gpu_tps = results
+        .iter()
+        .find(|(k, _)| *k == SystemKind::GpuResident)
+        .unwrap()
+        .1[1];
+    let naive_tps = results
+        .iter()
+        .find(|(k, _)| *k == SystemKind::NaiveOffload)
+        .unwrap()
+        .1[1];
+    for (kind, tps) in &results {
+        t.row(vec![
+            kind.name().to_string(),
+            f2(tps[0]),
+            f2(tps[1]),
+            f2(tps[2]),
+            f2(tps[3]),
+            format!("{:.2}", tps[1] / gpu_tps),
+            format!("{:.1}x", tps[1] / naive_tps),
+        ]);
+        js.push(jobj(vec![
+            ("system", jstr(kind.name())),
+            ("tps", jarr(tps.iter().map(|v| jnum(*v)).collect())),
+        ]));
+    }
+    t.print();
+    let floe_tps = results
+        .iter()
+        .find(|(k, _)| *k == SystemKind::Floe)
+        .unwrap()
+        .1[1];
+    println!(
+        "\nheadline: FloE = {:.1}x DeepSpeed-MII (paper: 48.7x), {:.0}% of \
+         GPU-resident (paper: 91%), {:.2}x Mixtral-Offloading (paper: 2.60x), \
+         {:.2}x Fiddler (paper: 3.14x)",
+        floe_tps / naive_tps,
+        100.0 * floe_tps / gpu_tps,
+        floe_tps
+            / results
+                .iter()
+                .find(|(k, _)| *k == SystemKind::AdvancedOffload)
+                .unwrap()
+                .1[1],
+        floe_tps
+            / results
+                .iter()
+                .find(|(k, _)| *k == SystemKind::Fiddler)
+                .unwrap()
+                .1[1],
+    );
+    save_json("fig6", &jarr(js))
+}
+
+/// The real-system counterpart: serve actual requests on the in-repo model
+/// under each policy and report measured TPS (compute) + effective TPS
+/// (compute + modeled PCIe stalls).
+pub fn run_real(art_dir: &std::path::Path, out_tokens: usize) -> Result<()> {
+    use crate::coordinator::serve::{Coordinator, Request};
+    let mut t = Table::new(
+        "Fig 6 (real engine) — tiny model, measured decode TPS",
+        &["system", "compute TPS", "effective TPS", "stall ms/token", "cache hit"],
+    );
+    let mut js = Vec::new();
+    for kind in [SystemKind::Floe, SystemKind::NaiveOffload, SystemKind::AdvancedOffload,
+                 SystemKind::GpuResident] {
+        let mut sys = SystemConfig::new(kind);
+        sys.sparsity = 0.8;
+        let budget = match kind {
+            SystemKind::GpuResident => usize::MAX / 2,
+            _ => 384 * 1024,
+        };
+        let mut coord = Coordinator::new(art_dir, sys, budget)?;
+        coord.calibrate_layer_time()?;
+        let reqs: Vec<Request> = (0..3)
+            .map(|i| Request {
+                id: i,
+                prompt: b"the miller carried a copper kettle ".to_vec(),
+                max_tokens: out_tokens,
+                temperature: 0.0,
+                seed: i,
+            })
+            .collect();
+        let done = coord.run_batch(&reqs)?;
+        let tokens: usize = done.iter().map(|c| c.tokens).sum();
+        let decode_s: f64 = done.iter().map(|c| c.decode_s).sum();
+        let stall_s: f64 = done.iter().map(|c| c.stall_virtual_s).sum();
+        let compute_tps = tokens as f64 / decode_s.max(1e-9);
+        let eff_tps = tokens as f64 / (decode_s + stall_s).max(1e-9);
+        t.row(vec![
+            kind.name().to_string(),
+            f2(compute_tps),
+            f2(eff_tps),
+            format!("{:.3}", 1e3 * stall_s / tokens as f64),
+            f2(coord.pipeline.stats.cache_hit_rate()),
+        ]);
+        js.push(jobj(vec![
+            ("system", jstr(kind.name())),
+            ("compute_tps", jnum(compute_tps)),
+            ("effective_tps", jnum(eff_tps)),
+        ]));
+    }
+    t.print();
+    save_json("fig6_real", &jarr(js))
+}

@@ -1,0 +1,48 @@
+//! One module per paper table/figure (DESIGN.md §5 experiment index).
+//! Every `run` prints a markdown table (paste-ready for EXPERIMENTS.md)
+//! and writes machine-readable JSON under `artifacts/results/`.
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod table1;
+pub mod table3;
+pub mod table7;
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::util::json::{write, Json};
+
+pub fn results_dir() -> PathBuf {
+    let d = crate::artifacts_dir().join("results");
+    let _ = std::fs::create_dir_all(&d);
+    d
+}
+
+pub fn save_json(name: &str, j: &Json) -> Result<()> {
+    let path = results_dir().join(format!("{name}.json"));
+    std::fs::write(&path, write(j))?;
+    println!("[saved {}]", path.display());
+    Ok(())
+}
+
+pub fn jnum(v: f64) -> Json {
+    Json::Num(v)
+}
+
+pub fn jstr(s: &str) -> Json {
+    Json::Str(s.to_string())
+}
+
+pub fn jarr(v: Vec<Json>) -> Json {
+    Json::Arr(v)
+}
+
+pub fn jobj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}

@@ -1,0 +1,32 @@
+//! FloE: On-the-Fly MoE Inference on Memory-constrained GPUs (ICML 2025).
+//!
+//! Three-layer reproduction: Rust coordinator (this crate) + JAX model +
+//! Pallas kernels, AOT-compiled to HLO text and executed via PJRT.
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod evalsuite;
+pub mod experiments;
+pub mod hwsim;
+pub mod memory;
+pub mod model;
+pub mod predictor;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod sparsity;
+pub mod tensor;
+pub mod transfer;
+pub mod util;
+
+use std::path::PathBuf;
+
+/// Default artifacts directory: `$FLOE_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("FLOE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

@@ -1,0 +1,196 @@
+//! floe — CLI for the FloE reproduction.
+//!
+//! Subcommands:
+//!   generate   one-off generation through the engine
+//!   serve      line-JSON TCP server (see server.rs)
+//!   eval       perplexity + probe accuracy for one compression mode
+//!   exp-*      regenerate a paper table/figure (DESIGN.md §5 index)
+//!   exp-all    everything (EXPERIMENTS.md source of truth)
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use floe::config::ExpertMode;
+use floe::coordinator::policy::{SystemConfig, SystemKind};
+use floe::engine::{ComputePath, Engine, NoObserver};
+use floe::experiments as exp;
+use floe::experiments::fig3::EvalBudget;
+use floe::model::tokenizer::ByteTokenizer;
+
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+fn parse_args() -> Args {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let mut flags = HashMap::new();
+    let mut key: Option<String> = None;
+    for a in it {
+        if let Some(k) = a.strip_prefix("--") {
+            if let Some(prev) = key.take() {
+                flags.insert(prev, "true".to_string());
+            }
+            key = Some(k.to_string());
+        } else if let Some(k) = key.take() {
+            flags.insert(k, a);
+        }
+    }
+    if let Some(prev) = key.take() {
+        flags.insert(prev, "true".to_string());
+    }
+    Args { cmd, flags }
+}
+
+impl Args {
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+    fn usize(&self, k: &str, default: usize) -> usize {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn f64(&self, k: &str, default: f64) -> f64 {
+        self.get(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    fn mode(&self) -> Result<ExpertMode> {
+        let level = self.f64("level", 0.8);
+        let bits = self.usize("bits", 2) as u8;
+        Ok(match self.get("mode").unwrap_or("floe") {
+            "dense" => ExpertMode::Dense,
+            "sparse" | "floe-wup" => ExpertMode::Sparse { level },
+            "floe" => ExpertMode::Floe { level },
+            "cats" => ExpertMode::CatsGate { level },
+            "chess" => ExpertMode::ChessGate { level },
+            "down" => ExpertMode::DownSparse { level },
+            "uniform" | "hqq" => ExpertMode::Uniform { bits },
+            "floe-var" => ExpertMode::FloeVar { level, bits },
+            other => bail!("unknown mode {other}"),
+        })
+    }
+    fn budget(&self) -> EvalBudget {
+        EvalBudget {
+            n_bytes: self.usize("eval-bytes", 768),
+            window: self.usize("window", 96),
+            burn_in: self.usize("burn-in", 16),
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let args = parse_args();
+    let art = floe::artifacts_dir();
+    match args.cmd.as_str() {
+        "generate" => {
+            let mut eng = Engine::load(&art)?;
+            if args.get("pallas").is_some() {
+                eng.path = ComputePath::HloPallas;
+            } else if args.get("native").is_some() {
+                eng.path = ComputePath::Native;
+            }
+            let prompt = args.get("prompt").unwrap_or("the miller ").to_string();
+            let mode = args.mode()?;
+            let t0 = std::time::Instant::now();
+            let out = eng.generate(
+                prompt.as_bytes(),
+                args.usize("tokens", 48),
+                mode,
+                args.f64("temperature", 0.0) as f32,
+                args.usize("seed", 0) as u64,
+                &mut NoObserver,
+            )?;
+            let dt = t0.elapsed().as_secs_f64();
+            println!("{}{}", prompt, ByteTokenizer::decode(&out));
+            eprintln!(
+                "[{} tokens in {:.2}s = {:.1} tok/s, mode {:?}]",
+                out.len(),
+                dt,
+                out.len() as f64 / dt,
+                mode
+            );
+        }
+        "serve" => {
+            let kind = match args.get("system").unwrap_or("floe") {
+                "floe" => SystemKind::Floe,
+                "naive" => SystemKind::NaiveOffload,
+                "advanced" => SystemKind::AdvancedOffload,
+                "fiddler" => SystemKind::Fiddler,
+                "resident" => SystemKind::GpuResident,
+                other => bail!("unknown system {other}"),
+            };
+            let mut system = SystemConfig::new(kind);
+            system.sparsity = args.f64("level", 0.8);
+            floe::server::serve(
+                &art,
+                floe::server::ServerOpts {
+                    port: args.usize("port", 7399) as u16,
+                    system,
+                    vram_budget_bytes: args.usize("vram-kb", 512) * 1024,
+                    max_requests: args.usize("max-requests", 0),
+                },
+            )?;
+        }
+        "eval" => {
+            let mut eng = Engine::load(&art)?;
+            let data = floe::evalsuite::EvalData::load(&art)?;
+            let mode = args.mode()?;
+            let b = args.budget();
+            let ppl = floe::evalsuite::perplexity(
+                &mut eng, &data, mode, b.n_bytes, b.window, b.burn_in,
+            )?;
+            println!("mode {:?}: {:.4} nats/byte", mode, ppl);
+            let scores = floe::evalsuite::probe_accuracy(
+                &mut eng, &data, mode, args.usize("probes", 20),
+            )?;
+            for s in &scores {
+                println!("  {:8} {:2}/{:2} = {:.2}", s.task, s.correct, s.total, s.accuracy());
+            }
+            println!("  mean accuracy {:.3}", floe::evalsuite::mean_accuracy(&scores));
+        }
+        "exp-fig2" => exp::fig2::run(&art)?,
+        "exp-fig3a" => exp::fig3::run_fig3a(&art, &args.budget())?,
+        "exp-fig3b" => exp::fig3::run_fig3b(&art, &args.budget())?,
+        "exp-fig4" => exp::fig4::run(&art)?,
+        "exp-fig6" => {
+            exp::fig6::run(args.f64("vram", 12.0))?;
+            if args.get("real").is_some() {
+                exp::fig6::run_real(&art, args.usize("tokens", 48))?;
+            }
+        }
+        "exp-fig7" => exp::fig7::run(&art)?,
+        "exp-fig8" => exp::fig8::run()?,
+        "exp-fig9" => exp::table3::run_fig9(&art, &args.budget(), args.usize("probes", 12))?,
+        "exp-table1" => exp::table1::run(&art)?,
+        "exp-table3" => exp::table3::run(&art, &args.budget(), args.usize("probes", 20))?,
+        "exp-compression" => exp::table7::run_compression(&art)?,
+        "exp-all" => {
+            let b = args.budget();
+            exp::fig2::run(&art)?;
+            exp::table1::run(&art)?;
+            exp::fig7::run(&art)?;
+            exp::fig6::run(12.0)?;
+            exp::fig6::run_real(&art, 32)?;
+            exp::fig8::run()?;
+            exp::fig4::run(&art)?;
+            exp::table7::run_compression(&art)?;
+            exp::fig3::run_fig3a(&art, &b)?;
+            exp::fig3::run_fig3b(&art, &b)?;
+            exp::table3::run(&art, &b, args.usize("probes", 20))?;
+            exp::table3::run_fig9(&art, &b, args.usize("probes", 12))?;
+        }
+        "help" | _ => {
+            println!(
+                "floe — FloE (ICML 2025) reproduction\n\n\
+                 usage: floe <cmd> [--flag value]...\n\n\
+                 cmds: generate serve eval exp-fig2 exp-fig3a exp-fig3b \
+                 exp-fig4 exp-fig6 exp-fig7 exp-fig8 exp-fig9 exp-table1 \
+                 exp-table3 exp-compression exp-all\n\n\
+                 common flags: --mode dense|sparse|floe|cats|chess|uniform \
+                 --level 0.8 --bits 2 --prompt '...' --tokens 48\n\
+                 env: FLOE_ARTIFACTS (default ./artifacts)"
+            );
+        }
+    }
+    Ok(())
+}

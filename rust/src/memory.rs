@@ -1,0 +1,289 @@
+//! VRAM accounting + expert cache (paper Fig 1(b)/(c) "expert cache").
+//!
+//! The cache is byte-budgeted (VRAM minus resident weights/KV), keyed by
+//! (layer, expert), with LRU eviction and prediction-aware pinning: entries
+//! pinned by the prefetcher for the imminent layer are never evicted.
+//! Invariants (enforced + property-tested): used <= budget at all times;
+//! pinned entries survive eviction; hit/miss accounting is exact.
+
+use std::collections::HashMap;
+
+pub type ExpertKey = (usize, usize); // (layer, expert)
+
+#[derive(Debug, Clone)]
+struct Entry {
+    bytes: usize,
+    pinned: bool,
+    /// LRU clock stamp
+    last_use: u64,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub inserted_bytes: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let tot = self.hits + self.misses;
+        if tot == 0 {
+            0.0
+        } else {
+            self.hits as f64 / tot as f64
+        }
+    }
+}
+
+pub struct ExpertCache {
+    budget: usize,
+    used: usize,
+    clock: u64,
+    entries: HashMap<ExpertKey, Entry>,
+    pub stats: CacheStats,
+}
+
+impl ExpertCache {
+    pub fn new(budget_bytes: usize) -> Self {
+        ExpertCache {
+            budget: budget_bytes,
+            used: 0,
+            clock: 0,
+            entries: HashMap::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+    pub fn used(&self) -> usize {
+        self.used
+    }
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+    pub fn contains(&self, key: ExpertKey) -> bool {
+        self.entries.contains_key(&key)
+    }
+
+    /// Record an access; returns true on hit (and refreshes LRU position).
+    pub fn access(&mut self, key: ExpertKey) -> bool {
+        self.clock += 1;
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.last_use = self.clock;
+            self.stats.hits += 1;
+            true
+        } else {
+            self.stats.misses += 1;
+            false
+        }
+    }
+
+    /// Insert (or resize) an entry, evicting LRU unpinned entries as
+    /// needed. Returns false if the entry cannot fit even after evicting
+    /// everything unpinned.
+    pub fn insert(&mut self, key: ExpertKey, bytes: usize) -> bool {
+        self.clock += 1;
+        if let Some(old) = self.entries.remove(&key) {
+            self.used -= old.bytes;
+        }
+        if bytes > self.budget {
+            return false;
+        }
+        while self.used + bytes > self.budget {
+            if !self.evict_lru() {
+                return false;
+            }
+        }
+        self.used += bytes;
+        self.stats.inserted_bytes += bytes as u64;
+        self.entries.insert(
+            key,
+            Entry { bytes, pinned: false, last_use: self.clock },
+        );
+        true
+    }
+
+    /// Pin/unpin an entry (prefetched-for-imminent-use protection).
+    pub fn set_pinned(&mut self, key: ExpertKey, pinned: bool) {
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.pinned = pinned;
+        }
+    }
+
+    pub fn unpin_all(&mut self) {
+        for e in self.entries.values_mut() {
+            e.pinned = false;
+        }
+    }
+
+    fn evict_lru(&mut self) -> bool {
+        let victim = self
+            .entries
+            .iter()
+            .filter(|(_, e)| !e.pinned)
+            .min_by_key(|(_, e)| e.last_use)
+            .map(|(k, _)| *k);
+        match victim {
+            Some(k) => {
+                let e = self.entries.remove(&k).unwrap();
+                self.used -= e.bytes;
+                self.stats.evictions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn keys(&self) -> Vec<ExpertKey> {
+        self.entries.keys().copied().collect()
+    }
+}
+
+/// Simulated pinned staging-buffer pool for the transfer engine: fixed
+/// number of fixed-size buffers, blocking acquire models back-pressure.
+pub struct PinnedPool {
+    buf_bytes: usize,
+    free: Vec<usize>,
+    total: usize,
+}
+
+impl PinnedPool {
+    pub fn new(n_buffers: usize, buf_bytes: usize) -> Self {
+        PinnedPool { buf_bytes, free: (0..n_buffers).collect(), total: n_buffers }
+    }
+    pub fn buf_bytes(&self) -> usize {
+        self.buf_bytes
+    }
+    pub fn try_acquire(&mut self) -> Option<usize> {
+        self.free.pop()
+    }
+    pub fn release(&mut self, id: usize) {
+        debug_assert!(id < self.total && !self.free.contains(&id));
+        self.free.push(id);
+    }
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn hit_miss_and_lru() {
+        let mut c = ExpertCache::new(300);
+        assert!(!c.access((0, 0)));
+        assert!(c.insert((0, 0), 100));
+        assert!(c.insert((0, 1), 100));
+        assert!(c.insert((0, 2), 100));
+        assert!(c.access((0, 0))); // refresh 0 → LRU victim is (0,1)
+        assert!(c.insert((1, 0), 100));
+        assert!(c.contains((0, 0)));
+        assert!(!c.contains((0, 1)));
+        assert_eq!(c.stats.evictions, 1);
+    }
+
+    #[test]
+    fn pinned_survives() {
+        let mut c = ExpertCache::new(200);
+        c.insert((0, 0), 100);
+        c.set_pinned((0, 0), true);
+        c.insert((0, 1), 100);
+        assert!(c.insert((0, 2), 100)); // must evict (0,1), not pinned (0,0)
+        assert!(c.contains((0, 0)));
+        assert!(!c.contains((0, 1)));
+    }
+
+    #[test]
+    fn cannot_fit_oversize() {
+        let mut c = ExpertCache::new(100);
+        assert!(!c.insert((0, 0), 101));
+        assert_eq!(c.used(), 0);
+    }
+
+    #[test]
+    fn all_pinned_blocks_insert() {
+        let mut c = ExpertCache::new(100);
+        c.insert((0, 0), 100);
+        c.set_pinned((0, 0), true);
+        assert!(!c.insert((0, 1), 50));
+        assert!(c.contains((0, 0)));
+    }
+
+    #[test]
+    fn prop_budget_never_exceeded() {
+        check("cache-budget", 50, |rng: &mut Rng| {
+            let budget = rng.range(100, 2000);
+            let mut c = ExpertCache::new(budget);
+            for _ in 0..200 {
+                let key = (rng.below(4), rng.below(8));
+                match rng.below(4) {
+                    0 => {
+                        c.access(key);
+                    }
+                    1 => {
+                        c.insert(key, rng.range(1, budget / 2 + 2));
+                    }
+                    2 => c.set_pinned(key, rng.f64() < 0.5),
+                    _ => c.unpin_all(),
+                }
+                prop_assert!(
+                    c.used() <= c.budget(),
+                    "used {} > budget {}",
+                    c.used(),
+                    c.budget()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_used_equals_sum_of_entries() {
+        check("cache-used-sum", 30, |rng: &mut Rng| {
+            let mut c = ExpertCache::new(1000);
+            let mut shadow: std::collections::HashMap<ExpertKey, usize> =
+                Default::default();
+            for _ in 0..100 {
+                let key = (rng.below(3), rng.below(4));
+                let bytes = rng.range(1, 300);
+                if c.insert(key, bytes) {
+                    shadow.insert(key, bytes);
+                }
+                // drop shadow entries evicted by the cache
+                shadow.retain(|k, _| c.contains(*k));
+                let sum: usize = shadow.values().sum();
+                prop_assert!(
+                    sum == c.used(),
+                    "shadow {} != used {}",
+                    sum,
+                    c.used()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pinned_pool_cycle() {
+        let mut p = PinnedPool::new(2, 64);
+        let a = p.try_acquire().unwrap();
+        let b = p.try_acquire().unwrap();
+        assert!(p.try_acquire().is_none());
+        p.release(a);
+        assert_eq!(p.available(), 1);
+        p.release(b);
+        assert_eq!(p.available(), 2);
+    }
+}

@@ -1,0 +1,267 @@
+//! Model artifacts: weights.bin + manifest.json loader, byte tokenizer,
+//! KV-cache bookkeeping, and typed accessors for every exported tensor.
+
+pub mod tokenizer;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::config::{ModelConfig, QuantInfo};
+use crate::quant::QuantView;
+use crate::tensor::{ExpertWeights, Mat};
+use crate::util::json::{parse, Json};
+
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    U8,
+    I32,
+}
+
+/// The full artifact bundle: raw weight blob + manifest (config, tensor
+/// index, thresholds, analysis) loaded once at startup.
+pub struct Weights {
+    blob: Vec<u8>,
+    index: HashMap<String, TensorMeta>,
+    pub manifest: Json,
+    pub cfg: ModelConfig,
+    pub quant: QuantInfo,
+}
+
+impl Weights {
+    pub fn load(art_dir: &Path) -> Result<Self> {
+        let man_path = art_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&man_path)
+            .with_context(|| format!("reading {man_path:?} (run `make artifacts`)"))?;
+        let manifest = parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let blob = std::fs::read(art_dir.join("weights.bin"))
+            .context("reading weights.bin")?;
+        let mut index = HashMap::new();
+        let tensors = manifest
+            .get("tensors")
+            .and_then(Json::as_obj)
+            .context("manifest: tensors")?;
+        for (name, t) in tensors {
+            let dtype = match t.get("dtype").and_then(Json::as_str) {
+                Some("f32") => Dtype::F32,
+                Some("u8") => Dtype::U8,
+                Some("i32") => Dtype::I32,
+                other => bail!("tensor {name}: bad dtype {other:?}"),
+            };
+            let meta = TensorMeta {
+                dtype,
+                shape: t
+                    .get("shape")
+                    .and_then(Json::as_f64_vec)
+                    .context("shape")?
+                    .into_iter()
+                    .map(|v| v as usize)
+                    .collect(),
+                offset: t.get("offset").and_then(Json::as_usize).context("offset")?,
+                nbytes: t.get("nbytes").and_then(Json::as_usize).context("nbytes")?,
+            };
+            if meta.offset + meta.nbytes > blob.len() {
+                bail!("tensor {name} out of bounds");
+            }
+            index.insert(name.clone(), meta);
+        }
+        let cfg = ModelConfig::from_manifest(&manifest)?;
+        let quant = QuantInfo::from_manifest(&manifest)?;
+        Ok(Weights { blob, index, manifest, cfg, quant })
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&TensorMeta> {
+        self.index
+            .get(name)
+            .ok_or_else(|| anyhow!("tensor not found: {name}"))
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &String> {
+        self.index.keys()
+    }
+
+    /// Borrow an f32 tensor. Offsets are 8-aligned by the exporter.
+    pub fn f32(&self, name: &str) -> Result<&[f32]> {
+        let m = self.meta(name)?;
+        if m.dtype != Dtype::F32 {
+            bail!("{name}: not f32");
+        }
+        let bytes = &self.blob[m.offset..m.offset + m.nbytes];
+        debug_assert_eq!(bytes.as_ptr() as usize % 4, 0);
+        Ok(unsafe {
+            std::slice::from_raw_parts(bytes.as_ptr() as *const f32, m.nbytes / 4)
+        })
+    }
+
+    pub fn u8(&self, name: &str) -> Result<&[u8]> {
+        let m = self.meta(name)?;
+        if m.dtype != Dtype::U8 {
+            bail!("{name}: not u8");
+        }
+        Ok(&self.blob[m.offset..m.offset + m.nbytes])
+    }
+
+    pub fn shape(&self, name: &str) -> Result<&[usize]> {
+        Ok(&self.meta(name)?.shape)
+    }
+
+    // ----------------------------------------------------- typed helpers
+
+    pub fn expert_name(layer: usize, expert: usize, t: &str) -> String {
+        format!("layer{layer}.expert{expert}.{t}")
+    }
+
+    /// FloE INT2-packed up projection view.
+    pub fn up_q(&self, layer: usize, expert: usize) -> Result<QuantView<'_>> {
+        let base = Self::expert_name(layer, expert, "up_q");
+        let codes = self.u8(&base)?;
+        let scale = self.f32(&format!("{base}_scale"))?;
+        let zero = self.f32(&format!("{base}_zero"))?;
+        Ok(QuantView {
+            codes,
+            scale,
+            zero,
+            d: self.cfg.d_model,
+            f: self.cfg.d_ff,
+            group_size: self.quant.group_size,
+            bits: 2,
+            packed: true,
+        })
+    }
+
+    /// Uniform-quantized projection view (Fig 3b / Table 7 sweeps).
+    pub fn proj_q(&self, layer: usize, expert: usize, proj: &str, bits: u8)
+                  -> Result<QuantView<'_>> {
+        let base = Self::expert_name(layer, expert, &format!("q{bits}.{proj}"));
+        let codes = self.u8(&base)?;
+        let scale = self.f32(&format!("{base}_scale"))?;
+        let zero = self.f32(&format!("{base}_zero"))?;
+        let (d, f) = if proj == "wd" {
+            (self.cfg.d_ff, self.cfg.d_model)
+        } else {
+            (self.cfg.d_model, self.cfg.d_ff)
+        };
+        Ok(QuantView {
+            codes,
+            scale,
+            zero,
+            d,
+            f,
+            group_size: self.quant.group_size,
+            bits,
+            packed: false,
+        })
+    }
+
+    /// Channel-major (compact-layout) native expert weights.
+    pub fn expert_native(&self, layer: usize, expert: usize) -> Result<ExpertWeights> {
+        let (d, f) = (self.cfg.d_model, self.cfg.d_ff);
+        let wg = Mat::from_vec(d, f, self.f32(&Self::expert_name(layer, expert, "wg"))?.to_vec());
+        let wu = Mat::from_vec(d, f, self.f32(&Self::expert_name(layer, expert, "wu"))?.to_vec());
+        let wd = Mat::from_vec(f, d, self.f32(&Self::expert_name(layer, expert, "wd"))?.to_vec());
+        Ok(ExpertWeights { wg_t: wg.t(), wu_t: wu.t(), wd })
+    }
+
+    /// Per-expert threshold at a sparsity level for a projection
+    /// ("up" | "gate" | "down") — paper Eq. (6), calibrated offline.
+    pub fn threshold(&self, proj: &str, layer: usize, expert: usize, level: f64)
+                     -> Result<f32> {
+        let th = self.manifest.get("thresholds").context("thresholds")?;
+        let levels = th.get("levels").and_then(Json::as_f64_vec).context("levels")?;
+        let li = levels
+            .iter()
+            .position(|l| (l - level).abs() < 1e-9)
+            .ok_or_else(|| anyhow!("no calibrated level {level}"))?;
+        th.get(proj)
+            .and_then(|p| p.idx(layer))
+            .and_then(|p| p.idx(expert))
+            .and_then(|p| p.idx(li))
+            .and_then(Json::as_f64)
+            .map(|v| v as f32)
+            .ok_or_else(|| anyhow!("threshold {proj}[{layer}][{expert}][{li}]"))
+    }
+
+    /// CHESS per-channel thresholds for the gate projection.
+    pub fn chess_thresholds(&self, layer: usize, expert: usize, level: f64)
+                            -> Result<Vec<f32>> {
+        let th = self.manifest.get("thresholds").context("thresholds")?;
+        let levels = th.get("levels").and_then(Json::as_f64_vec).context("levels")?;
+        let li = levels
+            .iter()
+            .position(|l| (l - level).abs() < 1e-9)
+            .ok_or_else(|| anyhow!("no calibrated level {level}"))?;
+        th.get("chess_gate")
+            .and_then(|p| p.idx(layer))
+            .and_then(|p| p.idx(expert))
+            .and_then(|p| p.idx(li))
+            .and_then(Json::as_f64_vec)
+            .map(|v| v.into_iter().map(|x| x as f32).collect())
+            .ok_or_else(|| anyhow!("chess threshold [{layer}][{expert}][{li}]"))
+    }
+
+    /// Inter-expert predictor weights for layer i -> i+1 (w [d, E], b [E]).
+    pub fn predictor(&self, layer: usize) -> Result<(&[f32], &[f32])> {
+        Ok((self.f32(&format!("pred{layer}.w"))?, self.f32(&format!("pred{layer}.b"))?))
+    }
+
+    pub fn embed_row(&self, token: u8) -> Result<&[f32]> {
+        let e = self.f32("embed")?;
+        let d = self.cfg.d_model;
+        Ok(&e[token as usize * d..(token as usize + 1) * d])
+    }
+}
+
+/// Fixed-capacity KV cache state for one sequence (host-side mirror; the
+/// actual cache tensors live as PJRT literals fed back step to step).
+#[derive(Clone, Debug)]
+pub struct KvState {
+    pub pos: usize,
+    pub max_seq: usize,
+}
+
+impl KvState {
+    pub fn new(max_seq: usize) -> Self {
+        KvState { pos: 0, max_seq }
+    }
+    pub fn advance(&mut self) -> Result<usize> {
+        if self.pos >= self.max_seq {
+            bail!("KV cache full ({} tokens)", self.max_seq);
+        }
+        let p = self.pos;
+        self.pos += 1;
+        Ok(p)
+    }
+    pub fn remaining(&self) -> usize {
+        self.max_seq - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_state_advances_and_fills() {
+        let mut kv = KvState::new(3);
+        assert_eq!(kv.advance().unwrap(), 0);
+        assert_eq!(kv.advance().unwrap(), 1);
+        assert_eq!(kv.remaining(), 1);
+        assert_eq!(kv.advance().unwrap(), 2);
+        assert!(kv.advance().is_err());
+    }
+
+    #[test]
+    fn expert_name_format() {
+        assert_eq!(Weights::expert_name(2, 5, "wg"), "layer2.expert5.wg");
+    }
+}

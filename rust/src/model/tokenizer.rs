@@ -1,0 +1,39 @@
+//! Byte-level tokenizer (vocab 256) matching the Python training setup:
+//! token id == byte value. Decoding clamps to printable ASCII for display.
+
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn encode(text: &str) -> Vec<u8> {
+        text.as_bytes().to_vec()
+    }
+
+    pub fn decode(tokens: &[u8]) -> String {
+        tokens
+            .iter()
+            .map(|&b| {
+                if (32..127).contains(&b) || b == b'\n' {
+                    b as char
+                } else {
+                    '\u{fffd}'
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let s = "the miller carried a copper kettle.";
+        assert_eq!(ByteTokenizer::decode(&ByteTokenizer::encode(s)), s);
+    }
+
+    #[test]
+    fn non_printable_replaced() {
+        assert_eq!(ByteTokenizer::decode(&[0, 200]), "\u{fffd}\u{fffd}");
+    }
+}

@@ -1,0 +1,177 @@
+//! Dual sparsity predictors (paper §3.3).
+//!
+//! * Inter-expert (§3.3.1): a learned probe — trained at build time in
+//!   Python on activation traces — mapping the hidden state entering layer
+//!   i's MoE block to the experts layer i+1 will route to. Native Rust
+//!   matmul (d x E is tiny); runs while layer i computes, driving prefetch.
+//! * Intra-expert (§3.3.2): parameter-free reuse predictor — multiply the
+//!   same hidden state with layer i+1's VRAM-resident INT2 up projection
+//!   to estimate |v| and hence the channel mask, so only surviving gate
+//!   columns / down rows are transferred.
+
+use anyhow::Result;
+
+use crate::model::Weights;
+use crate::quant::QuantView;
+use crate::sparsity;
+use crate::tensor::top_k;
+
+/// Inter-expert predictor for one layer boundary (i -> i+1).
+pub struct InterPredictor {
+    w: Vec<f32>, // [d, E] row-major
+    b: Vec<f32>, // [E]
+    d: usize,
+    e: usize,
+}
+
+impl InterPredictor {
+    pub fn from_weights(wts: &Weights, layer: usize) -> Result<Self> {
+        let (w, b) = wts.predictor(layer)?;
+        Ok(InterPredictor {
+            w: w.to_vec(),
+            b: b.to_vec(),
+            d: wts.cfg.d_model,
+            e: wts.cfg.n_experts,
+        })
+    }
+
+    pub fn from_raw(w: Vec<f32>, b: Vec<f32>, d: usize, e: usize) -> Self {
+        InterPredictor { w, b, d, e }
+    }
+
+    /// Scores per expert for the *next* layer given this layer's h_mid.
+    pub fn scores(&self, h: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(h.len(), self.d);
+        let mut s = self.b.clone();
+        for (i, hi) in h.iter().enumerate() {
+            let row = &self.w[i * self.e..(i + 1) * self.e];
+            for (sj, wj) in s.iter_mut().zip(row) {
+                *sj += hi * wj;
+            }
+        }
+        s
+    }
+
+    /// Predicted top-k experts for the next layer.
+    pub fn predict(&self, h: &[f32], k: usize) -> Vec<usize> {
+        top_k(&self.scores(h), k)
+    }
+}
+
+/// Intra-expert reuse predictor: channel mask for (layer+1, expert) from
+/// this layer's hidden state and the resident INT2 up projection.
+pub struct IntraPredictor {
+    /// dequantized up projection [d, f] (cached per expert; the INT2 bytes
+    /// are the resident representation, dequant is cheap and one-time)
+    wu_dq: Vec<f32>,
+    d: usize,
+    f: usize,
+}
+
+impl IntraPredictor {
+    pub fn from_quant(q: &QuantView<'_>) -> Self {
+        let mut wu_dq = vec![0.0; q.d * q.f];
+        q.dequant(&mut wu_dq);
+        IntraPredictor { wu_dq, d: q.d, f: q.f }
+    }
+
+    /// |h · W_up_q| per channel.
+    pub fn channel_magnitudes(&self, h: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(h.len(), self.d);
+        let mut v = vec![0.0f32; self.f];
+        for (i, hi) in h.iter().enumerate() {
+            if *hi == 0.0 {
+                continue;
+            }
+            let row = &self.wu_dq[i * self.f..(i + 1) * self.f];
+            for (vj, wj) in v.iter_mut().zip(row) {
+                *vj += hi * wj;
+            }
+        }
+        v.iter_mut().for_each(|x| *x = x.abs());
+        v
+    }
+
+    /// Predicted channel mask at threshold t, padded by `margin` (a small
+    /// safety factor lowers the threshold to trade extra bytes for recall).
+    pub fn predict_mask(&self, h: &[f32], t: f32, margin: f32) -> Vec<bool> {
+        let v = self.channel_magnitudes(h);
+        sparsity::mask_from_activations(&v, t * (1.0 - margin))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn inter_predictor_linear() {
+        // w selects expert = argmax over first E coords of h
+        let (d, e) = (4, 3);
+        let mut w = vec![0.0; d * e];
+        for j in 0..e {
+            w[j * e + j] = 1.0; // h[j] feeds expert j
+        }
+        let p = InterPredictor::from_raw(w, vec![0.0; e], d, e);
+        let pred = p.predict(&[0.1, 5.0, 0.2, 0.0], 2);
+        assert_eq!(pred[0], 1);
+    }
+
+    #[test]
+    fn intra_predictor_matches_direct_matmul() {
+        let mut rng = Rng::new(4);
+        let (d, f, g) = (16, 8, 8);
+        let codes: Vec<u8> = (0..d * f).map(|_| rng.below(4) as u8).collect();
+        // pack
+        let mut packed = vec![0u8; d / 4 * f];
+        for pr in 0..d / 4 {
+            for j in 0..f {
+                let mut b = 0u8;
+                for k in 0..4 {
+                    b |= codes[(pr * 4 + k) * f + j] << (2 * k);
+                }
+                packed[pr * f + j] = b;
+            }
+        }
+        let scale: Vec<f32> = (0..d / g * f).map(|_| rng.f32() + 0.1).collect();
+        let zero: Vec<f32> = (0..d / g * f).map(|_| rng.f32()).collect();
+        let qv = QuantView {
+            codes: &packed, scale: &scale, zero: &zero,
+            d, f, group_size: g, bits: 2, packed: true,
+        };
+        let ip = IntraPredictor::from_quant(&qv);
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let v = ip.channel_magnitudes(&h);
+        // direct: dequant then |h @ w|
+        let mut w = vec![0.0; d * f];
+        qv.dequant(&mut w);
+        for j in 0..f {
+            let mut s = 0.0;
+            for i in 0..d {
+                s += h[i] * w[i * f + j];
+            }
+            assert!((v[j] - s.abs()).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn margin_expands_mask() {
+        let mut rng = Rng::new(5);
+        let (d, f, g) = (16, 16, 8);
+        let packed = vec![0b00_01_10_11u8; d / 4 * f];
+        let scale: Vec<f32> = (0..d / g * f).map(|_| rng.f32() + 0.1).collect();
+        let zero = vec![0.0f32; d / g * f];
+        let qv = QuantView {
+            codes: &packed, scale: &scale, zero: &zero,
+            d, f, group_size: g, bits: 2, packed: true,
+        };
+        let ip = IntraPredictor::from_quant(&qv);
+        let h: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
+        let m0 = ip.predict_mask(&h, 0.5, 0.0);
+        let m1 = ip.predict_mask(&h, 0.5, 0.3);
+        let c0 = m0.iter().filter(|x| **x).count();
+        let c1 = m1.iter().filter(|x| **x).count();
+        assert!(c1 >= c0);
+    }
+}

@@ -1,0 +1,146 @@
+//! Rust mirror of the HQQ group-wise affine quantization layout
+//! (python/compile/hqq.py): unpack INT2 4-per-byte codes, dequantize
+//! arbitrary-bit codes, and account transfer bytes the way the paper's
+//! compression ratios do (codes at `bits` wide + fp16 scale/zero).
+//!
+//! Quantization itself happens at build time in Python; the request path
+//! only ever unpacks/dequantizes.
+
+/// Group-wise affine quantized matrix view (borrowed from weights.bin).
+#[derive(Clone, Copy)]
+pub struct QuantView<'a> {
+    /// u8 codes [d, f] (unpacked) — or packed int2 [d/4, f] via `packed`.
+    pub codes: &'a [u8],
+    pub scale: &'a [f32],
+    pub zero: &'a [f32],
+    pub d: usize,
+    pub f: usize,
+    pub group_size: usize,
+    pub bits: u8,
+    pub packed: bool,
+}
+
+impl<'a> QuantView<'a> {
+    /// Dequantize into `out` ([d, f] row-major f32).
+    pub fn dequant(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.d * self.f);
+        if self.packed {
+            assert_eq!(self.bits, 2);
+            assert_eq!(self.codes.len(), self.d / 4 * self.f);
+            for pr in 0..self.d / 4 {
+                for (k, shift) in [0u8, 2, 4, 6].iter().enumerate() {
+                    let i = pr * 4 + k;
+                    let gi = i / self.group_size;
+                    for j in 0..self.f {
+                        let code = (self.codes[pr * self.f + j] >> shift) & 3;
+                        let s = self.scale[gi * self.f + j];
+                        let z = self.zero[gi * self.f + j];
+                        out[i * self.f + j] = (code as f32 - z) * s;
+                    }
+                }
+            }
+        } else {
+            assert_eq!(self.codes.len(), self.d * self.f);
+            for i in 0..self.d {
+                let gi = i / self.group_size;
+                for j in 0..self.f {
+                    let code = self.codes[i * self.f + j];
+                    let s = self.scale[gi * self.f + j];
+                    let z = self.zero[gi * self.f + j];
+                    out[i * self.f + j] = (code as f32 - z) * s;
+                }
+            }
+        }
+    }
+
+    /// Bytes moved over PCIe for this matrix: codes at `bits` wide plus
+    /// fp16 scale and zero per (group, column).
+    pub fn transfer_bytes(&self) -> usize {
+        (self.d * self.f * self.bits as usize + 7) / 8 + 2 * 2 * self.scale.len()
+    }
+}
+
+/// Unpack INT2 codes (4 per byte along the input axis) into u8 [d, f].
+pub fn unpack_int2(packed: &[u8], d: usize, f: usize) -> Vec<u8> {
+    assert_eq!(packed.len(), d / 4 * f);
+    let mut out = vec![0u8; d * f];
+    for pr in 0..d / 4 {
+        for (k, shift) in [0u8, 2, 4, 6].iter().enumerate() {
+            let i = pr * 4 + k;
+            for j in 0..f {
+                out[i * f + j] = (packed[pr * f + j] >> shift) & 3;
+            }
+        }
+    }
+    out
+}
+
+/// Transfer-size accounting for a dense fp16 matrix (the paper's baseline
+/// unit: experts move as fp16 over PCIe).
+pub fn fp16_bytes(rows: usize, cols: usize) -> usize {
+    rows * cols * 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn pack(codes: &[u8], d: usize, f: usize) -> Vec<u8> {
+        let mut out = vec![0u8; d / 4 * f];
+        for pr in 0..d / 4 {
+            for j in 0..f {
+                let mut b = 0u8;
+                for k in 0..4 {
+                    b |= codes[(pr * 4 + k) * f + j] << (2 * k);
+                }
+                out[pr * f + j] = b;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn unpack_roundtrip() {
+        let mut rng = Rng::new(1);
+        let (d, f) = (16, 8);
+        let codes: Vec<u8> = (0..d * f).map(|_| rng.below(4) as u8).collect();
+        let packed = pack(&codes, d, f);
+        assert_eq!(unpack_int2(&packed, d, f), codes);
+    }
+
+    #[test]
+    fn dequant_packed_matches_unpacked() {
+        let mut rng = Rng::new(2);
+        let (d, f, g) = (32, 8, 16);
+        let codes: Vec<u8> = (0..d * f).map(|_| rng.below(4) as u8).collect();
+        let packed = pack(&codes, d, f);
+        let scale: Vec<f32> = (0..d / g * f).map(|_| rng.f32() + 0.01).collect();
+        let zero: Vec<f32> = (0..d / g * f).map(|_| rng.f32() * 3.0).collect();
+        let qv_p = QuantView {
+            codes: &packed, scale: &scale, zero: &zero,
+            d, f, group_size: g, bits: 2, packed: true,
+        };
+        let qv_u = QuantView {
+            codes: &codes, scale: &scale, zero: &zero,
+            d, f, group_size: g, bits: 2, packed: false,
+        };
+        let mut a = vec![0.0; d * f];
+        let mut b = vec![0.0; d * f];
+        qv_p.dequant(&mut a);
+        qv_u.dequant(&mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn transfer_bytes_int2() {
+        let codes = vec![0u8; 64 / 4 * 128];
+        let scale = vec![0.0f32; 2 * 128];
+        let zero = vec![0.0f32; 2 * 128];
+        let qv = QuantView {
+            codes: &codes, scale: &scale, zero: &zero,
+            d: 64, f: 128, group_size: 32, bits: 2, packed: true,
+        };
+        assert_eq!(qv.transfer_bytes(), 64 * 128 / 4 + 2 * 2 * 2 * 128);
+    }
+}

@@ -1,0 +1,145 @@
+//! Line-JSON TCP serving front-end.
+//!
+//! Protocol: one JSON object per line on the socket —
+//!   request:  {"prompt": "...", "max_tokens": 32, "temperature": 0.0}
+//!   response: {"id": n, "text": "...", "compute_tps": x, "effective_tps": y}
+//!
+//! The PJRT engine is not Send, so the listener and the coordinator run on
+//! one thread; concurrent connections are accepted and their requests
+//! gathered into a batch, which the coordinator decodes with interleaved
+//! continuous batching (the paper's single-batch latency regime).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::policy::SystemConfig;
+use crate::coordinator::serve::{Coordinator, Request};
+use crate::model::tokenizer::ByteTokenizer;
+use crate::util::json::{parse, write as jwrite, Json};
+
+pub struct ServerOpts {
+    pub port: u16,
+    pub system: SystemConfig,
+    pub vram_budget_bytes: usize,
+    /// exit after serving this many requests (0 = run forever)
+    pub max_requests: usize,
+}
+
+pub fn serve(art_dir: &Path, opts: ServerOpts) -> Result<()> {
+    let mut coord = Coordinator::new(art_dir, opts.system, opts.vram_budget_bytes)?;
+    coord.calibrate_layer_time()?;
+    let listener = TcpListener::bind(("127.0.0.1", opts.port))
+        .with_context(|| format!("bind 127.0.0.1:{}", opts.port))?;
+    println!("floe serving on 127.0.0.1:{}", opts.port);
+    let mut served = 0u64;
+    for stream in listener.incoming() {
+        let stream = stream?;
+        match handle_conn(&mut coord, stream, &mut served) {
+            Ok(()) => {}
+            Err(e) => eprintln!("connection error: {e:#}"),
+        }
+        if opts.max_requests > 0 && served >= opts.max_requests as u64 {
+            break;
+        }
+    }
+    Ok(())
+}
+
+fn handle_conn(coord: &mut Coordinator, stream: TcpStream, served: &mut u64) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match parse_request(&line, *served) {
+            Ok(r) => r,
+            Err(e) => {
+                let err = Json::Obj(
+                    [("error".to_string(), Json::Str(format!("{e:#}")))].into(),
+                );
+                writeln!(writer, "{}", jwrite(&err))?;
+                continue;
+            }
+        };
+        *served += 1;
+        let done = coord.run_batch(std::slice::from_ref(&req))?;
+        let c = &done[0];
+        let resp = Json::Obj(
+            [
+                ("id".to_string(), Json::Num(c.id as f64)),
+                (
+                    "text".to_string(),
+                    Json::Str(ByteTokenizer::decode(&c.text)),
+                ),
+                ("tokens".to_string(), Json::Num(c.tokens as f64)),
+                ("compute_tps".to_string(), Json::Num(c.compute_tps())),
+                ("effective_tps".to_string(), Json::Num(c.effective_tps())),
+                ("prefill_s".to_string(), Json::Num(c.prefill_s)),
+            ]
+            .into(),
+        );
+        writeln!(writer, "{}", jwrite(&resp))?;
+    }
+    let _ = peer;
+    Ok(())
+}
+
+fn parse_request(line: &str, id: u64) -> Result<Request> {
+    let j = parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let prompt = j
+        .get("prompt")
+        .and_then(Json::as_str)
+        .context("missing 'prompt'")?;
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    Ok(Request {
+        id,
+        prompt: prompt.as_bytes().to_vec(),
+        max_tokens: j
+            .get("max_tokens")
+            .and_then(Json::as_usize)
+            .unwrap_or(32)
+            .min(400),
+        temperature: j
+            .get("temperature")
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0) as f32,
+        seed: j.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_request_line() {
+        let r = parse_request(
+            r#"{"prompt":"3+4=","max_tokens":4,"temperature":0.5}"#,
+            7,
+        )
+        .unwrap();
+        assert_eq!(r.prompt, b"3+4=");
+        assert_eq!(r.max_tokens, 4);
+        assert_eq!(r.id, 7);
+        assert!((r.temperature - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_request() {
+        assert!(parse_request("{}", 0).is_err());
+        assert!(parse_request("not json", 0).is_err());
+        assert!(parse_request(r#"{"prompt":""}"#, 0).is_err());
+    }
+
+    #[test]
+    fn clamps_max_tokens() {
+        let r = parse_request(r#"{"prompt":"x","max_tokens":100000}"#, 0).unwrap();
+        assert_eq!(r.max_tokens, 400);
+    }
+}

@@ -1,0 +1,86 @@
+//! Contextual-sparsity helpers: channel masks from up-projection
+//! activations (paper Eq. 5/11) and mask statistics used by the
+//! coordinator's prefetch planner.
+
+/// mask[j] = |v[j]| >= t  (the channels that survive S_t).
+pub fn mask_from_activations(v: &[f32], t: f32) -> Vec<bool> {
+    v.iter().map(|x| x.abs() >= t).collect()
+}
+
+/// CHESS-style per-channel thresholds.
+pub fn mask_per_channel(v: &[f32], t: &[f32]) -> Vec<bool> {
+    debug_assert_eq!(v.len(), t.len());
+    v.iter().zip(t).map(|(x, ti)| x.abs() >= *ti).collect()
+}
+
+pub fn active_count(mask: &[bool]) -> usize {
+    mask.iter().filter(|m| **m).count()
+}
+
+pub fn density(mask: &[bool]) -> f64 {
+    active_count(mask) as f64 / mask.len().max(1) as f64
+}
+
+/// Recall of a predicted mask vs the true mask (paper Fig 4 yellow line):
+/// |pred ∩ true| / |true|.
+pub fn mask_recall(pred: &[bool], truth: &[bool]) -> f64 {
+    let inter = pred
+        .iter()
+        .zip(truth)
+        .filter(|(p, t)| **p && **t)
+        .count();
+    let tot: usize = truth.iter().filter(|t| **t).count();
+    if tot == 0 {
+        1.0
+    } else {
+        inter as f64 / tot as f64
+    }
+}
+
+/// Union of per-token masks — what the prefetcher must actually move when
+/// several tokens in a batch hit the same expert.
+pub fn mask_union(masks: &[Vec<bool>]) -> Vec<bool> {
+    let n = masks[0].len();
+    let mut out = vec![false; n];
+    for m in masks {
+        for (o, v) in out.iter_mut().zip(m) {
+            *o |= *v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_mask() {
+        let v = [0.1f32, -0.5, 0.3, -0.05];
+        let m = mask_from_activations(&v, 0.3);
+        assert_eq!(m, vec![false, true, true, false]);
+        assert_eq!(active_count(&m), 2);
+        assert!((density(&m) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn per_channel_mask() {
+        let v = [0.1f32, -0.5];
+        let t = [0.2f32, 0.6];
+        assert_eq!(mask_per_channel(&v, &t), vec![false, false]);
+    }
+
+    #[test]
+    fn recall_bounds() {
+        let truth = vec![true, true, false, false];
+        assert_eq!(mask_recall(&[true, true, true, true], &truth), 1.0);
+        assert_eq!(mask_recall(&[false, true, false, false], &truth), 0.5);
+        assert_eq!(mask_recall(&[false; 4], &[false; 4]), 1.0);
+    }
+
+    #[test]
+    fn union() {
+        let u = mask_union(&[vec![true, false], vec![false, false], vec![false, true]]);
+        assert_eq!(u, vec![true, true]);
+    }
+}

@@ -1,0 +1,268 @@
+//! Minimal f32 tensor math for the native (non-PJRT) compute paths:
+//! the Fiddler-style CPU expert, the Table-1 sparse-GEMV measurements,
+//! predictors, and cross-checks against the HLO executables.
+//!
+//! The expert weight layout here *is* the paper's compact layout (Fig 5):
+//! every matrix is stored channel-major — row `j` holds channel `j`'s
+//! d-vector — so gate column j, up column j and down row j are each
+//! contiguous, and a channel's bytes can be packed/transferred as a unit.
+
+/// Dense row-major matrix [rows, cols].
+#[derive(Clone, Debug)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Transpose into a new matrix.
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: ~2x over the naive loop on 1 core,
+    // and deterministic summation order (perf pass, EXPERIMENTS.md §Perf).
+    let n = a.len();
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let mut s3 = 0.0f32;
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let k = i * 4;
+        s0 += a[k] * b[k];
+        s1 += a[k + 1] * b[k + 1];
+        s2 += a[k + 2] * b[k + 2];
+        s3 += a[k + 3] * b[k + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for k in chunks * 4..n {
+        s += a[k] * b[k];
+    }
+    s
+}
+
+#[inline]
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// y[j] = dot(x, W.row(j)) for all rows — a GEMV against a channel-major
+/// matrix ("every output channel's weights contiguous").
+pub fn gemv_channel_major(x: &[f32], w: &Mat, out: &mut [f32]) {
+    debug_assert_eq!(w.cols, x.len());
+    debug_assert_eq!(w.rows, out.len());
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = dot(x, w.row(j));
+    }
+}
+
+/// Channel-major expert weights (the compact layout of paper Fig 5).
+#[derive(Clone)]
+pub struct ExpertWeights {
+    /// gate columns as rows: [f, d]
+    pub wg_t: Mat,
+    /// up columns as rows: [f, d]
+    pub wu_t: Mat,
+    /// down rows: [f, d] (already channel-major in the model)
+    pub wd: Mat,
+}
+
+impl ExpertWeights {
+    pub fn d(&self) -> usize {
+        self.wg_t.cols
+    }
+    pub fn f(&self) -> usize {
+        self.wg_t.rows
+    }
+
+    /// Paper Eq. (1), dense: y = (SiLU(x Wg) ⊙ (x Wu)) Wd.
+    pub fn forward_dense(&self, x: &[f32], y: &mut [f32]) {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for j in 0..self.f() {
+            let v = dot(x, self.wu_t.row(j));
+            let g = silu(dot(x, self.wg_t.row(j)));
+            axpy(y, g * v, self.wd.row(j));
+        }
+    }
+
+    /// Paper Algorithm 1 with *real* channel skipping: channels whose
+    /// |x·Wu_j| < t skip the gate GEMV and the down accumulation entirely.
+    /// Returns the number of active channels.
+    pub fn forward_sparse(&self, x: &[f32], t: f32, y: &mut [f32]) -> usize {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        let mut active = 0;
+        for j in 0..self.f() {
+            let v = dot(x, self.wu_t.row(j));
+            if v.abs() < t {
+                continue; // skipped: no gate column load, no down row load
+            }
+            active += 1;
+            let g = silu(dot(x, self.wg_t.row(j)));
+            axpy(y, g * v, self.wd.row(j));
+        }
+        active
+    }
+
+    /// Sparse forward with a *precomputed* channel mask (the intra-expert
+    /// predictor path: mask known before the weights even arrive).
+    pub fn forward_masked(&self, x: &[f32], mask: &[bool], y: &mut [f32]) -> usize {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        let mut active = 0;
+        for j in 0..self.f() {
+            if !mask[j] {
+                continue;
+            }
+            active += 1;
+            let v = dot(x, self.wu_t.row(j));
+            let g = silu(dot(x, self.wg_t.row(j)));
+            axpy(y, g * v, self.wd.row(j));
+        }
+        active
+    }
+}
+
+pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    let ms: f32 = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let r = 1.0 / (ms + eps).sqrt();
+    for ((o, xi), wi) in out.iter_mut().zip(x).zip(w) {
+        *o = xi * r * wi;
+    }
+}
+
+pub fn softmax_inplace(x: &mut [f32]) {
+    let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut s = 0.0;
+    for v in x.iter_mut() {
+        *v = (*v - m).exp();
+        s += *v;
+    }
+    for v in x.iter_mut() {
+        *v /= s;
+    }
+}
+
+/// Indices of the k largest values (ties broken by lower index).
+pub fn top_k(x: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..x.len()).collect();
+    idx.sort_by(|&a, &b| x[b].partial_cmp(&x[a]).unwrap().then(a.cmp(&b)));
+    idx.truncate(k);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_expert(rng: &mut Rng, d: usize, f: usize) -> (Vec<f32>, ExpertWeights) {
+        let mut x = vec![0.0; d];
+        rng.fill_normal_f32(&mut x, 1.0);
+        let mk = |rng: &mut Rng| {
+            let mut m = Mat::zeros(f, d);
+            rng.fill_normal_f32(&mut m.data, 0.2);
+            m
+        };
+        (x, ExpertWeights { wg_t: mk(rng), wu_t: mk(rng), wd: mk(rng) })
+    }
+
+    #[test]
+    fn sparse_t0_equals_dense() {
+        let mut rng = Rng::new(1);
+        let (x, ew) = rand_expert(&mut rng, 32, 64);
+        let mut yd = vec![0.0; 32];
+        let mut ys = vec![0.0; 32];
+        ew.forward_dense(&x, &mut yd);
+        let active = ew.forward_sparse(&x, 0.0, &mut ys);
+        assert_eq!(active, 64);
+        for (a, b) in yd.iter().zip(&ys) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn sparse_huge_t_zero() {
+        let mut rng = Rng::new(2);
+        let (x, ew) = rand_expert(&mut rng, 16, 32);
+        let mut y = vec![1.0; 16];
+        let active = ew.forward_sparse(&x, 1e9, &mut y);
+        assert_eq!(active, 0);
+        assert!(y.iter().all(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn masked_matches_sparse() {
+        let mut rng = Rng::new(3);
+        let (x, ew) = rand_expert(&mut rng, 32, 64);
+        let t = 0.25;
+        let mut ys = vec![0.0; 32];
+        ew.forward_sparse(&x, t, &mut ys);
+        let mask: Vec<bool> = (0..64)
+            .map(|j| dot(&x, ew.wu_t.row(j)).abs() >= t)
+            .collect();
+        let mut ym = vec![0.0; 32];
+        ew.forward_masked(&x, &mask, &mut ym);
+        for (a, b) in ys.iter().zip(&ym) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn topk_and_softmax() {
+        let mut v = vec![1.0f32, 3.0, 2.0];
+        assert_eq!(top_k(&v, 2), vec![1, 2]);
+        softmax_inplace(&mut v);
+        assert!((v.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(v[1] > v[2] && v[2] > v[0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let tt = m.t().t();
+        assert_eq!(tt.data, m.data);
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = vec![3.0f32, -3.0, 3.0, -3.0];
+        let w = vec![1.0f32; 4];
+        let mut out = vec![0.0; 4];
+        rmsnorm(&x, &w, 0.0, &mut out);
+        for v in out {
+            assert!((v.abs() - 1.0).abs() < 1e-6);
+        }
+    }
+}

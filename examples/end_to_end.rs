@@ -75,7 +75,7 @@ fn main() -> anyhow::Result<()> {
         let stall_s: f64 = done.iter().map(|c| c.stall_virtual_s).sum();
         let prefill_ms: f64 =
             1e3 * done.iter().map(|c| c.prefill_s).sum::<f64>() / done.len() as f64;
-        let st = &coord.pipeline.stats;
+        let st = coord.pipeline.stats();
         table.row(vec![
             kind.name().to_string(),
             f2(prefill_ms),

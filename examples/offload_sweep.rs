@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
         let tokens: usize = done.iter().map(|c| c.tokens).sum();
         let decode_s: f64 = done.iter().map(|c| c.decode_s).sum();
         let stall_s: f64 = done.iter().map(|c| c.stall_virtual_s).sum();
-        let st = &coord.pipeline.stats;
+        let st = coord.pipeline.stats();
         t.row(vec![
             budget_kb.to_string(),
             f2(st.cache_hit_rate()),

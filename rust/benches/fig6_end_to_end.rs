@@ -3,10 +3,15 @@
 //! run of the real serving pipeline on the in-repo model.
 
 fn main() {
-    floe::experiments::fig6::run(12.0).expect("fig6 sim");
+    let policy = floe::config::ResidencyKind::Lru;
+    floe::experiments::fig6::run(12.0, policy).expect("fig6 sim");
+    if !cfg!(feature = "pjrt") {
+        eprintln!("(built without the pjrt feature — skipping real-engine leg)");
+        return;
+    }
     let art = floe::artifacts_dir();
     if art.join("manifest.json").exists() {
-        floe::experiments::fig6::run_real(&art, 32).expect("fig6 real");
+        floe::experiments::fig6::run_real(&art, 32, policy).expect("fig6 real");
     } else {
         eprintln!("(artifacts missing — skipping real-engine leg)");
     }

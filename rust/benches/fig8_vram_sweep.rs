@@ -1,6 +1,8 @@
 //! cargo bench fig8 — paper Fig 8: decode TPS vs VRAM budget (12..24 GB),
-//! all systems, simulated Mixtral-8x7B on RTX-3090.
+//! all systems, simulated Mixtral-8x7B on RTX-3090, plus the ExpertStore
+//! residency-policy comparison sweep.
 
 fn main() {
-    floe::experiments::fig8::run().expect("fig8");
+    floe::experiments::fig8::run(floe::config::ResidencyKind::Lru).expect("fig8");
+    floe::experiments::fig8::run_policy_sweep().expect("fig8 policy sweep");
 }

@@ -1,0 +1,142 @@
+//! Minimal in-repo stand-in for the `anyhow` crate.
+//!
+//! The build environment is offline (no crates.io), so this shim provides
+//! the subset of anyhow's API the codebase uses: `Error`, `Result`,
+//! `anyhow!`, `bail!`, `ensure!` and the `Context` extension trait for
+//! `Result` and `Option`. Errors are flat strings — context is prepended
+//! `"ctx: cause"` — which matches how the crate formats chains with `{:#}`
+//! closely enough for logs and tests.
+//!
+//! Like the real crate, `Error` deliberately does NOT implement
+//! `std::error::Error`; that is what makes the blanket
+//! `impl From<E: std::error::Error> for Error` coherent.
+
+use std::fmt;
+
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Error { msg: m.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error or a missing value.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{ctx}: {e}") })
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error { msg: ctx.to_string() })
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error { msg: f().to_string() })
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(!flag, "flag was {}", flag);
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_and_context() {
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(format!("{e}"), "x = 3");
+        let v = 5;
+        let e = anyhow!("inline {v}");
+        assert_eq!(format!("{e:#}"), "inline 5");
+        assert_eq!(fails(false).unwrap(), 7);
+        assert_eq!(format!("{}", fails(true).unwrap_err()), "flag was true");
+        let none: Option<u32> = None;
+        let e = none.context("missing thing").unwrap_err();
+        assert_eq!(format!("{e}"), "missing thing");
+        let r: std::result::Result<u32, std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("while formatting").unwrap_err();
+        assert!(format!("{e}").starts_with("while formatting: "));
+    }
+
+    #[test]
+    fn from_std_error() {
+        fn io_fail() -> Result<()> {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "disk on fire"))?;
+            Ok(())
+        }
+        let e = io_fail().unwrap_err();
+        assert_eq!(format!("{e}"), "disk on fire");
+    }
+}

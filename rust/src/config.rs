@@ -2,7 +2,7 @@
 //! plus the serving-system configuration (CLI / TOML-subset file).
 
 use crate::util::json::Json;
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 #[derive(Clone, Debug)]
 pub struct ModelConfig {
@@ -69,6 +69,40 @@ impl QuantInfo {
                 .into_iter()
                 .map(|b| b as u8)
                 .collect(),
+        })
+    }
+}
+
+/// Which eviction policy the `ExpertStore` residency cache runs
+/// (store::policy builds the implementation). Selected per sweep via the
+/// `--policy` CLI flag; LRU is the paper baseline, LFU and the
+/// sparsity-aware activation-frequency policy (MoE-Infinity-style) are the
+/// comparison points.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ResidencyKind {
+    Lru,
+    Lfu,
+    Sparsity,
+}
+
+impl ResidencyKind {
+    pub const ALL: [ResidencyKind; 3] =
+        [ResidencyKind::Lru, ResidencyKind::Lfu, ResidencyKind::Sparsity];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ResidencyKind::Lru => "lru",
+            ResidencyKind::Lfu => "lfu",
+            ResidencyKind::Sparsity => "sparsity",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "lru" => ResidencyKind::Lru,
+            "lfu" => ResidencyKind::Lfu,
+            "sparsity" | "sparse" | "freq" => ResidencyKind::Sparsity,
+            other => bail!("unknown residency policy '{other}' (lru|lfu|sparsity)"),
         })
     }
 }
@@ -143,5 +177,13 @@ mod tests {
     fn missing_field_is_error() {
         let j = parse(r#"{"config":{"vocab":256}}"#).unwrap();
         assert!(ModelConfig::from_manifest(&j).is_err());
+    }
+
+    #[test]
+    fn residency_kind_round_trips() {
+        for kind in ResidencyKind::ALL {
+            assert_eq!(ResidencyKind::parse(kind.name()).unwrap(), kind);
+        }
+        assert!(ResidencyKind::parse("mru").is_err());
     }
 }

@@ -1,6 +1,6 @@
 //! The offloading-system design space (paper §4.1 baselines + FloE).
 
-use crate::config::ExpertMode;
+use crate::config::{ExpertMode, ResidencyKind};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SystemKind {
@@ -52,6 +52,8 @@ pub struct SystemConfig {
     pub intra_margin: f64,
     /// transfer chunk size in channels (paper Fig 7 optimum ≈ 50)
     pub chunk_channels: usize,
+    /// ExpertStore eviction policy (paper baseline: LRU)
+    pub residency: ResidencyKind,
 }
 
 impl SystemConfig {
@@ -63,7 +65,14 @@ impl SystemConfig {
             quant_bits: 3,
             intra_margin: 0.15,
             chunk_channels: 50,
+            residency: ResidencyKind::Lru,
         }
+    }
+
+    pub fn with_residency(kind: SystemKind, residency: ResidencyKind) -> Self {
+        let mut c = Self::new(kind);
+        c.residency = residency;
+        c
     }
 
     /// The ExpertMode the engine computes with under this system.
@@ -81,6 +90,19 @@ impl SystemConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn residency_defaults_to_lru() {
+        assert_eq!(
+            SystemConfig::new(SystemKind::Floe).residency,
+            ResidencyKind::Lru
+        );
+        assert_eq!(
+            SystemConfig::with_residency(SystemKind::Floe, ResidencyKind::Sparsity)
+                .residency,
+            ResidencyKind::Sparsity
+        );
+    }
 
     #[test]
     fn modes_match_systems() {

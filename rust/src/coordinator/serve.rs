@@ -4,27 +4,33 @@
 //!
 //! Compute is *real* (PJRT executions, wall-clock measured). The PCIe bus
 //! does not exist on this box, so transfers run through the TransferEngine:
-//! packing is real host work, the bus leg advances a virtual microsecond
-//! clock (hwsim::PCIE4). Reported decode time = real compute + virtual
-//! stalls; both components are also reported separately.
+//! packing is real host work, the bus leg advances the ExpertStore's
+//! virtual microsecond clock (hwsim::PCIE4). Reported decode time = real
+//! compute + virtual stalls; both components are also reported separately.
+//!
+//! All expert residency — the byte-budgeted cache, eviction policy,
+//! in-flight prefetch tracking, pinning and stall attribution — lives in
+//! `store::ExpertStore` (DESIGN.md §3); this module only decides *what*
+//! to move (via the dual predictors) and *how long* moves take (via the
+//! TransferEngine), then reads the merged accounting back out.
 
 use std::collections::HashMap;
 use std::path::Path;
-use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::config::ExpertMode;
 use crate::engine::{DecodeState, Engine, LayerEvent, StepObserver};
 use crate::hwsim::PCIE4;
-use crate::memory::ExpertCache;
 use crate::predictor::{InterPredictor, IntraPredictor};
 use crate::sparsity;
+use crate::store::{CacheStats, ExpertStore, WallClock};
 use crate::transfer::{CompactExpert, TransferEngine};
 
 use super::policy::{SystemConfig, SystemKind};
 
-/// Running statistics of the FloE pipeline.
+/// Merged running statistics of the FloE pipeline: predictor quality
+/// (tracked here) + residency/movement accounting (tracked by the store).
 #[derive(Debug, Default, Clone)]
 pub struct PipelineStats {
     pub inter_hits: u64,
@@ -64,6 +70,15 @@ impl PipelineStats {
     }
 }
 
+/// Predictor-quality counters (the non-residency half of PipelineStats).
+#[derive(Debug, Default, Clone)]
+struct PredictorStats {
+    inter_hits: u64,
+    inter_total: u64,
+    intra_recall_sum: f64,
+    intra_recall_n: u64,
+}
+
 /// The FloE coordination state threaded through decode as a StepObserver.
 pub struct FloePipeline {
     system: SystemConfig,
@@ -77,18 +92,15 @@ pub struct FloePipeline {
     compact: HashMap<(usize, usize), CompactExpert>,
     /// per-(layer, expert) thresholds at the configured level
     thresholds: HashMap<(usize, usize), f32>,
-    cache: ExpertCache,
+    /// residency: cache + prefetch pipeline + virtual clock. Payload is
+    /// the predicted channel mask, scored for recall on consumption.
+    store: ExpertStore<Vec<bool>>,
     xfer: TransferEngine,
-    /// (layer, expert) -> (virtual completion time, predicted mask)
-    inflight: HashMap<(usize, usize), (f64, Vec<bool>)>,
     /// what we predicted for each layer (for precision accounting)
     predicted: Vec<Vec<usize>>,
-    /// virtual clocks (microseconds)
-    now_us: f64,
-    pcie_free_us: f64,
     /// measured average per-layer compute, used to advance the clock
     pub layer_compute_us: f64,
-    pub stats: PipelineStats,
+    pred: PredictorStats,
 }
 
 impl FloePipeline {
@@ -125,16 +137,16 @@ impl FloePipeline {
             intra: HashMap::new(),
             compact,
             thresholds,
-            cache: ExpertCache::new(vram_expert_budget_bytes),
+            store: ExpertStore::with_virtual_clock(
+                vram_expert_budget_bytes,
+                system.residency,
+            ),
             // 1 packing thread: inline packing avoids per-call thread-spawn
             // overhead at tiny-model transfer sizes (see transfer.rs)
             xfer: TransferEngine::new(PCIE4, 1, 2),
-            inflight: HashMap::new(),
             predicted: vec![Vec::new(); c.n_layers],
-            now_us: 0.0,
-            pcie_free_us: 0.0,
             layer_compute_us: 200.0,
-            stats: PipelineStats::default(),
+            pred: PredictorStats::default(),
             system,
         })
     }
@@ -159,9 +171,9 @@ impl FloePipeline {
         // ---- account inter-predictor precision for this layer ----
         if !self.predicted[l].is_empty() {
             for (e, _) in ev.routed {
-                self.stats.inter_total += 1;
+                self.pred.inter_total += 1;
                 if self.predicted[l].contains(e) {
-                    self.stats.inter_hits += 1;
+                    self.pred.inter_hits += 1;
                 }
             }
         }
@@ -173,11 +185,7 @@ impl FloePipeline {
             if !is_floe {
                 // baseline transfer semantics: full expert at the policy's
                 // precision, no channel selection, no next-layer overlap
-                if self.cache.access(key) {
-                    self.stats.cache_hits += 1;
-                } else {
-                    self.stats.cache_misses += 1;
-                    self.stats.demand_fetches += 1;
+                if !self.store.access(key) {
                     let d = self.compact[&key].record_len / 2;
                     let f = self.compact[&key].f;
                     let bytes = match self.system.kind {
@@ -190,16 +198,14 @@ impl FloePipeline {
                         SystemKind::GpuResident => 3.0 * (d * f) as f64 * 0.25,
                         SystemKind::Floe => unreachable!(),
                     };
-                    if self.system.kind != SystemKind::GpuResident {
-                        let start = self.now_us.max(self.pcie_free_us);
-                        let done = start + crate::hwsim::PCIE4.copy_us(bytes);
-                        self.stats.transferred_bytes += bytes as u64;
-                        self.pcie_free_us = done;
-                        let wait = done - self.now_us;
-                        self.stats.stall_us += wait;
-                        self.now_us += wait;
+                    if self.system.kind == SystemKind::GpuResident {
+                        self.store.record_demand();
+                    } else {
+                        let ready =
+                            self.store.demand_fetch(PCIE4.copy_us(bytes), bytes);
+                        self.store.stall_until(ready);
                     }
-                    self.cache.insert(key, bytes as usize);
+                    self.store.admit(key, bytes as usize);
                 }
                 continue;
             }
@@ -210,15 +216,11 @@ impl FloePipeline {
                 let v = ip.channel_magnitudes(ev.h_mid);
                 sparsity::mask_from_activations(&v, t)
             };
-            if self.cache.access(key) {
-                self.stats.cache_hits += 1;
-            } else {
-                self.stats.cache_misses += 1;
-                let (ready_at, prefetched_mask) = match self.inflight.remove(&key) {
+            if !self.store.access(key) {
+                let (ready_at, prefetched_mask) = match self.store.take_inflight(key) {
                     Some((done, mask)) => (done, Some(mask)),
                     None => {
                         // demand fetch of the true channels (stalling)
-                        self.stats.demand_fetches += 1;
                         let sel: Vec<usize> = truth
                             .iter()
                             .enumerate()
@@ -230,10 +232,9 @@ impl FloePipeline {
                             &sel,
                             self.system.chunk_channels,
                         );
-                        self.stats.transferred_bytes += rep.bytes as u64;
-                        let start = self.now_us.max(self.pcie_free_us);
-                        let done = start + rep.total_us;
-                        self.pcie_free_us = done;
+                        let done = self
+                            .store
+                            .demand_fetch(rep.total_us, rep.bytes as f64);
                         (done, None)
                     }
                 };
@@ -243,16 +244,12 @@ impl FloePipeline {
                     // missed channels are an approximation, not a reload;
                     // the recall stat quantifies it (paper: ~0.95).
                     let rec = sparsity::mask_recall(&mask, &truth);
-                    self.stats.intra_recall_sum += rec;
-                    self.stats.intra_recall_n += 1;
+                    self.pred.intra_recall_sum += rec;
+                    self.pred.intra_recall_n += 1;
                 }
-                if ready_at > self.now_us {
-                    let wait = ready_at - self.now_us;
-                    self.stats.stall_us += wait;
-                    self.now_us += wait;
-                }
+                self.store.stall_until(ready_at);
                 let bytes = sparsity::active_count(&truth) * self.record_bytes(key);
-                self.cache.insert(key, bytes);
+                self.store.admit(key, bytes);
             }
         }
 
@@ -262,10 +259,9 @@ impl FloePipeline {
             self.predicted[l + 1] = preds.clone();
             for e in preds {
                 let key = (l + 1, e);
-                if self.cache.contains(key) || self.inflight.contains_key(&key) {
+                if self.store.contains(key) || self.store.inflight(key) {
                     continue;
                 }
-                self.stats.prefetches += 1;
                 let t = self.thresholds[&key];
                 let mask = {
                     let ip = Self::intra_predictor(&mut self.intra, w, key);
@@ -282,25 +278,48 @@ impl FloePipeline {
                     &sel,
                     self.system.chunk_channels,
                 );
-                self.stats.transferred_bytes += rep.bytes as u64;
-                // prefetch overlaps with compute: queue on the bus
-                let start = self.now_us.max(self.pcie_free_us);
-                let done = start + rep.total_us;
-                self.pcie_free_us = done;
-                self.inflight.insert(key, (done, mask));
-                self.cache.set_pinned(key, true);
+                // prefetch overlaps with compute: queue on the bus, track
+                // in flight, pin any resident copy until consumed
+                self.store
+                    .begin_prefetch(key, rep.total_us, rep.bytes as f64, mask);
             }
         }
 
         // advance the virtual clock by this layer's compute
-        self.now_us += self.layer_compute_us;
+        self.store.tick(self.layer_compute_us);
     }
 
-    pub fn cache_stats(&self) -> &crate::memory::CacheStats {
-        &self.cache.stats
+    /// Merged predictor + residency statistics.
+    pub fn stats(&self) -> PipelineStats {
+        let st = self.store.stats();
+        let cs = self.store.cache_stats();
+        PipelineStats {
+            inter_hits: self.pred.inter_hits,
+            inter_total: self.pred.inter_total,
+            intra_recall_sum: self.pred.intra_recall_sum,
+            intra_recall_n: self.pred.intra_recall_n,
+            demand_fetches: st.demand_fetches,
+            prefetches: st.prefetches,
+            stall_us: st.stall_us,
+            transferred_bytes: st.transferred_bytes as u64,
+            cache_hits: cs.hits,
+            cache_misses: cs.misses,
+        }
+    }
+
+    /// Accumulated virtual stall time, microseconds.
+    pub fn stall_us(&self) -> f64 {
+        self.store.stats().stall_us
+    }
+
+    pub fn cache_stats(&self) -> &CacheStats {
+        self.store.cache_stats()
+    }
+    pub fn store(&self) -> &ExpertStore<Vec<bool>> {
+        &self.store
     }
     pub fn virtual_time_us(&self) -> f64 {
-        self.now_us
+        self.store.now_us()
     }
 }
 
@@ -369,7 +388,7 @@ impl Coordinator {
     /// Calibrate the virtual clock's per-layer compute from a real run.
     pub fn calibrate_layer_time(&mut self) -> Result<()> {
         let mut st = DecodeState::new(&self.engine.w)?;
-        let t0 = Instant::now();
+        let wall = WallClock::start();
         let n = 8;
         for i in 0..n {
             self.engine.decode_token(
@@ -379,7 +398,7 @@ impl Coordinator {
                 &mut crate::engine::NoObserver,
             )?;
         }
-        let us = t0.elapsed().as_micros() as f64 / (n * self.engine.w.cfg.n_layers) as f64;
+        let us = wall.elapsed_s() * 1e6 / (n * self.engine.w.cfg.n_layers) as f64;
         self.pipeline.layer_compute_us = us;
         Ok(())
     }
@@ -400,8 +419,8 @@ impl Coordinator {
         let mut active: Vec<Active> = Vec::new();
         for r in requests {
             let mut st = DecodeState::new(&self.engine.w)?;
-            let t0 = Instant::now();
-            let stall0 = self.pipeline.stats.stall_us;
+            let wall = WallClock::start();
+            let stall0 = self.pipeline.stall_us();
             let mut obs = PipelineObserver {
                 pipeline: &mut self.pipeline,
                 weights: std::sync::Arc::clone(&self.engine.w),
@@ -413,7 +432,7 @@ impl Coordinator {
                 out: Vec::new(),
                 logits,
                 rng: crate::util::rng::Rng::new(r.seed),
-                prefill_s: t0.elapsed().as_secs_f64(),
+                prefill_s: wall.elapsed_s(),
                 decode_s: 0.0,
                 stall_at_start_us: stall0,
             });
@@ -434,8 +453,7 @@ impl Coordinator {
                     || a.st.pos + 1 >= self.engine.w.cfg.max_seq;
                 if finished {
                     let a = active.remove(i);
-                    let stall_us =
-                        self.pipeline.stats.stall_us - a.stall_at_start_us;
+                    let stall_us = self.pipeline.stall_us() - a.stall_at_start_us;
                     done.push(Completion {
                         id: a.req.id,
                         tokens: a.out.len(),
@@ -446,13 +464,13 @@ impl Coordinator {
                     });
                     continue;
                 }
-                let t0 = Instant::now();
+                let wall = WallClock::start();
                 let mut obs = PipelineObserver {
                     pipeline: &mut self.pipeline,
                     weights: std::sync::Arc::clone(&self.engine.w),
                 };
                 a.logits = self.engine.decode_token(&mut a.st, tok, self.mode, &mut obs)?;
-                a.decode_s += t0.elapsed().as_secs_f64();
+                a.decode_s += wall.elapsed_s();
                 i += 1;
             }
         }
@@ -465,4 +483,6 @@ impl Coordinator {
 mod tests {
     // FloePipeline logic tests that need no artifacts live in
     // rust/tests/integration_coordinator.rs (they need real weights).
+    // Store/residency behavior is unit-tested policy-by-policy in
+    // src/store/.
 }

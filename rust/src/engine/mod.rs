@@ -21,11 +21,10 @@ use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
-use xla::PjRtBuffer;
 
 use crate::config::ExpertMode;
 use crate::model::Weights;
-use crate::runtime::{to_vec_f32, Runtime};
+use crate::runtime::{to_vec_f32, PjRtBuffer, Runtime};
 use crate::tensor::{softmax_inplace, top_k};
 
 /// Which compiled graph family executes the expert math.

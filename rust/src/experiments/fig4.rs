@@ -66,7 +66,7 @@ pub fn run(art_dir: &std::path::Path) -> Result<()> {
     })
     .collect();
     let _ = coord.run_batch(&reqs)?;
-    let st = &coord.pipeline.stats;
+    let st = coord.pipeline.stats();
 
     let mut t2 = Table::new(
         "Fig 4 — live pipeline measurement (FloE serving 4 prompts)",

@@ -2,9 +2,13 @@
 //! FloE vs DeepSpeed-MII / Mixtral-Offloading / Fiddler / Mixtral-GPU,
 //! across input/output length combinations — via the discrete-event
 //! simulator at Mixtral-8x7B scale on RTX-3090 hardware models.
+//!
+//! Both legs accept an ExpertStore residency policy (`--policy`); LRU is
+//! the paper configuration, LFU / sparsity-aware are comparison points.
 
 use anyhow::Result;
 
+use crate::config::ResidencyKind;
 use crate::coordinator::policy::{SystemConfig, SystemKind};
 use crate::coordinator::sim::{simulate, SimParams};
 use crate::hwsim::RTX3090;
@@ -14,10 +18,12 @@ use super::{jarr, jnum, jobj, jstr, save_json};
 
 pub const LENGTHS: [(usize, usize); 4] = [(32, 64), (64, 128), (64, 256), (128, 512)];
 
-pub fn run(vram_gb: f64) -> Result<()> {
+pub fn run(vram_gb: f64, residency: ResidencyKind) -> Result<()> {
     let mut t = Table::new(
         &format!(
-            "Fig 6 — decode TPS, Mixtral-8x7B on RTX-3090 @ {vram_gb:.0} GB VRAM (simulated)"
+            "Fig 6 — decode TPS, Mixtral-8x7B on RTX-3090 @ {vram_gb:.0} GB VRAM \
+             (simulated, {} residency)",
+            residency.name()
         ),
         &["system", "in32/out64", "in64/out128", "in64/out256", "in128/out512",
           "vs GPU-resident", "vs DeepSpeed"],
@@ -25,7 +31,11 @@ pub fn run(vram_gb: f64) -> Result<()> {
     let mut js = Vec::new();
     let mut results: Vec<(SystemKind, Vec<f64>)> = Vec::new();
     for kind in SystemKind::ALL {
-        let p = SimParams::mixtral_on(RTX3090.clone(), SystemConfig::new(kind), vram_gb);
+        let p = SimParams::mixtral_on(
+            RTX3090.clone(),
+            SystemConfig::with_residency(kind, residency),
+            vram_gb,
+        );
         let tps: Vec<f64> = LENGTHS
             .iter()
             .map(|&(i, o)| simulate(&p, i, o).tps)
@@ -54,6 +64,7 @@ pub fn run(vram_gb: f64) -> Result<()> {
         ]);
         js.push(jobj(vec![
             ("system", jstr(kind.name())),
+            ("policy", jstr(residency.name())),
             ("tps", jarr(tps.iter().map(|v| jnum(*v)).collect())),
         ]));
     }
@@ -88,16 +99,23 @@ pub fn run(vram_gb: f64) -> Result<()> {
 /// The real-system counterpart: serve actual requests on the in-repo model
 /// under each policy and report measured TPS (compute) + effective TPS
 /// (compute + modeled PCIe stalls).
-pub fn run_real(art_dir: &std::path::Path, out_tokens: usize) -> Result<()> {
+pub fn run_real(
+    art_dir: &std::path::Path,
+    out_tokens: usize,
+    residency: ResidencyKind,
+) -> Result<()> {
     use crate::coordinator::serve::{Coordinator, Request};
     let mut t = Table::new(
-        "Fig 6 (real engine) — tiny model, measured decode TPS",
+        &format!(
+            "Fig 6 (real engine) — tiny model, measured decode TPS ({} residency)",
+            residency.name()
+        ),
         &["system", "compute TPS", "effective TPS", "stall ms/token", "cache hit"],
     );
     let mut js = Vec::new();
     for kind in [SystemKind::Floe, SystemKind::NaiveOffload, SystemKind::AdvancedOffload,
                  SystemKind::GpuResident] {
-        let mut sys = SystemConfig::new(kind);
+        let mut sys = SystemConfig::with_residency(kind, residency);
         sys.sparsity = 0.8;
         let budget = match kind {
             SystemKind::GpuResident => usize::MAX / 2,
@@ -125,10 +143,11 @@ pub fn run_real(art_dir: &std::path::Path, out_tokens: usize) -> Result<()> {
             f2(compute_tps),
             f2(eff_tps),
             format!("{:.3}", 1e3 * stall_s / tokens as f64),
-            f2(coord.pipeline.stats.cache_hit_rate()),
+            f2(coord.pipeline.stats().cache_hit_rate()),
         ]);
         js.push(jobj(vec![
             ("system", jstr(kind.name())),
+            ("policy", jstr(residency.name())),
             ("compute_tps", jnum(compute_tps)),
             ("effective_tps", jnum(eff_tps)),
         ]));

@@ -1,9 +1,14 @@
 //! Fig 8: generation TPS vs VRAM budget (12..24 GB), input/output 64/256,
 //! Mixtral-8x7B on RTX-3090 hardware models. More VRAM → larger expert
 //! cache → fewer reloads; FloE stays near the GPU-resident bound.
+//!
+//! `run` sweeps the systems under one ExpertStore residency policy;
+//! `run_policy_sweep` fixes the system and sweeps the policies, so
+//! LRU / LFU / sparsity-aware can be compared in one table.
 
 use anyhow::Result;
 
+use crate::config::ResidencyKind;
 use crate::coordinator::policy::{SystemConfig, SystemKind};
 use crate::coordinator::sim::{simulate, SimParams};
 use crate::hwsim::RTX3090;
@@ -13,9 +18,13 @@ use super::{jarr, jnum, jobj, jstr, save_json};
 
 pub const VRAM_GB: [f64; 5] = [12.0, 14.0, 16.0, 20.0, 24.0];
 
-pub fn run() -> Result<()> {
+pub fn run(residency: ResidencyKind) -> Result<()> {
     let mut t = Table::new(
-        "Fig 8 — TPS vs VRAM budget (in 64 / out 256, RTX-3090, simulated)",
+        &format!(
+            "Fig 8 — TPS vs VRAM budget (in 64 / out 256, RTX-3090, simulated, \
+             {} residency)",
+            residency.name()
+        ),
         &["system", "12GB", "14GB", "16GB", "20GB", "24GB", "24GB vs GPU"],
     );
     let mut js = Vec::new();
@@ -27,7 +36,7 @@ pub fn run() -> Result<()> {
             .map(|&v| {
                 let p = SimParams::mixtral_on(
                     RTX3090.clone(),
-                    SystemConfig::new(kind),
+                    SystemConfig::with_residency(kind, residency),
                     v,
                 );
                 simulate(&p, 64, 256).tps
@@ -50,6 +59,7 @@ pub fn run() -> Result<()> {
         ]);
         js.push(jobj(vec![
             ("system", jstr(kind.name())),
+            ("policy", jstr(residency.name())),
             ("tps", jarr(tps.iter().map(|v| jnum(*v)).collect())),
         ]));
     }
@@ -59,4 +69,57 @@ pub fn run() -> Result<()> {
          matches it at 24 GB; Mixtral-Offloading approaches it only at 21+ GB."
     );
     save_json("fig8", &jarr(js))
+}
+
+/// One sweep comparing the three ExpertStore residency policies: FloE and
+/// the cache-heavy AdvancedOffload baseline across the VRAM budgets, TPS
+/// and expert-cache hit rate side by side.
+pub fn run_policy_sweep() -> Result<()> {
+    let mut js = Vec::new();
+    for kind in [SystemKind::Floe, SystemKind::AdvancedOffload] {
+        let mut t = Table::new(
+            &format!(
+                "Fig 8 policy sweep — {} under lru/lfu/sparsity residency \
+                 (in 64 / out 256, RTX-3090, simulated)",
+                kind.name()
+            ),
+            &["policy", "12GB tps", "16GB tps", "24GB tps",
+              "12GB hit", "16GB hit", "24GB hit"],
+        );
+        for residency in ResidencyKind::ALL {
+            let at = |v: f64| {
+                let p = SimParams::mixtral_on(
+                    RTX3090.clone(),
+                    SystemConfig::with_residency(kind, residency),
+                    v,
+                );
+                simulate(&p, 64, 256)
+            };
+            let (a, b, c) = (at(12.0), at(16.0), at(24.0));
+            t.row(vec![
+                residency.name().to_string(),
+                f2(a.tps),
+                f2(b.tps),
+                f2(c.tps),
+                f2(a.cache_hit_rate),
+                f2(b.cache_hit_rate),
+                f2(c.cache_hit_rate),
+            ]);
+            js.push(jobj(vec![
+                ("system", jstr(kind.name())),
+                ("policy", jstr(residency.name())),
+                ("tps", jarr(vec![jnum(a.tps), jnum(b.tps), jnum(c.tps)])),
+                (
+                    "cache_hit",
+                    jarr(vec![
+                        jnum(a.cache_hit_rate),
+                        jnum(b.cache_hit_rate),
+                        jnum(c.cache_hit_rate),
+                    ]),
+                ),
+            ]));
+        }
+        t.print();
+    }
+    save_json("fig8_policy_sweep", &jarr(js))
 }

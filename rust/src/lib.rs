@@ -11,13 +11,13 @@ pub mod engine;
 pub mod evalsuite;
 pub mod experiments;
 pub mod hwsim;
-pub mod memory;
 pub mod model;
 pub mod predictor;
 pub mod quant;
 pub mod runtime;
 pub mod server;
 pub mod sparsity;
+pub mod store;
 pub mod tensor;
 pub mod transfer;
 pub mod util;

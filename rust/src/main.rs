@@ -11,7 +11,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-use floe::config::ExpertMode;
+use floe::config::{ExpertMode, ResidencyKind};
 use floe::coordinator::policy::{SystemConfig, SystemKind};
 use floe::engine::{ComputePath, Engine, NoObserver};
 use floe::experiments as exp;
@@ -69,6 +69,9 @@ impl Args {
             other => bail!("unknown mode {other}"),
         })
     }
+    fn residency(&self) -> Result<ResidencyKind> {
+        ResidencyKind::parse(self.get("policy").unwrap_or("lru"))
+    }
     fn budget(&self) -> EvalBudget {
         EvalBudget {
             n_bytes: self.usize("eval-bytes", 768),
@@ -119,7 +122,7 @@ fn main() -> Result<()> {
                 "resident" => SystemKind::GpuResident,
                 other => bail!("unknown system {other}"),
             };
-            let mut system = SystemConfig::new(kind);
+            let mut system = SystemConfig::with_residency(kind, args.residency()?);
             system.sparsity = args.f64("level", 0.8);
             floe::server::serve(
                 &art,
@@ -153,13 +156,14 @@ fn main() -> Result<()> {
         "exp-fig3b" => exp::fig3::run_fig3b(&art, &args.budget())?,
         "exp-fig4" => exp::fig4::run(&art)?,
         "exp-fig6" => {
-            exp::fig6::run(args.f64("vram", 12.0))?;
+            exp::fig6::run(args.f64("vram", 12.0), args.residency()?)?;
             if args.get("real").is_some() {
-                exp::fig6::run_real(&art, args.usize("tokens", 48))?;
+                exp::fig6::run_real(&art, args.usize("tokens", 48), args.residency()?)?;
             }
         }
         "exp-fig7" => exp::fig7::run(&art)?,
-        "exp-fig8" => exp::fig8::run()?,
+        "exp-fig8" => exp::fig8::run(args.residency()?)?,
+        "exp-policy-sweep" => exp::fig8::run_policy_sweep()?,
         "exp-fig9" => exp::table3::run_fig9(&art, &args.budget(), args.usize("probes", 12))?,
         "exp-table1" => exp::table1::run(&art)?,
         "exp-table3" => exp::table3::run(&art, &args.budget(), args.usize("probes", 20))?,
@@ -169,9 +173,10 @@ fn main() -> Result<()> {
             exp::fig2::run(&art)?;
             exp::table1::run(&art)?;
             exp::fig7::run(&art)?;
-            exp::fig6::run(12.0)?;
-            exp::fig6::run_real(&art, 32)?;
-            exp::fig8::run()?;
+            exp::fig6::run(12.0, ResidencyKind::Lru)?;
+            exp::fig6::run_real(&art, 32, ResidencyKind::Lru)?;
+            exp::fig8::run(ResidencyKind::Lru)?;
+            exp::fig8::run_policy_sweep()?;
             exp::fig4::run(&art)?;
             exp::table7::run_compression(&art)?;
             exp::fig3::run_fig3a(&art, &b)?;
@@ -184,10 +189,11 @@ fn main() -> Result<()> {
                 "floe — FloE (ICML 2025) reproduction\n\n\
                  usage: floe <cmd> [--flag value]...\n\n\
                  cmds: generate serve eval exp-fig2 exp-fig3a exp-fig3b \
-                 exp-fig4 exp-fig6 exp-fig7 exp-fig8 exp-fig9 exp-table1 \
-                 exp-table3 exp-compression exp-all\n\n\
+                 exp-fig4 exp-fig6 exp-fig7 exp-fig8 exp-fig9 exp-policy-sweep \
+                 exp-table1 exp-table3 exp-compression exp-all\n\n\
                  common flags: --mode dense|sparse|floe|cats|chess|uniform \
-                 --level 0.8 --bits 2 --prompt '...' --tokens 48\n\
+                 --level 0.8 --bits 2 --policy lru|lfu|sparsity \
+                 --prompt '...' --tokens 48\n\
                  env: FLOE_ARTIFACTS (default ./artifacts)"
             );
         }

@@ -1,165 +1,21 @@
-//! PJRT runtime: load AOT-compiled HLO text artifacts, compile them once on
-//! the CPU PJRT client, and execute them from the L3 hot path.
+//! PJRT runtime facade.
 //!
-//! Interchange is HLO *text* (see DESIGN.md): jax >= 0.5 serialized protos
-//! carry 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids. All graphs are lowered with `return_tuple=True`,
-//! so execution unwraps one tuple layer.
+//! The real runtime (`pjrt.rs`) loads AOT-compiled HLO text artifacts,
+//! compiles them once on the CPU PJRT client and executes them from the
+//! L3 hot path. It needs the `xla` native crate (xla_extension 0.5.1),
+//! which is not available everywhere, so it is gated behind the `pjrt`
+//! cargo feature (DESIGN.md §4). Without the feature a stub with the same
+//! API surface is compiled instead: everything type-checks, and
+//! `Runtime::new` returns a descriptive error at runtime, so the pure-Rust
+//! layers (store, transfer, predictors, hwsim, coordinator sim) remain
+//! fully usable and testable.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::*;
 
-use anyhow::{anyhow, Context, Result};
-use xla::{ElementType, Literal, PjRtClient, PjRtLoadedExecutable};
-
-/// Literal construction helpers --------------------------------------------
-
-pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<Literal> {
-    let bytes = unsafe {
-        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
-    };
-    Literal::create_from_shape_and_untyped_data(ElementType::F32, dims, bytes)
-        .map_err(|e| anyhow!("lit_f32: {e:?}"))
-}
-
-pub fn lit_u8(data: &[u8], dims: &[usize]) -> Result<Literal> {
-    Literal::create_from_shape_and_untyped_data(ElementType::U8, dims, data)
-        .map_err(|e| anyhow!("lit_u8: {e:?}"))
-}
-
-pub fn lit_scalar_f32(v: f32) -> Literal {
-    Literal::scalar(v)
-}
-
-pub fn lit_scalar_i32(v: i32) -> Literal {
-    Literal::scalar(v)
-}
-
-pub fn lit_zeros_f32(dims: &[usize]) -> Result<Literal> {
-    let n: usize = dims.iter().product();
-    lit_f32(&vec![0.0; n], dims)
-}
-
-pub fn to_vec_f32(l: &Literal) -> Result<Vec<f32>> {
-    l.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e:?}"))
-}
-
-/// A compiled-executable registry over an artifacts directory.
-pub struct Runtime {
-    client: PjRtClient,
-    exes: HashMap<String, PjRtLoadedExecutable>,
-    art_dir: PathBuf,
-    /// count of PJRT executions, for the metrics/perf pass
-    pub exec_count: std::cell::Cell<u64>,
-}
-
-impl Runtime {
-    pub fn new(art_dir: &Path) -> Result<Self> {
-        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime {
-            client,
-            exes: HashMap::new(),
-            art_dir: art_dir.to_path_buf(),
-            exec_count: std::cell::Cell::new(0),
-        })
-    }
-
-    /// Compile (and cache) the named HLO module from `<art_dir>/<name>.hlo.txt`.
-    pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.exes.contains_key(name) {
-            return Ok(());
-        }
-        let path = self.art_dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("path utf8")?,
-        )
-        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-        self.exes.insert(name.to_string(), exe);
-        Ok(())
-    }
-
-    pub fn load_all(&mut self, names: &[&str]) -> Result<()> {
-        for n in names {
-            self.load(n)?;
-        }
-        Ok(())
-    }
-
-    pub fn loaded(&self, name: &str) -> bool {
-        self.exes.contains_key(name)
-    }
-
-    /// Execute a loaded module; returns the flattened tuple of outputs.
-    /// Arguments are borrowed — no literal deep-copies on the hot path.
-    pub fn exec(&self, name: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
-        let exe = self
-            .exes
-            .get(name)
-            .ok_or_else(|| anyhow!("executable not loaded: {name}"))?;
-        self.exec_count.set(self.exec_count.get() + 1);
-        let result = exe
-            .execute::<&Literal>(args)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal {name}: {e:?}"))?;
-        // graphs are lowered with return_tuple=True
-        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
-    }
-
-    pub fn client(&self) -> &PjRtClient {
-        &self.client
-    }
-}
-
-impl Runtime {
-    /// Upload host data to a device buffer (freed on drop — unlike the
-    /// literal-argument `execute` path in the xla crate, which leaks its
-    /// internally created input buffers; see EXPERIMENTS.md §Perf).
-    ///
-    /// Uses `buffer_from_host_buffer::<T>`: `buffer_from_host_literal`
-    /// aborts on rank-1/rank-0 literals in xla_extension 0.5.1, and
-    /// `buffer_from_host_raw_bytes` passes the wrong dtype enum.
-    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| anyhow!("upload f32: {e:?}"))
-    }
-
-    pub fn upload_u8(&self, data: &[u8], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(data, dims, None)
-            .map_err(|e| anyhow!("upload u8: {e:?}"))
-    }
-
-    pub fn upload_scalar_f32(&self, v: f32) -> Result<xla::PjRtBuffer> {
-        self.upload_f32(&[v], &[])
-    }
-
-    pub fn upload_scalar_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer(&[v], &[], None)
-            .map_err(|e| anyhow!("upload i32: {e:?}"))
-    }
-
-    /// Execute with device-buffer arguments; returns the flattened tuple.
-    pub fn exec_b(&self, name: &str, args: &[&xla::PjRtBuffer]) -> Result<Vec<Literal>> {
-        let exe = self
-            .exes
-            .get(name)
-            .ok_or_else(|| anyhow!("executable not loaded: {name}"))?;
-        self.exec_count.set(self.exec_count.get() + 1);
-        let result = exe
-            .execute_b::<&xla::PjRtBuffer>(args)
-            .map_err(|e| anyhow!("execute_b {name}: {e:?}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("to_literal {name}: {e:?}"))?;
-        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
-    }
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::*;

@@ -1,0 +1,363 @@
+//! Byte-budgeted resident set (paper Fig 1(b)/(c) "expert cache") with a
+//! pluggable eviction policy — the storage half of `ExpertStore`.
+//!
+//! Absorbs the old `memory::ExpertCache` (which hardcoded LRU): keyed by
+//! (layer, expert), byte-accounted against a VRAM budget, with
+//! prediction-aware pinning so entries staged for the imminent layer are
+//! never evicted. Invariants (enforced + property-tested across *all*
+//! policies): used <= budget at all times; pinned entries survive
+//! eviction; hit/miss accounting is exact.
+
+use std::collections::HashMap;
+
+use crate::config::ResidencyKind;
+
+use super::policy::{build_policy, ResidencyPolicy};
+use super::ExpertKey;
+
+#[derive(Debug, Clone)]
+struct Entry {
+    bytes: usize,
+    pinned: bool,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub inserted_bytes: u64,
+}
+
+impl CacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        let tot = self.hits + self.misses;
+        if tot == 0 {
+            0.0
+        } else {
+            self.hits as f64 / tot as f64
+        }
+    }
+}
+
+pub struct ResidentSet {
+    budget: usize,
+    used: usize,
+    /// logical op counter handed to the policy as `now`
+    clock: u64,
+    entries: HashMap<ExpertKey, Entry>,
+    policy: Box<dyn ResidencyPolicy>,
+    pub stats: CacheStats,
+}
+
+impl ResidentSet {
+    pub fn new(budget_bytes: usize, kind: ResidencyKind) -> Self {
+        Self::with_policy(budget_bytes, build_policy(kind))
+    }
+
+    pub fn with_policy(budget_bytes: usize, policy: Box<dyn ResidencyPolicy>) -> Self {
+        ResidentSet {
+            budget: budget_bytes,
+            used: 0,
+            clock: 0,
+            entries: HashMap::new(),
+            policy,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+    pub fn used(&self) -> usize {
+        self.used
+    }
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+    pub fn contains(&self, key: ExpertKey) -> bool {
+        self.entries.contains_key(&key)
+    }
+
+    /// Routing selected `key` this step — popularity signal for
+    /// sparsity-aware policies. Does not touch hit/miss accounting.
+    pub fn note_activation(&mut self, key: ExpertKey) {
+        self.policy.on_activation(key, self.clock);
+    }
+
+    /// Record an access; returns true on hit (and refreshes the policy's
+    /// recency/frequency state).
+    pub fn access(&mut self, key: ExpertKey) -> bool {
+        self.clock += 1;
+        if self.entries.contains_key(&key) {
+            self.policy.on_hit(key, self.clock);
+            self.stats.hits += 1;
+            true
+        } else {
+            self.stats.misses += 1;
+            false
+        }
+    }
+
+    /// Insert (or resize) an entry, evicting policy-chosen unpinned
+    /// entries as needed. Returns false if the entry cannot fit even
+    /// after evicting everything unpinned.
+    pub fn insert(&mut self, key: ExpertKey, bytes: usize) -> bool {
+        self.clock += 1;
+        if let Some(old) = self.entries.remove(&key) {
+            self.used -= old.bytes;
+            self.policy.on_remove(key);
+        }
+        if bytes > self.budget {
+            return false;
+        }
+        while self.used + bytes > self.budget {
+            if !self.evict_one() {
+                return false;
+            }
+        }
+        self.used += bytes;
+        self.stats.inserted_bytes += bytes as u64;
+        self.entries.insert(key, Entry { bytes, pinned: false });
+        self.policy.on_insert(key, self.clock);
+        true
+    }
+
+    /// Pin/unpin an entry (prefetched-for-imminent-use protection).
+    pub fn set_pinned(&mut self, key: ExpertKey, pinned: bool) {
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.pinned = pinned;
+        }
+    }
+
+    pub fn unpin_all(&mut self) {
+        for e in self.entries.values_mut() {
+            e.pinned = false;
+        }
+    }
+
+    fn evict_one(&mut self) -> bool {
+        let candidates: Vec<ExpertKey> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| !e.pinned)
+            .map(|(k, _)| *k)
+            .collect();
+        match self.policy.victim(&candidates) {
+            Some(k) => {
+                let e = self.entries.remove(&k).expect("victim must be resident");
+                self.used -= e.bytes;
+                self.policy.on_remove(k);
+                self.stats.evictions += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    pub fn keys(&self) -> Vec<ExpertKey> {
+        self.entries.keys().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+    use std::collections::HashSet;
+
+    #[test]
+    fn hit_miss_and_lru() {
+        let mut c = ResidentSet::new(300, ResidencyKind::Lru);
+        assert!(!c.access((0, 0)));
+        assert!(c.insert((0, 0), 100));
+        assert!(c.insert((0, 1), 100));
+        assert!(c.insert((0, 2), 100));
+        assert!(c.access((0, 0))); // refresh 0 → LRU victim is (0,1)
+        assert!(c.insert((1, 0), 100));
+        assert!(c.contains((0, 0)));
+        assert!(!c.contains((0, 1)));
+        assert_eq!(c.stats.evictions, 1);
+    }
+
+    #[test]
+    fn pinned_survives() {
+        for kind in ResidencyKind::ALL {
+            let mut c = ResidentSet::new(200, kind);
+            c.insert((0, 0), 100);
+            c.set_pinned((0, 0), true);
+            c.insert((0, 1), 100);
+            assert!(c.insert((0, 2), 100)); // must evict (0,1), not pinned (0,0)
+            assert!(c.contains((0, 0)), "{}", c.policy_name());
+            assert!(!c.contains((0, 1)), "{}", c.policy_name());
+        }
+    }
+
+    #[test]
+    fn cannot_fit_oversize() {
+        let mut c = ResidentSet::new(100, ResidencyKind::Lfu);
+        assert!(!c.insert((0, 0), 101));
+        assert_eq!(c.used(), 0);
+    }
+
+    #[test]
+    fn all_pinned_blocks_insert() {
+        let mut c = ResidentSet::new(100, ResidencyKind::Sparsity);
+        c.insert((0, 0), 100);
+        c.set_pinned((0, 0), true);
+        assert!(!c.insert((0, 1), 50));
+        assert!(c.contains((0, 0)));
+    }
+
+    /// The shadow-map property harness, run identically against every
+    /// residency policy: byte accounting is exact, the budget is never
+    /// exceeded, pinned entries survive eviction, and hit/miss counts
+    /// match an independent oracle.
+    fn residency_invariants(kind: ResidencyKind) {
+        let name = format!("store-invariants-{}", kind.name());
+        check(&name, 40, |rng: &mut Rng| {
+            let budget = rng.range(100, 2000);
+            let mut c = ResidentSet::new(budget, kind);
+            let mut shadow: std::collections::HashMap<ExpertKey, usize> =
+                Default::default();
+            let mut pinned: HashSet<ExpertKey> = HashSet::new();
+            let (mut hits, mut misses) = (0u64, 0u64);
+            for _ in 0..200 {
+                let key = (rng.below(4), rng.below(8));
+                match rng.below(6) {
+                    0 | 1 => {
+                        let expect = c.contains(key);
+                        let got = c.access(key);
+                        prop_assert!(
+                            expect == got,
+                            "access({key:?}) = {got}, contains said {expect}"
+                        );
+                        if got {
+                            hits += 1;
+                        } else {
+                            misses += 1;
+                        }
+                    }
+                    2 => {
+                        let bytes = rng.range(1, budget / 2 + 2);
+                        if c.insert(key, bytes) {
+                            shadow.insert(key, bytes);
+                        } else {
+                            shadow.remove(&key);
+                        }
+                        // (re)inserted or failed: either way no longer pinned
+                        pinned.remove(&key);
+                    }
+                    3 => {
+                        let p = rng.f64() < 0.5;
+                        c.set_pinned(key, p);
+                        if c.contains(key) {
+                            if p {
+                                pinned.insert(key);
+                            } else {
+                                pinned.remove(&key);
+                            }
+                        }
+                    }
+                    4 => {
+                        c.unpin_all();
+                        pinned.clear();
+                    }
+                    _ => c.note_activation(key),
+                }
+                // drop shadow entries the cache evicted
+                shadow.retain(|k, _| c.contains(*k));
+                prop_assert!(
+                    c.used() <= c.budget(),
+                    "used {} > budget {}",
+                    c.used(),
+                    c.budget()
+                );
+                let sum: usize = shadow.values().sum();
+                prop_assert!(sum == c.used(), "shadow {} != used {}", sum, c.used());
+                for k in &pinned {
+                    prop_assert!(c.contains(*k), "pinned {k:?} was evicted");
+                }
+                prop_assert!(
+                    c.stats.hits == hits && c.stats.misses == misses,
+                    "hit/miss accounting drifted: cache {}h/{}m oracle {}h/{}m",
+                    c.stats.hits,
+                    c.stats.misses,
+                    hits,
+                    misses
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_invariants_lru() {
+        residency_invariants(ResidencyKind::Lru);
+    }
+
+    #[test]
+    fn prop_invariants_lfu() {
+        residency_invariants(ResidencyKind::Lfu);
+    }
+
+    #[test]
+    fn prop_invariants_sparsity() {
+        residency_invariants(ResidencyKind::Sparsity);
+    }
+
+    /// Skewed synthetic routing trace: Zipf popularity over the experts
+    /// with periodic cold scans — the access pattern MoE-Infinity argues
+    /// defeats plain LRU. The sparsity-aware policy must match or beat
+    /// LRU's hit rate.
+    #[test]
+    fn store_policy_sweep() {
+        let n_experts = 32usize;
+        let expert_bytes = 100usize;
+        let fits = 4usize;
+        let run = |kind: ResidencyKind| -> f64 {
+            let mut c = ResidentSet::new(fits * expert_bytes, kind);
+            let mut rng = Rng::new(42);
+            // Zipf(1.5) CDF over expert popularity
+            let mut cdf: Vec<f64> = (1..=n_experts)
+                .map(|k| 1.0 / (k as f64).powf(1.5))
+                .collect();
+            for i in 1..n_experts {
+                cdf[i] += cdf[i - 1];
+            }
+            let total = cdf[n_experts - 1];
+            for step in 0..6000usize {
+                let e = if step % 40 < 6 {
+                    // cold scan burst: one-off experts LRU caches anyway
+                    n_experts - 1 - (step % 40) - (step / 40) % 8
+                } else {
+                    let r = rng.f64() * total;
+                    cdf.partition_point(|w| *w < r).min(n_experts - 1)
+                };
+                let key = (0usize, e);
+                c.note_activation(key);
+                if !c.access(key) {
+                    c.insert(key, expert_bytes);
+                }
+            }
+            c.stats.hit_rate()
+        };
+        let lru = run(ResidencyKind::Lru);
+        let lfu = run(ResidencyKind::Lfu);
+        let sparsity = run(ResidencyKind::Sparsity);
+        assert!(
+            sparsity >= lru,
+            "sparsity-aware {sparsity:.3} < lru {lru:.3} on skewed trace"
+        );
+        assert!(sparsity > 0.3, "sparsity hit rate implausibly low: {sparsity}");
+        assert!(lfu > 0.3, "lfu hit rate implausibly low: {lfu}");
+    }
+}

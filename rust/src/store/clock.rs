@@ -1,0 +1,103 @@
+//! Clock abstraction for the timelines residency code runs on
+//! (DESIGN.md §3). `ExpertStore` is written against the trait, so the
+//! cache, prefetch pipeline and stall attribution are byte-for-byte the
+//! same code regardless of where time comes from — the property the
+//! Fig-6 "sim vs real" comparison rests on.
+//!
+//! Today both store clients drive a `VirtualClock`: the simulator
+//! advances it with modeled latencies, the serving path with *measured*
+//! per-layer PJRT compute (calibrated via `WallClock` stopwatches, which
+//! also time prefill/decode in `coordinator::serve`). Installing a
+//! `WallClock` as the store clock (`ExpertStore::with_wall_clock`) makes
+//! real elapsed time advance the timeline by itself, with modeled stalls
+//! charged on top as a virtual offset.
+
+use std::time::Instant;
+
+pub trait Clock {
+    /// Current position on the timeline, microseconds.
+    fn now_us(&self) -> f64;
+    /// Push the timeline forward by `us` (modeled compute or stall time).
+    fn advance(&mut self, us: f64);
+}
+
+/// Pure virtual timeline: time moves only when `advance` is called.
+#[derive(Debug, Default, Clone)]
+pub struct VirtualClock {
+    now: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock { now: 0.0 }
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_us(&self) -> f64 {
+        self.now
+    }
+    fn advance(&mut self, us: f64) {
+        self.now += us;
+    }
+}
+
+/// Wall-anchored timeline: real elapsed time plus a virtual offset. The
+/// offset accumulates modeled time that did not actually pass on this
+/// machine (simulated PCIe stalls), so `now_us` reads as "what the wall
+/// clock would show if the modeled hardware existed".
+#[derive(Debug, Clone)]
+pub struct WallClock {
+    t0: Instant,
+    offset_us: f64,
+}
+
+impl WallClock {
+    pub fn start() -> Self {
+        WallClock { t0: Instant::now(), offset_us: 0.0 }
+    }
+
+    /// Real (un-offset) seconds since `start`.
+    pub fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+
+    /// The accumulated virtual (modeled) component, microseconds.
+    pub fn virtual_offset_us(&self) -> f64 {
+        self.offset_us
+    }
+}
+
+impl Clock for WallClock {
+    fn now_us(&self) -> f64 {
+        self.t0.elapsed().as_nanos() as f64 / 1e3 + self.offset_us
+    }
+    fn advance(&mut self, us: f64) {
+        self.offset_us += us;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_advances() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now_us(), 0.0);
+        c.advance(12.5);
+        c.advance(0.5);
+        assert!((c.now_us() - 13.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wall_clock_is_monotone_and_carries_offset() {
+        let mut c = WallClock::start();
+        let a = c.now_us();
+        c.advance(1000.0);
+        let b = c.now_us();
+        assert!(b >= a + 1000.0, "{a} {b}");
+        assert_eq!(c.virtual_offset_us(), 1000.0);
+        assert!(c.elapsed_s() >= 0.0);
+    }
+}

@@ -1,0 +1,273 @@
+//! ExpertStore — the expert-residency subsystem (DESIGN.md §3).
+//!
+//! Owns everything between "the router picked expert e" and "expert e's
+//! bytes are in VRAM": the byte-budgeted resident set with pluggable
+//! eviction policies (`cache`/`policy`), the shared prefetch pipeline
+//! with in-flight tracking and stall attribution over a busy-until PCIe
+//! timeline (`prefetch`), and the clock abstraction that lets the same
+//! code run on the simulator's virtual timeline and the serving path's
+//! wall-anchored one (`clock`).
+//!
+//! Both coordinators — `coordinator::serve` (real PJRT compute) and
+//! `coordinator::sim` (discrete-event Figs 6/8) — are thin clients of
+//! this store, so the paper's residency mechanism is exercised by one
+//! code path everywhere. Predictors stay outside: callers decide *what*
+//! to prefetch; the store decides what is resident, what is in flight,
+//! and who pays for waiting.
+
+pub mod cache;
+pub mod clock;
+pub mod policy;
+pub mod prefetch;
+
+pub use cache::{CacheStats, ResidentSet};
+pub use clock::{Clock, VirtualClock, WallClock};
+pub use policy::{build_policy, LfuPolicy, LruPolicy, ResidencyPolicy, SparsityPolicy};
+pub use prefetch::{PinnedPool, PrefetchPipeline, StoreStats};
+
+pub use crate::config::ResidencyKind;
+
+pub type ExpertKey = (usize, usize); // (layer, expert)
+
+/// Unified residency facade: resident set + prefetch pipeline + clock.
+/// `P` is the per-transfer payload attached to in-flight prefetches.
+pub struct ExpertStore<P = ()> {
+    cache: ResidentSet,
+    prefetch: PrefetchPipeline<P>,
+    clock: Box<dyn Clock>,
+}
+
+impl<P> ExpertStore<P> {
+    pub fn new(budget_bytes: usize, kind: ResidencyKind, clock: Box<dyn Clock>) -> Self {
+        ExpertStore {
+            cache: ResidentSet::new(budget_bytes, kind),
+            prefetch: PrefetchPipeline::new(),
+            clock,
+        }
+    }
+
+    /// Store over a fresh virtual microsecond timeline (sim, and the
+    /// serving pipeline's modeled PCIe/stall accounting).
+    pub fn with_virtual_clock(budget_bytes: usize, kind: ResidencyKind) -> Self {
+        Self::new(budget_bytes, kind, Box::new(VirtualClock::new()))
+    }
+
+    /// Store over a wall-anchored timeline: real elapsed time advances it,
+    /// `tick`/`stall_until` add modeled time on top. Not used by the
+    /// in-repo clients yet (serve feeds a VirtualClock with measured
+    /// compute — see store::clock); intended for drivers that want the
+    /// store's accounting over genuinely passing time.
+    pub fn with_wall_clock(budget_bytes: usize, kind: ResidencyKind) -> Self {
+        Self::new(budget_bytes, kind, Box::new(WallClock::start()))
+    }
+
+    // ---------------------------------------------------------- timeline
+
+    pub fn now_us(&self) -> f64 {
+        self.clock.now_us()
+    }
+
+    /// Compute time passing (modeled or measured).
+    pub fn tick(&mut self, us: f64) {
+        self.clock.advance(us);
+    }
+
+    /// Jump forward to `t_us` without charging a stall (prefill waits,
+    /// warmup). No-op if `t_us` is in the past.
+    pub fn advance_to(&mut self, t_us: f64) {
+        let now = self.clock.now_us();
+        if t_us > now {
+            self.clock.advance(t_us - now);
+        }
+    }
+
+    /// Wait for `t_us` (a transfer completion), attributing the wait as a
+    /// decode stall. No-op if the bytes already landed.
+    pub fn stall_until(&mut self, t_us: f64) {
+        let now = self.clock.now_us();
+        if t_us > now {
+            self.prefetch.stats.stall_us += t_us - now;
+            self.clock.advance(t_us - now);
+        }
+    }
+
+    // ---------------------------------------------------------- residency
+
+    /// Routed access to `key`: feeds the policy's popularity signal and
+    /// records the cache hit/miss. Returns true if resident.
+    pub fn access(&mut self, key: ExpertKey) -> bool {
+        self.cache.note_activation(key);
+        self.cache.access(key)
+    }
+
+    pub fn contains(&self, key: ExpertKey) -> bool {
+        self.cache.contains(key)
+    }
+
+    /// Admit `key` at `bytes` into the resident set (after its transfer
+    /// lands, or at warmup). Returns false if it cannot fit.
+    pub fn admit(&mut self, key: ExpertKey, bytes: usize) -> bool {
+        self.cache.insert(key, bytes)
+    }
+
+    pub fn set_pinned(&mut self, key: ExpertKey, pinned: bool) {
+        self.cache.set_pinned(key, pinned);
+    }
+
+    pub fn unpin_all(&mut self) {
+        self.cache.unpin_all();
+    }
+
+    // ---------------------------------------------------------- transfers
+
+    pub fn inflight(&self, key: ExpertKey) -> bool {
+        self.prefetch.inflight(key)
+    }
+
+    /// Overlapped prefetch: queues behind in-flight bus work and pins any
+    /// resident copy of `key` against eviction until consumed.
+    pub fn begin_prefetch(
+        &mut self,
+        key: ExpertKey,
+        duration_us: f64,
+        bytes: f64,
+        payload: P,
+    ) -> f64 {
+        let now = self.clock.now_us();
+        let done = self.prefetch.begin(key, duration_us, bytes, now, payload);
+        self.cache.set_pinned(key, true);
+        done
+    }
+
+    /// Non-overlapped prefetch (same-layer speculation, paper §2): the
+    /// caller must stall to the returned completion time.
+    pub fn begin_prefetch_blocking(
+        &mut self,
+        key: ExpertKey,
+        duration_us: f64,
+        bytes: f64,
+        payload: P,
+    ) -> f64 {
+        let now = self.clock.now_us();
+        self.prefetch.begin_blocking(key, duration_us, bytes, now, payload)
+    }
+
+    /// Demand fetch of a missing expert; returns when the bytes land.
+    pub fn demand_fetch(&mut self, duration_us: f64, bytes: f64) -> f64 {
+        let now = self.clock.now_us();
+        self.prefetch.demand(duration_us, bytes, now)
+    }
+
+    /// Count a demand fetch that moves nothing (GPU-resident systems).
+    pub fn record_demand(&mut self) {
+        self.prefetch.record_demand();
+    }
+
+    /// Raw bus occupancy (prefill streaming, recall top-ups).
+    pub fn bus_copy(&mut self, duration_us: f64, bytes: f64) -> f64 {
+        let now = self.clock.now_us();
+        self.prefetch.bus_copy(duration_us, bytes, now)
+    }
+
+    /// Consume the in-flight transfer for `key`: (completion time, payload).
+    /// Releases the prefetch pin taken by `begin_prefetch` so a resident
+    /// copy becomes evictable again (re-admitting also resets the pin).
+    pub fn take_inflight(&mut self, key: ExpertKey) -> Option<(f64, P)> {
+        let taken = self.prefetch.take(key);
+        if taken.is_some() {
+            self.cache.set_pinned(key, false);
+        }
+        taken
+    }
+
+    // ---------------------------------------------------------- accounting
+
+    pub fn stats(&self) -> &StoreStats {
+        &self.prefetch.stats
+    }
+
+    pub fn cache_stats(&self) -> &CacheStats {
+        &self.cache.stats
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.cache.policy_name()
+    }
+
+    pub fn budget(&self) -> usize {
+        self.cache.budget()
+    }
+
+    pub fn used(&self) -> usize {
+        self.cache.used()
+    }
+
+    pub fn resident(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefetch_then_consume_charges_no_stall() {
+        let mut s: ExpertStore = ExpertStore::with_virtual_clock(1000, ResidencyKind::Lru);
+        let done = s.begin_prefetch((0, 0), 50.0, 100.0, ());
+        assert_eq!(done, 50.0);
+        s.tick(80.0); // compute overlapped past the transfer
+        assert!(!s.access((0, 0)), "not admitted yet");
+        let (ready, ()) = s.take_inflight((0, 0)).unwrap();
+        s.stall_until(ready);
+        assert_eq!(s.stats().stall_us, 0.0);
+        assert!(s.admit((0, 0), 100));
+        assert!(s.access((0, 0)));
+        assert_eq!(s.now_us(), 80.0);
+    }
+
+    #[test]
+    fn demand_fetch_stalls_exactly_the_gap() {
+        let mut s: ExpertStore = ExpertStore::with_virtual_clock(1000, ResidencyKind::Lfu);
+        s.tick(10.0);
+        let ready = s.demand_fetch(30.0, 64.0);
+        assert_eq!(ready, 40.0);
+        s.stall_until(ready);
+        assert_eq!(s.now_us(), 40.0);
+        assert_eq!(s.stats().stall_us, 30.0);
+        assert_eq!(s.stats().demand_fetches, 1);
+        assert_eq!(s.stats().transferred_bytes, 64.0);
+    }
+
+    #[test]
+    fn advance_to_does_not_count_as_stall() {
+        let mut s: ExpertStore = ExpertStore::with_virtual_clock(100, ResidencyKind::Lru);
+        let done = s.bus_copy(25.0, 10.0);
+        s.advance_to(done);
+        assert_eq!(s.now_us(), 25.0);
+        assert_eq!(s.stats().stall_us, 0.0);
+    }
+
+    #[test]
+    fn prefetch_pins_resident_copy() {
+        let mut s: ExpertStore = ExpertStore::with_virtual_clock(200, ResidencyKind::Lru);
+        assert!(s.admit((0, 0), 100));
+        s.begin_prefetch((0, 0), 10.0, 50.0, ());
+        assert!(s.admit((0, 1), 100));
+        // (0,0) is pinned and LRU-oldest: eviction must take (0,1) instead
+        assert!(s.admit((0, 2), 100));
+        assert!(s.contains((0, 0)), "pinned entry evicted by admit");
+        assert!(!s.contains((0, 1)));
+    }
+
+    #[test]
+    fn wall_clock_store_advances_on_its_own() {
+        let mut s: ExpertStore =
+            ExpertStore::with_wall_clock(100, ResidencyKind::Sparsity);
+        let a = s.now_us();
+        s.stall_until(a + 500.0);
+        assert!(s.now_us() >= a + 500.0);
+        let stall = s.stats().stall_us;
+        assert!(stall > 0.0 && stall <= 500.0, "stall {stall}");
+    }
+}

@@ -1,0 +1,266 @@
+//! Pluggable residency (eviction) policies for the expert cache.
+//!
+//! The paper runs plain LRU; MoE-Infinity (PAPERS.md) shows that
+//! sparsity-aware priority — rank experts by their decayed activation
+//! frequency rather than recency — beats LRU on skewed MoE routing, where
+//! a burst of cold experts can flush the globally hot ones out of an LRU
+//! cache. Three implementations share one trait so `ResidentSet` (and the
+//! shadow-map property tests over it) treat them interchangeably:
+//!
+//! * `LruPolicy`      — exact port of the seed `ExpertCache` behavior;
+//!   `--policy lru` reproduces the pre-refactor Fig-6/8 numbers.
+//! * `LfuPolicy`      — evict the least-frequently-hit resident,
+//!   LRU tie-break; frequency resets when an entry leaves the cache.
+//! * `SparsityPolicy` — MoE-Infinity-style: every *routing activation*
+//!   (hit or miss) feeds a per-expert exponentially-decayed counter, so
+//!   popularity ages out and victims are the experts the router has
+//!   stopped choosing.
+
+use std::collections::HashMap;
+
+use crate::config::ResidencyKind;
+
+use super::ExpertKey;
+
+pub trait ResidencyPolicy {
+    fn name(&self) -> &'static str;
+    /// The router selected `key` this step (hit or miss) — the popularity
+    /// signal sparsity-aware policies rank by. Recency policies ignore it.
+    fn on_activation(&mut self, key: ExpertKey, now: u64);
+    /// `key` was found resident and touched.
+    fn on_hit(&mut self, key: ExpertKey, now: u64);
+    /// `key` entered the resident set (insert or resize).
+    fn on_insert(&mut self, key: ExpertKey, now: u64);
+    /// `key` left the resident set (eviction or overwrite).
+    fn on_remove(&mut self, key: ExpertKey);
+    /// Pick the eviction victim among the evictable (unpinned) residents.
+    fn victim(&self, candidates: &[ExpertKey]) -> Option<ExpertKey>;
+}
+
+/// Build the policy implementation a `ResidencyKind` selects.
+pub fn build_policy(kind: ResidencyKind) -> Box<dyn ResidencyPolicy> {
+    match kind {
+        ResidencyKind::Lru => Box::new(LruPolicy::new()),
+        ResidencyKind::Lfu => Box::new(LfuPolicy::new()),
+        // half-life ~700 activations: long enough to span many tokens at
+        // Mixtral depth, short enough that yesterday's hot set ages out
+        ResidencyKind::Sparsity => Box::new(SparsityPolicy::new(0.999)),
+    }
+}
+
+// ------------------------------------------------------------------- LRU
+
+#[derive(Debug, Default)]
+pub struct LruPolicy {
+    last_use: HashMap<ExpertKey, u64>,
+}
+
+impl LruPolicy {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl ResidencyPolicy for LruPolicy {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+    fn on_activation(&mut self, _key: ExpertKey, _now: u64) {}
+    fn on_hit(&mut self, key: ExpertKey, now: u64) {
+        self.last_use.insert(key, now);
+    }
+    fn on_insert(&mut self, key: ExpertKey, now: u64) {
+        self.last_use.insert(key, now);
+    }
+    fn on_remove(&mut self, key: ExpertKey) {
+        self.last_use.remove(&key);
+    }
+    fn victim(&self, candidates: &[ExpertKey]) -> Option<ExpertKey> {
+        candidates
+            .iter()
+            .copied()
+            .min_by_key(|k| self.last_use.get(k).copied().unwrap_or(0))
+    }
+}
+
+// ------------------------------------------------------------------- LFU
+
+#[derive(Debug, Default)]
+pub struct LfuPolicy {
+    freq: HashMap<ExpertKey, u64>,
+    last_use: HashMap<ExpertKey, u64>,
+}
+
+impl LfuPolicy {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl ResidencyPolicy for LfuPolicy {
+    fn name(&self) -> &'static str {
+        "lfu"
+    }
+    fn on_activation(&mut self, _key: ExpertKey, _now: u64) {}
+    fn on_hit(&mut self, key: ExpertKey, now: u64) {
+        *self.freq.entry(key).or_insert(0) += 1;
+        self.last_use.insert(key, now);
+    }
+    fn on_insert(&mut self, key: ExpertKey, now: u64) {
+        *self.freq.entry(key).or_insert(0) += 1;
+        self.last_use.insert(key, now);
+    }
+    fn on_remove(&mut self, key: ExpertKey) {
+        self.freq.remove(&key);
+        self.last_use.remove(&key);
+    }
+    fn victim(&self, candidates: &[ExpertKey]) -> Option<ExpertKey> {
+        candidates.iter().copied().min_by_key(|k| {
+            (
+                self.freq.get(k).copied().unwrap_or(0),
+                self.last_use.get(k).copied().unwrap_or(0),
+            )
+        })
+    }
+}
+
+// ------------------------------------------- sparsity-aware (MoE-Infinity)
+
+pub struct SparsityPolicy {
+    /// per-expert exponentially-decayed activation count, lazily decayed:
+    /// the stored value is the EMA as of `stamp[key]` activation steps
+    decay: f64,
+    step: u64,
+    ema: HashMap<ExpertKey, f64>,
+    stamp: HashMap<ExpertKey, u64>,
+    last_use: HashMap<ExpertKey, u64>,
+}
+
+impl SparsityPolicy {
+    pub fn new(decay: f64) -> Self {
+        assert!(decay > 0.0 && decay <= 1.0);
+        SparsityPolicy {
+            decay,
+            step: 0,
+            ema: HashMap::new(),
+            stamp: HashMap::new(),
+            last_use: HashMap::new(),
+        }
+    }
+
+    /// Activation score decayed to the current step. powf, not powi: the
+    /// step gap is unbounded in a long-running server and an i32 cast
+    /// would wrap negative past 2^31, exploding the coldest score.
+    fn score(&self, key: ExpertKey) -> f64 {
+        match (self.ema.get(&key), self.stamp.get(&key)) {
+            (Some(v), Some(s)) => v * self.decay.powf((self.step - s) as f64),
+            _ => 0.0,
+        }
+    }
+}
+
+impl ResidencyPolicy for SparsityPolicy {
+    fn name(&self) -> &'static str {
+        "sparsity"
+    }
+    fn on_activation(&mut self, key: ExpertKey, _now: u64) {
+        self.step += 1;
+        let decayed = self.score(key);
+        self.ema.insert(key, decayed + 1.0);
+        self.stamp.insert(key, self.step);
+    }
+    fn on_hit(&mut self, key: ExpertKey, now: u64) {
+        self.last_use.insert(key, now);
+    }
+    fn on_insert(&mut self, key: ExpertKey, now: u64) {
+        self.last_use.insert(key, now);
+    }
+    fn on_remove(&mut self, key: ExpertKey) {
+        // activation history deliberately survives eviction: it is a
+        // property of the routing distribution, not of residency
+        self.last_use.remove(&key);
+    }
+    fn victim(&self, candidates: &[ExpertKey]) -> Option<ExpertKey> {
+        candidates.iter().copied().min_by(|a, b| {
+            self.score(*a)
+                .partial_cmp(&self.score(*b))
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| {
+                    let la = self.last_use.get(a).copied().unwrap_or(0);
+                    let lb = self.last_use.get(b).copied().unwrap_or(0);
+                    la.cmp(&lb)
+                })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_picks_oldest() {
+        let mut p = LruPolicy::new();
+        p.on_insert((0, 0), 1);
+        p.on_insert((0, 1), 2);
+        p.on_hit((0, 0), 3);
+        assert_eq!(p.victim(&[(0, 0), (0, 1)]), Some((0, 1)));
+    }
+
+    #[test]
+    fn lfu_prefers_cold_and_breaks_ties_by_recency() {
+        let mut p = LfuPolicy::new();
+        p.on_insert((0, 0), 1);
+        p.on_insert((0, 1), 2);
+        p.on_hit((0, 0), 3); // freq: (0,0)=2, (0,1)=1
+        assert_eq!(p.victim(&[(0, 0), (0, 1)]), Some((0, 1)));
+        p.on_insert((0, 2), 4); // freq 1, newer than (0,1)
+        assert_eq!(p.victim(&[(0, 0), (0, 1), (0, 2)]), Some((0, 1)));
+        // eviction resets frequency
+        p.on_remove((0, 0));
+        p.on_insert((0, 0), 5);
+        assert_eq!(
+            p.victim(&[(0, 0), (0, 2)]),
+            Some((0, 2)),
+            "both freq 1 -> older wins"
+        );
+    }
+
+    #[test]
+    fn sparsity_ranks_by_decayed_activations() {
+        let mut p = SparsityPolicy::new(0.9);
+        for _ in 0..10 {
+            p.on_activation((0, 0), 0);
+        }
+        p.on_activation((0, 1), 0);
+        p.on_insert((0, 0), 1);
+        p.on_insert((0, 1), 2);
+        // (0,1) has far fewer activations -> victim despite being newer
+        assert_eq!(p.victim(&[(0, 0), (0, 1)]), Some((0, 1)));
+        // hammer (0,1) long enough and the decayed score flips
+        for _ in 0..60 {
+            p.on_activation((0, 1), 3);
+        }
+        assert_eq!(p.victim(&[(0, 0), (0, 1)]), Some((0, 0)));
+    }
+
+    #[test]
+    fn sparsity_history_survives_eviction() {
+        let mut p = SparsityPolicy::new(1.0);
+        p.on_activation((0, 0), 0);
+        p.on_activation((0, 0), 0);
+        p.on_insert((0, 0), 1);
+        p.on_remove((0, 0));
+        p.on_insert((0, 0), 2);
+        p.on_activation((0, 1), 0);
+        p.on_insert((0, 1), 3);
+        assert_eq!(p.victim(&[(0, 0), (0, 1)]), Some((0, 1)));
+    }
+
+    #[test]
+    fn build_policy_names_match_kind() {
+        for kind in ResidencyKind::ALL {
+            assert_eq!(build_policy(kind).name(), kind.name());
+        }
+    }
+}

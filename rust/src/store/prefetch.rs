@@ -1,0 +1,215 @@
+//! Shared prefetch pipeline: in-flight transfer tracking over a single
+//! busy-until PCIe bus timeline, with demand-fetch queuing and stall/byte
+//! attribution — the movement half of `ExpertStore`.
+//!
+//! Both coordinators drive it the same way: the inter/intra predictors
+//! decide *what* to move, the `TransferEngine`/`PcieSpec` decide *how
+//! long* the move takes, and this pipeline decides *when* it lands —
+//! overlapped prefetches queue behind in-flight bus work, blocking
+//! prefetches (the AdvancedOffload baseline's same-layer scheme, §2 of
+//! the paper) hold compute hostage, and demand fetches are charged as
+//! stalls by the store when the consumer arrives before the bytes do.
+//!
+//! Generic over a per-transfer payload `P`: the serving path attaches the
+//! predicted channel mask so recall can be scored when the prefetch is
+//! consumed; the simulator attaches nothing.
+
+use std::collections::HashMap;
+
+use super::ExpertKey;
+
+/// Residency-movement statistics (the store's half of `PipelineStats`).
+#[derive(Debug, Default, Clone)]
+pub struct StoreStats {
+    pub demand_fetches: u64,
+    pub prefetches: u64,
+    pub stall_us: f64,
+    /// f64 so the simulator's fractional per-expert byte models sum
+    /// exactly; integer byte counts below 2^53 stay exact
+    pub transferred_bytes: f64,
+}
+
+pub struct PrefetchPipeline<P = ()> {
+    bus_free_us: f64,
+    inflight: HashMap<ExpertKey, (f64, P)>,
+    pub stats: StoreStats,
+}
+
+impl<P> Default for PrefetchPipeline<P> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<P> PrefetchPipeline<P> {
+    pub fn new() -> Self {
+        PrefetchPipeline {
+            bus_free_us: 0.0,
+            inflight: HashMap::new(),
+            stats: StoreStats::default(),
+        }
+    }
+
+    pub fn inflight(&self, key: ExpertKey) -> bool {
+        self.inflight.contains_key(&key)
+    }
+
+    pub fn inflight_len(&self) -> usize {
+        self.inflight.len()
+    }
+
+    pub fn bus_free_us(&self) -> f64 {
+        self.bus_free_us
+    }
+
+    /// Raw bus occupancy (prefill legs, recall top-ups): queue `duration_us`
+    /// of transfer behind whatever is in flight, return its finish time.
+    pub fn bus_copy(&mut self, duration_us: f64, bytes: f64, now_us: f64) -> f64 {
+        self.stats.transferred_bytes += bytes;
+        let start = now_us.max(self.bus_free_us);
+        let done = start + duration_us;
+        self.bus_free_us = done;
+        done
+    }
+
+    /// Overlapped prefetch for `key`: queues on the bus and tracks the
+    /// transfer in flight. Returns the completion time.
+    pub fn begin(
+        &mut self,
+        key: ExpertKey,
+        duration_us: f64,
+        bytes: f64,
+        now_us: f64,
+        payload: P,
+    ) -> f64 {
+        self.stats.prefetches += 1;
+        let done = self.bus_copy(duration_us, bytes, now_us);
+        self.inflight.insert(key, (done, payload));
+        done
+    }
+
+    /// Non-overlapped prefetch (AdvancedOffload same-layer scheme): issued
+    /// at `now` regardless of queued work; the caller stalls compute until
+    /// the returned completion time.
+    pub fn begin_blocking(
+        &mut self,
+        key: ExpertKey,
+        duration_us: f64,
+        bytes: f64,
+        now_us: f64,
+        payload: P,
+    ) -> f64 {
+        self.stats.prefetches += 1;
+        self.stats.transferred_bytes += bytes;
+        let done = now_us + duration_us;
+        self.bus_free_us = done;
+        self.inflight.insert(key, (done, payload));
+        done
+    }
+
+    /// Demand fetch of a missing expert: queues on the bus, returns the
+    /// time the bytes land.
+    pub fn demand(&mut self, duration_us: f64, bytes: f64, now_us: f64) -> f64 {
+        self.stats.demand_fetches += 1;
+        self.bus_copy(duration_us, bytes, now_us)
+    }
+
+    /// Count a demand fetch that moves nothing (GPU-resident misses).
+    pub fn record_demand(&mut self) {
+        self.stats.demand_fetches += 1;
+    }
+
+    /// Consume an in-flight transfer for `key`, if any: (completion time,
+    /// payload).
+    pub fn take(&mut self, key: ExpertKey) -> Option<(f64, P)> {
+        self.inflight.remove(&key)
+    }
+}
+
+/// Simulated pinned staging-buffer pool for the transfer engine: fixed
+/// number of fixed-size buffers, blocking acquire models back-pressure.
+pub struct PinnedPool {
+    buf_bytes: usize,
+    free: Vec<usize>,
+    total: usize,
+}
+
+impl PinnedPool {
+    pub fn new(n_buffers: usize, buf_bytes: usize) -> Self {
+        PinnedPool { buf_bytes, free: (0..n_buffers).collect(), total: n_buffers }
+    }
+    pub fn buf_bytes(&self) -> usize {
+        self.buf_bytes
+    }
+    pub fn try_acquire(&mut self) -> Option<usize> {
+        self.free.pop()
+    }
+    pub fn release(&mut self, id: usize) {
+        debug_assert!(id < self.total && !self.free.contains(&id));
+        self.free.push(id);
+    }
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn overlapped_prefetch_queues_on_bus() {
+        let mut p: PrefetchPipeline = PrefetchPipeline::new();
+        let d1 = p.begin((0, 0), 100.0, 1000.0, 0.0, ());
+        assert_eq!(d1, 100.0);
+        // issued at t=50 but the bus is busy until 100
+        let d2 = p.begin((0, 1), 100.0, 1000.0, 50.0, ());
+        assert_eq!(d2, 200.0);
+        assert!(p.inflight((0, 0)) && p.inflight((0, 1)));
+        assert_eq!(p.stats.prefetches, 2);
+        assert_eq!(p.stats.transferred_bytes, 2000.0);
+        let (done, ()) = p.take((0, 0)).unwrap();
+        assert_eq!(done, 100.0);
+        assert!(!p.inflight((0, 0)));
+        assert!(p.take((0, 0)).is_none());
+    }
+
+    #[test]
+    fn blocking_prefetch_ignores_queue() {
+        let mut p: PrefetchPipeline = PrefetchPipeline::new();
+        p.bus_copy(500.0, 0.0, 0.0); // bus busy until 500
+        let done = p.begin_blocking((0, 0), 100.0, 1.0, 50.0, ());
+        assert_eq!(done, 150.0, "blocking path starts at now, not bus_free");
+    }
+
+    #[test]
+    fn demand_counts_and_queues() {
+        let mut p: PrefetchPipeline = PrefetchPipeline::new();
+        let done = p.demand(40.0, 64.0, 10.0);
+        assert_eq!(done, 50.0);
+        assert_eq!(p.stats.demand_fetches, 1);
+        p.record_demand();
+        assert_eq!(p.stats.demand_fetches, 2);
+        assert_eq!(p.stats.transferred_bytes, 64.0);
+    }
+
+    #[test]
+    fn payloads_round_trip() {
+        let mut p: PrefetchPipeline<Vec<bool>> = PrefetchPipeline::new();
+        p.begin((1, 2), 10.0, 8.0, 0.0, vec![true, false]);
+        let (_, mask) = p.take((1, 2)).unwrap();
+        assert_eq!(mask, vec![true, false]);
+    }
+
+    #[test]
+    fn pinned_pool_cycle() {
+        let mut p = PinnedPool::new(2, 64);
+        let a = p.try_acquire().unwrap();
+        let b = p.try_acquire().unwrap();
+        assert!(p.try_acquire().is_none());
+        p.release(a);
+        assert_eq!(p.available(), 1);
+        p.release(b);
+        assert_eq!(p.available(), 2);
+    }
+}

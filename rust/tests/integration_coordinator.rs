@@ -1,18 +1,27 @@
 //! Integration: the FloE coordinator + eval suite over real artifacts.
+//!
+//! Requires the `pjrt` feature (this file is empty without it) and
+//! `make artifacts` — tests skip at runtime with a notice when the
+//! artifacts are absent, so `cargo test` stays green everywhere.
+#![cfg(feature = "pjrt")]
 
-use floe::config::ExpertMode;
+use std::path::PathBuf;
+
+use floe::config::{ExpertMode, ResidencyKind};
 use floe::coordinator::policy::{SystemConfig, SystemKind};
 use floe::coordinator::serve::{Coordinator, Request};
 use floe::engine::Engine;
 use floe::evalsuite::{mean_accuracy, perplexity, probe_accuracy, EvalData};
 
-fn art_dir() -> std::path::PathBuf {
+/// None (and a notice) when artifacts are missing — callers return early.
+fn art_dir() -> Option<PathBuf> {
     let d = floe::artifacts_dir();
-    assert!(
-        d.join("manifest.json").exists(),
-        "artifacts missing — run `make artifacts` first"
-    );
-    d
+    if d.join("manifest.json").exists() {
+        Some(d)
+    } else {
+        eprintln!("skipping: artifacts missing — run `make artifacts` first");
+        None
+    }
 }
 
 fn reqs(n: u64, tokens: usize) -> Vec<Request> {
@@ -29,9 +38,10 @@ fn reqs(n: u64, tokens: usize) -> Vec<Request> {
 
 #[test]
 fn floe_pipeline_serves_and_accounts() {
+    let Some(art) = art_dir() else { return };
     let mut sys = SystemConfig::new(SystemKind::Floe);
     sys.sparsity = 0.8;
-    let mut coord = Coordinator::new(&art_dir(), sys, 256 * 1024).unwrap();
+    let mut coord = Coordinator::new(&art, sys, 256 * 1024).unwrap();
     coord.calibrate_layer_time().unwrap();
     let done = coord.run_batch(&reqs(2, 12)).unwrap();
     assert_eq!(done.len(), 2);
@@ -39,7 +49,7 @@ fn floe_pipeline_serves_and_accounts() {
         assert_eq!(c.tokens, 12);
         assert!(c.decode_s > 0.0);
     }
-    let st = &coord.pipeline.stats;
+    let st = coord.pipeline.stats();
     // predictions were made and scored
     assert!(st.inter_total > 0);
     // a prefetch pipeline actually ran
@@ -51,11 +61,12 @@ fn floe_pipeline_serves_and_accounts() {
 
 #[test]
 fn completions_deterministic_across_systems() {
+    let Some(art) = art_dir() else { return };
     // numerics don't depend on the offloading policy (same ExpertMode)
     let mk = |kind| {
         let mut sys = SystemConfig::new(kind);
         sys.sparsity = 0.8;
-        let mut c = Coordinator::new(&art_dir(), sys, 128 * 1024).unwrap();
+        let mut c = Coordinator::new(&art, sys, 128 * 1024).unwrap();
         c.run_batch(&reqs(1, 10)).unwrap()[0].text.clone()
     };
     // Floe twice → identical
@@ -64,24 +75,28 @@ fn completions_deterministic_across_systems() {
 
 #[test]
 fn gpu_resident_has_no_stalls_after_warmup() {
+    let Some(art) = art_dir() else { return };
     let sys = SystemConfig::new(SystemKind::GpuResident);
-    let mut coord = Coordinator::new(&art_dir(), sys, usize::MAX / 2).unwrap();
+    let mut coord = Coordinator::new(&art, sys, usize::MAX / 2).unwrap();
     let done = coord.run_batch(&reqs(1, 16)).unwrap();
     assert_eq!(done[0].tokens, 16);
     // resident system never touches the bus
-    assert_eq!(coord.pipeline.stats.transferred_bytes, 0);
-    assert_eq!(coord.pipeline.stats.stall_us, 0.0);
+    let st = coord.pipeline.stats();
+    assert_eq!(st.transferred_bytes, 0);
+    assert_eq!(st.stall_us, 0.0);
 }
 
 #[test]
 fn naive_offload_stalls_more_than_floe() {
+    let Some(art) = art_dir() else { return };
     let run = |kind| {
         let mut sys = SystemConfig::new(kind);
         sys.sparsity = 0.8;
-        let mut c = Coordinator::new(&art_dir(), sys, 96 * 1024).unwrap();
+        let mut c = Coordinator::new(&art, sys, 96 * 1024).unwrap();
         c.calibrate_layer_time().unwrap();
         let _ = c.run_batch(&reqs(2, 16)).unwrap();
-        (c.pipeline.stats.stall_us, c.pipeline.stats.transferred_bytes)
+        let st = c.pipeline.stats();
+        (st.stall_us, st.transferred_bytes)
     };
     let (naive_stall, naive_bytes) = run(SystemKind::NaiveOffload);
     let (floe_stall, floe_bytes) = run(SystemKind::Floe);
@@ -100,9 +115,26 @@ fn naive_offload_stalls_more_than_floe() {
 }
 
 #[test]
+fn residency_policies_serve_identically_under_floe() {
+    let Some(art) = art_dir() else { return };
+    // the eviction policy changes residency, never numerics: completions
+    // are identical under every ExpertStore policy
+    let mk = |residency| {
+        let mut sys = SystemConfig::with_residency(SystemKind::Floe, residency);
+        sys.sparsity = 0.8;
+        let mut c = Coordinator::new(&art, sys, 128 * 1024).unwrap();
+        c.run_batch(&reqs(1, 10)).unwrap()[0].text.clone()
+    };
+    let lru = mk(ResidencyKind::Lru);
+    assert_eq!(lru, mk(ResidencyKind::Lfu));
+    assert_eq!(lru, mk(ResidencyKind::Sparsity));
+}
+
+#[test]
 fn eval_quality_degrades_gracefully() {
-    let mut eng = Engine::load(&art_dir()).unwrap();
-    let data = EvalData::load(&art_dir()).unwrap();
+    let Some(art) = art_dir() else { return };
+    let mut eng = Engine::load(&art).unwrap();
+    let data = EvalData::load(&art).unwrap();
     let nll = |eng: &mut Engine, mode| perplexity(eng, &data, mode, 384, 96, 16).unwrap();
     let dense = nll(&mut eng, ExpertMode::Dense);
     assert!(dense < 1.5, "trained model should beat 1.5 nats/byte: {dense}");
@@ -116,8 +148,9 @@ fn eval_quality_degrades_gracefully() {
 
 #[test]
 fn probes_score_above_zero_dense() {
-    let mut eng = Engine::load(&art_dir()).unwrap();
-    let data = EvalData::load(&art_dir()).unwrap();
+    let Some(art) = art_dir() else { return };
+    let mut eng = Engine::load(&art).unwrap();
+    let data = EvalData::load(&art).unwrap();
     let scores = probe_accuracy(&mut eng, &data, ExpertMode::Dense, 10).unwrap();
     assert_eq!(scores.len(), 4);
     let acc = mean_accuracy(&scores);
@@ -126,9 +159,10 @@ fn probes_score_above_zero_dense() {
 
 #[test]
 fn floe_wup_beats_cats_at_90() {
+    let Some(art) = art_dir() else { return };
     // the paper's central efficacy claim at high sparsity (Fig 10)
-    let mut eng = Engine::load(&art_dir()).unwrap();
-    let data = EvalData::load(&art_dir()).unwrap();
+    let mut eng = Engine::load(&art).unwrap();
+    let data = EvalData::load(&art).unwrap();
     let up = perplexity(&mut eng, &data, ExpertMode::Sparse { level: 0.9 },
                         512, 96, 16).unwrap();
     let gate = perplexity(&mut eng, &data, ExpertMode::CatsGate { level: 0.9 },

@@ -1,7 +1,11 @@
 //! Integration: compiled HLO artifacts vs the Python oracle (testvec.json)
 //! and cross-path consistency (HLO == Pallas-HLO == native Rust).
 //!
-//! Requires `make artifacts` to have produced ./artifacts.
+//! Requires the `pjrt` feature (this file is empty without it) and
+//! `make artifacts` to have produced ./artifacts — tests skip at runtime
+//! with a notice when the artifacts are absent, so `cargo test` stays
+//! green on machines that cannot build them.
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 
@@ -9,17 +13,19 @@ use floe::config::ExpertMode;
 use floe::engine::{ComputePath, DecodeState, Engine, NoObserver};
 use floe::util::json::{parse, Json};
 
-fn art_dir() -> PathBuf {
+/// None (and a notice) when artifacts are missing — callers return early.
+fn art_dir() -> Option<PathBuf> {
     let d = floe::artifacts_dir();
-    assert!(
-        d.join("manifest.json").exists(),
-        "artifacts missing — run `make artifacts` first"
-    );
-    d
+    if d.join("manifest.json").exists() {
+        Some(d)
+    } else {
+        eprintln!("skipping: artifacts missing — run `make artifacts` first");
+        None
+    }
 }
 
-fn testvec() -> Json {
-    let text = std::fs::read_to_string(art_dir().join("testvec.json")).unwrap();
+fn testvec(art: &std::path::Path) -> Json {
+    let text = std::fs::read_to_string(art.join("testvec.json")).unwrap();
     parse(&text).unwrap()
 }
 
@@ -44,8 +50,9 @@ fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
 
 #[test]
 fn hlo_experts_match_python_oracle() {
-    let tv = testvec();
-    let mut eng = Engine::load(&art_dir()).unwrap();
+    let Some(art) = art_dir() else { return };
+    let tv = testvec(&art);
+    let mut eng = Engine::load(&art).unwrap();
     let x = vecf(&tv, "x");
     let level = 0.7;
 
@@ -65,8 +72,9 @@ fn hlo_experts_match_python_oracle() {
 
 #[test]
 fn pallas_path_matches_jnp_path() {
-    let tv = testvec();
-    let mut eng = Engine::load(&art_dir()).unwrap();
+    let Some(art) = art_dir() else { return };
+    let tv = testvec(&art);
+    let mut eng = Engine::load(&art).unwrap();
     let x = vecf(&tv, "x");
     for mode in [ExpertMode::Sparse { level: 0.7 }, ExpertMode::Floe { level: 0.7 }] {
         eng.path = ComputePath::Hlo;
@@ -79,8 +87,9 @@ fn pallas_path_matches_jnp_path() {
 
 #[test]
 fn native_path_matches_hlo_path() {
-    let tv = testvec();
-    let mut eng = Engine::load(&art_dir()).unwrap();
+    let Some(art) = art_dir() else { return };
+    let tv = testvec(&art);
+    let mut eng = Engine::load(&art).unwrap();
     let x = vecf(&tv, "x");
     for mode in [
         ExpertMode::Dense,
@@ -98,8 +107,9 @@ fn native_path_matches_hlo_path() {
 
 #[test]
 fn attn_step_matches_python_oracle() {
-    let tv = testvec();
-    let mut eng = Engine::load(&art_dir()).unwrap();
+    let Some(art) = art_dir() else { return };
+    let tv = testvec(&art);
+    let mut eng = Engine::load(&art).unwrap();
     let x = vecf(&tv, "x");
     // run one layer step at pos 0 through decode internals:
     // reproduce via decode of a token whose embedding we override is not
@@ -119,7 +129,8 @@ fn attn_step_matches_python_oracle() {
 
 #[test]
 fn decode_is_deterministic() {
-    let mut eng = Engine::load(&art_dir()).unwrap();
+    let Some(art) = art_dir() else { return };
+    let mut eng = Engine::load(&art).unwrap();
     let out1 = eng
         .generate(b"the miller ", 16, ExpertMode::Dense, 0.0, 0, &mut NoObserver)
         .unwrap();
@@ -131,7 +142,8 @@ fn decode_is_deterministic() {
 
 #[test]
 fn trained_model_generates_text() {
-    let mut eng = Engine::load(&art_dir()).unwrap();
+    let Some(art) = art_dir() else { return };
+    let mut eng = Engine::load(&art).unwrap();
     let out = eng
         .generate(b"the miller carried ", 24, ExpertMode::Dense, 0.0, 0, &mut NoObserver)
         .unwrap();
@@ -141,8 +153,9 @@ fn trained_model_generates_text() {
 
 #[test]
 fn up_probe_matches_manual_dequant_matmul() {
-    let tv = testvec();
-    let mut eng = Engine::load(&art_dir()).unwrap();
+    let Some(art) = art_dir() else { return };
+    let tv = testvec(&art);
+    let mut eng = Engine::load(&art).unwrap();
     let x = vecf(&tv, "x");
     let v = eng.up_probe(0, 0, &x).unwrap();
     let qv = eng.w.up_q(0, 0).unwrap();

@@ -58,6 +58,7 @@ fn main() -> anyhow::Result<()> {
             system,
             vram_budget_bytes: 512 * 1024,
             max_requests: 3,
+            ..ServerOpts::default()
         },
     )?;
     client.join().unwrap()?;

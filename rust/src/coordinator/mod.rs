@@ -4,13 +4,17 @@
 //!   (DeepSpeed-MII-style naive offload, Mixtral-Offloading-style advanced
 //!   offload, Fiddler CPU co-execution, fully GPU-resident INT2).
 //! * `sim` — discrete-event end-to-end decode simulation at arbitrary
-//!   model scale over the hwsim hardware models; regenerates Figs 6/8.
-//! * `serve` — the *real* serving pipeline on the in-repo model: request
-//!   queue, interleaved continuous batching, FloE prefetch pipeline
-//!   (dual predictors + expert cache + compact transfers) driving the
-//!   PJRT engine, with a simulated PCIe clock accounted alongside real
-//!   compute time.
+//!   model scale over the hwsim hardware models; regenerates Figs 6/8,
+//!   and hosts the batched-serving simulator behind `exp-serve-load`.
+//! * `sched` — the continuous-batching scheduler (FIFO admission queue,
+//!   token-boundary joins, per-request stall/queue accounting) shared by
+//!   the real serving path and the simulator via the `SeqBackend` trait.
+//! * `serve` — the *real* serving pipeline on the in-repo model: the
+//!   FloE prefetch pipeline (dual predictors + expert cache + compact
+//!   transfers) driving the PJRT engine one token at a time, with a
+//!   simulated PCIe clock accounted alongside real compute time.
 
 pub mod policy;
+pub mod sched;
 pub mod serve;
 pub mod sim;

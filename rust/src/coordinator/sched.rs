@@ -1,0 +1,472 @@
+//! Continuous-batching scheduler (DESIGN.md §6) — the serving control
+//! loop shared by the real coordinator and the discrete-event simulator.
+//!
+//! Requests enter a FIFO admission queue; at every token boundary the
+//! scheduler tops the in-flight decode batch up to `max_batch` (strictly
+//! in arrival order — no starvation), decodes one token for every active
+//! sequence, and retires finished sequences immediately so their slot is
+//! reusable at the very next boundary. The backend abstraction
+//! (`SeqBackend`) is what lets one scheduler drive both execution
+//! substrates: `coordinator::serve::Coordinator` (real PJRT compute on a
+//! wall timeline) and `coordinator::sim::SimServeBackend` (roofline
+//! latencies on a virtual timeline), so scheduler behavior — and its
+//! tests — cover the serving path without artifacts.
+//!
+//! Per-request accounting: queue wait (arrival → admission, in the
+//! backend's time base), prefill/decode compute, the attributed stall
+//! decomposition (demand-fetch vs prefetch-miss, read back from
+//! `ExpertStore`'s per-requester ledger), and the peak batch size the
+//! request decoded in.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::store::StallSplit;
+
+use super::serve::Request;
+
+/// Outcome of decoding one token for one sequence.
+#[derive(Debug, Clone)]
+pub struct SeqStep {
+    /// byte emitted by the sampler (None when the backend has no text,
+    /// e.g. the simulator)
+    pub token: Option<u8>,
+    pub finished: bool,
+    /// compute time for this token, µs (excludes attributed stalls)
+    pub compute_us: f64,
+}
+
+/// One decode substrate the scheduler can drive. All methods run on the
+/// single coordinator thread — backends need not be `Send`.
+pub trait SeqBackend {
+    /// Per-sequence decode state.
+    type Seq;
+
+    /// The scheduler's time base, µs: wall time for the real coordinator,
+    /// the store's virtual timeline for the simulator.
+    fn now_us(&self) -> f64;
+
+    /// Called once per token boundary, before the batch steps (the
+    /// simulator uses it to reset same-boundary expert reuse tracking).
+    fn on_boundary(&mut self) {}
+
+    /// Admit a request: process its prompt and return the sequence state
+    /// plus prefill compute µs. Stalls charged during prefill must be
+    /// attributed to `req.id`.
+    fn start(&mut self, req: &Request) -> Result<(Self::Seq, f64)>;
+
+    /// Decode one token for `seq`, attributing stalls to its request.
+    fn step(&mut self, seq: &mut Self::Seq) -> Result<SeqStep>;
+
+    /// Cumulative attributed stall decomposition for request `id`.
+    fn stalls_of(&self, id: u64) -> StallSplit;
+}
+
+impl<'a, B: SeqBackend> SeqBackend for &'a mut B {
+    type Seq = B::Seq;
+    fn now_us(&self) -> f64 {
+        (**self).now_us()
+    }
+    fn on_boundary(&mut self) {
+        (**self).on_boundary();
+    }
+    fn start(&mut self, req: &Request) -> Result<(Self::Seq, f64)> {
+        (**self).start(req)
+    }
+    fn step(&mut self, seq: &mut Self::Seq) -> Result<SeqStep> {
+        (**self).step(seq)
+    }
+    fn stalls_of(&self, id: u64) -> StallSplit {
+        (**self).stalls_of(id)
+    }
+}
+
+/// A finished request with its full serving accounting.
+#[derive(Debug, Clone)]
+pub struct ServeCompletion {
+    pub id: u64,
+    pub text: Vec<u8>,
+    pub tokens: usize,
+    /// when the request entered the admission queue, backend µs
+    pub arrival_us: f64,
+    /// arrival → admission (prefill start)
+    pub queue_wait_us: f64,
+    /// prefill compute µs
+    pub prefill_us: f64,
+    /// decode compute µs (stalls excluded)
+    pub decode_us: f64,
+    /// attributed stall decomposition (demand-fetch vs prefetch-miss)
+    pub stall: StallSplit,
+    /// largest decode batch this request was part of
+    pub batch_peak: usize,
+    pub finished_us: f64,
+    /// backend failure (bad prompt, engine error): the request retired
+    /// without finishing; accounting covers work done up to the failure
+    pub error: Option<String>,
+}
+
+impl ServeCompletion {
+    pub fn stall_us(&self) -> f64 {
+        self.stall.total_us()
+    }
+    /// decode TPS counting compute only.
+    pub fn compute_tps(&self) -> f64 {
+        self.tokens as f64 / (self.decode_us / 1e6).max(1e-9)
+    }
+    /// decode TPS counting compute + attributed stalls.
+    pub fn effective_tps(&self) -> f64 {
+        self.tokens as f64 / ((self.decode_us + self.stall.total_us()) / 1e6).max(1e-9)
+    }
+    /// arrival → completion.
+    pub fn latency_us(&self) -> f64 {
+        self.finished_us - self.arrival_us
+    }
+}
+
+struct ActiveSeq<S> {
+    id: u64,
+    seq: S,
+    out: Vec<u8>,
+    tokens: usize,
+    arrival_us: f64,
+    admitted_us: f64,
+    prefill_us: f64,
+    decode_us: f64,
+    batch_peak: usize,
+}
+
+/// The continuous-batching scheduler over one `SeqBackend`.
+pub struct Scheduler<B: SeqBackend> {
+    backend: B,
+    pending: VecDeque<(Request, f64)>,
+    active: Vec<ActiveSeq<B::Seq>>,
+    max_batch: usize,
+    admitted_order: Vec<u64>,
+    max_batch_seen: usize,
+}
+
+impl<B: SeqBackend> Scheduler<B> {
+    pub fn new(backend: B, max_batch: usize) -> Self {
+        Scheduler {
+            backend,
+            pending: VecDeque::new(),
+            active: Vec::new(),
+            max_batch: max_batch.max(1),
+            admitted_order: Vec::new(),
+            max_batch_seen: 0,
+        }
+    }
+
+    /// Queue a request arriving now.
+    pub fn enqueue(&mut self, req: Request) {
+        let now = self.backend.now_us();
+        self.enqueue_at(req, now);
+    }
+
+    /// Queue a request with an explicit arrival stamp (load replay: the
+    /// arrival may predate the token boundary that observes it).
+    pub fn enqueue_at(&mut self, req: Request, arrival_us: f64) {
+        self.pending.push_back((req, arrival_us));
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.pending.is_empty() || !self.active.is_empty()
+    }
+    pub fn active_len(&self) -> usize {
+        self.active.len()
+    }
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+    /// Largest batch any boundary decoded.
+    pub fn max_batch_seen(&self) -> usize {
+        self.max_batch_seen
+    }
+    /// Request ids in the order they were admitted (FIFO check).
+    pub fn admitted_order(&self) -> &[u64] {
+        &self.admitted_order
+    }
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+    pub fn backend_mut(&mut self) -> &mut B {
+        &mut self.backend
+    }
+    pub fn into_backend(self) -> B {
+        self.backend
+    }
+
+    /// One token boundary: admit pending requests (FIFO) up to the batch
+    /// cap, then decode one token for every active sequence. Finished
+    /// sequences retire immediately and are returned. Backend failures
+    /// retire the affected sequence as an error completion — one bad
+    /// request must never take the batch (or the server) down.
+    pub fn step(&mut self) -> Vec<ServeCompletion> {
+        let mut done = Vec::new();
+        while self.active.len() < self.max_batch {
+            let Some((req, arrival_us)) = self.pending.pop_front() else {
+                break;
+            };
+            let admitted_us = self.backend.now_us();
+            let id = req.id;
+            let (seq, prefill_us) = match self.backend.start(&req) {
+                Ok(v) => v,
+                Err(e) => {
+                    done.push(self.retired(
+                        id,
+                        Vec::new(),
+                        0,
+                        arrival_us,
+                        admitted_us,
+                        0.0,
+                        0.0,
+                        0,
+                        Some(format!("{e:#}")),
+                    ));
+                    continue;
+                }
+            };
+            self.admitted_order.push(id);
+            self.active.push(ActiveSeq {
+                id,
+                seq,
+                out: Vec::new(),
+                tokens: 0,
+                arrival_us,
+                admitted_us,
+                prefill_us,
+                decode_us: 0.0,
+                batch_peak: 0,
+            });
+        }
+        let batch = self.active.len();
+        self.max_batch_seen = self.max_batch_seen.max(batch);
+        self.backend.on_boundary();
+        let mut i = 0;
+        while i < self.active.len() {
+            let a = &mut self.active[i];
+            a.batch_peak = a.batch_peak.max(batch);
+            let error = match self.backend.step(&mut a.seq) {
+                Ok(st) => {
+                    if let Some(t) = st.token {
+                        a.out.push(t);
+                    }
+                    a.tokens += 1;
+                    a.decode_us += st.compute_us;
+                    if !st.finished {
+                        i += 1;
+                        continue;
+                    }
+                    None
+                }
+                Err(e) => Some(format!("{e:#}")),
+            };
+            let a = self.active.remove(i);
+            done.push(self.retired(
+                a.id,
+                a.out,
+                a.tokens,
+                a.arrival_us,
+                a.admitted_us,
+                a.prefill_us,
+                a.decode_us,
+                a.batch_peak,
+                error,
+            ));
+        }
+        done
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn retired(
+        &self,
+        id: u64,
+        text: Vec<u8>,
+        tokens: usize,
+        arrival_us: f64,
+        admitted_us: f64,
+        prefill_us: f64,
+        decode_us: f64,
+        batch_peak: usize,
+        error: Option<String>,
+    ) -> ServeCompletion {
+        ServeCompletion {
+            id,
+            text,
+            tokens,
+            arrival_us,
+            queue_wait_us: (admitted_us - arrival_us).max(0.0),
+            prefill_us,
+            decode_us,
+            stall: self.backend.stalls_of(id),
+            batch_peak,
+            finished_us: self.backend.now_us(),
+            error,
+        }
+    }
+
+    /// Step until the queue and the batch are empty.
+    pub fn drain(&mut self) -> Vec<ServeCompletion> {
+        let mut out = Vec::new();
+        while self.has_work() {
+            out.extend(self.step());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fake backend: each token advances a virtual clock by 10µs; a
+    /// request's length is its `max_tokens`; stalls are 1µs per token
+    /// charged as demand. Requests with `seed == POISON` fail at start;
+    /// `seed == POISON_STEP` fail at their first decode step.
+    const POISON: u64 = u64::MAX;
+    const POISON_STEP: u64 = u64::MAX - 1;
+
+    struct Fake {
+        now: f64,
+        stalls: std::collections::BTreeMap<u64, StallSplit>,
+        boundaries: usize,
+    }
+    struct FakeSeq {
+        id: u64,
+        left: usize,
+        poisoned: bool,
+    }
+    impl SeqBackend for Fake {
+        type Seq = FakeSeq;
+        fn now_us(&self) -> f64 {
+            self.now
+        }
+        fn on_boundary(&mut self) {
+            self.boundaries += 1;
+        }
+        fn start(&mut self, req: &Request) -> Result<(FakeSeq, f64)> {
+            if req.seed == POISON {
+                anyhow::bail!("poisoned prompt");
+            }
+            self.now += 5.0;
+            Ok((
+                FakeSeq {
+                    id: req.id,
+                    left: req.max_tokens,
+                    poisoned: req.seed == POISON_STEP,
+                },
+                5.0,
+            ))
+        }
+        fn step(&mut self, s: &mut FakeSeq) -> Result<SeqStep> {
+            if s.poisoned {
+                anyhow::bail!("poisoned step");
+            }
+            self.now += 10.0;
+            self.stalls.entry(s.id).or_default().demand_us += 1.0;
+            s.left -= 1;
+            Ok(SeqStep {
+                token: Some(b'a'),
+                finished: s.left == 0,
+                compute_us: 10.0,
+            })
+        }
+        fn stalls_of(&self, id: u64) -> StallSplit {
+            self.stalls.get(&id).copied().unwrap_or_default()
+        }
+    }
+
+    fn req(id: u64, tokens: usize) -> Request {
+        Request {
+            id,
+            prompt: vec![b'x'],
+            max_tokens: tokens,
+            temperature: 0.0,
+            seed: id,
+        }
+    }
+
+    #[test]
+    fn fifo_admission_and_cap() {
+        let fake = Fake { now: 0.0, stalls: Default::default(), boundaries: 0 };
+        let mut s = Scheduler::new(fake, 2);
+        for i in 0..4 {
+            s.enqueue(req(i, 3));
+        }
+        let done = s.drain();
+        assert_eq!(done.len(), 4);
+        assert_eq!(s.admitted_order(), &[0, 1, 2, 3]);
+        assert_eq!(s.max_batch_seen(), 2);
+        assert!(s.backend().boundaries >= 6, "{}", s.backend().boundaries);
+        for c in &done {
+            assert_eq!(c.tokens, 3);
+            assert_eq!(c.text, b"aaa");
+            assert!(c.batch_peak <= 2 && c.batch_peak >= 1);
+            assert_eq!(c.stall.demand_us, 3.0);
+            assert_eq!(c.decode_us, 30.0);
+            assert!(c.error.is_none());
+        }
+    }
+
+    #[test]
+    fn retired_slot_reused_at_next_boundary() {
+        let fake = Fake { now: 0.0, stalls: Default::default(), boundaries: 0 };
+        let mut s = Scheduler::new(fake, 2);
+        s.enqueue(req(0, 1)); // finishes at the first boundary
+        s.enqueue(req(1, 4));
+        s.enqueue(req(2, 4)); // must join as soon as 0 retires
+        let first = s.step();
+        assert_eq!(first.len(), 1);
+        assert_eq!(first[0].id, 0);
+        assert_eq!(s.active_len(), 1);
+        let _ = s.step();
+        assert_eq!(s.active_len(), 2, "freed slot not refilled");
+        let rest = s.drain();
+        assert_eq!(rest.len(), 2);
+    }
+
+    #[test]
+    fn queue_wait_counts_time_before_admission() {
+        let fake = Fake { now: 0.0, stalls: Default::default(), boundaries: 0 };
+        let mut s = Scheduler::new(fake, 1);
+        s.enqueue(req(0, 2));
+        s.enqueue(req(1, 2));
+        let done = s.drain();
+        let c1 = done.iter().find(|c| c.id == 1).unwrap();
+        // request 1 waited through request 0's prefill + 2 tokens
+        assert!(c1.queue_wait_us >= 25.0, "{}", c1.queue_wait_us);
+        let c0 = done.iter().find(|c| c.id == 0).unwrap();
+        assert_eq!(c0.queue_wait_us, 0.0);
+    }
+
+    #[test]
+    fn zero_cap_is_clamped_to_one() {
+        let fake = Fake { now: 0.0, stalls: Default::default(), boundaries: 0 };
+        let mut s = Scheduler::new(fake, 0);
+        s.enqueue(req(0, 1));
+        assert_eq!(s.drain().len(), 1);
+        assert_eq!(s.max_batch_seen(), 1);
+    }
+
+    #[test]
+    fn backend_errors_retire_only_the_failing_request() {
+        let fake = Fake { now: 0.0, stalls: Default::default(), boundaries: 0 };
+        let mut s = Scheduler::new(fake, 3);
+        s.enqueue(req(0, 2));
+        s.enqueue(Request { seed: POISON, ..req(1, 2) }); // fails at start
+        s.enqueue(Request { seed: POISON_STEP, ..req(2, 2) }); // fails at step
+        s.enqueue(req(3, 2));
+        let done = s.drain();
+        assert_eq!(done.len(), 4, "failures must still produce completions");
+        let by_id = |id: u64| done.iter().find(|c| c.id == id).unwrap();
+        assert!(by_id(1).error.as_deref().unwrap().contains("poisoned prompt"));
+        assert!(by_id(2).error.as_deref().unwrap().contains("poisoned step"));
+        // the healthy requests finished untouched
+        for id in [0, 3] {
+            let c = by_id(id);
+            assert!(c.error.is_none());
+            assert_eq!(c.tokens, 2);
+        }
+    }
+}

@@ -24,10 +24,11 @@ use crate::engine::{DecodeState, Engine, LayerEvent, StepObserver};
 use crate::hwsim::PCIE4;
 use crate::predictor::{InterPredictor, IntraPredictor};
 use crate::sparsity;
-use crate::store::{CacheStats, ExpertStore, WallClock};
+use crate::store::{CacheStats, ExpertStore, StallCause, StallSplit, WallClock};
 use crate::transfer::{CompactExpert, TransferEngine};
 
 use super::policy::{SystemConfig, SystemKind};
+use super::sched::{Scheduler, SeqBackend, SeqStep, ServeCompletion};
 
 /// Merged running statistics of the FloE pipeline: predictor quality
 /// (tracked here) + residency/movement accounting (tracked by the store).
@@ -40,6 +41,8 @@ pub struct PipelineStats {
     pub demand_fetches: u64,
     pub prefetches: u64,
     pub stall_us: f64,
+    pub stall_demand_us: f64,
+    pub stall_prefetch_us: f64,
     pub transferred_bytes: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
@@ -203,7 +206,7 @@ impl FloePipeline {
                     } else {
                         let ready =
                             self.store.demand_fetch(PCIE4.copy_us(bytes), bytes);
-                        self.store.stall_until(ready);
+                        self.store.stall_until_for(ready, StallCause::Demand);
                     }
                     self.store.admit(key, bytes as usize);
                 }
@@ -238,7 +241,7 @@ impl FloePipeline {
                         (done, None)
                     }
                 };
-                if let Some(mask) = prefetched_mask {
+                let cause = if let Some(mask) = prefetched_mask {
                     // intra-recall accounting. Per the paper (§3.3.2) the
                     // kernel proceeds with the *prefetched* channel set —
                     // missed channels are an approximation, not a reload;
@@ -246,8 +249,12 @@ impl FloePipeline {
                     let rec = sparsity::mask_recall(&mask, &truth);
                     self.pred.intra_recall_sum += rec;
                     self.pred.intra_recall_n += 1;
-                }
-                self.store.stall_until(ready_at);
+                    // predicted right, but the transfer landed late
+                    StallCause::PrefetchMiss
+                } else {
+                    StallCause::Demand
+                };
+                self.store.stall_until_for(ready_at, cause);
                 let bytes = sparsity::active_count(&truth) * self.record_bytes(key);
                 self.store.admit(key, bytes);
             }
@@ -301,6 +308,8 @@ impl FloePipeline {
             demand_fetches: st.demand_fetches,
             prefetches: st.prefetches,
             stall_us: st.stall_us,
+            stall_demand_us: st.stall_demand_us,
+            stall_prefetch_us: st.stall_prefetch_us,
             transferred_bytes: st.transferred_bytes as u64,
             cache_hits: cs.hits,
             cache_misses: cs.misses,
@@ -310,6 +319,21 @@ impl FloePipeline {
     /// Accumulated virtual stall time, microseconds.
     pub fn stall_us(&self) -> f64 {
         self.store.stats().stall_us
+    }
+
+    /// Charge subsequent stalls to request `id` (serving attribution).
+    pub fn set_attribution(&mut self, id: u64) {
+        self.store.set_attribution(id);
+    }
+
+    /// Attributed stall decomposition for request `id`.
+    pub fn stall_split_of(&self, id: u64) -> StallSplit {
+        self.store.stall_split_of(id)
+    }
+
+    /// Retire request `id`'s attribution entry (see ExpertStore).
+    pub fn take_attribution(&mut self, id: u64) -> StallSplit {
+        self.store.take_attribution(id)
     }
 
     pub fn cache_stats(&self) -> &CacheStats {
@@ -337,7 +361,7 @@ impl<'a> StepObserver for PipelineObserver<'a> {
 
 // ---------------------------------------------------------------- serving
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Request {
     pub id: u64,
     pub prompt: Vec<u8>,
@@ -366,15 +390,29 @@ impl Completion {
     pub fn compute_tps(&self) -> f64 {
         self.tokens as f64 / self.decode_s.max(1e-9)
     }
+
+    fn from_serve(c: ServeCompletion) -> Completion {
+        Completion {
+            id: c.id,
+            tokens: c.tokens,
+            text: c.text,
+            prefill_s: c.prefill_us / 1e6,
+            decode_s: c.decode_us / 1e6,
+            stall_virtual_s: c.stall.total_us() / 1e6,
+        }
+    }
 }
 
-/// The coordinator: owns the engine + pipeline, serves requests with
-/// interleaved continuous batching (single-batch compute, round-robin
-/// across active sequences — the latency-sensitive regime of the paper).
+/// The coordinator: owns the engine + pipeline and executes sequences
+/// one token at a time through the `SeqBackend` interface, so the
+/// continuous-batching `Scheduler` (sched.rs) can interleave any number
+/// of in-flight requests over the single non-`Send` PJRT engine.
 pub struct Coordinator {
     pub engine: Engine,
     pub pipeline: FloePipeline,
     mode: ExpertMode,
+    /// wall epoch for the scheduler's time base (queue waits, latencies)
+    epoch: std::time::Instant,
 }
 
 impl Coordinator {
@@ -382,7 +420,12 @@ impl Coordinator {
         let engine = Engine::load(art_dir)?;
         let pipeline = FloePipeline::new(&engine, system.clone(), vram_budget_bytes)?;
         let mode = system.expert_mode();
-        Ok(Coordinator { engine, pipeline, mode })
+        Ok(Coordinator {
+            engine,
+            pipeline,
+            mode,
+            epoch: std::time::Instant::now(),
+        })
     }
 
     /// Calibrate the virtual clock's per-layer compute from a real run.
@@ -403,79 +446,96 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Serve a set of requests with interleaved decoding. Returns
-    /// completions in arrival order.
+    /// Serve a set of requests with interleaved decoding (one scheduler
+    /// batch admitting everything at once). Returns completions in
+    /// arrival order.
     pub fn run_batch(&mut self, requests: &[Request]) -> Result<Vec<Completion>> {
-        struct Active {
-            req: Request,
-            st: DecodeState,
-            out: Vec<u8>,
-            logits: Vec<f32>,
-            rng: crate::util::rng::Rng,
-            prefill_s: f64,
-            decode_s: f64,
-            stall_at_start_us: f64,
-        }
-        let mut active: Vec<Active> = Vec::new();
+        let mut sched = Scheduler::new(&mut *self, requests.len().max(1));
         for r in requests {
-            let mut st = DecodeState::new(&self.engine.w)?;
+            sched.enqueue(r.clone());
+        }
+        let served = sched.drain();
+        if let Some(c) = served.iter().find(|c| c.error.is_some()) {
+            anyhow::bail!(
+                "request {} failed: {}",
+                c.id,
+                c.error.as_deref().unwrap_or("unknown")
+            );
+        }
+        let mut done: Vec<Completion> =
+            served.into_iter().map(Completion::from_serve).collect();
+        done.sort_by_key(|c| c.id);
+        Ok(done)
+    }
+}
+
+/// Per-request decode state for the real engine: KV cache + last logits
+/// + the request's sampler RNG.
+pub struct EngineSeq {
+    id: u64,
+    st: DecodeState,
+    logits: Vec<f32>,
+    rng: crate::util::rng::Rng,
+    max_tokens: usize,
+    temperature: f32,
+    n_out: usize,
+}
+
+impl SeqBackend for Coordinator {
+    type Seq = EngineSeq;
+
+    fn now_us(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e6
+    }
+
+    fn start(&mut self, r: &Request) -> Result<(EngineSeq, f64)> {
+        // the ledger is cumulative per id: drop any stalls a previous
+        // request with this id accrued (repeated run_batch calls reuse
+        // ids 0..n; the server's ids are globally unique)
+        let _ = self.pipeline.take_attribution(r.id);
+        self.pipeline.set_attribution(r.id);
+        let mut st = DecodeState::new(&self.engine.w)?;
+        let wall = WallClock::start();
+        let mut obs = PipelineObserver {
+            pipeline: &mut self.pipeline,
+            weights: std::sync::Arc::clone(&self.engine.w),
+        };
+        let logits = self.engine.prefill(&mut st, &r.prompt, self.mode, &mut obs)?;
+        Ok((
+            EngineSeq {
+                id: r.id,
+                st,
+                logits,
+                rng: crate::util::rng::Rng::new(r.seed),
+                max_tokens: r.max_tokens,
+                temperature: r.temperature,
+                n_out: 0,
+            },
+            wall.elapsed_s() * 1e6,
+        ))
+    }
+
+    fn step(&mut self, a: &mut EngineSeq) -> Result<SeqStep> {
+        let tok = crate::engine::sampler::sample(&a.logits, a.temperature, &mut a.rng);
+        a.n_out += 1;
+        let finished =
+            a.n_out >= a.max_tokens || a.st.pos + 1 >= self.engine.w.cfg.max_seq;
+        let mut compute_us = 0.0;
+        if !finished {
+            self.pipeline.set_attribution(a.id);
             let wall = WallClock::start();
-            let stall0 = self.pipeline.stall_us();
             let mut obs = PipelineObserver {
                 pipeline: &mut self.pipeline,
                 weights: std::sync::Arc::clone(&self.engine.w),
             };
-            let logits = self.engine.prefill(&mut st, &r.prompt, self.mode, &mut obs)?;
-            active.push(Active {
-                req: r.clone(),
-                st,
-                out: Vec::new(),
-                logits,
-                rng: crate::util::rng::Rng::new(r.seed),
-                prefill_s: wall.elapsed_s(),
-                decode_s: 0.0,
-                stall_at_start_us: stall0,
-            });
+            a.logits = self.engine.decode_token(&mut a.st, tok, self.mode, &mut obs)?;
+            compute_us = wall.elapsed_s() * 1e6;
         }
-        // interleaved decode until every request finishes
-        let mut done: Vec<Completion> = Vec::new();
-        while !active.is_empty() {
-            let mut i = 0;
-            while i < active.len() {
-                let a = &mut active[i];
-                let tok = crate::engine::sampler::sample(
-                    &a.logits,
-                    a.req.temperature,
-                    &mut a.rng,
-                );
-                a.out.push(tok);
-                let finished = a.out.len() >= a.req.max_tokens
-                    || a.st.pos + 1 >= self.engine.w.cfg.max_seq;
-                if finished {
-                    let a = active.remove(i);
-                    let stall_us = self.pipeline.stall_us() - a.stall_at_start_us;
-                    done.push(Completion {
-                        id: a.req.id,
-                        tokens: a.out.len(),
-                        text: a.out,
-                        prefill_s: a.prefill_s,
-                        decode_s: a.decode_s,
-                        stall_virtual_s: stall_us / 1e6,
-                    });
-                    continue;
-                }
-                let wall = WallClock::start();
-                let mut obs = PipelineObserver {
-                    pipeline: &mut self.pipeline,
-                    weights: std::sync::Arc::clone(&self.engine.w),
-                };
-                a.logits = self.engine.decode_token(&mut a.st, tok, self.mode, &mut obs)?;
-                a.decode_s += wall.elapsed_s();
-                i += 1;
-            }
-        }
-        done.sort_by_key(|c| c.id);
-        Ok(done)
+        Ok(SeqStep { token: Some(tok), finished, compute_us })
+    }
+
+    fn stalls_of(&self, id: u64) -> StallSplit {
+        self.pipeline.stall_split_of(id)
     }
 }
 

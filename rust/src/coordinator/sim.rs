@@ -1,4 +1,5 @@
-//! Discrete-event end-to-end decode simulator (paper Figs 6 & 8, §4.1).
+//! Discrete-event end-to-end decode simulator (paper Figs 6 & 8, §4.1)
+//! and the batched-serving simulator behind `exp-serve-load`.
 //!
 //! Replays a routing trace through a timeline with two resources — the GPU
 //! compute stream and the PCIe bus — under each system policy. Compute and
@@ -14,12 +15,28 @@
 //! decode stalls shrink toward zero, while the baselines either move too
 //! many bytes (naive fp16), can't overlap (same-layer prefetch), or trade
 //! bandwidth for slow CPU GEMVs (Fiddler).
+//!
+//! Two drivers share the per-token decode model:
+//! * `simulate` — one request, fixed input/output lengths (Figs 6/8).
+//! * `SimServeBackend` + `simulate_serving` — a `SeqBackend` for the
+//!   continuous-batching `Scheduler` (coordinator::sched): concurrent
+//!   requests from a `workload` arrival trace share one ExpertStore, so
+//!   batching multiplies expert reuse per transferred byte and amortizes
+//!   weight reads at each token boundary — the serving win `exp-serve-load`
+//!   sweeps (DESIGN.md §6).
+
+use std::collections::HashSet;
+
+use anyhow::Result;
 
 use crate::hwsim::{CpuSpec, GpuSpec, ModelDims, PcieSpec};
-use crate::store::ExpertStore;
+use crate::store::{ExpertStore, StallCause, StallSplit, StoreStats};
 use crate::util::rng::Rng;
+use crate::workload::TimedRequest;
 
 use super::policy::{SystemConfig, SystemKind};
+use super::sched::{Scheduler, SeqBackend, SeqStep, ServeCompletion};
+use super::serve::Request;
 
 /// Synthetic routing-trace generator: per-layer Zipf popularity with
 /// token-to-token stickiness (both observable in real MoE traces; our
@@ -188,11 +205,213 @@ fn cache_budget_bytes(p: &SimParams, kv_tokens: usize) -> f64 {
     (p.vram_gb * 1e9 - resident).max(0.0)
 }
 
+/// A boundary's batched expert GEMV re-runs against weights the first run
+/// just pulled through SRAM/L2: repeats cost only the activation movement
+/// + launch remainder of a weight-bound GEMV (the FluxMoE residency-
+/// decoupling argument — batching multiplies reuse per byte touched).
+const BOUNDARY_COMPUTE_REUSE: f64 = 0.15;
+
+/// Per-run constants derived from `SimParams` + the resolved cache budget,
+/// shared by the single-request and batched-serving drivers.
+struct SimCtx {
+    zipf: Vec<f64>,
+    per_expert_cached: usize,
+    per_expert_bytes: f64,
+    exp_compute: f64,
+    resident_fits: bool,
+    /// serving mode: skip prefetches already in flight (the real
+    /// coordinator's dedup). Off for the legacy single-stream figures so
+    /// their calibrated numbers are untouched.
+    dedup_inflight: bool,
+}
+
+impl SimCtx {
+    fn new(p: &SimParams, budget: f64, dedup_inflight: bool) -> Self {
+        let d = &p.dims;
+        let per_expert_cached = cached_bytes(p);
+        // GpuResident requires everything to fit; if not, it degrades to
+        // AdvancedOffload-like streaming of INT2 experts.
+        let resident_fits = p.system.kind == SystemKind::GpuResident
+            && budget >= (d.n_layers * d.n_experts * per_expert_cached) as f64;
+        SimCtx {
+            zipf: p.routing.zipf_cdf(d.n_experts),
+            per_expert_cached,
+            per_expert_bytes: transfer_bytes(p),
+            exp_compute: expert_compute_us(p),
+            resident_fits,
+            dedup_inflight,
+        }
+    }
+}
+
+/// Prefill: batched, all experts touched per layer. Advances the store's
+/// clock; waits are free (`advance_to`), not decode stalls.
+fn sim_prefill(p: &SimParams, c: &SimCtx, store: &mut ExpertStore, input_len: usize) {
+    let d = &p.dims;
+    for _l in 0..d.n_layers {
+        // attention over the whole prompt (compute-bound, batched)
+        let flops = 12.0 * input_len as f64 * (d.d_model as f64).powi(2);
+        store.tick(flops / (p.gpu.fp16_tflops * 1e6) + 4.0 * p.gpu.launch_us);
+        match p.system.kind {
+            SystemKind::GpuResident if c.resident_fits => {
+                store.tick(c.exp_compute * d.n_experts as f64 * 0.5);
+            }
+            SystemKind::Fiddler => {
+                // prefill experts computed on GPU from streamed weights
+                // (Fiddler streams during prefill; decode is CPU-side)
+                let bytes = d.n_experts as f64 * d.expert_bytes_fp16();
+                let done = store.bus_copy(p.pcie.copy_us(bytes), bytes);
+                store.advance_to(done);
+                store.tick(c.exp_compute * d.n_experts as f64 * 0.5);
+            }
+            _ => {
+                let bytes = d.n_experts as f64 * c.per_expert_bytes.max(
+                    if p.system.kind == SystemKind::GpuResident {
+                        d.expert_bytes_quant(2.0)
+                    } else {
+                        0.0
+                    },
+                );
+                if bytes > 0.0 {
+                    let done = store.bus_copy(p.pcie.copy_us(bytes), bytes);
+                    store.advance_to(done);
+                }
+                store.tick(c.exp_compute * d.n_experts as f64 * 0.5);
+            }
+        }
+    }
+}
+
+/// Warm the cache with the most popular experts that fit (Zipf rank order).
+fn warm_cache(p: &SimParams, c: &SimCtx, store: &mut ExpertStore) {
+    let d = &p.dims;
+    let mut order: Vec<(usize, usize)> = (0..d.n_layers)
+        .flat_map(|l| (0..d.n_experts).map(move |e| (l, e)))
+        .collect();
+    order.sort_by_key(|(_, e)| *e); // Zipf rank order
+    for key in order {
+        if !store.admit(key, c.per_expert_cached) {
+            break;
+        }
+    }
+}
+
+/// One token through all layers: attention, next-layer prefetch issue,
+/// expert execution with residency/stall accounting. Returns this token's
+/// compute µs. `boundary` (serving mode) tracks experts already computed
+/// at this token boundary by other sequences in the batch, which repeats
+/// at `BOUNDARY_COMPUTE_REUSE` of the full GEMV cost.
+fn sim_decode_token(
+    p: &SimParams,
+    c: &SimCtx,
+    store: &mut ExpertStore,
+    rng: &mut Rng,
+    prev: &mut Vec<Vec<usize>>,
+    kv_len: usize,
+    mut boundary: Option<&mut HashSet<(usize, usize)>>,
+) -> f64 {
+    let d = &p.dims;
+    let routing = p.routing.sample(rng, d.n_experts, d.top_k, prev, &c.zipf);
+    let mut compute_us = 0.0;
+    for l in 0..d.n_layers {
+        // attention (always resident)
+        let attn = p.gpu.attn_layer_us(d, kv_len);
+        store.tick(attn);
+        compute_us += attn;
+
+        // FloE / Advanced issue prefetches for layer l+1 *now*
+        if l + 1 < d.n_layers && c.per_expert_bytes > 0.0 {
+            let (hit_rate, overlap) = match p.system.kind {
+                SystemKind::Floe => (p.inter_hit, true),
+                SystemKind::AdvancedOffload => (p.adv_prefetch_hit, false),
+                _ => (0.0, false),
+            };
+            if hit_rate > 0.0 {
+                for &e in &routing[l + 1] {
+                    let predicted = rng.f64() < hit_rate;
+                    if predicted
+                        && !store.contains((l + 1, e))
+                        && !(c.dedup_inflight && store.inflight((l + 1, e)))
+                    {
+                        let dur = p.pcie.copy_us(c.per_expert_bytes);
+                        if overlap {
+                            store.begin_prefetch(
+                                (l + 1, e),
+                                dur,
+                                c.per_expert_bytes,
+                                (),
+                            );
+                        } else {
+                            // same-layer prefetch blocks compute (§2)
+                            let done = store.begin_prefetch_blocking(
+                                (l + 1, e),
+                                dur,
+                                c.per_expert_bytes,
+                                (),
+                            );
+                            store.stall_until_for(done, StallCause::PrefetchMiss);
+                        }
+                    }
+                }
+            }
+        }
+
+        // expert execution at layer l
+        for &e in &routing[l] {
+            let key = (l, e);
+            let resident = c.resident_fits || store.access(key);
+            let (ready_at, cause) = if resident {
+                (store.now_us(), StallCause::Demand)
+            } else if let Some((t_done, ())) = store.take_inflight(key) {
+                store.admit(key, c.per_expert_cached);
+                (t_done, StallCause::PrefetchMiss)
+            } else if p.system.kind == SystemKind::Fiddler {
+                // compute on CPU instead of transferring
+                let t = p.cpu.expert_us(d);
+                store.tick(t);
+                compute_us += t;
+                continue;
+            } else {
+                // demand fetch
+                let done = store.demand_fetch(
+                    p.pcie.copy_us(c.per_expert_bytes.max(1.0)),
+                    c.per_expert_bytes,
+                );
+                store.admit(key, c.per_expert_cached);
+                (done, StallCause::Demand)
+            };
+            store.stall_until_for(ready_at, cause);
+            // intra-predictor misses force a small on-demand top-up
+            if p.system.kind == SystemKind::Floe && !resident {
+                let miss = (1.0 - p.intra_recall).max(0.0);
+                if miss > 0.0 {
+                    let extra = c.per_expert_bytes * miss * 0.5;
+                    let done = store.bus_copy(p.pcie.copy_us(extra), extra);
+                    store.stall_until_for(done, StallCause::Demand);
+                }
+            }
+            let t_exp = match boundary.as_deref_mut() {
+                // first GEMV of this expert at this boundary pays the
+                // weight-bound cost; batched repeats are amortized
+                Some(seen) => {
+                    if seen.insert(key) {
+                        c.exp_compute
+                    } else {
+                        c.exp_compute * BOUNDARY_COMPUTE_REUSE
+                    }
+                }
+                None => c.exp_compute,
+            };
+            store.tick(t_exp);
+            compute_us += t_exp;
+        }
+    }
+    compute_us
+}
+
 pub fn simulate(p: &SimParams, input_len: usize, output_len: usize) -> SimReport {
     let mut rng = Rng::new(p.routing.seed);
     let d = &p.dims;
-    let n_slots = d.top_k;
-    let zipf = p.routing.zipf_cdf(d.n_experts);
     let mut prev: Vec<Vec<usize>> = vec![Vec::new(); d.n_layers];
 
     let budget = cache_budget_bytes(p, input_len + output_len);
@@ -200,150 +419,20 @@ pub fn simulate(p: &SimParams, input_len: usize, output_len: usize) -> SimReport
     // timeline, stall attribution — lives in the store
     let mut store: ExpertStore =
         ExpertStore::with_virtual_clock(budget as usize, p.system.residency);
-    let per_expert_cached = cached_bytes(p);
-    let per_expert_bytes = transfer_bytes(p);
-    let exp_compute = expert_compute_us(p);
-
-    // GpuResident requires everything to fit; if not, it degrades to
-    // AdvancedOffload-like streaming of INT2 experts.
-    let resident_fits = p.system.kind == SystemKind::GpuResident
-        && budget >= (d.n_layers * d.n_experts * per_expert_cached) as f64;
+    let c = SimCtx::new(p, budget, false);
 
     let mut compute_us = 0.0;
-    let prefill_us;
-
-    // ---- prefill: batched, all experts touched per layer ----
-    {
+    let prefill_us = {
         let t0 = store.now_us();
-        for _l in 0..d.n_layers {
-            // attention over the whole prompt (compute-bound, batched)
-            let flops = 12.0 * input_len as f64 * (d.d_model as f64).powi(2);
-            store.tick(flops / (p.gpu.fp16_tflops * 1e6) + 4.0 * p.gpu.launch_us);
-            match p.system.kind {
-                SystemKind::GpuResident if resident_fits => {
-                    store.tick(exp_compute * d.n_experts as f64 * 0.5);
-                }
-                SystemKind::Fiddler => {
-                    // prefill experts computed on GPU from streamed weights
-                    // (Fiddler streams during prefill; decode is CPU-side)
-                    let bytes = d.n_experts as f64 * d.expert_bytes_fp16();
-                    let done = store.bus_copy(p.pcie.copy_us(bytes), bytes);
-                    store.advance_to(done);
-                    store.tick(exp_compute * d.n_experts as f64 * 0.5);
-                }
-                _ => {
-                    let bytes = d.n_experts as f64 * per_expert_bytes.max(
-                        if p.system.kind == SystemKind::GpuResident {
-                            d.expert_bytes_quant(2.0)
-                        } else {
-                            0.0
-                        },
-                    );
-                    if bytes > 0.0 {
-                        let done = store.bus_copy(p.pcie.copy_us(bytes), bytes);
-                        store.advance_to(done);
-                    }
-                    store.tick(exp_compute * d.n_experts as f64 * 0.5);
-                }
-            }
-        }
-        prefill_us = store.now_us() - t0;
-    }
+        sim_prefill(p, &c, &mut store, input_len);
+        store.now_us() - t0
+    };
 
-    // warm the cache with the most popular experts that fit
-    {
-        let mut order: Vec<(usize, usize)> = (0..d.n_layers)
-            .flat_map(|l| (0..d.n_experts).map(move |e| (l, e)))
-            .collect();
-        order.sort_by_key(|(_, e)| *e); // Zipf rank order
-        for key in order {
-            if !store.admit(key, per_expert_cached) {
-                break;
-            }
-        }
-    }
+    warm_cache(p, &c, &mut store);
 
     for tok in 0..output_len {
-        let _ = tok;
-        let routing = p.routing.sample(&mut rng, d.n_experts, n_slots, &mut prev, &zipf);
-        for l in 0..d.n_layers {
-            // attention (always resident)
-            let attn = p.gpu.attn_layer_us(d, input_len + tok);
-            store.tick(attn);
-            compute_us += attn;
-
-            // FloE / Advanced issue prefetches for layer l+1 *now*
-            if l + 1 < d.n_layers && per_expert_bytes > 0.0 {
-                let (hit_rate, overlap) = match p.system.kind {
-                    SystemKind::Floe => (p.inter_hit, true),
-                    SystemKind::AdvancedOffload => (p.adv_prefetch_hit, false),
-                    _ => (0.0, false),
-                };
-                if hit_rate > 0.0 {
-                    for &e in &routing[l + 1] {
-                        let predicted = rng.f64() < hit_rate;
-                        if predicted && !store.contains((l + 1, e)) {
-                            let dur = p.pcie.copy_us(per_expert_bytes);
-                            if overlap {
-                                store.begin_prefetch(
-                                    (l + 1, e),
-                                    dur,
-                                    per_expert_bytes,
-                                    (),
-                                );
-                            } else {
-                                // same-layer prefetch blocks compute (§2)
-                                let done = store.begin_prefetch_blocking(
-                                    (l + 1, e),
-                                    dur,
-                                    per_expert_bytes,
-                                    (),
-                                );
-                                store.stall_until(done);
-                            }
-                        }
-                    }
-                }
-            }
-
-            // expert execution at layer l
-            for &e in &routing[l] {
-                let key = (l, e);
-                let resident = resident_fits || store.access(key);
-                let ready_at = if resident {
-                    store.now_us()
-                } else if let Some((t_done, ())) = store.take_inflight(key) {
-                    store.admit(key, per_expert_cached);
-                    t_done
-                } else if p.system.kind == SystemKind::Fiddler {
-                    // compute on CPU instead of transferring
-                    let t = p.cpu.expert_us(d);
-                    store.tick(t);
-                    compute_us += t;
-                    continue;
-                } else {
-                    // demand fetch
-                    let done = store.demand_fetch(
-                        p.pcie.copy_us(per_expert_bytes.max(1.0)),
-                        per_expert_bytes,
-                    );
-                    store.admit(key, per_expert_cached);
-                    done
-                };
-                store.stall_until(ready_at);
-                // intra-predictor misses force a small on-demand top-up
-                if p.system.kind == SystemKind::Floe && !resident {
-                    let miss = (1.0 - p.intra_recall).max(0.0);
-                    if miss > 0.0 {
-                        let extra = per_expert_bytes * miss * 0.5;
-                        let done = store.bus_copy(p.pcie.copy_us(extra), extra);
-                        store.stall_until(done);
-                    }
-                }
-                store.tick(exp_compute);
-                compute_us += exp_compute;
-            }
-        }
+        compute_us +=
+            sim_decode_token(p, &c, &mut store, &mut rng, &mut prev, input_len + tok, None);
     }
 
     let total = store.now_us();
@@ -357,6 +446,200 @@ pub fn simulate(p: &SimParams, input_len: usize, output_len: usize) -> SimReport
         cache_hit_rate: store.cache_stats().hit_rate(),
         tps: output_len as f64 / (total / 1e6),
     }
+}
+
+// ------------------------------------------------------- batched serving
+
+/// Per-sequence state in the batched serving simulator: its own routing
+/// RNG (seeded from the request) and stickiness history, so completions
+/// are deterministic regardless of how arrivals interleave.
+pub struct SimSeq {
+    id: u64,
+    rng: Rng,
+    prev: Vec<Vec<usize>>,
+    input_len: usize,
+    emitted: usize,
+    max_tokens: usize,
+}
+
+/// `SeqBackend` over the discrete-event model: the continuous-batching
+/// scheduler drives concurrent simulated requests through one shared
+/// `ExpertStore` on the virtual timeline. Used by `exp-serve-load`, the
+/// scheduler property tests and the loopback server integration test —
+/// none of which need artifacts or the `pjrt` feature.
+pub struct SimServeBackend {
+    p: SimParams,
+    ctx: SimCtx,
+    store: ExpertStore,
+    /// experts already computed at the current token boundary
+    boundary: HashSet<(usize, usize)>,
+}
+
+impl SimServeBackend {
+    /// `kv_tokens` sizes the KV-cache VRAM reservation (batch cap × the
+    /// longest request context — bigger batches shrink the expert cache).
+    pub fn new(p: SimParams, kv_tokens: usize) -> Self {
+        let budget = cache_budget_bytes(&p, kv_tokens);
+        let mut store: ExpertStore =
+            ExpertStore::with_virtual_clock(budget as usize, p.system.residency);
+        let ctx = SimCtx::new(&p, budget, true);
+        warm_cache(&p, &ctx, &mut store);
+        SimServeBackend { p, ctx, store, boundary: HashSet::new() }
+    }
+
+    pub fn store(&self) -> &ExpertStore {
+        &self.store
+    }
+
+    /// Idle until `t_us` (waiting for the next arrival) — free time, not
+    /// a stall.
+    pub fn idle_until(&mut self, t_us: f64) {
+        self.store.advance_to(t_us);
+    }
+}
+
+impl SeqBackend for SimServeBackend {
+    type Seq = SimSeq;
+
+    fn now_us(&self) -> f64 {
+        self.store.now_us()
+    }
+
+    fn on_boundary(&mut self) {
+        self.boundary.clear();
+    }
+
+    fn start(&mut self, r: &Request) -> Result<(SimSeq, f64)> {
+        // drop stale ledger stalls if a previous request reused this id
+        let _ = self.store.take_attribution(r.id);
+        self.store.set_attribution(r.id);
+        let input_len = r.prompt.len().max(1);
+        let t0 = self.store.now_us();
+        sim_prefill(&self.p, &self.ctx, &mut self.store, input_len);
+        Ok((
+            SimSeq {
+                id: r.id,
+                rng: Rng::new(r.seed),
+                prev: vec![Vec::new(); self.p.dims.n_layers],
+                input_len,
+                emitted: 0,
+                max_tokens: r.max_tokens.max(1),
+            },
+            self.store.now_us() - t0,
+        ))
+    }
+
+    fn step(&mut self, s: &mut SimSeq) -> Result<SeqStep> {
+        self.store.set_attribution(s.id);
+        let compute_us = sim_decode_token(
+            &self.p,
+            &self.ctx,
+            &mut self.store,
+            &mut s.rng,
+            &mut s.prev,
+            s.input_len + s.emitted,
+            Some(&mut self.boundary),
+        );
+        s.emitted += 1;
+        Ok(SeqStep {
+            token: Some(b'.'),
+            finished: s.emitted >= s.max_tokens,
+            compute_us,
+        })
+    }
+
+    fn stalls_of(&self, id: u64) -> StallSplit {
+        self.store.stall_split_of(id)
+    }
+}
+
+/// Everything `exp-serve-load` (and the scheduler tests) read back from
+/// one batched-serving run.
+#[derive(Debug, Clone)]
+pub struct ServeSimReport {
+    pub completions: Vec<ServeCompletion>,
+    pub total_us: f64,
+    pub max_batch_seen: usize,
+    pub admitted_order: Vec<u64>,
+    pub stats: StoreStats,
+    pub cache_hit_rate: f64,
+}
+
+impl ServeSimReport {
+    pub fn total_tokens(&self) -> usize {
+        self.completions.iter().map(|c| c.tokens).sum()
+    }
+    /// Aggregate decode throughput over the whole run, tokens/s.
+    pub fn aggregate_tps(&self) -> f64 {
+        self.total_tokens() as f64 / (self.total_us / 1e6).max(1e-9)
+    }
+    pub fn mean_queue_wait_us(&self) -> f64 {
+        if self.completions.is_empty() {
+            return 0.0;
+        }
+        self.completions.iter().map(|c| c.queue_wait_us).sum::<f64>()
+            / self.completions.len() as f64
+    }
+    pub fn p95_latency_us(&self) -> f64 {
+        if self.completions.is_empty() {
+            return 0.0;
+        }
+        let mut lat: Vec<f64> = self.completions.iter().map(|c| c.latency_us()).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        lat[((lat.len() - 1) as f64 * 0.95).round() as usize]
+    }
+}
+
+/// Replay a workload arrival trace through the continuous-batching
+/// scheduler over the simulated coordinator. Requests join the in-flight
+/// batch at token boundaries once their virtual arrival time has passed;
+/// the timeline skips ahead (idle, not stalled) when the system drains
+/// before the next arrival.
+pub fn simulate_serving(
+    p: &SimParams,
+    workload: &[TimedRequest],
+    max_batch: usize,
+) -> Result<ServeSimReport> {
+    let max_ctx = workload
+        .iter()
+        .map(|t| t.req.prompt.len() + t.req.max_tokens)
+        .max()
+        .unwrap_or(512);
+    let kv_tokens = max_batch.max(1) * max_ctx;
+    let backend = SimServeBackend::new(p.clone(), kv_tokens);
+    let mut sched = Scheduler::new(backend, max_batch);
+    let mut next = 0;
+    let mut completions: Vec<ServeCompletion> = Vec::new();
+    loop {
+        while next < workload.len()
+            && workload[next].arrival_us <= sched.backend().now_us()
+        {
+            let t = &workload[next];
+            sched.enqueue_at(t.req.clone(), t.arrival_us);
+            next += 1;
+        }
+        if !sched.has_work() {
+            if next >= workload.len() {
+                break;
+            }
+            let t = workload[next].arrival_us;
+            sched.backend_mut().idle_until(t);
+            continue;
+        }
+        completions.extend(sched.step());
+    }
+    let total_us = sched.backend().now_us();
+    let max_batch_seen = sched.max_batch_seen();
+    let admitted_order = sched.admitted_order().to_vec();
+    let backend = sched.into_backend();
+    Ok(ServeSimReport {
+        completions,
+        total_us,
+        max_batch_seen,
+        admitted_order,
+        stats: backend.store().stats().clone(),
+        cache_hit_rate: backend.store().cache_stats().hit_rate(),
+    })
 }
 
 #[cfg(test)]
@@ -460,5 +743,71 @@ mod tests {
             sparsity >= lru - 0.02,
             "sparsity {sparsity:.3} well below lru {lru:.3}"
         );
+    }
+
+    // ---------------------------------------------- batched serving sims
+
+    // the exp-serve-load operating point (skewed routing, eviction-active
+    // VRAM) — shared so retuning the experiment retunes these tests
+    use crate::experiments::serveload::{sweep_params, workload_at, DEFAULT_VRAM_GB};
+
+    #[test]
+    fn serving_completes_all_requests_deterministically() {
+        let p = sweep_params(ResidencyKind::Lru, DEFAULT_VRAM_GB);
+        let wl = workload_at(4.0, 8, 11);
+        let a = simulate_serving(&p, &wl, 4).unwrap();
+        let b = simulate_serving(&p, &wl, 4).unwrap();
+        assert_eq!(a.completions.len(), wl.len());
+        assert_eq!(a.total_us, b.total_us);
+        assert_eq!(a.aggregate_tps(), b.aggregate_tps());
+        assert_eq!(a.stats.stall_us, b.stats.stall_us);
+        // FIFO admission in arrival order
+        let ids: Vec<u64> = wl.iter().map(|t| t.req.id).collect();
+        assert_eq!(a.admitted_order, ids);
+    }
+
+    #[test]
+    fn batching_increases_throughput_on_skewed_trace() {
+        // the acceptance criterion: with a backlog of concurrent requests
+        // on a skewed trace, a larger batch cap shares residency and
+        // amortizes boundary weight reads → higher aggregate tokens/s.
+        // The default budget keeps evictions (and so stalls) active
+        // without LRU thrash: past ~cap 6 at tighter budgets the joint
+        // working set of the batch outgrows the cache and throughput
+        // falls again — the expected capacity/concurrency U-shape,
+        // visible by lowering --vram on exp-serve-load.
+        let p = sweep_params(ResidencyKind::Lru, DEFAULT_VRAM_GB);
+        let wl = workload_at(8.0, 12, 23);
+        let tps1 = simulate_serving(&p, &wl, 1).unwrap().aggregate_tps();
+        let tps4 = simulate_serving(&p, &wl, 4).unwrap().aggregate_tps();
+        let tps8 = simulate_serving(&p, &wl, 8).unwrap().aggregate_tps();
+        assert!(tps4 > tps1 * 1.03, "cap4 {tps4} vs cap1 {tps1}");
+        assert!(tps8 > tps1 * 1.03, "cap8 {tps8} vs cap1 {tps1}");
+    }
+
+    #[test]
+    fn serving_stall_attribution_sums_exactly() {
+        let p = sweep_params(ResidencyKind::Lru, 12.0);
+        let wl = workload_at(6.0, 6, 5);
+        let rep = simulate_serving(&p, &wl, 3).unwrap();
+        // every stall is attributed to some request — no unattributed slop
+        assert!(!rep
+            .stats
+            .attributed
+            .contains_key(&crate::store::StoreStats::UNATTRIBUTED));
+        // component-wise key-order sums reproduce the globals bit-exactly
+        let (mut demand, mut prefetch) = (0.0, 0.0);
+        for s in rep.stats.attributed.values() {
+            demand += s.demand_us;
+            prefetch += s.prefetch_us;
+        }
+        assert_eq!(demand, rep.stats.stall_demand_us);
+        assert_eq!(prefetch, rep.stats.stall_prefetch_us);
+        assert_eq!(rep.stats.stall_us, rep.stats.stall_demand_us + rep.stats.stall_prefetch_us);
+        // per-completion splits are exactly the store's ledger entries
+        for c in &rep.completions {
+            let ledger = rep.stats.attributed.get(&c.id).copied().unwrap_or_default();
+            assert_eq!(c.stall, ledger, "request {}", c.id);
+        }
     }
 }

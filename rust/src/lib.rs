@@ -21,6 +21,7 @@ pub mod store;
 pub mod tensor;
 pub mod transfer;
 pub mod util;
+pub mod workload;
 
 use std::path::PathBuf;
 

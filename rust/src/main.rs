@@ -124,15 +124,28 @@ fn main() -> Result<()> {
             };
             let mut system = SystemConfig::with_residency(kind, args.residency()?);
             system.sparsity = args.f64("level", 0.8);
-            floe::server::serve(
-                &art,
-                floe::server::ServerOpts {
-                    port: args.usize("port", 7399) as u16,
-                    system,
-                    vram_budget_bytes: args.usize("vram-kb", 512) * 1024,
-                    max_requests: args.usize("max-requests", 0),
-                },
-            )?;
+            let opts = floe::server::ServerOpts {
+                port: args.usize("port", 7399) as u16,
+                system,
+                vram_budget_bytes: args.usize("vram-kb", 512) * 1024,
+                max_requests: args.usize("max-requests", 0),
+                max_batch: args.usize("max-batch", 8),
+                gather_ms: args.usize("gather-ms", 0) as u64,
+            };
+            match args.get("backend").unwrap_or("real") {
+                // full TCP path over the simulated coordinator: no
+                // artifacts or pjrt needed (virtual timeline, Mixtral dims)
+                "sim" => {
+                    let params = floe::coordinator::sim::SimParams::mixtral_on(
+                        floe::hwsim::RTX3090.clone(),
+                        opts.system.clone(),
+                        args.f64("vram", 14.0),
+                    );
+                    floe::server::serve_sim(params, opts)?;
+                }
+                "real" => floe::server::serve(&art, opts)?,
+                other => bail!("unknown backend {other} (real|sim)"),
+            }
         }
         "eval" => {
             let mut eng = Engine::load(&art)?;
@@ -164,6 +177,12 @@ fn main() -> Result<()> {
         "exp-fig7" => exp::fig7::run(&art)?,
         "exp-fig8" => exp::fig8::run(args.residency()?)?,
         "exp-policy-sweep" => exp::fig8::run_policy_sweep()?,
+        "exp-serve-load" => exp::serveload::run(
+            args.residency()?,
+            args.usize("requests", 16),
+            args.usize("seed", 7) as u64,
+            args.f64("vram", exp::serveload::DEFAULT_VRAM_GB),
+        )?,
         "exp-fig9" => exp::table3::run_fig9(&art, &args.budget(), args.usize("probes", 12))?,
         "exp-table1" => exp::table1::run(&art)?,
         "exp-table3" => exp::table3::run(&art, &args.budget(), args.usize("probes", 20))?,
@@ -177,6 +196,9 @@ fn main() -> Result<()> {
             exp::fig6::run_real(&art, 32, ResidencyKind::Lru)?;
             exp::fig8::run(ResidencyKind::Lru)?;
             exp::fig8::run_policy_sweep()?;
+            exp::serveload::run(
+                ResidencyKind::Lru, 16, 7, exp::serveload::DEFAULT_VRAM_GB,
+            )?;
             exp::fig4::run(&art)?;
             exp::table7::run_compression(&art)?;
             exp::fig3::run_fig3a(&art, &b)?;
@@ -190,10 +212,12 @@ fn main() -> Result<()> {
                  usage: floe <cmd> [--flag value]...\n\n\
                  cmds: generate serve eval exp-fig2 exp-fig3a exp-fig3b \
                  exp-fig4 exp-fig6 exp-fig7 exp-fig8 exp-fig9 exp-policy-sweep \
-                 exp-table1 exp-table3 exp-compression exp-all\n\n\
+                 exp-serve-load exp-table1 exp-table3 exp-compression exp-all\n\n\
                  common flags: --mode dense|sparse|floe|cats|chess|uniform \
                  --level 0.8 --bits 2 --policy lru|lfu|sparsity \
                  --prompt '...' --tokens 48\n\
+                 serve flags: --backend real|sim --max-batch 8 --gather-ms 0 \
+                 --port 7399 --max-requests 0\n\
                  env: FLOE_ARTIFACTS (default ./artifacts)"
             );
         }

@@ -1,22 +1,54 @@
-//! Line-JSON TCP serving front-end.
+//! Line-JSON TCP serving front-end with a concurrent admission queue and
+//! continuous batching.
 //!
 //! Protocol: one JSON object per line on the socket —
-//!   request:  {"prompt": "...", "max_tokens": 32, "temperature": 0.0}
-//!   response: {"id": n, "text": "...", "compute_tps": x, "effective_tps": y}
+//!   request:  {"prompt": "...", "max_tokens": 32, "temperature": 0.0,
+//!              "seed": 0, "tag": <any JSON, echoed back>}
+//!   response: {"id": n, "tag": ..., "text": "...", "tokens": n,
+//!              "compute_tps": x, "effective_tps": y, "prefill_us": us,
+//!              "queue_wait_us": us, "stall_us": us, "stall_demand_us": us,
+//!              "stall_prefetch_us": us, "batch_size": n}
+//!   error:    {"error": "..."} for a malformed request line, or
+//!             {"id": n, "error": "...", "tag": ...} when an admitted
+//!             request fails in the backend — either way the connection
+//!             (and the server) keeps serving
 //!
-//! The PJRT engine is not Send, so the listener and the coordinator run on
-//! one thread; concurrent connections are accepted and their requests
-//! gathered into a batch, which the coordinator decodes with interleaved
-//! continuous batching (the paper's single-batch latency regime).
+//! Response fields: `id` is the server-assigned arrival index;
+//! `queue_wait_us` is time from arrival to admission into the decode
+//! batch; `stall_us` is the request's attributed transfer-stall time,
+//! decomposed into `stall_demand_us` (nothing was in flight) and
+//! `stall_prefetch_us` (a predicted transfer landed late); `batch_size`
+//! is the largest decode batch the request was part of.
+//!
+//! Concurrency model: the accept loop and one reader thread per
+//! connection parse request lines into a shared mpsc admission queue.
+//! The single coordinator thread (the PJRT engine is not `Send`) drains
+//! the queue with the continuous-batching `Scheduler` — new arrivals join
+//! the in-flight decode batch at token boundaries, FIFO up to
+//! `--max-batch`; finished sequences retire and are answered immediately.
+//! Responses on a pipelined connection can therefore complete out of
+//! order: correlate with the echoed `tag`. Writes to one connection are
+//! serialized by a per-connection mutex (reader-thread error replies vs
+//! coordinator responses). A slow reader blocks only its own connection's
+//! reader thread; a slow writer can briefly block the coordinator
+//! (responses are one short line).
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::policy::SystemConfig;
+use crate::coordinator::sched::{Scheduler, SeqBackend, ServeCompletion};
 use crate::coordinator::serve::{Coordinator, Request};
+use crate::coordinator::sim::{SimParams, SimServeBackend};
 use crate::model::tokenizer::ByteTokenizer;
 use crate::util::json::{parse, write as jwrite, Json};
 
@@ -26,91 +58,254 @@ pub struct ServerOpts {
     pub vram_budget_bytes: usize,
     /// exit after serving this many requests (0 = run forever)
     pub max_requests: usize,
+    /// continuous-batching cap: at most this many sequences decode
+    /// concurrently (admission stays FIFO)
+    pub max_batch: usize,
+    /// batch-formation window: when the batch is idle, wait this long
+    /// after the first arrival so near-simultaneous requests decode
+    /// together (0 = admit immediately)
+    pub gather_ms: u64,
 }
 
+impl Default for ServerOpts {
+    fn default() -> Self {
+        ServerOpts {
+            port: 7399,
+            system: SystemConfig::new(crate::coordinator::policy::SystemKind::Floe),
+            vram_budget_bytes: 512 * 1024,
+            max_requests: 0,
+            max_batch: 8,
+            gather_ms: 0,
+        }
+    }
+}
+
+/// Per-connection write half, shared by the reader thread (inline error
+/// replies) and the coordinator (responses) — the mutex serializes their
+/// writes so response lines never tear.
+type ConnWriter = Arc<Mutex<TcpStream>>;
+
+/// A parsed request en route from a reader thread to the coordinator.
+struct Inbound {
+    req: Request,
+    tag: Option<Json>,
+    conn: ConnWriter,
+    /// reader-side arrival stamp: queue wait includes time spent in the
+    /// mpsc channel and the gather window, not just the scheduler queue
+    arrival: Instant,
+}
+
+/// Serve over the real engine (requires artifacts + the `pjrt` feature
+/// at runtime). The coordinator runs on the calling thread.
 pub fn serve(art_dir: &Path, opts: ServerOpts) -> Result<()> {
-    let mut coord = Coordinator::new(art_dir, opts.system, opts.vram_budget_bytes)?;
+    let mut coord = Coordinator::new(art_dir, opts.system.clone(), opts.vram_budget_bytes)?;
     coord.calibrate_layer_time()?;
     let listener = TcpListener::bind(("127.0.0.1", opts.port))
         .with_context(|| format!("bind 127.0.0.1:{}", opts.port))?;
-    println!("floe serving on 127.0.0.1:{}", opts.port);
-    let mut served = 0u64;
-    for stream in listener.incoming() {
-        let stream = stream?;
-        match handle_conn(&mut coord, stream, &mut served) {
-            Ok(()) => {}
-            Err(e) => eprintln!("connection error: {e:#}"),
-        }
-        if opts.max_requests > 0 && served >= opts.max_requests as u64 {
-            break;
-        }
-    }
-    Ok(())
+    serve_on(listener, coord, &opts)
 }
 
-fn handle_conn(coord: &mut Coordinator, stream: TcpStream, served: &mut u64) -> Result<()> {
-    let peer = stream.peer_addr().ok();
-    let mut writer = stream.try_clone()?;
+/// Serve over the discrete-event simulated coordinator — the same
+/// scheduler and protocol with roofline latencies on a virtual timeline,
+/// so the full TCP path runs without artifacts or the `pjrt` feature.
+pub fn serve_sim(params: SimParams, opts: ServerOpts) -> Result<()> {
+    let listener = TcpListener::bind(("127.0.0.1", opts.port))
+        .with_context(|| format!("bind 127.0.0.1:{}", opts.port))?;
+    serve_sim_listener(listener, params, opts)
+}
+
+/// `serve_sim` over a pre-bound listener (tests bind port 0 and read the
+/// ephemeral address back).
+pub fn serve_sim_listener(
+    listener: TcpListener,
+    params: SimParams,
+    opts: ServerOpts,
+) -> Result<()> {
+    // KV reservation for the largest context the protocol admits
+    let kv_tokens = opts.max_batch.max(1) * (MAX_TOKENS_CAP + 256);
+    let backend = SimServeBackend::new(params, kv_tokens);
+    serve_on(listener, backend, &opts)
+}
+
+/// The coordinator loop over any `SeqBackend`. Returns after
+/// `opts.max_requests` responses (the accept thread exits with the
+/// process; its listener keeps the port until then).
+pub fn serve_on<B: SeqBackend>(listener: TcpListener, backend: B, opts: &ServerOpts) -> Result<()> {
+    let addr = listener.local_addr()?;
+    println!("floe serving on {addr} (max-batch {})", opts.max_batch.max(1));
+    let (tx, rx) = mpsc::channel::<Inbound>();
+    thread::spawn(move || accept_loop(listener, tx));
+
+    let mut sched = Scheduler::new(backend, opts.max_batch);
+    // per-request response route: connection + echoed tag
+    let mut routes: HashMap<u64, (ConnWriter, Option<Json>)> = HashMap::new();
+    let mut served = 0usize;
+    loop {
+        if !sched.has_work() {
+            // idle: block for the next arrival, then optionally hold the
+            // batch-formation window so co-arrivals decode together
+            match rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(inb) => {
+                    if opts.gather_ms > 0 {
+                        thread::sleep(Duration::from_millis(opts.gather_ms));
+                    }
+                    admit(&mut sched, &mut routes, inb);
+                }
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => return Ok(()),
+            }
+        }
+        // token boundary: drain whatever arrived while decoding
+        while let Ok(inb) = rx.try_recv() {
+            admit(&mut sched, &mut routes, inb);
+        }
+        for done in sched.step() {
+            respond(&mut routes, &done);
+            served += 1;
+        }
+        if opts.max_requests > 0 && served >= opts.max_requests {
+            return Ok(());
+        }
+    }
+}
+
+fn admit<B: SeqBackend>(
+    sched: &mut Scheduler<B>,
+    routes: &mut HashMap<u64, (ConnWriter, Option<Json>)>,
+    inb: Inbound,
+) {
+    routes.insert(inb.req.id, (inb.conn, inb.tag));
+    // arrival in the backend's time base: now minus the wall time the
+    // request already spent between the reader thread and this drain
+    let dwell_us = inb.arrival.elapsed().as_secs_f64() * 1e6;
+    let arrival_us = (sched.backend().now_us() - dwell_us).max(0.0);
+    sched.enqueue_at(inb.req, arrival_us);
+}
+
+/// Write the response (or per-request error) line; a dead client must
+/// not take the server down.
+fn respond(routes: &mut HashMap<u64, (ConnWriter, Option<Json>)>, c: &ServeCompletion) {
+    let Some((conn, tag)) = routes.remove(&c.id) else {
+        return;
+    };
+    let resp = match &c.error {
+        Some(msg) => {
+            eprintln!("request {} failed: {msg}", c.id);
+            let mut fields = vec![
+                ("id".to_string(), Json::Num(c.id as f64)),
+                ("error".to_string(), Json::Str(msg.clone())),
+            ];
+            if let Some(tag) = tag {
+                fields.push(("tag".to_string(), tag));
+            }
+            Json::Obj(fields.into_iter().collect())
+        }
+        None => response_json(c, tag),
+    };
+    let Ok(mut conn) = conn.lock() else { return };
+    if let Err(e) = writeln!(conn, "{}", jwrite(&resp)) {
+        eprintln!("response write failed for request {}: {e}", c.id);
+    }
+}
+
+fn response_json(c: &ServeCompletion, tag: Option<Json>) -> Json {
+    let mut fields = vec![
+        ("id".to_string(), Json::Num(c.id as f64)),
+        ("text".to_string(), Json::Str(ByteTokenizer::decode(&c.text))),
+        ("tokens".to_string(), Json::Num(c.tokens as f64)),
+        ("compute_tps".to_string(), Json::Num(c.compute_tps())),
+        ("effective_tps".to_string(), Json::Num(c.effective_tps())),
+        ("prefill_us".to_string(), Json::Num(c.prefill_us)),
+        ("queue_wait_us".to_string(), Json::Num(c.queue_wait_us)),
+        ("stall_us".to_string(), Json::Num(c.stall.total_us())),
+        ("stall_demand_us".to_string(), Json::Num(c.stall.demand_us)),
+        ("stall_prefetch_us".to_string(), Json::Num(c.stall.prefetch_us)),
+        ("batch_size".to_string(), Json::Num(c.batch_peak as f64)),
+    ];
+    if let Some(tag) = tag {
+        fields.push(("tag".to_string(), tag));
+    }
+    Json::Obj(fields.into_iter().collect())
+}
+
+fn accept_loop(listener: TcpListener, tx: mpsc::Sender<Inbound>) {
+    let next_id = Arc::new(AtomicU64::new(0));
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { continue };
+        let tx = tx.clone();
+        let ids = Arc::clone(&next_id);
+        thread::spawn(move || reader_loop(stream, tx, ids));
+    }
+}
+
+/// Per-connection reader: parse request lines into the admission queue;
+/// answer malformed lines inline with an error object (serialized with
+/// the coordinator's responses via the shared connection mutex).
+fn reader_loop(stream: TcpStream, tx: mpsc::Sender<Inbound>, ids: Arc<AtomicU64>) {
+    let Ok(writer) = stream.try_clone() else { return };
+    let writer: ConnWriter = Arc::new(Mutex::new(writer));
     let reader = BufReader::new(stream);
     for line in reader.lines() {
-        let line = line?;
+        let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
         }
-        let req = match parse_request(&line, *served) {
-            Ok(r) => r,
+        let id = ids.fetch_add(1, Ordering::Relaxed);
+        match parse_request(&line, id) {
+            Ok((req, tag)) => {
+                let inb = Inbound {
+                    req,
+                    tag,
+                    conn: Arc::clone(&writer),
+                    arrival: Instant::now(),
+                };
+                if tx.send(inb).is_err() {
+                    break; // coordinator exited
+                }
+            }
             Err(e) => {
                 let err = Json::Obj(
                     [("error".to_string(), Json::Str(format!("{e:#}")))].into(),
                 );
-                writeln!(writer, "{}", jwrite(&err))?;
-                continue;
+                let Ok(mut w) = writer.lock() else { break };
+                if writeln!(w, "{}", jwrite(&err)).is_err() {
+                    break;
+                }
             }
-        };
-        *served += 1;
-        let done = coord.run_batch(std::slice::from_ref(&req))?;
-        let c = &done[0];
-        let resp = Json::Obj(
-            [
-                ("id".to_string(), Json::Num(c.id as f64)),
-                (
-                    "text".to_string(),
-                    Json::Str(ByteTokenizer::decode(&c.text)),
-                ),
-                ("tokens".to_string(), Json::Num(c.tokens as f64)),
-                ("compute_tps".to_string(), Json::Num(c.compute_tps())),
-                ("effective_tps".to_string(), Json::Num(c.effective_tps())),
-                ("prefill_s".to_string(), Json::Num(c.prefill_s)),
-            ]
-            .into(),
-        );
-        writeln!(writer, "{}", jwrite(&resp))?;
+        }
     }
-    let _ = peer;
-    Ok(())
 }
 
-fn parse_request(line: &str, id: u64) -> Result<Request> {
+const MAX_TOKENS_CAP: usize = 400;
+const MAX_PROMPT_BYTES: usize = 4096;
+
+fn parse_request(line: &str, id: u64) -> Result<(Request, Option<Json>)> {
     let j = parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
     let prompt = j
         .get("prompt")
         .and_then(Json::as_str)
         .context("missing 'prompt'")?;
     anyhow::ensure!(!prompt.is_empty(), "empty prompt");
-    Ok(Request {
+    anyhow::ensure!(
+        prompt.len() <= MAX_PROMPT_BYTES,
+        "prompt too long ({} bytes, max {MAX_PROMPT_BYTES})",
+        prompt.len()
+    );
+    let req = Request {
         id,
         prompt: prompt.as_bytes().to_vec(),
         max_tokens: j
             .get("max_tokens")
             .and_then(Json::as_usize)
             .unwrap_or(32)
-            .min(400),
+            .min(MAX_TOKENS_CAP),
         temperature: j
             .get("temperature")
             .and_then(Json::as_f64)
             .unwrap_or(0.0) as f32,
         seed: j.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64,
-    })
+    };
+    Ok((req, j.get("tag").cloned()))
 }
 
 #[cfg(test)]
@@ -119,8 +314,8 @@ mod tests {
 
     #[test]
     fn parses_request_line() {
-        let r = parse_request(
-            r#"{"prompt":"3+4=","max_tokens":4,"temperature":0.5}"#,
+        let (r, tag) = parse_request(
+            r#"{"prompt":"3+4=","max_tokens":4,"temperature":0.5,"tag":9}"#,
             7,
         )
         .unwrap();
@@ -128,6 +323,7 @@ mod tests {
         assert_eq!(r.max_tokens, 4);
         assert_eq!(r.id, 7);
         assert!((r.temperature - 0.5).abs() < 1e-6);
+        assert_eq!(tag, Some(Json::Num(9.0)));
     }
 
     #[test]
@@ -139,7 +335,35 @@ mod tests {
 
     #[test]
     fn clamps_max_tokens() {
-        let r = parse_request(r#"{"prompt":"x","max_tokens":100000}"#, 0).unwrap();
+        let (r, tag) = parse_request(r#"{"prompt":"x","max_tokens":100000}"#, 0).unwrap();
         assert_eq!(r.max_tokens, 400);
+        assert_eq!(tag, None);
+    }
+
+    #[test]
+    fn response_carries_accounting_fields() {
+        let c = ServeCompletion {
+            id: 3,
+            text: b"ok".to_vec(),
+            tokens: 2,
+            arrival_us: 10.0,
+            queue_wait_us: 5.0,
+            prefill_us: 100.0,
+            decode_us: 200.0,
+            stall: crate::store::StallSplit { demand_us: 30.0, prefetch_us: 10.0 },
+            batch_peak: 4,
+            finished_us: 400.0,
+            error: None,
+        };
+        let j = response_json(&c, Some(Json::Str("t".into())));
+        assert_eq!(j.get("id").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("queue_wait_us").and_then(Json::as_f64), Some(5.0));
+        assert_eq!(j.get("stall_us").and_then(Json::as_f64), Some(40.0));
+        assert_eq!(j.get("stall_demand_us").and_then(Json::as_f64), Some(30.0));
+        assert_eq!(j.get("batch_size").and_then(Json::as_usize), Some(4));
+        assert_eq!(j.get("tag").and_then(Json::as_str), Some("t"));
+        // round-trips through the wire format
+        let wire = jwrite(&j);
+        assert_eq!(parse(&wire).unwrap(), j);
     }
 }

@@ -23,7 +23,7 @@ pub mod prefetch;
 pub use cache::{CacheStats, ResidentSet};
 pub use clock::{Clock, VirtualClock, WallClock};
 pub use policy::{build_policy, LfuPolicy, LruPolicy, ResidencyPolicy, SparsityPolicy};
-pub use prefetch::{PinnedPool, PrefetchPipeline, StoreStats};
+pub use prefetch::{PinnedPool, PrefetchPipeline, StallCause, StallSplit, StoreStats};
 
 pub use crate::config::ResidencyKind;
 
@@ -35,6 +35,9 @@ pub struct ExpertStore<P = ()> {
     cache: ResidentSet,
     prefetch: PrefetchPipeline<P>,
     clock: Box<dyn Clock>,
+    /// requester id stalls are currently attributed to (serving: the
+    /// request being decoded; sim/warmup: `StoreStats::UNATTRIBUTED`)
+    attr: u64,
 }
 
 impl<P> ExpertStore<P> {
@@ -43,6 +46,7 @@ impl<P> ExpertStore<P> {
             cache: ResidentSet::new(budget_bytes, kind),
             prefetch: PrefetchPipeline::new(),
             clock,
+            attr: StoreStats::UNATTRIBUTED,
         }
     }
 
@@ -82,13 +86,49 @@ impl<P> ExpertStore<P> {
     }
 
     /// Wait for `t_us` (a transfer completion), attributing the wait as a
-    /// decode stall. No-op if the bytes already landed.
+    /// demand-fetch decode stall. No-op if the bytes already landed.
     pub fn stall_until(&mut self, t_us: f64) {
+        self.stall_until_for(t_us, StallCause::Demand);
+    }
+
+    /// `stall_until` with an explicit cause: demand fetch (nothing was in
+    /// flight) vs prefetch-miss (the predicted transfer landed late). The
+    /// stall is charged to the current attribution requester.
+    pub fn stall_until_for(&mut self, t_us: f64, cause: StallCause) {
         let now = self.clock.now_us();
         if t_us > now {
-            self.prefetch.stats.stall_us += t_us - now;
+            self.prefetch.stats.charge_stall(self.attr, cause, t_us - now);
             self.clock.advance(t_us - now);
         }
+    }
+
+    // ------------------------------------------------------- attribution
+
+    /// Charge subsequent stalls to requester `id` (a serving request).
+    pub fn set_attribution(&mut self, id: u64) {
+        self.attr = id;
+    }
+
+    /// Back to the unattributed bucket (warmup, calibration).
+    pub fn clear_attribution(&mut self) {
+        self.attr = StoreStats::UNATTRIBUTED;
+    }
+
+    /// Cumulative stall decomposition charged to requester `id`.
+    pub fn stall_split_of(&self, id: u64) -> StallSplit {
+        self.prefetch
+            .stats
+            .attributed
+            .get(&id)
+            .copied()
+            .unwrap_or_default()
+    }
+
+    /// Remove and return requester `id`'s attribution entry (retiring a
+    /// finished request on long-running servers). Global totals keep the
+    /// retired stall time via the `retired` bucket.
+    pub fn take_attribution(&mut self, id: u64) -> StallSplit {
+        self.prefetch.stats.retire(id)
     }
 
     // ---------------------------------------------------------- residency
@@ -258,6 +298,50 @@ mod tests {
         assert!(s.admit((0, 2), 100));
         assert!(s.contains((0, 0)), "pinned entry evicted by admit");
         assert!(!s.contains((0, 1)));
+    }
+
+    #[test]
+    fn stall_attribution_splits_by_cause_and_requester() {
+        let mut s: ExpertStore = ExpertStore::with_virtual_clock(1000, ResidencyKind::Lru);
+        s.set_attribution(7);
+        let ready = s.demand_fetch(30.0, 64.0);
+        s.stall_until_for(ready, StallCause::Demand);
+        s.set_attribution(9);
+        let done = s.begin_prefetch((0, 1), 20.0, 32.0, ());
+        s.stall_until_for(done, StallCause::PrefetchMiss);
+        s.clear_attribution();
+        let late = s.demand_fetch(5.0, 8.0);
+        s.stall_until(late);
+        let st = s.stats();
+        assert_eq!(s.stall_split_of(7), StallSplit { demand_us: 30.0, prefetch_us: 0.0 });
+        assert_eq!(s.stall_split_of(9).prefetch_us, 20.0);
+        assert_eq!(st.attributed[&StoreStats::UNATTRIBUTED].demand_us, 5.0);
+        // globals are exactly the key-order sums over the attribution map
+        let (mut demand, mut prefetch) = (0.0, 0.0);
+        for v in st.attributed.values() {
+            demand += v.demand_us;
+            prefetch += v.prefetch_us;
+        }
+        assert_eq!(demand, st.stall_demand_us);
+        assert_eq!(prefetch, st.stall_prefetch_us);
+        assert_eq!(st.stall_us, st.stall_demand_us + st.stall_prefetch_us);
+    }
+
+    #[test]
+    fn retiring_attribution_keeps_global_totals() {
+        let mut s: ExpertStore = ExpertStore::with_virtual_clock(1000, ResidencyKind::Lru);
+        s.set_attribution(1);
+        let ready = s.demand_fetch(10.0, 1.0);
+        s.stall_until(ready);
+        let taken = s.take_attribution(1);
+        assert_eq!(taken.demand_us, 10.0);
+        assert_eq!(s.stall_split_of(1), StallSplit::default());
+        // another charge must not lose the retired 10us
+        s.set_attribution(2);
+        let ready = s.demand_fetch(4.0, 1.0);
+        s.stall_until(ready);
+        assert_eq!(s.stats().stall_demand_us, 14.0);
+        assert_eq!(s.stats().stall_us, 14.0);
     }
 
     #[test]

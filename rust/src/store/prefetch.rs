@@ -14,19 +14,101 @@
 //! predicted channel mask so recall can be scored when the prefetch is
 //! consumed; the simulator attaches nothing.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use super::ExpertKey;
 
+/// Why a decode stall was charged: the consumer arrived before the bytes
+/// of a *demand* fetch (nothing was in flight — prediction missed the
+/// expert entirely, or the system never predicts) vs. before an in-flight
+/// *prefetch* landed (prediction was right but the transfer was late —
+/// the overlap window was too short or the bus too busy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StallCause {
+    Demand,
+    PrefetchMiss,
+}
+
+/// Stall microseconds decomposed by cause. Totals for one requester, or
+/// one component of the store-wide decomposition.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct StallSplit {
+    pub demand_us: f64,
+    pub prefetch_us: f64,
+}
+
+impl StallSplit {
+    pub fn total_us(&self) -> f64 {
+        self.demand_us + self.prefetch_us
+    }
+
+    fn add(&mut self, cause: StallCause, us: f64) {
+        match cause {
+            StallCause::Demand => self.demand_us += us,
+            StallCause::PrefetchMiss => self.prefetch_us += us,
+        }
+    }
+}
+
 /// Residency-movement statistics (the store's half of `PipelineStats`).
+///
+/// Stall time is attributed per requester (a request id set via
+/// `ExpertStore::set_attribution`; `UNATTRIBUTED` otherwise). The global
+/// `stall_*_us` totals are re-derived from the attribution map in key
+/// order on every charge, so `attributed.values()` sums reproduce each
+/// total *bit-exactly* — the invariant the serving accounting tests
+/// assert. Entries are a few words per requester; callers that serve
+/// unbounded request streams can `take_attribution` retired ids.
 #[derive(Debug, Default, Clone)]
 pub struct StoreStats {
     pub demand_fetches: u64,
     pub prefetches: u64,
     pub stall_us: f64,
+    pub stall_demand_us: f64,
+    pub stall_prefetch_us: f64,
     /// f64 so the simulator's fractional per-expert byte models sum
     /// exactly; integer byte counts below 2^53 stay exact
     pub transferred_bytes: f64,
+    /// per-requester stall decomposition (BTreeMap: deterministic order)
+    pub attributed: BTreeMap<u64, StallSplit>,
+    /// stalls of requesters retired via `take_attribution` — folded into
+    /// the totals so retiring never loses accounted time
+    pub retired: StallSplit,
+}
+
+impl StoreStats {
+    /// Requester id for stalls charged outside any attribution scope.
+    pub const UNATTRIBUTED: u64 = u64::MAX;
+
+    /// Charge `us` of stall to `who`, then re-derive the global totals as
+    /// retired + the key-order sum over the attribution map (exactness
+    /// invariant).
+    pub(crate) fn charge_stall(&mut self, who: u64, cause: StallCause, us: f64) {
+        self.attributed.entry(who).or_default().add(cause, us);
+        self.rederive_totals();
+    }
+
+    pub(crate) fn retire(&mut self, who: u64) -> StallSplit {
+        let Some(s) = self.attributed.remove(&who) else {
+            return StallSplit::default();
+        };
+        self.retired.demand_us += s.demand_us;
+        self.retired.prefetch_us += s.prefetch_us;
+        self.rederive_totals();
+        s
+    }
+
+    fn rederive_totals(&mut self) {
+        let (mut demand, mut prefetch) =
+            (self.retired.demand_us, self.retired.prefetch_us);
+        for s in self.attributed.values() {
+            demand += s.demand_us;
+            prefetch += s.prefetch_us;
+        }
+        self.stall_demand_us = demand;
+        self.stall_prefetch_us = prefetch;
+        self.stall_us = demand + prefetch;
+    }
 }
 
 pub struct PrefetchPipeline<P = ()> {

@@ -1,0 +1,139 @@
+//! Property tests for the continuous-batching scheduler over the
+//! simulated serving backend (util/prop harness — no artifacts or the
+//! `pjrt` feature needed).
+//!
+//! Invariants under random arrival/length traces:
+//! * no request starves: every request completes and admission preserves
+//!   FIFO arrival order,
+//! * the decode batch never exceeds the `--max-batch` cap,
+//! * per-request attributed stall totals reproduce the store's global
+//!   stall counters *bit-exactly* (key-order component sums).
+
+use floe::config::ResidencyKind;
+use floe::coordinator::policy::{SystemConfig, SystemKind};
+use floe::coordinator::sim::{simulate_serving, RoutingModel, SimParams};
+use floe::hwsim::RTX3090;
+use floe::prop_assert;
+use floe::store::StoreStats;
+use floe::util::prop::check;
+use floe::workload::{generate, WorkloadSpec};
+
+fn params(kind: SystemKind, residency: ResidencyKind, zipf_s: f64, vram: f64) -> SimParams {
+    let mut p =
+        SimParams::mixtral_on(RTX3090.clone(), SystemConfig::with_residency(kind, residency), vram);
+    p.routing = RoutingModel { zipf_s, stickiness: 0.5, seed: 7 };
+    p
+}
+
+#[test]
+fn scheduler_invariants_under_random_traces() {
+    check("serve-scheduler-invariants", 10, |rng| {
+        let spec = WorkloadSpec {
+            n_requests: rng.range(2, 9),
+            arrival_rate_hz: 0.5 + rng.f64() * 8.0,
+            prompt_len: (4, 24),
+            output_tokens: (2, 20),
+            seed: rng.next_u64(),
+        };
+        let max_batch = rng.range(1, 6);
+        let residency = *rng.choice(&ResidencyKind::ALL);
+        let zipf_s = 0.4 + rng.f64();
+        let wl = generate(&spec);
+        let p = params(SystemKind::Floe, residency, zipf_s, 12.0 + 3.0 * rng.f64());
+        let rep = simulate_serving(&p, &wl, max_batch).map_err(|e| e.to_string())?;
+
+        // every request completes, with its requested token count
+        prop_assert!(
+            rep.completions.len() == wl.len(),
+            "{} of {} requests completed",
+            rep.completions.len(),
+            wl.len()
+        );
+        for c in &rep.completions {
+            let want = wl[c.id as usize].req.max_tokens;
+            prop_assert!(c.tokens == want, "req {} tokens {} != {}", c.id, c.tokens, want);
+            prop_assert!(c.queue_wait_us >= 0.0, "negative queue wait");
+            prop_assert!(
+                c.batch_peak >= 1 && c.batch_peak <= max_batch,
+                "req {} batch peak {} vs cap {}",
+                c.id,
+                c.batch_peak,
+                max_batch
+            );
+        }
+
+        // FIFO admission: exactly the arrival order
+        let arrival_ids: Vec<u64> = wl.iter().map(|t| t.req.id).collect();
+        prop_assert!(
+            rep.admitted_order == arrival_ids,
+            "admission reordered: {:?}",
+            rep.admitted_order
+        );
+        prop_assert!(
+            rep.max_batch_seen <= max_batch,
+            "batch {} exceeded cap {}",
+            rep.max_batch_seen,
+            max_batch
+        );
+
+        // exact attribution: nothing unattributed, and component-wise
+        // key-order sums reproduce the global counters bit-for-bit
+        prop_assert!(
+            !rep.stats.attributed.contains_key(&StoreStats::UNATTRIBUTED),
+            "stalls charged outside any request"
+        );
+        let (mut demand, mut prefetch) = (0.0f64, 0.0f64);
+        for s in rep.stats.attributed.values() {
+            demand += s.demand_us;
+            prefetch += s.prefetch_us;
+        }
+        prop_assert!(
+            demand == rep.stats.stall_demand_us,
+            "demand sum {demand} != global {}",
+            rep.stats.stall_demand_us
+        );
+        prop_assert!(
+            prefetch == rep.stats.stall_prefetch_us,
+            "prefetch sum {prefetch} != global {}",
+            rep.stats.stall_prefetch_us
+        );
+        prop_assert!(
+            rep.stats.stall_us == rep.stats.stall_demand_us + rep.stats.stall_prefetch_us,
+            "stall total does not decompose"
+        );
+        // each completion's split is exactly the store's ledger entry
+        for c in &rep.completions {
+            let ledger = rep.stats.attributed.get(&c.id).copied().unwrap_or_default();
+            prop_assert!(
+                c.stall == ledger,
+                "req {} completion split {:?} != ledger {:?}",
+                c.id,
+                c.stall,
+                ledger
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn admission_is_work_conserving() {
+    // whenever requests are waiting and slots are free at a boundary,
+    // they are admitted: with cap >= n every request decodes in a batch
+    // at least as large as the number of co-pending requests would allow
+    check("serve-scheduler-work-conserving", 6, |rng| {
+        let n = rng.range(3, 7);
+        let wl = generate(&WorkloadSpec {
+            n_requests: n,
+            arrival_rate_hz: 1000.0, // effectively simultaneous arrivals
+            prompt_len: (4, 8),
+            output_tokens: (8, 16),
+            seed: rng.next_u64(),
+        });
+        let p = params(SystemKind::Floe, ResidencyKind::Lru, 1.2, 14.0);
+        let rep = simulate_serving(&p, &wl, n).map_err(|e| e.to_string())?;
+        let peak = rep.completions.iter().map(|c| c.batch_peak).max().unwrap();
+        prop_assert!(peak == n, "co-arrived batch peaked at {peak}, expected {n}");
+        Ok(())
+    });
+}

@@ -48,8 +48,14 @@ fn main() -> anyhow::Result<()> {
     });
 
     // server runs on the main thread (PJRT engine is not Send); exits
-    // after one connection's worth of requests
-    let mut system = SystemConfig::new(SystemKind::Floe);
+    // after one connection's worth of requests. The expert store is
+    // placement-aware: `with_devices(n, shard)` shards residency across
+    // n GPUs with coalesced prefetch plans (the `serve` CLI exposes this
+    // as `--devices N --shard-policy layer|expert|hash`, plus
+    // `--sparsity-decay` for the sparsity policy's EMA constant); one
+    // device reproduces the classic single-GPU pipeline exactly.
+    let mut system = SystemConfig::new(SystemKind::Floe)
+        .with_devices(1, floe::config::ShardPolicy::Layer);
     system.sparsity = 0.8;
     serve(
         &art,

@@ -1,0 +1,701 @@
+#!/usr/bin/env python3
+"""Python replay of rust/src/coordinator/sim.rs (post-placement-redesign).
+
+No Rust toolchain exists in the authoring container, so deterministic
+test margins are validated by replaying the exact seeded RNG / store /
+roofline pipeline here before the assertions are committed. This mirrors
+the REDESIGNED code (placement-aware store, transfer plans, coalescing,
+sparsity admission filter); bit-for-bit equivalence of the single-device
+path against the pre-redesign semantics is pinned in Rust itself by
+tests/shard_store.rs (simulate vs simulate_scalar_reference), which
+needs no cross-language float reasoning.
+
+Checks replayed here (see main()):
+  * tests in experiments/shard.rs: coalesced vs independent at 2 devices
+    (equal bytes, fewer bus transactions, tps), 2-device vs 1-device tps
+  * coordinator/sim.rs::sparsity_policy_hit_rate_not_worse_at_tight_vram
+    under the new admission filter
+  * sanity: fig6 ordering relations (replay fidelity check against the
+    long-standing assertions)
+"""
+
+MASK = (1 << 64) - 1
+
+
+def rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    def __init__(self, seed):
+        st = seed & MASK
+        s = []
+        for _ in range(4):
+            st = (st + 0x9E3779B97F4A7C15) & MASK
+            z = st
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            s.append(z ^ (z >> 31))
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        r = (rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = rotl(s[3], 45)
+        return r
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        return int(self.f64() * n) % n
+
+
+# ---- hwsim constants (RTX3090 / PCIE4 / P2P / EPYC64 / Mixtral dims) ----
+HBM, EFF, LAUNCH, DISPATCH, FP16_TF = 936.0, 0.70, 9.0, 12.0, 71.0
+PCIE_GBPS, PCIE_API = 25.6, 12.0
+P2P_GBPS, P2P_API = 50.0, 6.0
+CPU_GFLOPS = 95.0
+DM, DFF, NL, NE, TOPK = 4096, 14336, 32, 8, 2
+
+
+def bw():
+    return HBM * EFF * 1e3
+
+
+def expert_bytes_fp16():
+    return 3.0 * DM * DFF * 2.0
+
+
+def up_int2_bytes():
+    n = float(DM) * DFF
+    return n / 4.0 + 2.0 * 2.0 * (n / 64.0)
+
+
+def floe_transfer_bytes(level):
+    return 2.0 * (1.0 - level) * DM * DFF * 2.0
+
+
+def expert_bytes_quant(bits):
+    return 3.0 * DM * DFF * bits / 8.0 + 3.0 * 2.0 * 2.0 * (DM * DFF / 64.0)
+
+
+def attn_bytes_fp16():
+    return 2.5 * DM * DM * 2.0
+
+
+def expert_dense_us():
+    return expert_bytes_fp16() / bw() + 4.0 * LAUNCH + DISPATCH
+
+
+def expert_floe_us(s):
+    up = up_int2_bytes()
+    gd = 2.0 * (1.0 - s) * DM * DFF * 2.0
+    return (up + gd) / bw() + 3.0 * LAUNCH + DISPATCH
+
+
+def expert_quant_us(bits):
+    return expert_bytes_quant(bits) / bw() + 4.0 * LAUNCH + DISPATCH
+
+
+def attn_layer_us(kv_len):
+    kv_bytes = 2.0 * kv_len * DM * 2.0
+    return (attn_bytes_fp16() + kv_bytes) / bw() + 6.0 * LAUNCH
+
+
+def cpu_expert_us():
+    return 2.0 * 3.0 * DM * DFF / (CPU_GFLOPS * 1e3)
+
+
+def pcie_copy_us(bytes_):
+    return bytes_ / (PCIE_GBPS * 1e3) + PCIE_API
+
+
+def p2p_copy_us(bytes_):
+    return bytes_ / (P2P_GBPS * 1e3) + P2P_API
+
+
+# ---------------------------------------------------------------- systems
+FLOE, NAIVE, ADV, FIDDLER, GPU = "floe", "naive", "adv", "fiddler", "gpu"
+
+
+class System:
+    def __init__(self, kind, residency="lru", devices=1, shard="layer",
+                 coalesce=None, spill=None):
+        self.kind = kind
+        self.sparsity = 0.9
+        self.quant_bits = 3
+        self.intra_margin = 0.15
+        self.residency = residency
+        self.devices = devices
+        self.shard = shard
+        self.coalesce = (devices > 1) if coalesce is None else coalesce
+        self.spill = (devices > 1) if spill is None else spill
+
+
+class Params:
+    def __init__(self, system, vram_gb, zipf_s=0.6, stickiness=0.35, seed=7):
+        self.system = system
+        self.vram_gb = vram_gb
+        self.inter_hit = 0.88
+        self.intra_recall = 0.95
+        self.adv_prefetch_hit = 0.75
+        self.zipf_s = zipf_s
+        self.stickiness = stickiness
+        self.seed = seed
+
+
+def transfer_bytes(p):
+    k = p.system.kind
+    if k == FLOE:
+        return floe_transfer_bytes(p.system.sparsity) * (1.0 + p.system.intra_margin)
+    if k == NAIVE:
+        return expert_bytes_fp16()
+    if k == ADV:
+        return expert_bytes_quant(float(p.system.quant_bits))
+    return 0.0
+
+
+def cached_bytes(p):
+    k = p.system.kind
+    if k == FLOE:
+        return int(floe_transfer_bytes(p.system.sparsity))
+    if k == NAIVE:
+        return int(expert_bytes_fp16())
+    if k == ADV:
+        return int(expert_bytes_quant(float(p.system.quant_bits)))
+    if k == FIDDLER:
+        return int(expert_bytes_fp16())
+    return int(expert_bytes_quant(2.0))
+
+
+def expert_compute_us(p):
+    k = p.system.kind
+    if k == FLOE:
+        return expert_floe_us(p.system.sparsity)
+    if k == NAIVE:
+        return expert_dense_us()
+    if k == ADV:
+        return expert_quant_us(float(p.system.quant_bits))
+    if k == FIDDLER:
+        return expert_dense_us()
+    return expert_quant_us(2.0)
+
+
+def cache_budget_bytes(p, kv_tokens):
+    attn = NL * attn_bytes_fp16()
+    embed = 2.0 * 32000.0 * DM * 2.0
+    kv = NL * 2.0 * kv_tokens * DM * 2.0
+    resident = attn + embed + kv + 1e9
+    if p.system.kind == FLOE:
+        resident += NL * NE * up_int2_bytes()
+    return max(p.vram_gb * 1e9 - resident, 0.0)
+
+
+def zipf_cdf(n, s):
+    w = [1.0 / ((k + 1) ** s) for k in range(n)]
+    for i in range(1, n):
+        w[i] += w[i - 1]
+    return w
+
+
+def partition_point(w, r):
+    # w.partition_point(|x| *x < r): count of leading elements < r
+    lo, hi = 0, len(w)
+    while lo < hi:
+        mid = (lo + hi) // 2
+        if w[mid] < r:
+            lo = mid + 1
+        else:
+            hi = mid
+    return lo
+
+
+def sample_routing(p, rng, prev, weights):
+    out = []
+    for l in range(NL):
+        chosen = []
+        for slot in range(TOPK):
+            if prev[l] and rng.f64() < p.stickiness:
+                e = prev[l][slot]
+            else:
+                while True:
+                    r = rng.f64() * weights[NE - 1]
+                    e = min(partition_point(weights, r), NE - 1)
+                    if e not in chosen:
+                        break
+            if e in chosen:
+                alt = (e + 1 + rng.below(NE - 1)) % NE
+                chosen.append(alt)
+            else:
+                chosen.append(e)
+        prev[l] = list(chosen)
+        out.append(chosen)
+    return out
+
+
+# ------------------------------------------------------------ policies
+class LruPolicy:
+    def __init__(self):
+        self.last_use = {}
+
+    def on_activation(self, key, now):
+        pass
+
+    def on_hit(self, key, now):
+        self.last_use[key] = now
+
+    def on_insert(self, key, now):
+        self.last_use[key] = now
+
+    def on_remove(self, key):
+        self.last_use.pop(key, None)
+
+    def victim(self, candidates):
+        if not candidates:
+            return None
+        return min(candidates, key=lambda k: self.last_use.get(k, 0))
+
+    def admits(self, key):
+        return True
+
+
+class SparsityPolicy:
+    def __init__(self, decay=0.999, min_admit=1.5):
+        self.decay = decay
+        self.min_admit = min_admit
+        self.step = 0
+        self.ema = {}
+        self.stamp = {}
+        self.last_use = {}
+
+    def score(self, key):
+        if key not in self.ema:
+            return 0.0
+        return self.ema[key] * (self.decay ** float(self.step - self.stamp[key]))
+
+    def on_activation(self, key, now):
+        self.step += 1
+        self.ema[key] = self.score(key) + 1.0
+        self.stamp[key] = self.step
+
+    def on_hit(self, key, now):
+        self.last_use[key] = now
+
+    def on_insert(self, key, now):
+        self.last_use[key] = now
+
+    def on_remove(self, key):
+        self.last_use.pop(key, None)
+
+    def victim(self, candidates):
+        if not candidates:
+            return None
+        return min(candidates, key=lambda k: (self.score(k), self.last_use.get(k, 0)))
+
+    def admits(self, key):
+        return self.score(key) >= self.min_admit
+
+
+class ResidentSet:
+    def __init__(self, budget, policy):
+        self.budget = budget
+        self.used = 0
+        self.clock = 0
+        self.entries = {}  # key -> [bytes, pinned]
+        self.policy = policy
+        self.hits = 0
+        self.misses = 0
+
+    def contains(self, key):
+        return key in self.entries
+
+    def bytes_of(self, key):
+        return self.entries[key][0] if key in self.entries else None
+
+    def free_bytes(self):
+        return self.budget - self.used
+
+    def note_activation(self, key):
+        self.policy.on_activation(key, self.clock)
+
+    def access(self, key):
+        self.clock += 1
+        if key in self.entries:
+            self.policy.on_hit(key, self.clock)
+            self.hits += 1
+            return True
+        self.misses += 1
+        return False
+
+    def insert_evicting(self, key, bytes_):
+        self.clock += 1
+        evicted = []
+        if key in self.entries:
+            self.used -= self.entries.pop(key)[0]
+            self.policy.on_remove(key)
+        if bytes_ > self.budget:
+            return False, evicted
+        while self.used + bytes_ > self.budget:
+            cands = [k for k, e in self.entries.items() if not e[1]]
+            v = self.policy.victim(cands)
+            if v is None:
+                return False, evicted
+            vb = self.entries.pop(v)[0]
+            self.used -= vb
+            self.policy.on_remove(v)
+            evicted.append((v, vb))
+        self.used += bytes_
+        self.entries[key] = [bytes_, False]
+        self.policy.on_insert(key, self.clock)
+        return True, evicted
+
+    def remove(self, key):
+        if key not in self.entries:
+            return None
+        b = self.entries.pop(key)[0]
+        self.used -= b
+        self.policy.on_remove(key)
+        return b
+
+    def set_pinned(self, key, pinned):
+        if key in self.entries:
+            self.entries[key][1] = pinned
+
+
+def make_policy(kind):
+    return SparsityPolicy() if kind == "sparsity" else LruPolicy()
+
+
+class Store:
+    """Placement-aware store mirror (virtual clock)."""
+
+    def __init__(self, system, budget_per_device):
+        n = max(system.devices, 1)
+        self.system = system
+        self.devices = [ResidentSet(budget_per_device, make_policy(system.residency))
+                        for _ in range(n)]
+        self.bus_free = [0.0] * n
+        self.inflight = {}
+        self.now = 0.0
+        self.stall_us = 0.0
+        self.demand_fetches = 0
+        self.prefetches = 0
+        self.bus_transactions = 0
+        self.transferred_bytes = 0.0
+
+    def home(self, key):
+        n = len(self.devices)
+        if n <= 1:
+            return 0
+        l, e = key
+        if self.system.shard == "layer":
+            return l % n
+        if self.system.shard == "expert":
+            return e % n
+        return ((l * 0x9E3779B1) + e * 0x85EBCA77) % n
+
+    def tick(self, us):
+        self.now += us
+
+    def advance_to(self, t):
+        if t > self.now:
+            self.now = t
+
+    def stall_until(self, t):
+        if t > self.now:
+            self.stall_us += t - self.now
+            self.now = t
+
+    def lookup(self, key):
+        home = self.home(key)
+        self.devices[home].note_activation(key)
+        if self.devices[home].contains(key):
+            self.devices[home].access(key)
+            return ("local", home)
+        for d in range(len(self.devices)):
+            if d != home and self.devices[d].contains(key):
+                self.devices[d].access(key)
+                return ("remote", d)
+        self.devices[home].access(key)
+        return ("miss", None)
+
+    def bus_copy_to(self, dev, dur, bytes_):
+        self.transferred_bytes += bytes_
+        self.bus_transactions += 1
+        start = max(self.now, self.bus_free[dev])
+        done = start + dur
+        self.bus_free[dev] = done
+        return done
+
+    def demand_to(self, dev, dur, bytes_):
+        self.demand_fetches += 1
+        return self.bus_copy_to(dev, dur, bytes_)
+
+    def submit(self, dst, mode, items):
+        # items: (key, bytes, dur, ovh)
+        if mode == "overlapped":
+            for key, b, dur, _ in items:
+                self.prefetches += 1
+                done = self.bus_copy_to(dst, dur, b)
+                self.inflight[(dst, key)] = done
+                self.devices[dst].set_pinned(key, True)
+        elif mode == "coalesced":
+            ovh = max(it[3] for it in items)
+            start = max(self.now, self.bus_free[dst])
+            t = start + ovh
+            self.bus_transactions += 1
+            for key, b, dur, o in items:
+                t += max(dur - o, 0.0)
+                self.prefetches += 1
+                self.transferred_bytes += b
+                self.inflight[(dst, key)] = t
+            self.bus_free[dst] = t
+            for key, _, _, _ in items:
+                self.devices[dst].set_pinned(key, True)
+        else:  # blocking
+            for key, b, dur, _ in items:
+                self.prefetches += 1
+                self.transferred_bytes += b
+                self.bus_transactions += 1
+                done = self.now + dur
+                self.bus_free[dst] = done
+                self.inflight[(dst, key)] = done
+                self.stall_until(done)
+
+    def take_inflight(self, key):
+        dev = self.home(key)
+        done = self.inflight.pop((dev, key), None)
+        if done is not None:
+            self.devices[dev].set_pinned(key, False)
+        return done
+
+    def contains(self, key):
+        return any(d.contains(key) for d in self.devices)
+
+    def inflight_home(self, key):
+        return (self.home(key), key) in self.inflight
+
+    def admit(self, key, bytes_):
+        home = self.home(key)
+        if not self.devices[home].policy.admits(key):
+            return False
+        return self.admit_on(home, key, bytes_)
+
+    def warm_admit(self, key, bytes_):
+        return self.admit_on(self.home(key), key, bytes_)
+
+    def admit_on(self, dev, key, bytes_):
+        ok, evicted = self.devices[dev].insert_evicting(key, bytes_)
+        if self.system.spill:
+            for v in evicted:
+                self.spill_from(dev, v)
+        return ok
+
+    def spill_from(self, frm, victim):
+        key, bytes_ = victim
+        if any(d.contains(key) for d in self.devices):
+            return
+        cands = [d for d in range(len(self.devices))
+                 if d != frm and self.devices[d].free_bytes() >= bytes_]
+        if not cands:
+            return
+        to = max(cands, key=lambda d: self.devices[d].free_bytes())
+        self.bus_copy_to(to, p2p_copy_us(max(float(bytes_), 1.0)), float(bytes_))
+        self.devices[to].insert_evicting(key, bytes_)
+
+    def peer_fetch(self, key, frm):
+        b = self.devices[frm].bytes_of(key)
+        if b is None:
+            return self.now
+        home = self.home(key)
+        done = self.demand_to(home, p2p_copy_us(max(float(b), 1.0)), float(b))
+        if self.devices[home].policy.admits(key):
+            self.devices[frm].remove(key)
+            ok, evicted = self.devices[home].insert_evicting(key, b)
+            if self.system.spill:
+                for v in evicted:
+                    self.spill_from(home, v)
+        return done
+
+    def hit_rate(self):
+        h = sum(d.hits for d in self.devices)
+        m = sum(d.misses for d in self.devices)
+        return h / (h + m) if h + m else 0.0
+
+
+def simulate(p, input_len, output_len):
+    rng = Rng(p.seed)
+    prev = [[] for _ in range(NL)]
+    budget = cache_budget_bytes(p, input_len + output_len)
+    store = Store(p.system, int(budget))
+    weights = zipf_cdf(NE, p.zipf_s)
+    per_cached = cached_bytes(p)
+    per_bytes = transfer_bytes(p)
+    exp_c = expert_compute_us(p)
+    resident_fits = (p.system.kind == GPU
+                     and budget * max(p.system.devices, 1)
+                     >= NL * NE * per_cached)
+
+    # ---- prefill ----
+    for l in range(NL):
+        flops = 12.0 * input_len * float(DM) ** 2
+        store.tick(flops / (FP16_TF * 1e6) + 4.0 * LAUNCH)
+        if p.system.kind == GPU and resident_fits:
+            store.tick(exp_c * NE * 0.5)
+        elif p.system.kind == FIDDLER:
+            _prefill_stream(p, store, l, expert_bytes_fp16())
+            store.tick(exp_c * NE * 0.5)
+        else:
+            per = max(per_bytes, expert_bytes_quant(2.0) if p.system.kind == GPU else 0.0)
+            if per > 0.0:
+                _prefill_stream(p, store, l, per)
+            store.tick(exp_c * NE * 0.5)
+
+    # ---- warm ----
+    order = sorted([(l, e) for l in range(NL) for e in range(NE)], key=lambda k: k[1])
+    full = [False] * len(store.devices)
+    for key in order:
+        dev = store.home(key)
+        if full[dev]:
+            continue
+        if not store.warm_admit(key, per_cached):
+            full[dev] = True
+            if all(full):
+                break
+
+    # ---- decode ----
+    compute_us = 0.0
+    for tok in range(output_len):
+        kv_len = input_len + tok
+        routing = sample_routing(p, rng, prev, weights)
+        for l in range(NL):
+            attn = attn_layer_us(kv_len)
+            store.tick(attn)
+            compute_us += attn
+            if l + 1 < NL and per_bytes > 0.0:
+                hit_rate, overlap = 0.0, False
+                if p.system.kind == FLOE:
+                    hit_rate, overlap = p.inter_hit, True
+                elif p.system.kind == ADV:
+                    hit_rate, overlap = p.adv_prefetch_hit, False
+                if hit_rate > 0.0:
+                    mode = ("blocking" if not overlap else
+                            ("coalesced" if p.system.coalesce else "overlapped"))
+                    plans = [[] for _ in store.devices]
+                    for e in routing[l + 1]:
+                        key = (l + 1, e)
+                        predicted = rng.f64() < hit_rate
+                        if predicted and not store.contains(key):
+                            dur = pcie_copy_us(per_bytes)
+                            plans[store.home(key)].append((key, per_bytes, dur, PCIE_API))
+                    for dst, plan in enumerate(plans):
+                        if plan:
+                            store.submit(dst, mode, plan)
+            for e in routing[l]:
+                key = (l, e)
+                looked = ("local", 0) if resident_fits else store.lookup(key)
+                resident = looked[0] != "miss"
+                if looked[0] == "local":
+                    ready, = (store.now,)
+                elif looked[0] == "remote":
+                    ready = store.peer_fetch(key, looked[1])
+                else:
+                    done = store.take_inflight(key)
+                    if done is not None:
+                        store.admit(key, per_cached)
+                        ready = done
+                    elif p.system.kind == FIDDLER:
+                        t = cpu_expert_us()
+                        store.tick(t)
+                        compute_us += t
+                        continue
+                    else:
+                        ready = store.demand_to(
+                            store.home(key), pcie_copy_us(max(per_bytes, 1.0)), per_bytes)
+                        store.admit(key, per_cached)
+                store.stall_until(ready)
+                if p.system.kind == FLOE and not resident:
+                    miss = max(1.0 - p.intra_recall, 0.0)
+                    if miss > 0.0:
+                        extra = per_bytes * miss * 0.5
+                        done = store.bus_copy_to(store.home(key), pcie_copy_us(extra), extra)
+                        store.stall_until(done)
+                store.tick(exp_c)
+                compute_us += exp_c
+    total = store.now
+    return {
+        "tps": output_len / (total / 1e6),
+        "stall_us": store.stall_us,
+        "bytes": store.transferred_bytes,
+        "bus_tx": store.bus_transactions,
+        "hit": store.hit_rate(),
+    }
+
+
+def _prefill_stream(p, store, layer, per_expert):
+    counts = [0] * len(store.devices)
+    for e in range(NE):
+        counts[store.home((layer, e))] += 1
+    slowest = float("-inf")
+    for dev, count in enumerate(counts):
+        if count == 0:
+            continue
+        b = count * per_expert
+        slowest = max(slowest, store.bus_copy_to(dev, pcie_copy_us(b), b))
+    store.advance_to(slowest)
+
+
+def main():
+    print("== shard.rs acceptance margins (Floe lru, zipf 1.2, stick 0.5, 11 GB/dev) ==")
+    mk = lambda dev, coal, spill: Params(
+        System(FLOE, "lru", devices=dev, coalesce=coal, spill=spill),
+        11.0, zipf_s=1.2, stickiness=0.5, seed=7)
+    indep = simulate(mk(2, False, False), 64, 256)
+    coal = simulate(mk(2, True, False), 64, 256)
+    one = simulate(mk(1, False, False), 64, 256)
+    coop = simulate(mk(2, True, True), 64, 256)
+    print(f"  1 dev indep : {one}")
+    print(f"  2 dev indep : {indep}")
+    print(f"  2 dev coal  : {coal}")
+    print(f"  2 dev coop  : {coop}")
+    print(f"  bytes equal (indep vs coal): {indep['bytes'] == coal['bytes']}")
+    print(f"  bus tx fewer: {coal['bus_tx']} < {indep['bus_tx']}: "
+          f"{coal['bus_tx'] < indep['bus_tx']}")
+    print(f"  tps coal/indep = {coal['tps']/indep['tps']:.4f} (assert >= 0.999)")
+    print(f"  tps 2dev/1dev  = {coal['tps']/one['tps']:.4f} (assert > 1.02)")
+
+    print("== sim.rs sparsity_policy_hit_rate_not_worse_at_tight_vram (Naive 14GB) ==")
+    lru = simulate(Params(System(NAIVE, "lru"), 14.0), 64, 128)
+    spa = simulate(Params(System(NAIVE, "sparsity"), 14.0), 64, 128)
+    print(f"  lru hit {lru['hit']:.4f}  sparsity hit {spa['hit']:.4f} "
+          f"(assert sparsity >= lru - 0.02): {spa['hit'] >= lru['hit'] - 0.02}")
+
+    print("== replay fidelity: fig6 ordering relations (12 GB, 64/128) ==")
+    floe = simulate(Params(System(FLOE), 24.0), 64, 128)
+    naive = simulate(Params(System(NAIVE), 24.0), 64, 128)
+    adv = simulate(Params(System(ADV), 24.0), 64, 128)
+    fid = simulate(Params(System(FIDDLER), 24.0), 64, 128)
+    gpu = simulate(Params(System(GPU), 24.0), 64, 128)
+    print(f"  floe {floe['tps']:.2f} adv {adv['tps']:.2f} fid {fid['tps']:.2f} "
+          f"naive {naive['tps']:.2f} gpu {gpu['tps']:.2f}")
+    print(f"  floe>adv {floe['tps']>adv['tps']}  floe>fid {floe['tps']>fid['tps']}  "
+          f"adv>naive {adv['tps']>naive['tps']}  "
+          f"floe>10x naive {floe['tps']>10*naive['tps']}  "
+          f"floe>0.5 gpu {floe['tps']>0.5*gpu['tps']}")
+
+    print("== more vram helps floe (12 vs 24) ==")
+    lo = simulate(Params(System(FLOE), 12.0), 64, 128)
+    hi = simulate(Params(System(FLOE), 24.0), 64, 128)
+    print(f"  lo {lo['tps']:.2f} hi {hi['tps']:.2f} (assert hi >= lo*0.99): "
+          f"{hi['tps'] >= lo['tps']*0.99}")
+
+
+if __name__ == "__main__":
+    main()

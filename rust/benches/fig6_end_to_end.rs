@@ -4,7 +4,9 @@
 
 fn main() {
     let policy = floe::config::ResidencyKind::Lru;
-    floe::experiments::fig6::run(12.0, policy).expect("fig6 sim");
+    let shard = floe::config::ShardPolicy::Layer;
+    let decay = floe::store::DEFAULT_SPARSITY_DECAY;
+    floe::experiments::fig6::run(12.0, policy, 1, shard, decay).expect("fig6 sim");
     if !cfg!(feature = "pjrt") {
         eprintln!("(built without the pjrt feature — skipping real-engine leg)");
         return;

@@ -3,6 +3,10 @@
 //! residency-policy comparison sweep.
 
 fn main() {
-    floe::experiments::fig8::run(floe::config::ResidencyKind::Lru).expect("fig8");
-    floe::experiments::fig8::run_policy_sweep().expect("fig8 policy sweep");
+    let policy = floe::config::ResidencyKind::Lru;
+    let shard = floe::config::ShardPolicy::Layer;
+    let decay = floe::store::DEFAULT_SPARSITY_DECAY;
+    floe::experiments::fig8::run(policy, 1, shard, decay).expect("fig8");
+    floe::experiments::fig8::run_policy_sweep(decay).expect("fig8 policy sweep");
+    floe::experiments::shard::run(policy, 7, decay).expect("shard sweep");
 }

@@ -107,6 +107,61 @@ impl ResidencyKind {
     }
 }
 
+/// How expert keys map to devices when the `ExpertStore` shards residency
+/// across more than one GPU (`--devices N --shard-policy ...`). With one
+/// device every policy degenerates to device 0, so the single-GPU paths
+/// are untouched by the placement dimension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// layer `l` lives on device `l % N` — whole expert layers co-locate,
+    /// so same-layer prefetch plans coalesce into one chunked copy
+    Layer,
+    /// expert id `e` lives on device `e % N` — hot expert ids spread, so
+    /// per-device load balances under skewed routing
+    Expert,
+    /// mixed hash of (layer, expert) — decorrelates both axes
+    Hash,
+}
+
+impl ShardPolicy {
+    pub const ALL: [ShardPolicy; 3] =
+        [ShardPolicy::Layer, ShardPolicy::Expert, ShardPolicy::Hash];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardPolicy::Layer => "layer",
+            ShardPolicy::Expert => "expert",
+            ShardPolicy::Hash => "hash",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "layer" => ShardPolicy::Layer,
+            "expert" => ShardPolicy::Expert,
+            "hash" => ShardPolicy::Hash,
+            other => bail!("unknown shard policy '{other}' (layer|expert|hash)"),
+        })
+    }
+
+    /// Home device for `(layer, expert)` among `n_devices`.
+    pub fn place(&self, key: (usize, usize), n_devices: usize) -> usize {
+        if n_devices <= 1 {
+            return 0;
+        }
+        match self {
+            ShardPolicy::Layer => key.0 % n_devices,
+            ShardPolicy::Expert => key.1 % n_devices,
+            ShardPolicy::Hash => {
+                let (l, e) = key;
+                l.wrapping_mul(0x9E37_79B1)
+                    .wrapping_add(e.wrapping_mul(0x85EB_CA77))
+                    % n_devices
+            }
+        }
+    }
+}
+
 /// How an expert's weights are compressed for transfer + compute.
 /// This is the policy axis the paper's Figures 3/9/10 sweep.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -185,5 +240,25 @@ mod tests {
             assert_eq!(ResidencyKind::parse(kind.name()).unwrap(), kind);
         }
         assert!(ResidencyKind::parse("mru").is_err());
+    }
+
+    #[test]
+    fn shard_policy_round_trips_and_places_in_range() {
+        for shard in ShardPolicy::ALL {
+            assert_eq!(ShardPolicy::parse(shard.name()).unwrap(), shard);
+            for n in 1..5usize {
+                for l in 0..8 {
+                    for e in 0..8 {
+                        assert!(shard.place((l, e), n) < n);
+                    }
+                }
+            }
+            // one device: every key is home on device 0
+            assert_eq!(shard.place((3, 5), 1), 0);
+        }
+        assert!(ShardPolicy::parse("ring").is_err());
+        // layer / expert policies shard on their respective axis
+        assert_eq!(ShardPolicy::Layer.place((3, 0), 2), 1);
+        assert_eq!(ShardPolicy::Expert.place((0, 3), 2), 1);
     }
 }

@@ -1,6 +1,8 @@
 //! The offloading-system design space (paper §4.1 baselines + FloE).
 
-use crate::config::{ExpertMode, ResidencyKind};
+use crate::config::{ExpertMode, ResidencyKind, ShardPolicy};
+use crate::hwsim::{PcieSpec, TopologySpec};
+use crate::store::{Placement, DEFAULT_SPARSITY_DECAY};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SystemKind {
@@ -54,6 +56,20 @@ pub struct SystemConfig {
     pub chunk_channels: usize,
     /// ExpertStore eviction policy (paper baseline: LRU)
     pub residency: ResidencyKind,
+    /// decay constant for the sparsity policy's activation EMA
+    /// (`--sparsity-decay`; other policies ignore it)
+    pub sparsity_decay: f64,
+    /// devices expert residency shards across (`--devices`, default 1 —
+    /// the paper's single-GPU configuration)
+    pub devices: usize,
+    /// expert → device placement function (`--shard-policy`)
+    pub shard: ShardPolicy,
+    /// coalesce same-destination prefetch plans into chunked copies (on
+    /// by default when sharded; off single-device so `--devices 1`
+    /// reproduces the pre-placement numbers bit-exactly)
+    pub coalesce: bool,
+    /// spill eviction victims to peer devices with spare capacity
+    pub spill: bool,
 }
 
 impl SystemConfig {
@@ -66,6 +82,11 @@ impl SystemConfig {
             intra_margin: 0.15,
             chunk_channels: 50,
             residency: ResidencyKind::Lru,
+            sparsity_decay: DEFAULT_SPARSITY_DECAY,
+            devices: 1,
+            shard: ShardPolicy::Layer,
+            coalesce: false,
+            spill: false,
         }
     }
 
@@ -73,6 +94,28 @@ impl SystemConfig {
         let mut c = Self::new(kind);
         c.residency = residency;
         c
+    }
+
+    /// Shard expert residency across `devices` under `shard`, turning the
+    /// cooperative behaviors (plan coalescing, eviction spill) on whenever
+    /// there is more than one device.
+    pub fn with_devices(mut self, devices: usize, shard: ShardPolicy) -> Self {
+        self.devices = devices.max(1);
+        self.shard = shard;
+        self.coalesce = self.devices > 1;
+        self.spill = self.devices > 1;
+        self
+    }
+
+    /// The store placement this configuration selects, over per-device
+    /// host links of spec `h2d`.
+    pub fn placement(&self, h2d: PcieSpec) -> Placement {
+        Placement {
+            shard: self.shard,
+            topo: TopologySpec::uniform(self.devices, h2d),
+            coalesce: self.coalesce,
+            spill: self.spill,
+        }
     }
 
     /// The ExpertMode the engine computes with under this system.
@@ -102,6 +145,23 @@ mod tests {
                 .residency,
             ResidencyKind::Sparsity
         );
+    }
+
+    #[test]
+    fn with_devices_turns_cooperation_on_only_when_sharded() {
+        let single = SystemConfig::new(SystemKind::Floe);
+        assert_eq!(single.devices, 1);
+        assert!(!single.coalesce && !single.spill);
+        let p1 = single.placement(crate::hwsim::PCIE4);
+        assert_eq!(p1.n_devices(), 1);
+        let sharded = SystemConfig::new(SystemKind::Floe).with_devices(3, ShardPolicy::Expert);
+        assert!(sharded.coalesce && sharded.spill);
+        let p3 = sharded.placement(crate::hwsim::PCIE4);
+        assert_eq!(p3.n_devices(), 3);
+        assert_eq!(p3.home((0, 4)), 1);
+        // degenerate sharding stays single-device semantics
+        let one = SystemConfig::new(SystemKind::Floe).with_devices(1, ShardPolicy::Hash);
+        assert!(!one.coalesce && !one.spill);
     }
 
     #[test]

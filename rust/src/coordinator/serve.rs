@@ -24,7 +24,10 @@ use crate::engine::{DecodeState, Engine, LayerEvent, StepObserver};
 use crate::hwsim::PCIE4;
 use crate::predictor::{InterPredictor, IntraPredictor};
 use crate::sparsity;
-use crate::store::{CacheStats, ExpertStore, StallCause, StallSplit, WallClock};
+use crate::store::{
+    CacheStats, ExpertStore, Lookup, PlanMode, StallCause, StallSplit, TransferPlan,
+    WallClock,
+};
 use crate::transfer::{CompactExpert, TransferEngine};
 
 use super::policy::{SystemConfig, SystemKind};
@@ -140,9 +143,13 @@ impl FloePipeline {
             intra: HashMap::new(),
             compact,
             thresholds,
-            store: ExpertStore::with_virtual_clock(
+            // placement-aware: per-device budgets/buses from the system's
+            // --devices/--shard-policy configuration (1 device default)
+            store: ExpertStore::with_placement(
+                system.placement(PCIE4),
                 vram_expert_budget_bytes,
                 system.residency,
+                system.sparsity_decay,
             ),
             // 1 packing thread: inline packing avoids per-call thread-spawn
             // overhead at tiny-model transfer sizes (see transfer.rs)
@@ -188,27 +195,38 @@ impl FloePipeline {
             if !is_floe {
                 // baseline transfer semantics: full expert at the policy's
                 // precision, no channel selection, no next-layer overlap
-                if !self.store.access(key) {
-                    let d = self.compact[&key].record_len / 2;
-                    let f = self.compact[&key].f;
-                    let bytes = match self.system.kind {
-                        SystemKind::NaiveOffload | SystemKind::Fiddler => {
-                            3.0 * (d * f) as f64 * 2.0
-                        }
-                        SystemKind::AdvancedOffload => {
-                            3.0 * (d * f) as f64 * self.system.quant_bits as f64 / 8.0
-                        }
-                        SystemKind::GpuResident => 3.0 * (d * f) as f64 * 0.25,
-                        SystemKind::Floe => unreachable!(),
-                    };
-                    if self.system.kind == SystemKind::GpuResident {
-                        self.store.record_demand();
-                    } else {
-                        let ready =
-                            self.store.demand_fetch(PCIE4.copy_us(bytes), bytes);
+                match self.store.lookup(key) {
+                    Lookup::Local(_) => {}
+                    Lookup::Remote(from) => {
+                        // a spilled copy on a peer device: pull it over
+                        // the GPU↔GPU link instead of refetching
+                        let ready = self.store.peer_fetch(key, from);
                         self.store.stall_until_for(ready, StallCause::Demand);
                     }
-                    self.store.admit(key, bytes as usize);
+                    Lookup::Miss => {
+                        let dm = self.compact[&key].record_len / 2;
+                        let f = self.compact[&key].f;
+                        let bytes = match self.system.kind {
+                            SystemKind::NaiveOffload | SystemKind::Fiddler => {
+                                3.0 * (dm * f) as f64 * 2.0
+                            }
+                            SystemKind::AdvancedOffload => {
+                                3.0 * (dm * f) as f64 * self.system.quant_bits as f64
+                                    / 8.0
+                            }
+                            SystemKind::GpuResident => 3.0 * (dm * f) as f64 * 0.25,
+                            SystemKind::Floe => unreachable!(),
+                        };
+                        if self.system.kind == SystemKind::GpuResident {
+                            self.store.record_demand_for(key);
+                        } else {
+                            let ready = self
+                                .store
+                                .demand_fetch_for(key, PCIE4.copy_us(bytes), bytes);
+                            self.store.stall_until_for(ready, StallCause::Demand);
+                        }
+                        self.store.admit(key, bytes as usize);
+                    }
                 }
                 continue;
             }
@@ -219,51 +237,72 @@ impl FloePipeline {
                 let v = ip.channel_magnitudes(ev.h_mid);
                 sparsity::mask_from_activations(&v, t)
             };
-            if !self.store.access(key) {
-                let (ready_at, prefetched_mask) = match self.store.take_inflight(key) {
-                    Some((done, mask)) => (done, Some(mask)),
-                    None => {
-                        // demand fetch of the true channels (stalling)
-                        let sel: Vec<usize> = truth
-                            .iter()
-                            .enumerate()
-                            .filter(|(_, m)| **m)
-                            .map(|(j, _)| j)
-                            .collect();
-                        let rep = self.xfer.transfer_compact(
-                            &self.compact[&key],
-                            &sel,
-                            self.system.chunk_channels,
-                        );
-                        let done = self
-                            .store
-                            .demand_fetch(rep.total_us, rep.bytes as f64);
-                        (done, None)
-                    }
-                };
-                let cause = if let Some(mask) = prefetched_mask {
-                    // intra-recall accounting. Per the paper (§3.3.2) the
-                    // kernel proceeds with the *prefetched* channel set —
-                    // missed channels are an approximation, not a reload;
-                    // the recall stat quantifies it (paper: ~0.95).
-                    let rec = sparsity::mask_recall(&mask, &truth);
-                    self.pred.intra_recall_sum += rec;
-                    self.pred.intra_recall_n += 1;
-                    // predicted right, but the transfer landed late
-                    StallCause::PrefetchMiss
-                } else {
-                    StallCause::Demand
-                };
-                self.store.stall_until_for(ready_at, cause);
-                let bytes = sparsity::active_count(&truth) * self.record_bytes(key);
-                self.store.admit(key, bytes);
+            match self.store.lookup(key) {
+                Lookup::Local(_) => {}
+                Lookup::Remote(from) => {
+                    // full cached copy on a peer device — no channel
+                    // subset approximation, just the p2p move
+                    let ready = self.store.peer_fetch(key, from);
+                    self.store.stall_until_for(ready, StallCause::Demand);
+                }
+                Lookup::Miss => {
+                    let taken = self.store.take_inflight(key);
+                    let (ready_at, prefetched_mask) = match taken {
+                        Some((done, mask)) => (done, Some(mask)),
+                        None => {
+                            // demand fetch of the true channels (stalling)
+                            let sel: Vec<usize> = truth
+                                .iter()
+                                .enumerate()
+                                .filter(|(_, m)| **m)
+                                .map(|(j, _)| j)
+                                .collect();
+                            let rep = self.xfer.transfer_compact(
+                                &self.compact[&key],
+                                &sel,
+                                self.system.chunk_channels,
+                            );
+                            let done = self
+                                .store
+                                .demand_fetch_for(key, rep.total_us, rep.bytes as f64);
+                            (done, None)
+                        }
+                    };
+                    let cause = if let Some(mask) = prefetched_mask {
+                        // intra-recall accounting. Per the paper (§3.3.2)
+                        // the kernel proceeds with the *prefetched*
+                        // channel set — missed channels are an
+                        // approximation, not a reload; the recall stat
+                        // quantifies it (paper: ~0.95).
+                        let rec = sparsity::mask_recall(&mask, &truth);
+                        self.pred.intra_recall_sum += rec;
+                        self.pred.intra_recall_n += 1;
+                        // predicted right, but the transfer landed late
+                        StallCause::PrefetchMiss
+                    } else {
+                        StallCause::Demand
+                    };
+                    self.store.stall_until_for(ready_at, cause);
+                    let bytes = sparsity::active_count(&truth) * self.record_bytes(key);
+                    self.store.admit(key, bytes);
+                }
             }
         }
 
-        // ---- predict + prefetch layer l+1 (FloE only) ----
+        // ---- predict + prefetch layer l+1 (FloE only): one transfer
+        // plan per destination device, coalesced when the placement
+        // allows it ----
         if is_floe && l + 1 < self.n_layers {
             let preds = self.inter[l].predict(ev.h_mid, self.top_k);
             self.predicted[l + 1] = preds.clone();
+            let mode = if self.system.coalesce {
+                PlanMode::Coalesced
+            } else {
+                PlanMode::Overlapped
+            };
+            let mut plans: Vec<TransferPlan<Vec<bool>>> = (0..self.store.n_devices())
+                .map(|dst| TransferPlan::to(dst, mode))
+                .collect();
             for e in preds {
                 let key = (l + 1, e);
                 if self.store.contains(key) || self.store.inflight(key) {
@@ -285,10 +324,20 @@ impl FloePipeline {
                     &sel,
                     self.system.chunk_channels,
                 );
-                // prefetch overlaps with compute: queue on the bus, track
-                // in flight, pin any resident copy until consumed
-                self.store
-                    .begin_prefetch(key, rep.total_us, rep.bytes as f64, mask);
+                // overlaps with compute: queue on the destination bus,
+                // track in flight, pin any resident copy until consumed
+                plans[self.store.home(key)].push(
+                    key,
+                    rep.bytes as f64,
+                    rep.total_us,
+                    PCIE4.api_us,
+                    mask,
+                );
+            }
+            for plan in plans {
+                if !plan.is_empty() {
+                    self.store.submit(plan);
+                }
             }
         }
 
@@ -336,7 +385,7 @@ impl FloePipeline {
         self.store.take_attribution(id)
     }
 
-    pub fn cache_stats(&self) -> &CacheStats {
+    pub fn cache_stats(&self) -> CacheStats {
         self.store.cache_stats()
     }
     pub fn store(&self) -> &ExpertStore<Vec<bool>> {

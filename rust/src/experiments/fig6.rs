@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use crate::config::ResidencyKind;
+use crate::config::{ResidencyKind, ShardPolicy};
 use crate::coordinator::policy::{SystemConfig, SystemKind};
 use crate::coordinator::sim::{simulate, SimParams};
 use crate::hwsim::RTX3090;
@@ -18,11 +18,25 @@ use super::{jarr, jnum, jobj, jstr, save_json};
 
 pub const LENGTHS: [(usize, usize); 4] = [(32, 64), (64, 128), (64, 256), (128, 512)];
 
-pub fn run(vram_gb: f64, residency: ResidencyKind) -> Result<()> {
+/// `--devices 1` (any shard policy) leaves the system config — and the
+/// JSON this writes — bit-identical to the pre-placement code
+/// (`sparsity_decay` only shapes the `sparsity` residency policy).
+pub fn run(
+    vram_gb: f64,
+    residency: ResidencyKind,
+    devices: usize,
+    shard: ShardPolicy,
+    sparsity_decay: f64,
+) -> Result<()> {
+    let sharded_note = if devices > 1 {
+        format!(", {} x {:.0} GB sharded ({})", devices, vram_gb, shard.name())
+    } else {
+        String::new()
+    };
     let mut t = Table::new(
         &format!(
             "Fig 6 — decode TPS, Mixtral-8x7B on RTX-3090 @ {vram_gb:.0} GB VRAM \
-             (simulated, {} residency)",
+             (simulated, {} residency{sharded_note})",
             residency.name()
         ),
         &["system", "in32/out64", "in64/out128", "in64/out256", "in128/out512",
@@ -31,11 +45,10 @@ pub fn run(vram_gb: f64, residency: ResidencyKind) -> Result<()> {
     let mut js = Vec::new();
     let mut results: Vec<(SystemKind, Vec<f64>)> = Vec::new();
     for kind in SystemKind::ALL {
-        let p = SimParams::mixtral_on(
-            RTX3090.clone(),
-            SystemConfig::with_residency(kind, residency),
-            vram_gb,
-        );
+        let mut system =
+            SystemConfig::with_residency(kind, residency).with_devices(devices, shard);
+        system.sparsity_decay = sparsity_decay;
+        let p = SimParams::mixtral_on(RTX3090.clone(), system, vram_gb);
         let tps: Vec<f64> = LENGTHS
             .iter()
             .map(|&(i, o)| simulate(&p, i, o).tps)

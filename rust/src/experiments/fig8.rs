@@ -8,7 +8,7 @@
 
 use anyhow::Result;
 
-use crate::config::ResidencyKind;
+use crate::config::{ResidencyKind, ShardPolicy};
 use crate::coordinator::policy::{SystemConfig, SystemKind};
 use crate::coordinator::sim::{simulate, SimParams};
 use crate::hwsim::RTX3090;
@@ -18,11 +18,24 @@ use super::{jarr, jnum, jobj, jstr, save_json};
 
 pub const VRAM_GB: [f64; 5] = [12.0, 14.0, 16.0, 20.0, 24.0];
 
-pub fn run(residency: ResidencyKind) -> Result<()> {
+/// `--devices 1` (any shard policy) leaves the system config — and the
+/// JSON this writes — bit-identical to the pre-placement code
+/// (`sparsity_decay` only shapes the `sparsity` residency policy).
+pub fn run(
+    residency: ResidencyKind,
+    devices: usize,
+    shard: ShardPolicy,
+    sparsity_decay: f64,
+) -> Result<()> {
+    let sharded_note = if devices > 1 {
+        format!(", {} devices sharded ({}), VRAM per device", devices, shard.name())
+    } else {
+        String::new()
+    };
     let mut t = Table::new(
         &format!(
             "Fig 8 — TPS vs VRAM budget (in 64 / out 256, RTX-3090, simulated, \
-             {} residency)",
+             {} residency{sharded_note})",
             residency.name()
         ),
         &["system", "12GB", "14GB", "16GB", "20GB", "24GB", "24GB vs GPU"],
@@ -34,11 +47,10 @@ pub fn run(residency: ResidencyKind) -> Result<()> {
         let tps: Vec<f64> = VRAM_GB
             .iter()
             .map(|&v| {
-                let p = SimParams::mixtral_on(
-                    RTX3090.clone(),
-                    SystemConfig::with_residency(kind, residency),
-                    v,
-                );
+                let mut system = SystemConfig::with_residency(kind, residency)
+                    .with_devices(devices, shard);
+                system.sparsity_decay = sparsity_decay;
+                let p = SimParams::mixtral_on(RTX3090.clone(), system, v);
                 simulate(&p, 64, 256).tps
             })
             .collect();
@@ -73,8 +85,9 @@ pub fn run(residency: ResidencyKind) -> Result<()> {
 
 /// One sweep comparing the three ExpertStore residency policies: FloE and
 /// the cache-heavy AdvancedOffload baseline across the VRAM budgets, TPS
-/// and expert-cache hit rate side by side.
-pub fn run_policy_sweep() -> Result<()> {
+/// and expert-cache hit rate side by side. `sparsity_decay` tunes the
+/// sparsity policy's activation EMA (`--sparsity-decay`).
+pub fn run_policy_sweep(sparsity_decay: f64) -> Result<()> {
     let mut js = Vec::new();
     for kind in [SystemKind::Floe, SystemKind::AdvancedOffload] {
         let mut t = Table::new(
@@ -88,11 +101,9 @@ pub fn run_policy_sweep() -> Result<()> {
         );
         for residency in ResidencyKind::ALL {
             let at = |v: f64| {
-                let p = SimParams::mixtral_on(
-                    RTX3090.clone(),
-                    SystemConfig::with_residency(kind, residency),
-                    v,
-                );
+                let mut system = SystemConfig::with_residency(kind, residency);
+                system.sparsity_decay = sparsity_decay;
+                let p = SimParams::mixtral_on(RTX3090.clone(), system, v);
                 simulate(&p, 64, 256)
             };
             let (a, b, c) = (at(12.0), at(16.0), at(24.0));

@@ -9,6 +9,7 @@ pub mod fig6;
 pub mod fig7;
 pub mod fig8;
 pub mod serveload;
+pub mod shard;
 pub mod table1;
 pub mod table3;
 pub mod table7;

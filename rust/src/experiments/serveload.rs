@@ -13,7 +13,7 @@
 
 use anyhow::Result;
 
-use crate::config::ResidencyKind;
+use crate::config::{ResidencyKind, ShardPolicy};
 use crate::coordinator::policy::{SystemConfig, SystemKind};
 use crate::coordinator::sim::{simulate_serving, RoutingModel, ServeSimReport, SimParams};
 use crate::hwsim::RTX3090;
@@ -60,12 +60,27 @@ pub fn workload_at(
     })
 }
 
-pub fn run(residency: ResidencyKind, n_requests: usize, seed: u64, vram_gb: f64) -> Result<()> {
-    let p = sweep_params(residency, vram_gb);
+pub fn run(
+    residency: ResidencyKind,
+    n_requests: usize,
+    seed: u64,
+    vram_gb: f64,
+    devices: usize,
+    shard: ShardPolicy,
+    sparsity_decay: f64,
+) -> Result<()> {
+    let mut p = sweep_params(residency, vram_gb);
+    p.system = p.system.clone().with_devices(devices, shard);
+    p.system.sparsity_decay = sparsity_decay;
+    let sharded_note = if devices > 1 {
+        format!(" x {devices} devices ({})", shard.name())
+    } else {
+        String::new()
+    };
     let mut t = Table::new(
         &format!(
-            "Serve-load sweep — FloE, RTX-3090, {vram_gb} GB, skewed routing, \
-             {n_requests} requests, {} residency (simulated)",
+            "Serve-load sweep — FloE, RTX-3090, {vram_gb} GB{sharded_note}, skewed \
+             routing, {n_requests} requests, {} residency (simulated)",
             residency.name()
         ),
         &["rate req/s", "batch cap", "agg tok/s", "mean wait ms",

@@ -88,6 +88,42 @@ pub const PCIE4: PcieSpec = PcieSpec {
     pageable_gbps: 2.6,
 };
 
+/// GPU↔GPU peer link (PCIe switch P2P / NVLink-class): roughly twice the
+/// host-link bandwidth and lower per-copy overhead, since peer copies skip
+/// the host staging + pinning path. Used by the placement-aware
+/// `ExpertStore` for cross-device expert movement (spill + remote hits).
+pub const P2P_LINK: PcieSpec = PcieSpec {
+    gbps: 50.0,
+    api_us: 6.0,
+    pageable_gbps: 50.0,
+};
+
+/// Multi-device transfer topology for the placement-aware `ExpertStore`
+/// (DESIGN.md §3): `n_devices` GPUs, each with its own dedicated
+/// host→device link (`h2d`, independent busy-until timelines), joined by
+/// a shared-spec peer link (`p2p`) for GPU↔GPU copies.
+#[derive(Clone, Debug)]
+pub struct TopologySpec {
+    pub n_devices: usize,
+    /// host → device link each device owns (dedicated PCIe lanes)
+    pub h2d: PcieSpec,
+    /// device ↔ device peer link (P2P through the switch / NVLink-class)
+    pub p2p: PcieSpec,
+}
+
+impl TopologySpec {
+    /// The pre-placement world: one device behind one host link.
+    pub fn single(h2d: PcieSpec) -> Self {
+        Self::uniform(1, h2d)
+    }
+
+    /// `n` identical devices, each with its own `h2d` link, fully
+    /// connected over `P2P_LINK`.
+    pub fn uniform(n: usize, h2d: PcieSpec) -> Self {
+        TopologySpec { n_devices: n.max(1), h2d, p2p: P2P_LINK }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct CpuSpec {
     pub name: &'static str,
@@ -270,6 +306,17 @@ mod tests {
     fn pageable_slower_than_pinned() {
         let b = 1e8;
         assert!(PCIE4.copy_pageable_us(b) > 3.0 * PCIE4.copy_us(b));
+    }
+
+    #[test]
+    fn topology_peer_link_beats_host_link() {
+        let t = TopologySpec::uniform(4, PCIE4);
+        assert_eq!(t.n_devices, 4);
+        let b = 2e7;
+        assert!(t.p2p.copy_us(b) < t.h2d.copy_us(b));
+        // degenerate spec is clamped to one device
+        assert_eq!(TopologySpec::uniform(0, PCIE4).n_devices, 1);
+        assert_eq!(TopologySpec::single(PCIE4).n_devices, 1);
     }
 
     #[test]

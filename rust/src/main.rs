@@ -11,7 +11,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
-use floe::config::{ExpertMode, ResidencyKind};
+use floe::config::{ExpertMode, ResidencyKind, ShardPolicy};
 use floe::coordinator::policy::{SystemConfig, SystemKind};
 use floe::engine::{ComputePath, Engine, NoObserver};
 use floe::experiments as exp;
@@ -72,6 +72,15 @@ impl Args {
     fn residency(&self) -> Result<ResidencyKind> {
         ResidencyKind::parse(self.get("policy").unwrap_or("lru"))
     }
+    fn devices(&self) -> usize {
+        self.usize("devices", 1).max(1)
+    }
+    fn shard(&self) -> Result<ShardPolicy> {
+        ShardPolicy::parse(self.get("shard-policy").unwrap_or("layer"))
+    }
+    fn sparsity_decay(&self) -> f64 {
+        self.f64("sparsity-decay", floe::store::DEFAULT_SPARSITY_DECAY)
+    }
     fn budget(&self) -> EvalBudget {
         EvalBudget {
             n_bytes: self.usize("eval-bytes", 768),
@@ -122,8 +131,10 @@ fn main() -> Result<()> {
                 "resident" => SystemKind::GpuResident,
                 other => bail!("unknown system {other}"),
             };
-            let mut system = SystemConfig::with_residency(kind, args.residency()?);
+            let mut system = SystemConfig::with_residency(kind, args.residency()?)
+                .with_devices(args.devices(), args.shard()?);
             system.sparsity = args.f64("level", 0.8);
+            system.sparsity_decay = args.sparsity_decay();
             let opts = floe::server::ServerOpts {
                 port: args.usize("port", 7399) as u16,
                 system,
@@ -169,19 +180,38 @@ fn main() -> Result<()> {
         "exp-fig3b" => exp::fig3::run_fig3b(&art, &args.budget())?,
         "exp-fig4" => exp::fig4::run(&art)?,
         "exp-fig6" => {
-            exp::fig6::run(args.f64("vram", 12.0), args.residency()?)?;
+            exp::fig6::run(
+                args.f64("vram", 12.0),
+                args.residency()?,
+                args.devices(),
+                args.shard()?,
+                args.sparsity_decay(),
+            )?;
             if args.get("real").is_some() {
                 exp::fig6::run_real(&art, args.usize("tokens", 48), args.residency()?)?;
             }
         }
         "exp-fig7" => exp::fig7::run(&art)?,
-        "exp-fig8" => exp::fig8::run(args.residency()?)?,
-        "exp-policy-sweep" => exp::fig8::run_policy_sweep()?,
+        "exp-fig8" => exp::fig8::run(
+            args.residency()?,
+            args.devices(),
+            args.shard()?,
+            args.sparsity_decay(),
+        )?,
+        "exp-policy-sweep" => exp::fig8::run_policy_sweep(args.sparsity_decay())?,
         "exp-serve-load" => exp::serveload::run(
             args.residency()?,
             args.usize("requests", 16),
             args.usize("seed", 7) as u64,
             args.f64("vram", exp::serveload::DEFAULT_VRAM_GB),
+            args.devices(),
+            args.shard()?,
+            args.sparsity_decay(),
+        )?,
+        "exp-shard-sweep" => exp::shard::run(
+            args.residency()?,
+            args.usize("seed", 7) as u64,
+            args.sparsity_decay(),
         )?,
         "exp-fig9" => exp::table3::run_fig9(&art, &args.budget(), args.usize("probes", 12))?,
         "exp-table1" => exp::table1::run(&art)?,
@@ -189,15 +219,18 @@ fn main() -> Result<()> {
         "exp-compression" => exp::table7::run_compression(&art)?,
         "exp-all" => {
             let b = args.budget();
+            let decay = floe::store::DEFAULT_SPARSITY_DECAY;
             exp::fig2::run(&art)?;
             exp::table1::run(&art)?;
             exp::fig7::run(&art)?;
-            exp::fig6::run(12.0, ResidencyKind::Lru)?;
+            exp::fig6::run(12.0, ResidencyKind::Lru, 1, ShardPolicy::Layer, decay)?;
             exp::fig6::run_real(&art, 32, ResidencyKind::Lru)?;
-            exp::fig8::run(ResidencyKind::Lru)?;
-            exp::fig8::run_policy_sweep()?;
+            exp::fig8::run(ResidencyKind::Lru, 1, ShardPolicy::Layer, decay)?;
+            exp::fig8::run_policy_sweep(decay)?;
+            exp::shard::run(ResidencyKind::Lru, 7, decay)?;
             exp::serveload::run(
                 ResidencyKind::Lru, 16, 7, exp::serveload::DEFAULT_VRAM_GB,
+                1, ShardPolicy::Layer, decay,
             )?;
             exp::fig4::run(&art)?;
             exp::table7::run_compression(&art)?;
@@ -206,16 +239,21 @@ fn main() -> Result<()> {
             exp::table3::run(&art, &b, args.usize("probes", 20))?;
             exp::table3::run_fig9(&art, &b, args.usize("probes", 12))?;
         }
-        "help" | _ => {
+        _ => {
             println!(
                 "floe — FloE (ICML 2025) reproduction\n\n\
                  usage: floe <cmd> [--flag value]...\n\n\
                  cmds: generate serve eval exp-fig2 exp-fig3a exp-fig3b \
                  exp-fig4 exp-fig6 exp-fig7 exp-fig8 exp-fig9 exp-policy-sweep \
-                 exp-serve-load exp-table1 exp-table3 exp-compression exp-all\n\n\
+                 exp-serve-load exp-shard-sweep exp-table1 exp-table3 \
+                 exp-compression exp-all\n\n\
                  common flags: --mode dense|sparse|floe|cats|chess|uniform \
                  --level 0.8 --bits 2 --policy lru|lfu|sparsity \
-                 --prompt '...' --tokens 48\n\
+                 --sparsity-decay 0.999 --prompt '...' --tokens 48\n\
+                 placement flags (serve, exp-fig6/8, exp-serve-load): \
+                 --devices 1 --shard-policy layer|expert|hash \
+                 (VRAM budgets are per device; --devices 1 reproduces the \
+                 single-GPU numbers exactly)\n\
                  serve flags: --backend real|sim --max-batch 8 --gather-ms 0 \
                  --port 7399 --max-requests 0\n\
                  env: FLOE_ARTIFACTS (default ./artifacts)"

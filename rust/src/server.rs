@@ -27,19 +27,20 @@
 //! the in-flight decode batch at token boundaries, FIFO up to
 //! `--max-batch`; finished sequences retire and are answered immediately.
 //! Responses on a pipelined connection can therefore complete out of
-//! order: correlate with the echoed `tag`. Writes to one connection are
-//! serialized by a per-connection mutex (reader-thread error replies vs
-//! coordinator responses). A slow reader blocks only its own connection's
-//! reader thread; a slow writer can briefly block the coordinator
-//! (responses are one short line).
+//! order: correlate with the echoed `tag`. Each connection also owns a
+//! *writer thread* fed by a channel: the coordinator and the reader
+//! thread (inline error replies) enqueue lines and never touch the
+//! socket, so a slow or stalled client can no longer block a token
+//! boundary — it only backs up its own connection's queue. Line order on
+//! one connection is the channel order (single writer drains it).
 
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -80,16 +81,81 @@ impl Default for ServerOpts {
     }
 }
 
-/// Per-connection write half, shared by the reader thread (inline error
-/// replies) and the coordinator (responses) — the mutex serializes their
-/// writes so response lines never tear.
-type ConnWriter = Arc<Mutex<TcpStream>>;
+/// Handle to a connection's writer thread, shared by the reader thread
+/// (inline error replies) and the coordinator (responses). `send_line`
+/// only enqueues — the socket write happens on the connection's own
+/// writer thread, so the coordinator never blocks on a slow client. The
+/// pending counter + condvar let the server drain queued responses
+/// before a `--max-requests` exit.
+#[derive(Clone)]
+struct ConnTx {
+    tx: mpsc::Sender<String>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+}
+
+impl ConnTx {
+    /// Spawn the connection's writer thread over its own clone of the
+    /// stream.
+    fn spawn(stream: TcpStream) -> ConnTx {
+        let (tx, rx) = mpsc::channel::<String>();
+        let pending: Arc<(Mutex<usize>, Condvar)> =
+            Arc::new((Mutex::new(0), Condvar::new()));
+        let counter = Arc::clone(&pending);
+        thread::spawn(move || {
+            let mut out = BufWriter::new(stream);
+            let mut dead = false;
+            // exits when every sender (reader thread + response routes)
+            // has dropped its handle
+            while let Ok(line) = rx.recv() {
+                if !dead {
+                    if let Err(e) = writeln!(out, "{line}").and_then(|_| out.flush()) {
+                        eprintln!("response write failed: {e}");
+                        dead = true; // keep draining so pending counts settle
+                    }
+                }
+                let (lock, cv) = &*counter;
+                *lock.lock().unwrap() -= 1;
+                cv.notify_all();
+            }
+        });
+        ConnTx { tx, pending }
+    }
+
+    /// Queue one response line; never blocks on the socket.
+    fn send_line(&self, line: String) {
+        let (lock, cv) = &*self.pending;
+        *lock.lock().unwrap() += 1;
+        if self.tx.send(line).is_err() {
+            // writer thread gone (only possible once all senders dropped
+            // — defensive): roll the count back
+            *lock.lock().unwrap() -= 1;
+            cv.notify_all();
+        }
+    }
+
+    /// Block (bounded) until the writer has drained everything queued so
+    /// far — used before a `--max-requests` exit so final responses are
+    /// on the wire before the process goes away.
+    fn drain(&self, timeout: Duration) {
+        let (lock, cv) = &*self.pending;
+        let deadline = Instant::now() + timeout;
+        let mut n = lock.lock().unwrap();
+        while *n > 0 {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return;
+            }
+            let (guard, _) = cv.wait_timeout(n, left).unwrap();
+            n = guard;
+        }
+    }
+}
 
 /// A parsed request en route from a reader thread to the coordinator.
 struct Inbound {
     req: Request,
     tag: Option<Json>,
-    conn: ConnWriter,
+    conn: ConnTx,
     /// reader-side arrival stamp: queue wait includes time spent in the
     /// mpsc channel and the gather window, not just the scheduler queue
     arrival: Instant,
@@ -138,7 +204,10 @@ pub fn serve_on<B: SeqBackend>(listener: TcpListener, backend: B, opts: &ServerO
 
     let mut sched = Scheduler::new(backend, opts.max_batch);
     // per-request response route: connection + echoed tag
-    let mut routes: HashMap<u64, (ConnWriter, Option<Json>)> = HashMap::new();
+    let mut routes: HashMap<u64, (ConnTx, Option<Json>)> = HashMap::new();
+    // connections with responses in flight, drained before a capped exit
+    // (bounded: only tracked when max_requests > 0)
+    let mut to_drain: Vec<ConnTx> = Vec::new();
     let mut served = 0usize;
     loop {
         if !sched.has_work() {
@@ -160,10 +229,18 @@ pub fn serve_on<B: SeqBackend>(listener: TcpListener, backend: B, opts: &ServerO
             admit(&mut sched, &mut routes, inb);
         }
         for done in sched.step() {
-            respond(&mut routes, &done);
+            if let Some(conn) = respond(&mut routes, &done) {
+                if opts.max_requests > 0 {
+                    to_drain.push(conn);
+                }
+            }
             served += 1;
         }
         if opts.max_requests > 0 && served >= opts.max_requests {
+            // let the writer threads flush the final responses
+            for conn in &to_drain {
+                conn.drain(Duration::from_secs(2));
+            }
             return Ok(());
         }
     }
@@ -171,7 +248,7 @@ pub fn serve_on<B: SeqBackend>(listener: TcpListener, backend: B, opts: &ServerO
 
 fn admit<B: SeqBackend>(
     sched: &mut Scheduler<B>,
-    routes: &mut HashMap<u64, (ConnWriter, Option<Json>)>,
+    routes: &mut HashMap<u64, (ConnTx, Option<Json>)>,
     inb: Inbound,
 ) {
     routes.insert(inb.req.id, (inb.conn, inb.tag));
@@ -182,11 +259,15 @@ fn admit<B: SeqBackend>(
     sched.enqueue_at(inb.req, arrival_us);
 }
 
-/// Write the response (or per-request error) line; a dead client must
-/// not take the server down.
-fn respond(routes: &mut HashMap<u64, (ConnWriter, Option<Json>)>, c: &ServeCompletion) {
+/// Queue the response (or per-request error) line on the connection's
+/// writer thread; a dead or slow client must not block the coordinator.
+/// Returns the connection handle so a capped server can drain it.
+fn respond(
+    routes: &mut HashMap<u64, (ConnTx, Option<Json>)>,
+    c: &ServeCompletion,
+) -> Option<ConnTx> {
     let Some((conn, tag)) = routes.remove(&c.id) else {
-        return;
+        return None;
     };
     let resp = match &c.error {
         Some(msg) => {
@@ -202,10 +283,8 @@ fn respond(routes: &mut HashMap<u64, (ConnWriter, Option<Json>)>, c: &ServeCompl
         }
         None => response_json(c, tag),
     };
-    let Ok(mut conn) = conn.lock() else { return };
-    if let Err(e) = writeln!(conn, "{}", jwrite(&resp)) {
-        eprintln!("response write failed for request {}: {e}", c.id);
-    }
+    conn.send_line(jwrite(&resp));
+    Some(conn)
 }
 
 fn response_json(c: &ServeCompletion, tag: Option<Json>) -> Json {
@@ -239,11 +318,11 @@ fn accept_loop(listener: TcpListener, tx: mpsc::Sender<Inbound>) {
 }
 
 /// Per-connection reader: parse request lines into the admission queue;
-/// answer malformed lines inline with an error object (serialized with
-/// the coordinator's responses via the shared connection mutex).
+/// answer malformed lines inline with an error object (ordered with the
+/// coordinator's responses by the connection's writer-thread channel).
 fn reader_loop(stream: TcpStream, tx: mpsc::Sender<Inbound>, ids: Arc<AtomicU64>) {
-    let Ok(writer) = stream.try_clone() else { return };
-    let writer: ConnWriter = Arc::new(Mutex::new(writer));
+    let Ok(write_half) = stream.try_clone() else { return };
+    let writer = ConnTx::spawn(write_half);
     let reader = BufReader::new(stream);
     for line in reader.lines() {
         let Ok(line) = line else { break };
@@ -256,7 +335,7 @@ fn reader_loop(stream: TcpStream, tx: mpsc::Sender<Inbound>, ids: Arc<AtomicU64>
                 let inb = Inbound {
                     req,
                     tag,
-                    conn: Arc::clone(&writer),
+                    conn: writer.clone(),
                     arrival: Instant::now(),
                 };
                 if tx.send(inb).is_err() {
@@ -267,10 +346,7 @@ fn reader_loop(stream: TcpStream, tx: mpsc::Sender<Inbound>, ids: Arc<AtomicU64>
                 let err = Json::Obj(
                     [("error".to_string(), Json::Str(format!("{e:#}")))].into(),
                 );
-                let Ok(mut w) = writer.lock() else { break };
-                if writeln!(w, "{}", jwrite(&err)).is_err() {
-                    break;
-                }
+                writer.send_line(jwrite(&err));
             }
         }
     }

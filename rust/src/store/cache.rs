@@ -12,7 +12,7 @@ use std::collections::HashMap;
 
 use crate::config::ResidencyKind;
 
-use super::policy::{build_policy, ResidencyPolicy};
+use super::policy::{build_policy, ResidencyPolicy, DEFAULT_SPARSITY_DECAY};
 use super::ExpertKey;
 
 #[derive(Debug, Clone)]
@@ -52,7 +52,13 @@ pub struct ResidentSet {
 
 impl ResidentSet {
     pub fn new(budget_bytes: usize, kind: ResidencyKind) -> Self {
-        Self::with_policy(budget_bytes, build_policy(kind))
+        Self::with_policy(budget_bytes, build_policy(kind, DEFAULT_SPARSITY_DECAY))
+    }
+
+    /// `new` with an explicit sparsity-policy decay constant
+    /// (`--sparsity-decay`); other policies ignore it.
+    pub fn new_tuned(budget_bytes: usize, kind: ResidencyKind, sparsity_decay: f64) -> Self {
+        Self::with_policy(budget_bytes, build_policy(kind, sparsity_decay))
     }
 
     pub fn with_policy(budget_bytes: usize, policy: Box<dyn ResidencyPolicy>) -> Self {
@@ -84,6 +90,20 @@ impl ResidentSet {
     pub fn contains(&self, key: ExpertKey) -> bool {
         self.entries.contains_key(&key)
     }
+    /// Resident size of `key`, if resident.
+    pub fn bytes_of(&self, key: ExpertKey) -> Option<usize> {
+        self.entries.get(&key).map(|e| e.bytes)
+    }
+    /// Unused budget, bytes.
+    pub fn free_bytes(&self) -> usize {
+        self.budget - self.used
+    }
+    /// The policy's admission filter: is `key` cache-worthy right now?
+    /// (`insert` itself never consults this — warm/pinned paths bypass
+    /// the filter; `ExpertStore::admit` applies it.)
+    pub fn would_admit(&self, key: ExpertKey) -> bool {
+        self.policy.admits(key)
+    }
 
     /// Routing selected `key` this step — popularity signal for
     /// sparsity-aware policies. Does not touch hit/miss accounting.
@@ -109,24 +129,45 @@ impl ResidentSet {
     /// entries as needed. Returns false if the entry cannot fit even
     /// after evicting everything unpinned.
     pub fn insert(&mut self, key: ExpertKey, bytes: usize) -> bool {
+        self.insert_evicting(key, bytes).0
+    }
+
+    /// `insert`, also returning the (key, bytes) of every entry evicted
+    /// to make room — the hook the sharded store uses to spill victims to
+    /// peer devices instead of dropping them.
+    pub fn insert_evicting(
+        &mut self,
+        key: ExpertKey,
+        bytes: usize,
+    ) -> (bool, Vec<(ExpertKey, usize)>) {
         self.clock += 1;
+        let mut evicted = Vec::new();
         if let Some(old) = self.entries.remove(&key) {
             self.used -= old.bytes;
             self.policy.on_remove(key);
         }
         if bytes > self.budget {
-            return false;
+            return (false, evicted);
         }
         while self.used + bytes > self.budget {
-            if !self.evict_one() {
-                return false;
+            match self.evict_one() {
+                Some(victim) => evicted.push(victim),
+                None => return (false, evicted),
             }
         }
         self.used += bytes;
         self.stats.inserted_bytes += bytes as u64;
         self.entries.insert(key, Entry { bytes, pinned: false });
         self.policy.on_insert(key, self.clock);
-        true
+        (true, evicted)
+    }
+
+    /// Remove `key` without counting an eviction (cross-device migration).
+    pub fn remove(&mut self, key: ExpertKey) -> Option<usize> {
+        let e = self.entries.remove(&key)?;
+        self.used -= e.bytes;
+        self.policy.on_remove(key);
+        Some(e.bytes)
     }
 
     /// Pin/unpin an entry (prefetched-for-imminent-use protection).
@@ -142,7 +183,7 @@ impl ResidentSet {
         }
     }
 
-    fn evict_one(&mut self) -> bool {
+    fn evict_one(&mut self) -> Option<(ExpertKey, usize)> {
         let candidates: Vec<ExpertKey> = self
             .entries
             .iter()
@@ -155,9 +196,9 @@ impl ResidentSet {
                 self.used -= e.bytes;
                 self.policy.on_remove(k);
                 self.stats.evictions += 1;
-                true
+                Some((k, e.bytes))
             }
-            None => false,
+            None => None,
         }
     }
 
@@ -199,6 +240,26 @@ mod tests {
             assert!(c.contains((0, 0)), "{}", c.policy_name());
             assert!(!c.contains((0, 1)), "{}", c.policy_name());
         }
+    }
+
+    #[test]
+    fn insert_evicting_reports_victims_and_remove_is_not_an_eviction() {
+        let mut c = ResidentSet::new(200, ResidencyKind::Lru);
+        assert!(c.insert((0, 0), 100));
+        assert!(c.insert((0, 1), 100));
+        assert_eq!(c.bytes_of((0, 0)), Some(100));
+        assert_eq!(c.free_bytes(), 0);
+        let (ok, evicted) = c.insert_evicting((0, 2), 150);
+        assert!(ok);
+        // LRU evicts both older entries to fit 150
+        assert_eq!(evicted, vec![((0, 0), 100), ((0, 1), 100)]);
+        assert_eq!(c.stats.evictions, 2);
+        assert_eq!(c.remove((0, 2)), Some(150));
+        assert_eq!(c.remove((0, 2)), None);
+        assert_eq!(c.used(), 0);
+        assert_eq!(c.stats.evictions, 2, "remove must not count as eviction");
+        // non-sparsity policies admit anything
+        assert!(c.would_admit((9, 9)));
     }
 
     #[test]

@@ -1,39 +1,58 @@
 //! ExpertStore — the expert-residency subsystem (DESIGN.md §3).
 //!
 //! Owns everything between "the router picked expert e" and "expert e's
-//! bytes are in VRAM": the byte-budgeted resident set with pluggable
-//! eviction policies (`cache`/`policy`), the shared prefetch pipeline
-//! with in-flight tracking and stall attribution over a busy-until PCIe
-//! timeline (`prefetch`), and the clock abstraction that lets the same
-//! code run on the simulator's virtual timeline and the serving path's
-//! wall-anchored one (`clock`).
+//! bytes are usable in VRAM", across however many devices the placement
+//! spans: per-device byte-budgeted resident sets with pluggable eviction
+//! policies (`cache`/`policy`), the shared prefetch pipeline with
+//! in-flight tracking and stall attribution over per-device busy-until
+//! bus timelines (`prefetch`), the placement layer — shard policy, device
+//! topology, batched `TransferPlan`s (`placement`) — and the clock
+//! abstraction that lets the same code run on the simulator's virtual
+//! timeline and the serving path's wall-anchored one (`clock`).
 //!
 //! Both coordinators — `coordinator::serve` (real PJRT compute) and
 //! `coordinator::sim` (discrete-event Figs 6/8) — are thin clients of
 //! this store, so the paper's residency mechanism is exercised by one
 //! code path everywhere. Predictors stay outside: callers decide *what*
-//! to prefetch; the store decides what is resident, what is in flight,
-//! and who pays for waiting.
+//! to prefetch and *how long* a solo copy takes; the store decides where
+//! bytes live (home devices, spill, peer fetches), how batched plans
+//! occupy the buses (coalescing), what is in flight, and who pays for
+//! waiting.
+//!
+//! The single-device configuration (`Placement::single()`, the default
+//! constructors) executes operation-for-operation what the pre-placement
+//! scalar API did — `--devices 1 --policy lru` reproduces the old
+//! Fig-6/8 numbers bit-exactly (pinned by the reference test in
+//! `tests/shard_store.rs`).
 
 pub mod cache;
 pub mod clock;
+pub mod placement;
 pub mod policy;
 pub mod prefetch;
 
 pub use cache::{CacheStats, ResidentSet};
 pub use clock::{Clock, VirtualClock, WallClock};
-pub use policy::{build_policy, LfuPolicy, LruPolicy, ResidencyPolicy, SparsityPolicy};
-pub use prefetch::{PinnedPool, PrefetchPipeline, StallCause, StallSplit, StoreStats};
+pub use placement::{DeviceId, Lookup, Placement, PlanMode, TransferItem, TransferPlan};
+pub use policy::{
+    build_policy, LfuPolicy, LruPolicy, ResidencyPolicy, SparsityPolicy,
+    DEFAULT_SPARSITY_DECAY, SPARSITY_MIN_ADMIT,
+};
+pub use prefetch::{
+    DeviceStats, PinnedPool, PrefetchPipeline, StallCause, StallSplit, StoreStats,
+};
 
-pub use crate::config::ResidencyKind;
+pub use crate::config::{ResidencyKind, ShardPolicy};
 
 pub type ExpertKey = (usize, usize); // (layer, expert)
 
-/// Unified residency facade: resident set + prefetch pipeline + clock.
-/// `P` is the per-transfer payload attached to in-flight prefetches.
+/// Unified residency facade: per-device resident sets + prefetch pipeline
+/// + placement + clock. `P` is the per-transfer payload attached to
+/// in-flight prefetches.
 pub struct ExpertStore<P = ()> {
-    cache: ResidentSet,
+    devices: Vec<ResidentSet>,
     prefetch: PrefetchPipeline<P>,
+    placement: Placement,
     clock: Box<dyn Clock>,
     /// requester id stalls are currently attributed to (serving: the
     /// request being decoded; sim/warmup: `StoreStats::UNATTRIBUTED`)
@@ -41,28 +60,78 @@ pub struct ExpertStore<P = ()> {
 }
 
 impl<P> ExpertStore<P> {
+    /// Single-device store (the pre-placement world).
     pub fn new(budget_bytes: usize, kind: ResidencyKind, clock: Box<dyn Clock>) -> Self {
+        Self::build(Placement::single(), budget_bytes, kind, DEFAULT_SPARSITY_DECAY, clock)
+    }
+
+    /// The general constructor: `placement` devices, each with its own
+    /// `budget_per_device` bytes and an independent instance of the
+    /// eviction policy (`sparsity_decay` tunes the sparsity policy's
+    /// activation EMA; other policies ignore it).
+    pub fn build(
+        placement: Placement,
+        budget_per_device: usize,
+        kind: ResidencyKind,
+        sparsity_decay: f64,
+        clock: Box<dyn Clock>,
+    ) -> Self {
+        let n = placement.n_devices();
         ExpertStore {
-            cache: ResidentSet::new(budget_bytes, kind),
-            prefetch: PrefetchPipeline::new(),
+            devices: (0..n)
+                .map(|_| ResidentSet::new_tuned(budget_per_device, kind, sparsity_decay))
+                .collect(),
+            prefetch: PrefetchPipeline::new(n),
+            placement,
             clock,
             attr: StoreStats::UNATTRIBUTED,
         }
     }
 
-    /// Store over a fresh virtual microsecond timeline (sim, and the
-    /// serving pipeline's modeled PCIe/stall accounting).
+    /// Single-device store over a fresh virtual microsecond timeline (sim,
+    /// and the serving pipeline's modeled PCIe/stall accounting).
     pub fn with_virtual_clock(budget_bytes: usize, kind: ResidencyKind) -> Self {
         Self::new(budget_bytes, kind, Box::new(VirtualClock::new()))
     }
 
-    /// Store over a wall-anchored timeline: real elapsed time advances it,
-    /// `tick`/`stall_until` add modeled time on top. Not used by the
-    /// in-repo clients yet (serve feeds a VirtualClock with measured
-    /// compute — see store::clock); intended for drivers that want the
-    /// store's accounting over genuinely passing time.
+    /// Placement-aware store over a fresh virtual timeline.
+    pub fn with_placement(
+        placement: Placement,
+        budget_per_device: usize,
+        kind: ResidencyKind,
+        sparsity_decay: f64,
+    ) -> Self {
+        Self::build(
+            placement,
+            budget_per_device,
+            kind,
+            sparsity_decay,
+            Box::new(VirtualClock::new()),
+        )
+    }
+
+    /// Single-device store over a wall-anchored timeline: real elapsed
+    /// time advances it, `tick`/`stall_until` add modeled time on top.
+    /// Not used by the in-repo clients yet (serve feeds a VirtualClock
+    /// with measured compute — see store::clock); intended for drivers
+    /// that want the store's accounting over genuinely passing time.
     pub fn with_wall_clock(budget_bytes: usize, kind: ResidencyKind) -> Self {
         Self::new(budget_bytes, kind, Box::new(WallClock::start()))
+    }
+
+    // ---------------------------------------------------------- placement
+
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Home device of `key` under the shard policy.
+    pub fn home(&self, key: ExpertKey) -> DeviceId {
+        self.placement.home(key)
     }
 
     // ---------------------------------------------------------- timeline
@@ -133,39 +202,172 @@ impl<P> ExpertStore<P> {
 
     // ---------------------------------------------------------- residency
 
-    /// Routed access to `key`: feeds the policy's popularity signal and
-    /// records the cache hit/miss. Returns true if resident.
+    /// Routed residency probe for `key`: feeds the home policy's
+    /// popularity signal and records exactly one cache hit or miss.
+    /// `Local` — resident on the home device, usable as-is. `Remote` —
+    /// resident on a peer (spilled there): usable after a `peer_fetch`
+    /// over the device link. `Miss` — not resident anywhere.
+    pub fn lookup(&mut self, key: ExpertKey) -> Lookup {
+        let home = self.home(key);
+        self.devices[home].note_activation(key);
+        if self.devices[home].contains(key) {
+            self.devices[home].access(key);
+            return Lookup::Local(home);
+        }
+        for d in 0..self.devices.len() {
+            if d != home && self.devices[d].contains(key) {
+                self.devices[d].access(key);
+                return Lookup::Remote(d);
+            }
+        }
+        self.devices[home].access(key); // records the miss
+        Lookup::Miss
+    }
+
+    /// Routed access to `key` (lookup collapsed to residency): true if
+    /// resident on any device.
     pub fn access(&mut self, key: ExpertKey) -> bool {
-        self.cache.note_activation(key);
-        self.cache.access(key)
+        !matches!(self.lookup(key), Lookup::Miss)
     }
 
+    /// Resident on any device (no accounting).
     pub fn contains(&self, key: ExpertKey) -> bool {
-        self.cache.contains(key)
+        self.devices.iter().any(|d| d.contains(key))
     }
 
-    /// Admit `key` at `bytes` into the resident set (after its transfer
-    /// lands, or at warmup). Returns false if it cannot fit.
+    /// Resident size of `key` on whichever device holds it.
+    pub fn resident_bytes(&self, key: ExpertKey) -> Option<usize> {
+        self.devices.iter().find_map(|d| d.bytes_of(key))
+    }
+
+    /// Admit `key` at `bytes` into its home device's resident set (after
+    /// its transfer lands), subject to the policy's admission filter —
+    /// the sparsity policy rejects one-off experts. Eviction victims
+    /// spill to peer devices with spare capacity when the placement has
+    /// `spill` on. Returns false if filtered out or it cannot fit.
     pub fn admit(&mut self, key: ExpertKey, bytes: usize) -> bool {
-        self.cache.insert(key, bytes)
+        let home = self.home(key);
+        if !self.devices[home].would_admit(key) {
+            return false;
+        }
+        self.admit_on(home, key, bytes)
     }
 
+    /// `admit` bypassing the admission filter (cache warmup, pinned
+    /// preloads — entries that must land regardless of history).
+    pub fn warm_admit(&mut self, key: ExpertKey, bytes: usize) -> bool {
+        let home = self.home(key);
+        self.admit_on(home, key, bytes)
+    }
+
+    fn admit_on(&mut self, dev: DeviceId, key: ExpertKey, bytes: usize) -> bool {
+        let (ok, evicted) = self.devices[dev].insert_evicting(key, bytes);
+        if self.placement.spill {
+            for victim in evicted {
+                self.spill_from(dev, victim);
+            }
+        }
+        ok
+    }
+
+    /// Rescue an eviction victim: copy it over the peer link into the
+    /// spare capacity of the emptiest other device (never cascading —
+    /// spills go only into free bytes). Bus occupancy is charged to the
+    /// receiving device; the copy is immediately resident.
+    fn spill_from(&mut self, from: DeviceId, victim: (ExpertKey, usize)) {
+        let (key, bytes) = victim;
+        if self.devices.iter().any(|d| d.contains(key)) {
+            return; // a copy survives elsewhere — nothing to save
+        }
+        let to = (0..self.devices.len())
+            .filter(|d| *d != from && self.devices[*d].free_bytes() >= bytes)
+            .max_by_key(|d| self.devices[*d].free_bytes());
+        let Some(to) = to else { return };
+        let dur = self.placement.topo.p2p.copy_us((bytes as f64).max(1.0));
+        let now = self.clock.now_us();
+        self.prefetch.bus_copy(to, dur, bytes as f64, now);
+        self.devices[to].insert(key, bytes);
+    }
+
+    /// Pin/unpin `key` on its home device (prefetched-for-imminent-use
+    /// protection).
     pub fn set_pinned(&mut self, key: ExpertKey, pinned: bool) {
-        self.cache.set_pinned(key, pinned);
+        let home = self.home(key);
+        self.devices[home].set_pinned(key, pinned);
     }
 
     pub fn unpin_all(&mut self) {
-        self.cache.unpin_all();
+        for d in &mut self.devices {
+            d.unpin_all();
+        }
     }
 
     // ---------------------------------------------------------- transfers
 
+    /// Is `key` in flight toward its home device?
     pub fn inflight(&self, key: ExpertKey) -> bool {
-        self.prefetch.inflight(key)
+        self.prefetch.inflight(self.home(key), key)
     }
 
-    /// Overlapped prefetch: queues behind in-flight bus work and pins any
-    /// resident copy of `key` against eviction until consumed.
+    /// Execute a batched transfer plan against its destination device's
+    /// bus — THE prefetch surface (the scalar `begin_prefetch*` calls are
+    /// single-item plans). Overlapped plans issue one bus transaction per
+    /// item; coalesced plans chunk the whole batch into one transaction
+    /// (the per-copy API overhead paid once) with items landing — and
+    /// admittable — on partial completion; blocking plans (AdvancedOffload
+    /// §2) charge a prefetch-miss stall per item. Overlapped/coalesced
+    /// items pin any resident copy against eviction until consumed.
+    /// Returns the completion time of the last item (now if empty).
+    pub fn submit(&mut self, plan: TransferPlan<P>) -> f64 {
+        let dst = plan.dst;
+        // in-flight tracking and consumption are home-keyed: an item
+        // shipped to a foreign device would strand in the inflight map
+        debug_assert!(
+            plan.items.iter().all(|it| self.home(it.key) == dst),
+            "transfer plan mixes destination devices"
+        );
+        match plan.mode {
+            PlanMode::Overlapped => {
+                let mut done = self.clock.now_us();
+                for it in plan.items {
+                    let now = self.clock.now_us();
+                    done = self
+                        .prefetch
+                        .begin(dst, it.key, it.duration_us, it.bytes, now, it.payload);
+                    self.devices[dst].set_pinned(it.key, true);
+                }
+                done
+            }
+            PlanMode::Coalesced => {
+                let keys: Vec<ExpertKey> = plan.items.iter().map(|it| it.key).collect();
+                let now = self.clock.now_us();
+                let done = self.prefetch.begin_coalesced(dst, now, plan.items);
+                for key in keys {
+                    self.devices[dst].set_pinned(key, true);
+                }
+                done
+            }
+            PlanMode::Blocking => {
+                let mut done = self.clock.now_us();
+                for it in plan.items {
+                    let now = self.clock.now_us();
+                    done = self.prefetch.begin_blocking(
+                        dst,
+                        it.key,
+                        it.duration_us,
+                        it.bytes,
+                        now,
+                        it.payload,
+                    );
+                    self.stall_until_for(done, StallCause::PrefetchMiss);
+                }
+                done
+            }
+        }
+    }
+
+    /// Overlapped prefetch of one expert toward its home device — a
+    /// single-item `Overlapped` plan.
     pub fn begin_prefetch(
         &mut self,
         key: ExpertKey,
@@ -173,14 +375,16 @@ impl<P> ExpertStore<P> {
         bytes: f64,
         payload: P,
     ) -> f64 {
+        let dev = self.home(key);
         let now = self.clock.now_us();
-        let done = self.prefetch.begin(key, duration_us, bytes, now, payload);
-        self.cache.set_pinned(key, true);
+        let done = self.prefetch.begin(dev, key, duration_us, bytes, now, payload);
+        self.devices[dev].set_pinned(key, true);
         done
     }
 
     /// Non-overlapped prefetch (same-layer speculation, paper §2): the
-    /// caller must stall to the returned completion time.
+    /// caller must stall to the returned completion time. Prefer a
+    /// `Blocking` plan, which charges the stall itself.
     pub fn begin_prefetch_blocking(
         &mut self,
         key: ExpertKey,
@@ -188,34 +392,91 @@ impl<P> ExpertStore<P> {
         bytes: f64,
         payload: P,
     ) -> f64 {
+        let dev = self.home(key);
         let now = self.clock.now_us();
-        self.prefetch.begin_blocking(key, duration_us, bytes, now, payload)
+        self.prefetch.begin_blocking(dev, key, duration_us, bytes, now, payload)
     }
 
-    /// Demand fetch of a missing expert; returns when the bytes land.
+    /// Demand fetch of a missing expert toward `key`'s home device;
+    /// returns when the bytes land.
+    pub fn demand_fetch_for(&mut self, key: ExpertKey, duration_us: f64, bytes: f64) -> f64 {
+        let dev = self.home(key);
+        let now = self.clock.now_us();
+        self.prefetch.demand(dev, duration_us, bytes, now)
+    }
+
+    /// Demand fetch on device 0 (single-device convenience).
     pub fn demand_fetch(&mut self, duration_us: f64, bytes: f64) -> f64 {
         let now = self.clock.now_us();
-        self.prefetch.demand(duration_us, bytes, now)
+        self.prefetch.demand(0, duration_us, bytes, now)
     }
 
-    /// Count a demand fetch that moves nothing (GPU-resident systems).
+    /// Count a demand fetch for `key` that moves nothing (GPU-resident
+    /// systems).
+    pub fn record_demand_for(&mut self, key: ExpertKey) {
+        let dev = self.home(key);
+        self.prefetch.record_demand(dev);
+    }
+
+    /// `record_demand_for` on device 0 (single-device convenience).
     pub fn record_demand(&mut self) {
-        self.prefetch.record_demand();
+        self.prefetch.record_demand(0);
     }
 
-    /// Raw bus occupancy (prefill streaming, recall top-ups).
-    pub fn bus_copy(&mut self, duration_us: f64, bytes: f64) -> f64 {
+    /// Raw bus occupancy on `dev`'s link (prefill streaming, recall
+    /// top-ups).
+    pub fn bus_copy_to(&mut self, dev: DeviceId, duration_us: f64, bytes: f64) -> f64 {
         let now = self.clock.now_us();
-        self.prefetch.bus_copy(duration_us, bytes, now)
+        self.prefetch.bus_copy(dev, duration_us, bytes, now)
     }
 
-    /// Consume the in-flight transfer for `key`: (completion time, payload).
-    /// Releases the prefetch pin taken by `begin_prefetch` so a resident
-    /// copy becomes evictable again (re-admitting also resets the pin).
+    /// `bus_copy_to` on device 0 (single-device convenience).
+    pub fn bus_copy(&mut self, duration_us: f64, bytes: f64) -> f64 {
+        self.bus_copy_to(0, duration_us, bytes)
+    }
+
+    /// Pull a remote-resident `key` from peer `from` over the device
+    /// link (GPU↔GPU — cheaper than a host refetch), counting a demand
+    /// fetch on the home device's bus. The copy migrates home when the
+    /// policy's admission filter allows it; otherwise it keeps serving
+    /// from the peer. Returns when the bytes land.
+    pub fn peer_fetch(&mut self, key: ExpertKey, from: DeviceId) -> f64 {
+        let now = self.clock.now_us();
+        let home = self.home(key);
+        debug_assert_ne!(home, from, "peer_fetch from the home device");
+        let Some(bytes) = self.devices[from].bytes_of(key) else {
+            return now;
+        };
+        let dur = self.placement.topo.p2p.copy_us((bytes as f64).max(1.0));
+        let done = self.prefetch.demand(home, dur, bytes as f64, now);
+        if self.devices[home].would_admit(key) {
+            self.devices[from].remove(key);
+            let (ok, evicted) = self.devices[home].insert_evicting(key, bytes);
+            if !ok {
+                // home cannot take it (oversized for the device, or every
+                // resident entry is pinned): the copy keeps serving from
+                // the peer — it just vacated that space, so this refit
+                // cannot evict
+                self.devices[from].insert(key, bytes);
+            }
+            if self.placement.spill {
+                for victim in evicted {
+                    self.spill_from(home, victim);
+                }
+            }
+        }
+        done
+    }
+
+    /// Consume the in-flight transfer for `key` on its home device:
+    /// (completion time, payload). Releases the prefetch pin taken at
+    /// submit so a resident copy becomes evictable again (re-admitting
+    /// also resets the pin).
     pub fn take_inflight(&mut self, key: ExpertKey) -> Option<(f64, P)> {
-        let taken = self.prefetch.take(key);
+        let dev = self.home(key);
+        let taken = self.prefetch.take(dev, key);
         if taken.is_some() {
-            self.cache.set_pinned(key, false);
+            self.devices[dev].set_pinned(key, false);
         }
         taken
     }
@@ -226,24 +487,59 @@ impl<P> ExpertStore<P> {
         &self.prefetch.stats
     }
 
-    pub fn cache_stats(&self) -> &CacheStats {
-        &self.cache.stats
+    /// Movement counters of one device (sums over devices reproduce the
+    /// `stats()` globals bit-exactly).
+    pub fn device_stats(&self, dev: DeviceId) -> &DeviceStats {
+        &self.prefetch.stats.per_device[dev]
+    }
+
+    /// Cache accounting merged across devices (integer counters — the
+    /// device sums are exact).
+    pub fn cache_stats(&self) -> CacheStats {
+        let mut t = CacheStats::default();
+        for d in &self.devices {
+            t.hits += d.stats.hits;
+            t.misses += d.stats.misses;
+            t.evictions += d.stats.evictions;
+            t.inserted_bytes += d.stats.inserted_bytes;
+        }
+        t
     }
 
     pub fn policy_name(&self) -> &'static str {
-        self.cache.policy_name()
+        self.devices[0].policy_name()
     }
 
+    /// Total expert-cache budget across devices, bytes.
     pub fn budget(&self) -> usize {
-        self.cache.budget()
+        self.devices.iter().map(|d| d.budget()).sum()
     }
 
+    /// Total bytes resident across devices.
     pub fn used(&self) -> usize {
-        self.cache.used()
+        self.devices.iter().map(|d| d.used()).sum()
     }
 
+    /// Total resident experts across devices.
     pub fn resident(&self) -> usize {
-        self.cache.len()
+        self.devices.iter().map(|d| d.len()).sum()
+    }
+
+    pub fn budget_of(&self, dev: DeviceId) -> usize {
+        self.devices[dev].budget()
+    }
+
+    pub fn used_of(&self, dev: DeviceId) -> usize {
+        self.devices[dev].used()
+    }
+
+    pub fn resident_of(&self, dev: DeviceId) -> usize {
+        self.devices[dev].len()
+    }
+
+    /// Keys resident on `dev` (test/diagnostic surface).
+    pub fn resident_keys_of(&self, dev: DeviceId) -> Vec<ExpertKey> {
+        self.devices[dev].keys()
     }
 }
 
@@ -353,5 +649,156 @@ mod tests {
         assert!(s.now_us() >= a + 500.0);
         let stall = s.stats().stall_us;
         assert!(stall > 0.0 && stall <= 500.0, "stall {stall}");
+    }
+
+    // ------------------------------------------------- plans & placement
+
+    /// A single-item Overlapped plan is the scalar `begin_prefetch`: same
+    /// completion time, same stats, same pin — the compatibility claim
+    /// the scalar wrappers rest on.
+    #[test]
+    fn single_item_plan_equals_scalar_prefetch() {
+        let mut a: ExpertStore = ExpertStore::with_virtual_clock(1000, ResidencyKind::Lru);
+        let mut b: ExpertStore = ExpertStore::with_virtual_clock(1000, ResidencyKind::Lru);
+        for s in [&mut a, &mut b] {
+            s.bus_copy(30.0, 8.0); // pre-load the bus identically
+            s.tick(5.0);
+        }
+        let done_scalar = a.begin_prefetch((1, 2), 40.0, 64.0, ());
+        let mut plan: TransferPlan<()> = TransferPlan::to(0, PlanMode::Overlapped);
+        plan.push((1, 2), 64.0, 40.0, 12.0, ());
+        let done_plan = b.submit(plan);
+        assert_eq!(done_scalar, done_plan);
+        assert_eq!(a.stats().prefetches, b.stats().prefetches);
+        assert_eq!(a.stats().bus_transactions, b.stats().bus_transactions);
+        assert_eq!(a.stats().transferred_bytes, b.stats().transferred_bytes);
+        assert_eq!(a.inflight((1, 2)), b.inflight((1, 2)));
+    }
+
+    #[test]
+    fn coalesced_plan_admits_on_partial_completion() {
+        let mut s: ExpertStore = ExpertStore::with_virtual_clock(1000, ResidencyKind::Lru);
+        let mut plan: TransferPlan<()> = TransferPlan::to(0, PlanMode::Coalesced);
+        // two 100us copies with 12us per-copy overhead each
+        plan.push((0, 0), 64.0, 100.0, 12.0, ());
+        plan.push((0, 1), 64.0, 100.0, 12.0, ());
+        let done = s.submit(plan);
+        assert_eq!(done, 188.0, "overhead paid once: 12 + 88 + 88");
+        assert_eq!(s.stats().bus_transactions, 1);
+        assert_eq!(s.stats().prefetches, 2);
+        // the first item is consumable at its chunk boundary, before the
+        // plan as a whole completes
+        let (first, ()) = s.take_inflight((0, 0)).unwrap();
+        assert_eq!(first, 100.0);
+        s.stall_until_for(first, StallCause::PrefetchMiss);
+        assert!(s.admit((0, 0), 64));
+        assert_eq!(s.now_us(), 100.0);
+        let (second, ()) = s.take_inflight((0, 1)).unwrap();
+        assert_eq!(second, 188.0);
+    }
+
+    #[test]
+    fn blocking_plan_charges_prefetch_stalls_itself() {
+        let mut s: ExpertStore = ExpertStore::with_virtual_clock(1000, ResidencyKind::Lru);
+        let mut plan: TransferPlan<()> = TransferPlan::to(0, PlanMode::Blocking);
+        plan.push((0, 0), 8.0, 20.0, 12.0, ());
+        plan.push((0, 1), 8.0, 30.0, 12.0, ());
+        let done = s.submit(plan);
+        // compute was held hostage for both copies back-to-back
+        assert_eq!(done, 50.0);
+        assert_eq!(s.now_us(), 50.0);
+        assert_eq!(s.stats().stall_prefetch_us, 50.0);
+        assert_eq!(s.stats().bus_transactions, 2);
+    }
+
+    fn sharded(n: usize, shard: ShardPolicy, budget: usize) -> ExpertStore {
+        ExpertStore::with_placement(
+            Placement::sharded(n, shard),
+            budget,
+            ResidencyKind::Lru,
+            DEFAULT_SPARSITY_DECAY,
+        )
+    }
+
+    #[test]
+    fn sharded_store_homes_keys_and_keeps_buses_independent() {
+        let mut s = sharded(2, ShardPolicy::Layer, 1000);
+        assert_eq!(s.home((0, 3)), 0);
+        assert_eq!(s.home((1, 3)), 1);
+        // same duration toward both devices: no cross-device queuing
+        let d0 = s.begin_prefetch((0, 0), 100.0, 8.0, ());
+        let d1 = s.begin_prefetch((1, 0), 100.0, 8.0, ());
+        assert_eq!(d0, 100.0);
+        assert_eq!(d1, 100.0);
+        assert!(s.inflight((0, 0)) && s.inflight((1, 0)));
+        // per-device budgets account independently
+        assert!(s.admit((0, 0), 900));
+        assert!(s.admit((1, 0), 900));
+        assert_eq!(s.used_of(0), 900);
+        assert_eq!(s.used_of(1), 900);
+        assert_eq!(s.used(), 1800);
+        assert_eq!(s.budget(), 2000);
+    }
+
+    #[test]
+    fn eviction_spills_to_peer_and_serves_remote_hits() {
+        let mut s = sharded(2, ShardPolicy::Layer, 250);
+        // fill device 0 (layer 0 homes there), then overflow it
+        assert!(s.admit((0, 0), 100));
+        assert!(s.admit((0, 1), 100));
+        assert!(s.admit((0, 2), 100)); // evicts (0,0) -> spills to device 1
+        assert!(s.contains((0, 0)), "victim must survive via spill");
+        assert_eq!(s.resident_of(1), 1);
+        assert_eq!(s.lookup((0, 0)), Lookup::Remote(1));
+        // pulling it back over the peer link migrates it home; making
+        // room for it evicts (0,1), which spills to the peer in turn
+        let done = s.peer_fetch((0, 0), 1);
+        assert!(done > 0.0);
+        assert_eq!(s.device_stats(0).demand_fetches, 1);
+        assert_eq!(s.resident_bytes((0, 0)), Some(100));
+        assert_eq!(s.lookup((0, 0)), Lookup::Local(0));
+        assert_eq!(s.lookup((0, 1)), Lookup::Remote(1));
+        assert_eq!(s.resident_of(1), 1);
+    }
+
+    #[test]
+    fn per_device_stats_sum_to_globals_bit_exactly() {
+        let mut s = sharded(3, ShardPolicy::Expert, 500);
+        for e in 0..9usize {
+            let key = (0, e);
+            let dur = 10.0 + e as f64;
+            let bytes = 33.3 + e as f64 * 0.7;
+            s.begin_prefetch(key, dur, bytes, ());
+        }
+        s.demand_fetch_for((0, 1), 5.0, 17.1);
+        s.record_demand_for((0, 2));
+        s.bus_copy_to(1, 3.0, 9.9);
+        let st = s.stats();
+        let (mut df, mut pf, mut tx) = (0u64, 0u64, 0u64);
+        let mut bytes = 0.0f64;
+        for d in &st.per_device {
+            df += d.demand_fetches;
+            pf += d.prefetches;
+            tx += d.bus_transactions;
+            bytes += d.transferred_bytes;
+        }
+        assert_eq!(df, st.demand_fetches);
+        assert_eq!(pf, st.prefetches);
+        assert_eq!(tx, st.bus_transactions);
+        assert_eq!(bytes, st.transferred_bytes, "device-order byte sum must be exact");
+    }
+
+    #[test]
+    fn sparsity_admission_filter_gates_admit_but_not_warm_admit() {
+        let mut s: ExpertStore =
+            ExpertStore::with_virtual_clock(1000, ResidencyKind::Sparsity);
+        // no activation history: the post-transfer path refuses to cache
+        assert!(!s.admit((0, 0), 10));
+        // warmup bypasses the filter
+        assert!(s.warm_admit((0, 0), 10));
+        // a twice-activated expert is cache-worthy
+        s.access((0, 1));
+        s.access((0, 1));
+        assert!(s.admit((0, 1), 10));
     }
 }

@@ -1,0 +1,190 @@
+//! Placement — the device dimension of the `ExpertStore` (DESIGN.md §3).
+//!
+//! A `Placement` fixes where expert bytes may live: how many devices there
+//! are, which device is *home* for each `ExpertKey` (the `ShardPolicy`),
+//! what the links cost (`hwsim::TopologySpec` — per-device host links plus
+//! a GPU↔GPU peer link), and which cooperative behaviors are on
+//! (`coalesce` batched prefetch plans into chunked copies; `spill`
+//! eviction victims into spare peer capacity instead of dropping them).
+//!
+//! `TransferPlan` is the batched movement request that replaced the
+//! one-expert-per-call prefetch surface: a set of same-destination items,
+//! each carrying its solo-copy duration and the per-copy API-overhead
+//! share a coalesced chunk pays only once (the Fig-7 U-shape comes from
+//! exactly that overhead). With one device and coalescing off, a plan
+//! executes item-by-item — operation-for-operation identical to the old
+//! scalar API, which is what keeps `--devices 1 --policy lru`
+//! bit-reproducible.
+
+use crate::config::ShardPolicy;
+use crate::hwsim::{TopologySpec, PCIE4};
+
+use super::ExpertKey;
+
+/// Index of a device in the store's placement (0-based, dense).
+pub type DeviceId = usize;
+
+/// Where expert bytes may live and how they move between devices.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub shard: ShardPolicy,
+    pub topo: TopologySpec,
+    /// coalesce same-destination transfer plans into one chunked copy
+    /// (one per-copy API overhead per plan instead of per expert)
+    pub coalesce: bool,
+    /// on eviction, spill victims to a peer device with spare capacity
+    /// (over the p2p link) instead of dropping them
+    pub spill: bool,
+}
+
+impl Placement {
+    /// The pre-placement single-GPU world: one device, no coalescing, no
+    /// spill — every key homes on device 0.
+    pub fn single() -> Self {
+        Placement {
+            shard: ShardPolicy::Layer,
+            topo: TopologySpec::single(PCIE4),
+            coalesce: false,
+            spill: false,
+        }
+    }
+
+    /// `n` devices under `shard`, cooperative behaviors on when there is
+    /// anything to cooperate across.
+    pub fn sharded(n: usize, shard: ShardPolicy) -> Self {
+        Placement {
+            shard,
+            topo: TopologySpec::uniform(n, PCIE4),
+            coalesce: n > 1,
+            spill: n > 1,
+        }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.topo.n_devices
+    }
+
+    /// Home device of `key` under the shard policy.
+    pub fn home(&self, key: ExpertKey) -> DeviceId {
+        self.shard.place(key, self.topo.n_devices)
+    }
+}
+
+/// Outcome of a routed residency probe (`ExpertStore::lookup`): the expert
+/// is resident on its home device, resident on a peer (reachable over the
+/// p2p link), or not resident anywhere.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lookup {
+    Local(DeviceId),
+    Remote(DeviceId),
+    Miss,
+}
+
+/// How a `TransferPlan` occupies its destination device's bus.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlanMode {
+    /// overlapped with compute; one bus transaction per item (the
+    /// pre-redesign semantics — exact for `--devices 1`)
+    Overlapped,
+    /// overlapped and chunk-coalesced: one bus transaction for the whole
+    /// plan, the per-copy overhead paid once, items admitted as their
+    /// chunk completes (partial completion)
+    Coalesced,
+    /// compute blocks until each item lands (the AdvancedOffload
+    /// same-layer scheme the paper criticizes in §2); never coalesced
+    Blocking,
+}
+
+/// One expert's slice of a batched transfer plan.
+#[derive(Debug)]
+pub struct TransferItem<P> {
+    pub key: ExpertKey,
+    /// bytes this item moves over the bus
+    pub bytes: f64,
+    /// full solo-copy duration (bus time + per-copy overhead [+ packing])
+    pub duration_us: f64,
+    /// the per-copy API-overhead share of `duration_us` that a coalesced
+    /// chunk pays once for the whole plan instead of once per item
+    pub overhead_us: f64,
+    pub payload: P,
+}
+
+/// A batched transfer toward one destination device. Build with
+/// [`TransferPlan::to`], fill with [`TransferPlan::push`], execute with
+/// `ExpertStore::submit`.
+#[derive(Debug)]
+pub struct TransferPlan<P> {
+    pub dst: DeviceId,
+    pub mode: PlanMode,
+    pub items: Vec<TransferItem<P>>,
+}
+
+impl<P> TransferPlan<P> {
+    pub fn to(dst: DeviceId, mode: PlanMode) -> Self {
+        TransferPlan { dst, mode, items: Vec::new() }
+    }
+
+    pub fn push(
+        &mut self,
+        key: ExpertKey,
+        bytes: f64,
+        duration_us: f64,
+        overhead_us: f64,
+        payload: P,
+    ) {
+        self.items.push(TransferItem { key, bytes, duration_us, overhead_us, payload });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// Total bytes the plan moves.
+    pub fn bytes(&self) -> f64 {
+        self.items.iter().map(|it| it.bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_placement_homes_everything_on_device_zero() {
+        let p = Placement::single();
+        assert_eq!(p.n_devices(), 1);
+        assert!(!p.coalesce && !p.spill);
+        for l in 0..4 {
+            for e in 0..8 {
+                assert_eq!(p.home((l, e)), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_placement_spreads_and_cooperates() {
+        let p = Placement::sharded(3, ShardPolicy::Layer);
+        assert_eq!(p.n_devices(), 3);
+        assert!(p.coalesce && p.spill);
+        assert_eq!(p.home((4, 0)), 1);
+        // sharded(1) degenerates to the single-device behavior
+        let one = Placement::sharded(1, ShardPolicy::Expert);
+        assert_eq!(one.n_devices(), 1);
+        assert!(!one.coalesce && !one.spill);
+    }
+
+    #[test]
+    fn plan_accumulates_items() {
+        let mut plan: TransferPlan<()> = TransferPlan::to(2, PlanMode::Coalesced);
+        assert!(plan.is_empty());
+        plan.push((0, 1), 100.0, 10.0, 2.0, ());
+        plan.push((0, 2), 50.0, 6.0, 2.0, ());
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan.bytes(), 150.0);
+        assert_eq!(plan.dst, 2);
+    }
+}

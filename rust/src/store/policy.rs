@@ -35,16 +35,35 @@ pub trait ResidencyPolicy {
     fn on_remove(&mut self, key: ExpertKey);
     /// Pick the eviction victim among the evictable (unpinned) residents.
     fn victim(&self, candidates: &[ExpertKey]) -> Option<ExpertKey>;
+    /// Admission filter (MoE-Infinity): is `key` popular enough to be
+    /// *cached* after use? Recency/frequency policies admit everything;
+    /// the sparsity policy rejects one-off experts so a cold scan cannot
+    /// flush the hot set. Consulted by `ExpertStore::admit` on the
+    /// post-transfer caching path only — warm/pinned inserts bypass it.
+    fn admits(&self, _key: ExpertKey) -> bool {
+        true
+    }
 }
 
+/// Default decay for the sparsity policy's per-expert activation EMA:
+/// half-life ~700 activations — long enough to span many tokens at
+/// Mixtral depth, short enough that yesterday's hot set ages out.
+/// Overridden per run via `--sparsity-decay`.
+pub const DEFAULT_SPARSITY_DECAY: f64 = 0.999;
+
+/// Minimum decayed activation count before the sparsity policy caches an
+/// expert (the admission filter): a second activation inside the decay
+/// horizon qualifies, a single cold touch never does.
+pub const SPARSITY_MIN_ADMIT: f64 = 1.5;
+
 /// Build the policy implementation a `ResidencyKind` selects.
-pub fn build_policy(kind: ResidencyKind) -> Box<dyn ResidencyPolicy> {
+/// `sparsity_decay` parameterizes the sparsity policy's activation EMA
+/// (the `--sparsity-decay` flag); recency/frequency policies ignore it.
+pub fn build_policy(kind: ResidencyKind, sparsity_decay: f64) -> Box<dyn ResidencyPolicy> {
     match kind {
         ResidencyKind::Lru => Box::new(LruPolicy::new()),
         ResidencyKind::Lfu => Box::new(LfuPolicy::new()),
-        // half-life ~700 activations: long enough to span many tokens at
-        // Mixtral depth, short enough that yesterday's hot set ages out
-        ResidencyKind::Sparsity => Box::new(SparsityPolicy::new(0.999)),
+        ResidencyKind::Sparsity => Box::new(SparsityPolicy::new(sparsity_decay)),
     }
 }
 
@@ -130,6 +149,8 @@ pub struct SparsityPolicy {
     /// per-expert exponentially-decayed activation count, lazily decayed:
     /// the stored value is the EMA as of `stamp[key]` activation steps
     decay: f64,
+    /// admission threshold on the decayed count (see `SPARSITY_MIN_ADMIT`)
+    min_admit: f64,
     step: u64,
     ema: HashMap<ExpertKey, f64>,
     stamp: HashMap<ExpertKey, u64>,
@@ -141,6 +162,7 @@ impl SparsityPolicy {
         assert!(decay > 0.0 && decay <= 1.0);
         SparsityPolicy {
             decay,
+            min_admit: SPARSITY_MIN_ADMIT,
             step: 0,
             ema: HashMap::new(),
             stamp: HashMap::new(),
@@ -191,6 +213,9 @@ impl ResidencyPolicy for SparsityPolicy {
                     la.cmp(&lb)
                 })
         })
+    }
+    fn admits(&self, key: ExpertKey) -> bool {
+        self.score(key) >= self.min_admit
     }
 }
 
@@ -260,7 +285,35 @@ mod tests {
     #[test]
     fn build_policy_names_match_kind() {
         for kind in ResidencyKind::ALL {
-            assert_eq!(build_policy(kind).name(), kind.name());
+            assert_eq!(build_policy(kind, DEFAULT_SPARSITY_DECAY).name(), kind.name());
         }
+    }
+
+    #[test]
+    fn recency_policies_admit_everything() {
+        assert!(LruPolicy::new().admits((0, 0)));
+        assert!(LfuPolicy::new().admits((3, 7)));
+    }
+
+    #[test]
+    fn sparsity_admission_filter_rejects_one_offs() {
+        let mut p = SparsityPolicy::new(0.999);
+        // never activated / activated once: not cache-worthy
+        assert!(!p.admits((0, 0)));
+        p.on_activation((0, 0), 0);
+        assert!(!p.admits((0, 0)), "a single cold touch must not qualify");
+        // a second activation inside the decay horizon qualifies
+        p.on_activation((0, 0), 0);
+        assert!(p.admits((0, 0)));
+        // under a harsh decay the score collapses between bursts and
+        // admission lapses again: 1.9 * 0.9^6 ~ 1.01 < 1.5
+        let mut harsh = SparsityPolicy::new(0.9);
+        harsh.on_activation((1, 0), 0);
+        harsh.on_activation((1, 0), 0);
+        assert!(harsh.admits((1, 0)));
+        for _ in 0..6 {
+            harsh.on_activation((9, 9), 0); // unrelated steps decay (1,0)
+        }
+        assert!(!harsh.admits((1, 0)), "stale popularity must age out");
     }
 }

@@ -1,13 +1,15 @@
-//! Shared prefetch pipeline: in-flight transfer tracking over a single
-//! busy-until PCIe bus timeline, with demand-fetch queuing and stall/byte
+//! Shared prefetch pipeline: in-flight transfer tracking over *per-device*
+//! busy-until bus timelines, with demand-fetch queuing and stall/byte
 //! attribution — the movement half of `ExpertStore`.
 //!
 //! Both coordinators drive it the same way: the inter/intra predictors
 //! decide *what* to move, the `TransferEngine`/`PcieSpec` decide *how
 //! long* the move takes, and this pipeline decides *when* it lands —
-//! overlapped prefetches queue behind in-flight bus work, blocking
-//! prefetches (the AdvancedOffload baseline's same-layer scheme, §2 of
-//! the paper) hold compute hostage, and demand fetches are charged as
+//! overlapped transfers queue behind in-flight work on their destination
+//! device's bus, blocking prefetches (the AdvancedOffload baseline's
+//! same-layer scheme, §2 of the paper) hold compute hostage, coalesced
+//! plans pay the per-copy API overhead once for a whole chunk and land
+//! their items on partial completion, and demand fetches are charged as
 //! stalls by the store when the consumer arrives before the bytes do.
 //!
 //! Generic over a per-transfer payload `P`: the serving path attaches the
@@ -16,6 +18,7 @@
 
 use std::collections::{BTreeMap, HashMap};
 
+use super::placement::{DeviceId, TransferItem};
 use super::ExpertKey;
 
 /// Why a decode stall was charged: the consumer arrived before the bytes
@@ -50,42 +53,86 @@ impl StallSplit {
     }
 }
 
-/// Residency-movement statistics (the store's half of `PipelineStats`).
-///
-/// Stall time is attributed per requester (a request id set via
-/// `ExpertStore::set_attribution`; `UNATTRIBUTED` otherwise). The global
-/// `stall_*_us` totals are re-derived from the attribution map in key
-/// order on every charge, so `attributed.values()` sums reproduce each
-/// total *bit-exactly* — the invariant the serving accounting tests
-/// assert. Entries are a few words per requester; callers that serve
-/// unbounded request streams can `take_attribution` retired ids.
+/// Movement counters for one device: what its bus actually carried.
+/// Primary storage for the store-wide movement totals — `StoreStats`
+/// re-derives its globals from these in device order on every charge, so
+/// per-device sums reproduce the globals *bit-exactly* (the sharded-store
+/// property tests assert this).
 #[derive(Debug, Default, Clone)]
-pub struct StoreStats {
+pub struct DeviceStats {
     pub demand_fetches: u64,
     pub prefetches: u64,
-    pub stall_us: f64,
-    pub stall_demand_us: f64,
-    pub stall_prefetch_us: f64,
+    /// individual copies issued on this device's bus — coalescing merges
+    /// a whole plan into one transaction, which is the amortization the
+    /// shard sweep measures
+    pub bus_transactions: u64,
     /// f64 so the simulator's fractional per-expert byte models sum
     /// exactly; integer byte counts below 2^53 stay exact
     pub transferred_bytes: f64,
+}
+
+/// Residency-movement statistics (the store's half of `PipelineStats`).
+///
+/// Two exactness invariants, both re-derived on every charge:
+/// * movement globals (`demand_fetches`, `prefetches`, `bus_transactions`,
+///   `transferred_bytes`) are the device-order sums over `per_device`;
+/// * stall globals (`stall_*_us`) are the key-order sums over the
+///   per-requester `attributed` ledger plus `retired`.
+///
+/// So `per_device` sums and `attributed.values()` sums each reproduce
+/// their totals *bit-exactly* — the invariants the serving-accounting and
+/// sharded-store tests assert. Ledger entries are a few words per
+/// requester; callers that serve unbounded request streams can
+/// `take_attribution` retired ids.
+#[derive(Debug, Clone)]
+pub struct StoreStats {
+    pub demand_fetches: u64,
+    pub prefetches: u64,
+    pub bus_transactions: u64,
+    pub transferred_bytes: f64,
+    pub stall_us: f64,
+    pub stall_demand_us: f64,
+    pub stall_prefetch_us: f64,
     /// per-requester stall decomposition (BTreeMap: deterministic order)
     pub attributed: BTreeMap<u64, StallSplit>,
     /// stalls of requesters retired via `take_attribution` — folded into
     /// the totals so retiring never loses accounted time
     pub retired: StallSplit,
+    /// per-device movement counters (primary; globals are derived)
+    pub per_device: Vec<DeviceStats>,
+}
+
+impl Default for StoreStats {
+    fn default() -> Self {
+        Self::new(1)
+    }
 }
 
 impl StoreStats {
     /// Requester id for stalls charged outside any attribution scope.
     pub const UNATTRIBUTED: u64 = u64::MAX;
 
-    /// Charge `us` of stall to `who`, then re-derive the global totals as
-    /// retired + the key-order sum over the attribution map (exactness
-    /// invariant).
+    pub fn new(n_devices: usize) -> Self {
+        StoreStats {
+            demand_fetches: 0,
+            prefetches: 0,
+            bus_transactions: 0,
+            transferred_bytes: 0.0,
+            stall_us: 0.0,
+            stall_demand_us: 0.0,
+            stall_prefetch_us: 0.0,
+            attributed: BTreeMap::new(),
+            retired: StallSplit::default(),
+            per_device: vec![DeviceStats::default(); n_devices.max(1)],
+        }
+    }
+
+    /// Charge `us` of stall to `who`, then re-derive the global stall
+    /// totals as retired + the key-order sum over the attribution map
+    /// (exactness invariant).
     pub(crate) fn charge_stall(&mut self, who: u64, cause: StallCause, us: f64) {
         self.attributed.entry(who).or_default().add(cause, us);
-        self.rederive_totals();
+        self.rederive_stalls();
     }
 
     pub(crate) fn retire(&mut self, who: u64) -> StallSplit {
@@ -94,11 +141,11 @@ impl StoreStats {
         };
         self.retired.demand_us += s.demand_us;
         self.retired.prefetch_us += s.prefetch_us;
-        self.rederive_totals();
+        self.rederive_stalls();
         s
     }
 
-    fn rederive_totals(&mut self) {
+    fn rederive_stalls(&mut self) {
         let (mut demand, mut prefetch) =
             (self.retired.demand_us, self.retired.prefetch_us);
         for s in self.attributed.values() {
@@ -109,64 +156,95 @@ impl StoreStats {
         self.stall_prefetch_us = prefetch;
         self.stall_us = demand + prefetch;
     }
+
+    fn rederive_movement(&mut self) {
+        let (mut df, mut pf, mut tx) = (0u64, 0u64, 0u64);
+        let mut bytes = 0.0f64;
+        for d in &self.per_device {
+            df += d.demand_fetches;
+            pf += d.prefetches;
+            tx += d.bus_transactions;
+            bytes += d.transferred_bytes;
+        }
+        self.demand_fetches = df;
+        self.prefetches = pf;
+        self.bus_transactions = tx;
+        self.transferred_bytes = bytes;
+    }
 }
 
 pub struct PrefetchPipeline<P = ()> {
-    bus_free_us: f64,
-    inflight: HashMap<ExpertKey, (f64, P)>,
+    /// busy-until timeline of each device's host link
+    bus_free_us: Vec<f64>,
+    inflight: HashMap<(DeviceId, ExpertKey), (f64, P)>,
     pub stats: StoreStats,
 }
 
 impl<P> Default for PrefetchPipeline<P> {
     fn default() -> Self {
-        Self::new()
+        Self::new(1)
     }
 }
 
 impl<P> PrefetchPipeline<P> {
-    pub fn new() -> Self {
+    pub fn new(n_devices: usize) -> Self {
+        let n = n_devices.max(1);
         PrefetchPipeline {
-            bus_free_us: 0.0,
+            bus_free_us: vec![0.0; n],
             inflight: HashMap::new(),
-            stats: StoreStats::default(),
+            stats: StoreStats::new(n),
         }
     }
 
-    pub fn inflight(&self, key: ExpertKey) -> bool {
-        self.inflight.contains_key(&key)
+    pub fn n_devices(&self) -> usize {
+        self.bus_free_us.len()
+    }
+
+    pub fn inflight(&self, dev: DeviceId, key: ExpertKey) -> bool {
+        self.inflight.contains_key(&(dev, key))
     }
 
     pub fn inflight_len(&self) -> usize {
         self.inflight.len()
     }
 
-    pub fn bus_free_us(&self) -> f64 {
-        self.bus_free_us
+    pub fn bus_free_us(&self, dev: DeviceId) -> f64 {
+        self.bus_free_us[dev]
     }
 
-    /// Raw bus occupancy (prefill legs, recall top-ups): queue `duration_us`
-    /// of transfer behind whatever is in flight, return its finish time.
-    pub fn bus_copy(&mut self, duration_us: f64, bytes: f64, now_us: f64) -> f64 {
-        self.stats.transferred_bytes += bytes;
-        let start = now_us.max(self.bus_free_us);
+    /// Raw bus occupancy on `dev`'s link (prefill legs, recall top-ups,
+    /// spill copies): queue `duration_us` of transfer behind whatever is
+    /// in flight there, return its finish time.
+    pub fn bus_copy(
+        &mut self,
+        dev: DeviceId,
+        duration_us: f64,
+        bytes: f64,
+        now_us: f64,
+    ) -> f64 {
+        self.stats.per_device[dev].transferred_bytes += bytes;
+        self.stats.per_device[dev].bus_transactions += 1;
+        self.stats.rederive_movement();
+        let start = now_us.max(self.bus_free_us[dev]);
         let done = start + duration_us;
-        self.bus_free_us = done;
+        self.bus_free_us[dev] = done;
         done
     }
 
-    /// Overlapped prefetch for `key`: queues on the bus and tracks the
-    /// transfer in flight. Returns the completion time.
+    /// Overlapped prefetch of `key` toward `dev`: queues on that device's
+    /// bus and tracks the transfer in flight. Returns the completion time.
     pub fn begin(
         &mut self,
+        dev: DeviceId,
         key: ExpertKey,
         duration_us: f64,
         bytes: f64,
         now_us: f64,
         payload: P,
     ) -> f64 {
-        self.stats.prefetches += 1;
-        let done = self.bus_copy(duration_us, bytes, now_us);
-        self.inflight.insert(key, (done, payload));
+        self.stats.per_device[dev].prefetches += 1;
+        let done = self.bus_copy(dev, duration_us, bytes, now_us);
+        self.inflight.insert((dev, key), (done, payload));
         done
     }
 
@@ -175,36 +253,76 @@ impl<P> PrefetchPipeline<P> {
     /// the returned completion time.
     pub fn begin_blocking(
         &mut self,
+        dev: DeviceId,
         key: ExpertKey,
         duration_us: f64,
         bytes: f64,
         now_us: f64,
         payload: P,
     ) -> f64 {
-        self.stats.prefetches += 1;
-        self.stats.transferred_bytes += bytes;
+        self.stats.per_device[dev].prefetches += 1;
+        self.stats.per_device[dev].transferred_bytes += bytes;
+        self.stats.per_device[dev].bus_transactions += 1;
+        self.stats.rederive_movement();
         let done = now_us + duration_us;
-        self.bus_free_us = done;
-        self.inflight.insert(key, (done, payload));
+        self.bus_free_us[dev] = done;
+        self.inflight.insert((dev, key), (done, payload));
         done
     }
 
-    /// Demand fetch of a missing expert: queues on the bus, returns the
-    /// time the bytes land.
-    pub fn demand(&mut self, duration_us: f64, bytes: f64, now_us: f64) -> f64 {
-        self.stats.demand_fetches += 1;
-        self.bus_copy(duration_us, bytes, now_us)
+    /// Coalesce `items` into ONE chunked copy on `dev`'s bus: the largest
+    /// per-item API-overhead share is paid once up front, then each item's
+    /// net bus time lands it in order (partial completion — earlier items
+    /// are consumable while later ones are still on the wire). Returns the
+    /// completion time of the last item.
+    pub fn begin_coalesced(
+        &mut self,
+        dev: DeviceId,
+        now_us: f64,
+        items: Vec<TransferItem<P>>,
+    ) -> f64 {
+        if items.is_empty() {
+            return now_us;
+        }
+        let overhead = items.iter().fold(0.0f64, |a, it| a.max(it.overhead_us));
+        let start = now_us.max(self.bus_free_us[dev]);
+        let mut t = start + overhead;
+        self.stats.per_device[dev].bus_transactions += 1;
+        for it in items {
+            t += (it.duration_us - it.overhead_us).max(0.0);
+            self.stats.per_device[dev].prefetches += 1;
+            self.stats.per_device[dev].transferred_bytes += it.bytes;
+            self.inflight.insert((dev, it.key), (t, it.payload));
+        }
+        self.stats.rederive_movement();
+        self.bus_free_us[dev] = t;
+        t
     }
 
-    /// Count a demand fetch that moves nothing (GPU-resident misses).
-    pub fn record_demand(&mut self) {
-        self.stats.demand_fetches += 1;
+    /// Demand fetch of a missing expert toward `dev`: queues on its bus,
+    /// returns the time the bytes land.
+    pub fn demand(
+        &mut self,
+        dev: DeviceId,
+        duration_us: f64,
+        bytes: f64,
+        now_us: f64,
+    ) -> f64 {
+        self.stats.per_device[dev].demand_fetches += 1;
+        self.bus_copy(dev, duration_us, bytes, now_us)
     }
 
-    /// Consume an in-flight transfer for `key`, if any: (completion time,
-    /// payload).
-    pub fn take(&mut self, key: ExpertKey) -> Option<(f64, P)> {
-        self.inflight.remove(&key)
+    /// Count a demand fetch on `dev` that moves nothing (GPU-resident
+    /// misses).
+    pub fn record_demand(&mut self, dev: DeviceId) {
+        self.stats.per_device[dev].demand_fetches += 1;
+        self.stats.rederive_movement();
+    }
+
+    /// Consume an in-flight transfer for `key` on `dev`, if any:
+    /// (completion time, payload).
+    pub fn take(&mut self, dev: DeviceId, key: ExpertKey) -> Option<(f64, P)> {
+        self.inflight.remove(&(dev, key))
     }
 }
 
@@ -241,45 +359,92 @@ mod tests {
 
     #[test]
     fn overlapped_prefetch_queues_on_bus() {
-        let mut p: PrefetchPipeline = PrefetchPipeline::new();
-        let d1 = p.begin((0, 0), 100.0, 1000.0, 0.0, ());
+        let mut p: PrefetchPipeline = PrefetchPipeline::new(1);
+        let d1 = p.begin(0, (0, 0), 100.0, 1000.0, 0.0, ());
         assert_eq!(d1, 100.0);
         // issued at t=50 but the bus is busy until 100
-        let d2 = p.begin((0, 1), 100.0, 1000.0, 50.0, ());
+        let d2 = p.begin(0, (0, 1), 100.0, 1000.0, 50.0, ());
         assert_eq!(d2, 200.0);
-        assert!(p.inflight((0, 0)) && p.inflight((0, 1)));
+        assert!(p.inflight(0, (0, 0)) && p.inflight(0, (0, 1)));
         assert_eq!(p.stats.prefetches, 2);
+        assert_eq!(p.stats.bus_transactions, 2);
         assert_eq!(p.stats.transferred_bytes, 2000.0);
-        let (done, ()) = p.take((0, 0)).unwrap();
+        let (done, ()) = p.take(0, (0, 0)).unwrap();
         assert_eq!(done, 100.0);
-        assert!(!p.inflight((0, 0)));
-        assert!(p.take((0, 0)).is_none());
+        assert!(!p.inflight(0, (0, 0)));
+        assert!(p.take(0, (0, 0)).is_none());
+    }
+
+    #[test]
+    fn per_device_buses_are_independent() {
+        let mut p: PrefetchPipeline = PrefetchPipeline::new(2);
+        let d0 = p.begin(0, (0, 0), 100.0, 8.0, 0.0, ());
+        let d1 = p.begin(1, (1, 0), 100.0, 8.0, 0.0, ());
+        // no queuing across devices: both transfers run concurrently
+        assert_eq!(d0, 100.0);
+        assert_eq!(d1, 100.0);
+        assert_eq!(p.bus_free_us(0), 100.0);
+        assert_eq!(p.bus_free_us(1), 100.0);
+        // the same key can be in flight toward different devices
+        assert!(p.inflight(0, (0, 0)) && !p.inflight(1, (0, 0)));
+        // globals are the device-order sums of the per-device counters
+        assert_eq!(p.stats.per_device.len(), 2);
+        assert_eq!(p.stats.per_device[0].prefetches, 1);
+        assert_eq!(p.stats.per_device[1].prefetches, 1);
+        assert_eq!(p.stats.prefetches, 2);
+        assert_eq!(p.stats.transferred_bytes, 16.0);
     }
 
     #[test]
     fn blocking_prefetch_ignores_queue() {
-        let mut p: PrefetchPipeline = PrefetchPipeline::new();
-        p.bus_copy(500.0, 0.0, 0.0); // bus busy until 500
-        let done = p.begin_blocking((0, 0), 100.0, 1.0, 50.0, ());
+        let mut p: PrefetchPipeline = PrefetchPipeline::new(1);
+        p.bus_copy(0, 500.0, 0.0, 0.0); // bus busy until 500
+        let done = p.begin_blocking(0, (0, 0), 100.0, 1.0, 50.0, ());
         assert_eq!(done, 150.0, "blocking path starts at now, not bus_free");
     }
 
     #[test]
+    fn coalesced_plan_is_one_transaction_with_partial_landings() {
+        let mut p: PrefetchPipeline = PrefetchPipeline::new(1);
+        // two items, each 100us solo of which 12us is per-copy overhead
+        let item = |key| TransferItem {
+            key,
+            bytes: 64.0,
+            duration_us: 100.0,
+            overhead_us: 12.0,
+            payload: (),
+        };
+        let items = vec![item((0, 0)), item((0, 1))];
+        let done = p.begin_coalesced(0, 0.0, items);
+        // one overhead + two net legs: 12 + 88 + 88, not 2 x 100
+        assert_eq!(done, 188.0);
+        let (first, ()) = p.take(0, (0, 0)).unwrap();
+        let (second, ()) = p.take(0, (0, 1)).unwrap();
+        assert_eq!(first, 100.0, "first item lands at partial completion");
+        assert_eq!(second, 188.0);
+        assert_eq!(p.stats.prefetches, 2);
+        assert_eq!(p.stats.bus_transactions, 1, "whole plan is one copy");
+        assert_eq!(p.stats.transferred_bytes, 128.0);
+        // empty plans are free
+        assert_eq!(p.begin_coalesced(0, 500.0, Vec::new()), 500.0);
+    }
+
+    #[test]
     fn demand_counts_and_queues() {
-        let mut p: PrefetchPipeline = PrefetchPipeline::new();
-        let done = p.demand(40.0, 64.0, 10.0);
+        let mut p: PrefetchPipeline = PrefetchPipeline::new(1);
+        let done = p.demand(0, 40.0, 64.0, 10.0);
         assert_eq!(done, 50.0);
         assert_eq!(p.stats.demand_fetches, 1);
-        p.record_demand();
+        p.record_demand(0);
         assert_eq!(p.stats.demand_fetches, 2);
         assert_eq!(p.stats.transferred_bytes, 64.0);
     }
 
     #[test]
     fn payloads_round_trip() {
-        let mut p: PrefetchPipeline<Vec<bool>> = PrefetchPipeline::new();
-        p.begin((1, 2), 10.0, 8.0, 0.0, vec![true, false]);
-        let (_, mask) = p.take((1, 2)).unwrap();
+        let mut p: PrefetchPipeline<Vec<bool>> = PrefetchPipeline::new(1);
+        p.begin(0, (1, 2), 10.0, 8.0, 0.0, vec![true, false]);
+        let (_, mask) = p.take(0, (1, 2)).unwrap();
         assert_eq!(mask, vec![true, false]);
     }
 

@@ -1,0 +1,242 @@
+//! Property + equivalence tests for the placement-aware `ExpertStore`
+//! (no artifacts or the `pjrt` feature needed).
+//!
+//! * `--devices 1 --policy lru` must reproduce the pre-redesign numbers
+//!   *bit-exactly*: `simulate` (plan API) is pinned field-by-field to
+//!   `simulate_scalar_reference`, the verbatim pre-placement simulator
+//!   kept as an executable specification — this is exactly the claim
+//!   that the exp-fig6/exp-fig8 JSON is byte-identical, since those
+//!   files are pure functions of these reports.
+//! * Sharded-store invariants under random op traces: per-device byte
+//!   budgets are never exceeded, pinned entries survive eviction on
+//!   every device, and per-device movement stats sum to the global
+//!   `StoreStats` bit-exactly.
+
+use floe::config::{ResidencyKind, ShardPolicy};
+use floe::coordinator::policy::{SystemConfig, SystemKind};
+use floe::coordinator::sim::{simulate, simulate_scalar_reference, SimParams};
+use floe::hwsim::{TopologySpec, PCIE4, RTX3090};
+use floe::prop_assert;
+use floe::store::{
+    ExpertStore, Lookup, Placement, PlanMode, TransferPlan, DEFAULT_SPARSITY_DECAY,
+};
+use floe::util::prop::check;
+use floe::util::rng::Rng;
+
+// ------------------------------------------------ pre-redesign equivalence
+
+fn assert_reports_bit_identical(kind: SystemKind, vram: f64, io: (usize, usize)) {
+    let p = SimParams::mixtral_on(
+        RTX3090.clone(),
+        SystemConfig::with_residency(kind, ResidencyKind::Lru),
+        vram,
+    );
+    let new = simulate(&p, io.0, io.1);
+    let old = simulate_scalar_reference(&p, io.0, io.1);
+    let ctx = format!("{} @ {vram} GB io {io:?}", kind.name());
+    assert_eq!(new.tps.to_bits(), old.tps.to_bits(), "tps diverged: {ctx}");
+    assert_eq!(
+        new.total_us.to_bits(),
+        old.total_us.to_bits(),
+        "total_us diverged: {ctx}"
+    );
+    assert_eq!(
+        new.prefill_us.to_bits(),
+        old.prefill_us.to_bits(),
+        "prefill_us diverged: {ctx}"
+    );
+    assert_eq!(
+        new.compute_us.to_bits(),
+        old.compute_us.to_bits(),
+        "compute_us diverged: {ctx}"
+    );
+    assert_eq!(
+        new.stall_us.to_bits(),
+        old.stall_us.to_bits(),
+        "stall_us diverged: {ctx}"
+    );
+    assert_eq!(
+        new.transferred_bytes.to_bits(),
+        old.transferred_bytes.to_bits(),
+        "transferred_bytes diverged: {ctx}"
+    );
+    assert_eq!(
+        new.bus_transactions, old.bus_transactions,
+        "bus_transactions diverged: {ctx}"
+    );
+    assert_eq!(
+        new.cache_hit_rate.to_bits(),
+        old.cache_hit_rate.to_bits(),
+        "cache_hit_rate diverged: {ctx}"
+    );
+}
+
+/// The acceptance bar: every fig8 row (all five systems, the sweep's
+/// VRAM corners) and the fig6 headline cell are byte-identical between
+/// the redesigned plan API at `--devices 1 --policy lru` and the
+/// pre-redesign scalar path.
+#[test]
+fn fig8_single_device_lru_matches_pre_redesign_bit_exactly() {
+    for kind in SystemKind::ALL {
+        for vram in [12.0, 16.0, 24.0] {
+            assert_reports_bit_identical(kind, vram, (64, 256)); // fig8 cell
+        }
+    }
+}
+
+#[test]
+fn fig6_single_device_lru_matches_pre_redesign_bit_exactly() {
+    for kind in SystemKind::ALL {
+        assert_reports_bit_identical(kind, 12.0, (64, 128)); // fig6 headline
+    }
+    // the equivalence also holds under the other unfiltered policy
+    let p = SimParams::mixtral_on(
+        RTX3090.clone(),
+        SystemConfig::with_residency(SystemKind::Floe, ResidencyKind::Lfu),
+        14.0,
+    );
+    let new = simulate(&p, 64, 128);
+    let old = simulate_scalar_reference(&p, 64, 128);
+    assert_eq!(new.tps.to_bits(), old.tps.to_bits(), "lfu diverged");
+}
+
+// --------------------------------------------------- sharded-store props
+
+fn device_sums_match(s: &ExpertStore) -> Result<(), String> {
+    let st = s.stats();
+    let (mut df, mut pf, mut tx) = (0u64, 0u64, 0u64);
+    let mut bytes = 0.0f64;
+    for d in &st.per_device {
+        df += d.demand_fetches;
+        pf += d.prefetches;
+        tx += d.bus_transactions;
+        bytes += d.transferred_bytes;
+    }
+    prop_assert!(df == st.demand_fetches, "demand {} != {}", df, st.demand_fetches);
+    prop_assert!(pf == st.prefetches, "prefetch {} != {}", pf, st.prefetches);
+    prop_assert!(tx == st.bus_transactions, "tx {} != {}", tx, st.bus_transactions);
+    prop_assert!(
+        bytes == st.transferred_bytes,
+        "bytes {} != {} (must be bit-exact)",
+        bytes,
+        st.transferred_bytes
+    );
+    Ok(())
+}
+
+#[test]
+fn sharded_store_invariants_under_random_traces() {
+    check("sharded-store-invariants", 30, |rng: &mut Rng| {
+        let n_dev = rng.range(1, 5);
+        let shard = *rng.choice(&ShardPolicy::ALL);
+        let kind = *rng.choice(&ResidencyKind::ALL);
+        let budget = rng.range(200, 1500);
+        let placement = Placement {
+            shard,
+            topo: TopologySpec::uniform(n_dev, PCIE4),
+            coalesce: rng.f64() < 0.5,
+            spill: rng.f64() < 0.5,
+        };
+        let coalesce = placement.coalesce;
+        let mut s: ExpertStore =
+            ExpertStore::with_placement(placement, budget, kind, DEFAULT_SPARSITY_DECAY);
+        // shadow of keys pinned via the public surface and still expected
+        // to be home-resident (inserts/takes reset pins — tracked below)
+        let mut pinned: Vec<(usize, usize)> = Vec::new();
+        let unpin = |pinned: &mut Vec<(usize, usize)>, key: (usize, usize)| {
+            pinned.retain(|k| *k != key);
+        };
+        for _ in 0..250 {
+            let key = (rng.below(6), rng.below(8));
+            match rng.below(10) {
+                0 | 1 => {
+                    if let Lookup::Remote(from) = s.lookup(key) {
+                        s.peer_fetch(key, from);
+                        // migration re-inserts at home: pin state reset
+                        unpin(&mut pinned, key);
+                    }
+                }
+                2 | 3 => {
+                    // a transfer plan toward each key's home device
+                    let mode = if rng.f64() < 0.3 {
+                        PlanMode::Blocking
+                    } else if coalesce {
+                        PlanMode::Coalesced
+                    } else {
+                        PlanMode::Overlapped
+                    };
+                    let mut plans: Vec<TransferPlan<()>> =
+                        (0..s.n_devices()).map(|d| TransferPlan::to(d, mode)).collect();
+                    for slot in 0..rng.range(1, 4) {
+                        let k = (rng.below(6), (key.1 + slot) % 8);
+                        let ovh = 2.0 + rng.f64() * 10.0;
+                        let dur = ovh + rng.f64() * 50.0;
+                        plans[s.home(k)].push(k, 10.0 + rng.f64() * 90.0, dur, ovh, ());
+                    }
+                    for plan in plans {
+                        if !plan.is_empty() {
+                            s.submit(plan);
+                        }
+                    }
+                }
+                4 => {
+                    if s.take_inflight(key).is_some() {
+                        // take releases the pin; an admit attempt (even a
+                        // failed one) re-inserts and so resets it too
+                        unpin(&mut pinned, key);
+                        s.admit(key, rng.range(1, budget / 2 + 2));
+                    }
+                }
+                5 => {
+                    // insert attempts reset the pin regardless of outcome
+                    unpin(&mut pinned, key);
+                    s.warm_admit(key, rng.range(1, budget / 2 + 2));
+                }
+                6 => {
+                    let on = rng.f64() < 0.6;
+                    s.set_pinned(key, on);
+                    unpin(&mut pinned, key);
+                    if on && s.resident_keys_of(s.home(key)).contains(&key) {
+                        pinned.push(key);
+                    }
+                }
+                7 => {
+                    s.unpin_all();
+                    pinned.clear();
+                }
+                8 => {
+                    let done = s.demand_fetch_for(key, 5.0 + rng.f64() * 20.0, 64.0);
+                    s.stall_until(done);
+                    unpin(&mut pinned, key); // admit attempt resets the pin
+                    s.admit(key, rng.range(1, budget / 2 + 2));
+                }
+                _ => s.tick(rng.f64() * 30.0),
+            }
+            // invariant 1: per-device byte budgets are never exceeded
+            for d in 0..s.n_devices() {
+                prop_assert!(
+                    s.used_of(d) <= s.budget_of(d),
+                    "device {} used {} > budget {}",
+                    d,
+                    s.used_of(d),
+                    s.budget_of(d)
+                );
+            }
+            // invariant 2: pinned entries survive on their home device
+            for k in &pinned {
+                prop_assert!(
+                    s.resident_keys_of(s.home(*k)).contains(k),
+                    "pinned {k:?} missing from its home device"
+                );
+            }
+            // invariant 3: per-device stats sum to the globals bit-exactly
+            device_sums_match(&s)?;
+        }
+        // totals are consistent with the per-device views
+        let used: usize = (0..s.n_devices()).map(|d| s.used_of(d)).sum();
+        prop_assert!(used == s.used(), "used {} != {}", used, s.used());
+        let resident: usize = (0..s.n_devices()).map(|d| s.resident_of(d)).sum();
+        prop_assert!(resident == s.resident(), "resident sums diverge");
+        Ok(())
+    });
+}

@@ -51,9 +51,14 @@ fn main() -> anyhow::Result<()> {
     // after one connection's worth of requests. The expert store is
     // placement-aware: `with_devices(n, shard)` shards residency across
     // n GPUs with coalesced prefetch plans (the `serve` CLI exposes this
-    // as `--devices N --shard-policy layer|expert|hash`, plus
+    // as `--devices N --shard-policy layer|expert|hash|balanced`, plus
     // `--sparsity-decay` for the sparsity policy's EMA constant); one
     // device reproduces the classic single-GPU pipeline exactly.
+    // At `--devices > 1` the popularity machinery is opt-in:
+    // `balanced` re-homes experts by measured activation mass,
+    // `.with_replication(k)` / `--replicate-top k --compute-streams`
+    // replicates the k hottest experts across devices and runs
+    // per-device compute streams so added devices scale FLOPs too.
     let mut system = SystemConfig::new(SystemKind::Floe)
         .with_devices(1, floe::config::ShardPolicy::Layer);
     system.sparsity = 0.8;

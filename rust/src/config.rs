@@ -121,17 +121,30 @@ pub enum ShardPolicy {
     Expert,
     /// mixed hash of (layer, expert) — decorrelates both axes
     Hash,
+    /// measured-popularity bin-packing: the `ExpertStore` tracks each
+    /// expert's exponentially-decayed activation mass and periodically
+    /// re-homes keys by greedy least-loaded assignment, so hot experts'
+    /// bus traffic spreads across devices instead of piling onto one
+    /// (the MoE-Infinity observation applied to placement). `place` is
+    /// only the cold-start seed (expert-style); live homes come from the
+    /// store's rebalance overlay.
+    Balanced,
 }
 
 impl ShardPolicy {
-    pub const ALL: [ShardPolicy; 3] =
-        [ShardPolicy::Layer, ShardPolicy::Expert, ShardPolicy::Hash];
+    pub const ALL: [ShardPolicy; 4] = [
+        ShardPolicy::Layer,
+        ShardPolicy::Expert,
+        ShardPolicy::Hash,
+        ShardPolicy::Balanced,
+    ];
 
     pub fn name(&self) -> &'static str {
         match self {
             ShardPolicy::Layer => "layer",
             ShardPolicy::Expert => "expert",
             ShardPolicy::Hash => "hash",
+            ShardPolicy::Balanced => "balanced",
         }
     }
 
@@ -140,18 +153,22 @@ impl ShardPolicy {
             "layer" => ShardPolicy::Layer,
             "expert" => ShardPolicy::Expert,
             "hash" => ShardPolicy::Hash,
-            other => bail!("unknown shard policy '{other}' (layer|expert|hash)"),
+            "balanced" | "popularity" => ShardPolicy::Balanced,
+            other => bail!("unknown shard policy '{other}' (layer|expert|hash|balanced)"),
         })
     }
 
-    /// Home device for `(layer, expert)` among `n_devices`.
+    /// Home device for `(layer, expert)` among `n_devices`. For
+    /// `Balanced` this is only the cold-start seed — the store overlays
+    /// it with the measured-mass assignment once traffic exists.
     pub fn place(&self, key: (usize, usize), n_devices: usize) -> usize {
         if n_devices <= 1 {
             return 0;
         }
         match self {
             ShardPolicy::Layer => key.0 % n_devices,
-            ShardPolicy::Expert => key.1 % n_devices,
+            // Balanced seeds like Expert until the first rebalance
+            ShardPolicy::Expert | ShardPolicy::Balanced => key.1 % n_devices,
             ShardPolicy::Hash => {
                 let (l, e) = key;
                 l.wrapping_mul(0x9E37_79B1)
@@ -260,5 +277,8 @@ mod tests {
         // layer / expert policies shard on their respective axis
         assert_eq!(ShardPolicy::Layer.place((3, 0), 2), 1);
         assert_eq!(ShardPolicy::Expert.place((0, 3), 2), 1);
+        // balanced seeds like expert before the first rebalance
+        assert_eq!(ShardPolicy::Balanced.place((0, 3), 2), 1);
+        assert_eq!(ShardPolicy::parse("popularity").unwrap(), ShardPolicy::Balanced);
     }
 }

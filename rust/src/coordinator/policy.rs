@@ -70,6 +70,17 @@ pub struct SystemConfig {
     pub coalesce: bool,
     /// spill eviction victims to peer devices with spare capacity
     pub spill: bool,
+    /// replicate the top-k hottest experts (by measured activation mass)
+    /// onto peer devices under the popularity-proportional replica
+    /// budget (`--replicate-top`, default 0 = off — off keeps every
+    /// pre-replication configuration bit-exact)
+    pub replicate_top: usize,
+    /// per-device compute streams: expert GEMVs occupy their execution
+    /// device's own compute timeline, overlapping across devices inside
+    /// a layer (`--compute-streams`; off by default so `--devices N`
+    /// without it reproduces the single-compute-timeline numbers
+    /// bit-exactly)
+    pub compute_streams: bool,
 }
 
 impl SystemConfig {
@@ -87,6 +98,8 @@ impl SystemConfig {
             shard: ShardPolicy::Layer,
             coalesce: false,
             spill: false,
+            replicate_top: 0,
+            compute_streams: false,
         }
     }
 
@@ -107,6 +120,17 @@ impl SystemConfig {
         self
     }
 
+    /// Replicate the `k` hottest experts across devices and run
+    /// per-device compute streams — the popularity-driven serving mode
+    /// (`exp-shard-sweep`'s "pop" rows). No-op at one device.
+    pub fn with_replication(mut self, k: usize) -> Self {
+        if self.devices > 1 {
+            self.replicate_top = k;
+            self.compute_streams = true;
+        }
+        self
+    }
+
     /// The store placement this configuration selects, over per-device
     /// host links of spec `h2d`.
     pub fn placement(&self, h2d: PcieSpec) -> Placement {
@@ -115,6 +139,7 @@ impl SystemConfig {
             topo: TopologySpec::uniform(self.devices, h2d),
             coalesce: self.coalesce,
             spill: self.spill,
+            replicate_top: if self.devices > 1 { self.replicate_top } else { 0 },
         }
     }
 
@@ -156,12 +181,24 @@ mod tests {
         assert_eq!(p1.n_devices(), 1);
         let sharded = SystemConfig::new(SystemKind::Floe).with_devices(3, ShardPolicy::Expert);
         assert!(sharded.coalesce && sharded.spill);
+        assert_eq!(sharded.replicate_top, 0, "replication stays opt-in");
+        assert!(!sharded.compute_streams, "streams stay opt-in");
         let p3 = sharded.placement(crate::hwsim::PCIE4);
         assert_eq!(p3.n_devices(), 3);
         assert_eq!(p3.home((0, 4)), 1);
         // degenerate sharding stays single-device semantics
         let one = SystemConfig::new(SystemKind::Floe).with_devices(1, ShardPolicy::Hash);
         assert!(!one.coalesce && !one.spill);
+        // replication threads into the placement, but never at one device
+        let pop = SystemConfig::new(SystemKind::Floe)
+            .with_devices(2, ShardPolicy::Balanced)
+            .with_replication(2);
+        assert_eq!(pop.replicate_top, 2);
+        assert!(pop.compute_streams);
+        assert_eq!(pop.placement(crate::hwsim::PCIE4).replicate_top, 2);
+        let solo = SystemConfig::new(SystemKind::Floe).with_replication(2);
+        assert_eq!(solo.replicate_top, 0);
+        assert_eq!(solo.placement(crate::hwsim::PCIE4).replicate_top, 0);
     }
 
     #[test]

@@ -61,6 +61,16 @@ pub trait SeqBackend {
 
     /// Cumulative attributed stall decomposition for request `id`.
     fn stalls_of(&self, id: u64) -> StallSplit;
+
+    /// Request `id` finished: return its final stall decomposition and
+    /// release any per-request accounting (store-backed backends fold
+    /// the attribution-ledger entry into the retired bucket via
+    /// `take_attribution`, so the ledger stays bounded by the in-flight
+    /// batch on long-running servers). Defaults to a plain read for
+    /// backends without per-request state.
+    fn retire(&mut self, id: u64) -> StallSplit {
+        self.stalls_of(id)
+    }
 }
 
 impl<'a, B: SeqBackend> SeqBackend for &'a mut B {
@@ -79,6 +89,9 @@ impl<'a, B: SeqBackend> SeqBackend for &'a mut B {
     }
     fn stalls_of(&self, id: u64) -> StallSplit {
         (**self).stalls_of(id)
+    }
+    fn retire(&mut self, id: u64) -> StallSplit {
+        (**self).retire(id)
     }
 }
 
@@ -280,7 +293,7 @@ impl<B: SeqBackend> Scheduler<B> {
 
     #[allow(clippy::too_many_arguments)]
     fn retired(
-        &self,
+        &mut self,
         id: u64,
         text: Vec<u8>,
         tokens: usize,
@@ -299,7 +312,10 @@ impl<B: SeqBackend> Scheduler<B> {
             queue_wait_us: (admitted_us - arrival_us).max(0.0),
             prefill_us,
             decode_us,
-            stall: self.backend.stalls_of(id),
+            // retire, don't just read: the backend's attribution-ledger
+            // entry folds into its retired bucket so long-running servers
+            // never accumulate entries for finished requests
+            stall: self.backend.retire(id),
             batch_peak,
             finished_us: self.backend.now_us(),
             error,

@@ -178,6 +178,9 @@ impl FloePipeline {
 
     pub fn observe(&mut self, w: &crate::model::Weights, ev: &LayerEvent<'_>) {
         let l = ev.layer;
+        // layer boundary: let the store act on measured popularity
+        // (no-op unless the placement is Balanced / replicating)
+        self.store.rebalance_tick();
         // ---- account inter-predictor precision for this layer ----
         if !self.predicted[l].is_empty() {
             for (e, _) in ev.routed {
@@ -538,10 +541,9 @@ impl SeqBackend for Coordinator {
     }
 
     fn start(&mut self, r: &Request) -> Result<(EngineSeq, f64)> {
-        // the ledger is cumulative per id: drop any stalls a previous
-        // request with this id accrued (repeated run_batch calls reuse
-        // ids 0..n; the server's ids are globally unique)
-        let _ = self.pipeline.take_attribution(r.id);
+        // no stale-ledger drop needed: the scheduler retires every id's
+        // attribution entry when its request completes (`retire`), so
+        // repeated run_batch calls reusing ids 0..n start clean
         self.pipeline.set_attribution(r.id);
         let mut st = DecodeState::new(&self.engine.w)?;
         let wall = WallClock::start();
@@ -585,6 +587,12 @@ impl SeqBackend for Coordinator {
 
     fn stalls_of(&self, id: u64) -> StallSplit {
         self.pipeline.stall_split_of(id)
+    }
+
+    fn retire(&mut self, id: u64) -> StallSplit {
+        // fold the finished request's ledger entry into `retired` so the
+        // attribution map stays bounded by the in-flight batch
+        self.pipeline.take_attribution(id)
     }
 }
 

@@ -109,6 +109,11 @@ pub struct TopologySpec {
     pub h2d: PcieSpec,
     /// device ↔ device peer link (P2P through the switch / NVLink-class)
     pub p2p: PcieSpec,
+    /// per-device GEMV throughput relative to the run's `GpuSpec` (1.0 =
+    /// that spec; heterogeneous fleets scale each compute stream). Only
+    /// consulted when per-device compute streams are on — the legacy
+    /// single-timeline path never reads it.
+    pub gemv_scale: Vec<f64>,
 }
 
 impl TopologySpec {
@@ -120,7 +125,15 @@ impl TopologySpec {
     /// `n` identical devices, each with its own `h2d` link, fully
     /// connected over `P2P_LINK`.
     pub fn uniform(n: usize, h2d: PcieSpec) -> Self {
-        TopologySpec { n_devices: n.max(1), h2d, p2p: P2P_LINK }
+        let n = n.max(1);
+        TopologySpec { n_devices: n, h2d, p2p: P2P_LINK, gemv_scale: vec![1.0; n] }
+    }
+
+    /// Expert GEMV latency on device `dev` given the homogeneous-spec
+    /// latency `base_us` (per-device compute streams divide by the
+    /// device's relative throughput).
+    pub fn gemv_us(&self, dev: usize, base_us: f64) -> f64 {
+        base_us / self.gemv_scale[dev]
     }
 }
 
@@ -317,6 +330,14 @@ mod tests {
         // degenerate spec is clamped to one device
         assert_eq!(TopologySpec::uniform(0, PCIE4).n_devices, 1);
         assert_eq!(TopologySpec::single(PCIE4).n_devices, 1);
+        // uniform fleets run every compute stream at spec throughput; a
+        // downscaled device slows its own stream only
+        assert_eq!(t.gemv_scale, vec![1.0; 4]);
+        assert_eq!(t.gemv_us(2, 120.0), 120.0);
+        let mut het = TopologySpec::uniform(2, PCIE4);
+        het.gemv_scale[1] = 0.5;
+        assert_eq!(het.gemv_us(0, 120.0), 120.0);
+        assert_eq!(het.gemv_us(1, 120.0), 240.0);
     }
 
     #[test]

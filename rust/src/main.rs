@@ -81,6 +81,12 @@ impl Args {
     fn sparsity_decay(&self) -> f64 {
         self.f64("sparsity-decay", floe::store::DEFAULT_SPARSITY_DECAY)
     }
+    fn replicate_top(&self) -> usize {
+        self.usize("replicate-top", 0)
+    }
+    fn compute_streams(&self) -> bool {
+        self.get("compute-streams").is_some()
+    }
     fn budget(&self) -> EvalBudget {
         EvalBudget {
             n_bytes: self.usize("eval-bytes", 768),
@@ -135,6 +141,10 @@ fn main() -> Result<()> {
                 .with_devices(args.devices(), args.shard()?);
             system.sparsity = args.f64("level", 0.8);
             system.sparsity_decay = args.sparsity_decay();
+            if args.devices() > 1 {
+                system.replicate_top = args.replicate_top();
+                system.compute_streams = args.compute_streams();
+            }
             let opts = floe::server::ServerOpts {
                 port: args.usize("port", 7399) as u16,
                 system,
@@ -251,9 +261,14 @@ fn main() -> Result<()> {
                  --level 0.8 --bits 2 --policy lru|lfu|sparsity \
                  --sparsity-decay 0.999 --prompt '...' --tokens 48\n\
                  placement flags (serve, exp-fig6/8, exp-serve-load): \
-                 --devices 1 --shard-policy layer|expert|hash \
+                 --devices 1 --shard-policy layer|expert|hash|balanced \
                  (VRAM budgets are per device; --devices 1 reproduces the \
-                 single-GPU numbers exactly)\n\
+                 single-GPU numbers exactly; balanced re-homes experts by \
+                 measured popularity)\n\
+                 popularity flags (serve, --devices > 1): --replicate-top K \
+                 (replicate the K hottest experts across devices) \
+                 --compute-streams (per-device compute timelines — FLOP \
+                 scaling, not just cache/bus scaling)\n\
                  serve flags: --backend real|sim --max-batch 8 --gather-ms 0 \
                  --port 7399 --max-requests 0\n\
                  env: FLOE_ARTIFACTS (default ./artifacts)"

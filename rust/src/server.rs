@@ -121,6 +121,12 @@ impl ConnTx {
         ConnTx { tx, pending }
     }
 
+    /// Stable identity of the connection this handle writes to (clones
+    /// share one pending counter) — the drain set's dedup key.
+    fn key(&self) -> usize {
+        Arc::as_ptr(&self.pending) as *const () as usize
+    }
+
     /// Queue one response line; never blocks on the socket.
     fn send_line(&self, line: String) {
         let (lock, cv) = &*self.pending;
@@ -168,7 +174,7 @@ pub fn serve(art_dir: &Path, opts: ServerOpts) -> Result<()> {
     coord.calibrate_layer_time()?;
     let listener = TcpListener::bind(("127.0.0.1", opts.port))
         .with_context(|| format!("bind 127.0.0.1:{}", opts.port))?;
-    serve_on(listener, coord, &opts)
+    serve_on(listener, coord, &opts).map(|_| ())
 }
 
 /// Serve over the discrete-event simulated coordinator — the same
@@ -177,26 +183,32 @@ pub fn serve(art_dir: &Path, opts: ServerOpts) -> Result<()> {
 pub fn serve_sim(params: SimParams, opts: ServerOpts) -> Result<()> {
     let listener = TcpListener::bind(("127.0.0.1", opts.port))
         .with_context(|| format!("bind 127.0.0.1:{}", opts.port))?;
-    serve_sim_listener(listener, params, opts)
+    serve_sim_listener(listener, params, opts).map(|_| ())
 }
 
 /// `serve_sim` over a pre-bound listener (tests bind port 0 and read the
-/// ephemeral address back).
+/// ephemeral address back). Returns the backend at exit so callers can
+/// inspect the store's final accounting — the loopback integration test
+/// asserts the attribution ledger retired down to the in-flight batch.
 pub fn serve_sim_listener(
     listener: TcpListener,
     params: SimParams,
     opts: ServerOpts,
-) -> Result<()> {
+) -> Result<SimServeBackend> {
     // KV reservation for the largest context the protocol admits
     let kv_tokens = opts.max_batch.max(1) * (MAX_TOKENS_CAP + 256);
     let backend = SimServeBackend::new(params, kv_tokens);
     serve_on(listener, backend, &opts)
 }
 
-/// The coordinator loop over any `SeqBackend`. Returns after
+/// The coordinator loop over any `SeqBackend`. Returns the backend after
 /// `opts.max_requests` responses (the accept thread exits with the
 /// process; its listener keeps the port until then).
-pub fn serve_on<B: SeqBackend>(listener: TcpListener, backend: B, opts: &ServerOpts) -> Result<()> {
+pub fn serve_on<B: SeqBackend>(
+    listener: TcpListener,
+    backend: B,
+    opts: &ServerOpts,
+) -> Result<B> {
     let addr = listener.local_addr()?;
     println!("floe serving on {addr} (max-batch {})", opts.max_batch.max(1));
     let (tx, rx) = mpsc::channel::<Inbound>();
@@ -206,8 +218,10 @@ pub fn serve_on<B: SeqBackend>(listener: TcpListener, backend: B, opts: &ServerO
     // per-request response route: connection + echoed tag
     let mut routes: HashMap<u64, (ConnTx, Option<Json>)> = HashMap::new();
     // connections with responses in flight, drained before a capped exit
-    // (bounded: only tracked when max_requests > 0)
-    let mut to_drain: Vec<ConnTx> = Vec::new();
+    // (keyed per connection, not per request — a capped run over many
+    // short-lived connections must not retain one sender clone, and so
+    // one live writer thread, per served request)
+    let mut to_drain: HashMap<usize, ConnTx> = HashMap::new();
     let mut served = 0usize;
     loop {
         if !sched.has_work() {
@@ -221,7 +235,7 @@ pub fn serve_on<B: SeqBackend>(listener: TcpListener, backend: B, opts: &ServerO
                     admit(&mut sched, &mut routes, inb);
                 }
                 Err(RecvTimeoutError::Timeout) => continue,
-                Err(RecvTimeoutError::Disconnected) => return Ok(()),
+                Err(RecvTimeoutError::Disconnected) => return Ok(sched.into_backend()),
             }
         }
         // token boundary: drain whatever arrived while decoding
@@ -231,17 +245,17 @@ pub fn serve_on<B: SeqBackend>(listener: TcpListener, backend: B, opts: &ServerO
         for done in sched.step() {
             if let Some(conn) = respond(&mut routes, &done) {
                 if opts.max_requests > 0 {
-                    to_drain.push(conn);
+                    to_drain.insert(conn.key(), conn);
                 }
             }
             served += 1;
         }
         if opts.max_requests > 0 && served >= opts.max_requests {
             // let the writer threads flush the final responses
-            for conn in &to_drain {
+            for conn in to_drain.values() {
                 conn.drain(Duration::from_secs(2));
             }
-            return Ok(());
+            return Ok(sched.into_backend());
         }
     }
 }

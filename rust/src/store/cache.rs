@@ -177,6 +177,33 @@ impl ResidentSet {
         }
     }
 
+    /// Is `key` resident *and* pinned? (The rebalancer never migrates
+    /// pinned entries — they are staged for imminent use here.)
+    pub fn is_pinned(&self, key: ExpertKey) -> bool {
+        self.entries.get(&key).is_some_and(|e| e.pinned)
+    }
+
+    /// Count a hit served by a *replica* copy on this device. Replicas
+    /// live outside the policy-managed resident set, so only the hit
+    /// counter moves — exactly one hit or miss is still recorded per
+    /// `ExpertStore::lookup`.
+    pub fn record_replica_hit(&mut self) {
+        self.stats.hits += 1;
+    }
+
+    /// Refresh `key`'s policy recency/frequency without recording a hit
+    /// or miss (no-op if not resident). Used when a *replica* holder
+    /// serves an access: the home copy is still the hottest entry on its
+    /// device and must not age into eviction just because its bus was
+    /// busy — evicting it would invalidate every replica on the next
+    /// refresh and thrash exactly the experts replication protects.
+    pub fn touch(&mut self, key: ExpertKey) {
+        if self.entries.contains_key(&key) {
+            self.clock += 1;
+            self.policy.on_hit(key, self.clock);
+        }
+    }
+
     pub fn unpin_all(&mut self) {
         for e in self.entries.values_mut() {
             e.pinned = false;

@@ -25,6 +25,8 @@
 //! Fig-6/8 numbers bit-exactly (pinned by the reference test in
 //! `tests/shard_store.rs`).
 
+use std::collections::BTreeMap;
+
 pub mod cache;
 pub mod clock;
 pub mod placement;
@@ -33,10 +35,13 @@ pub mod prefetch;
 
 pub use cache::{CacheStats, ResidentSet};
 pub use clock::{Clock, VirtualClock, WallClock};
-pub use placement::{DeviceId, Lookup, Placement, PlanMode, TransferItem, TransferPlan};
+pub use placement::{
+    DeviceId, Lookup, Placement, PlanMode, TransferItem, TransferPlan,
+    REBALANCE_INTERVAL, REBALANCE_SLACK, REPLICA_BUDGET_FRAC,
+};
 pub use policy::{
-    build_policy, LfuPolicy, LruPolicy, ResidencyPolicy, SparsityPolicy,
-    DEFAULT_SPARSITY_DECAY, SPARSITY_MIN_ADMIT,
+    build_policy, LfuPolicy, LruPolicy, PopularityTracker, ResidencyPolicy,
+    SparsityPolicy, DEFAULT_SPARSITY_DECAY, SPARSITY_MIN_ADMIT,
 };
 pub use prefetch::{
     DeviceStats, PinnedPool, PrefetchPipeline, StallCause, StallSplit, StoreStats,
@@ -47,8 +52,8 @@ pub use crate::config::{ResidencyKind, ShardPolicy};
 pub type ExpertKey = (usize, usize); // (layer, expert)
 
 /// Unified residency facade: per-device resident sets + prefetch pipeline
-/// + placement + clock. `P` is the per-transfer payload attached to
-/// in-flight prefetches.
+/// + placement + popularity tracking + clock. `P` is the per-transfer
+/// payload attached to in-flight prefetches.
 pub struct ExpertStore<P = ()> {
     devices: Vec<ResidentSet>,
     prefetch: PrefetchPipeline<P>,
@@ -57,6 +62,22 @@ pub struct ExpertStore<P = ()> {
     /// requester id stalls are currently attributed to (serving: the
     /// request being decoded; sim/warmup: `StoreStats::UNATTRIBUTED`)
     attr: u64,
+    /// store-wide decayed activation mass per expert — the measured-load
+    /// signal behind `ShardPolicy::Balanced` re-homing and hot-expert
+    /// replication (fed by every `lookup`; invisible unless either is on)
+    popularity: PopularityTracker,
+    /// `Balanced` home overlay: measured-mass assignment from the last
+    /// rebalance; keys absent here fall back to the static seed
+    home_map: BTreeMap<ExpertKey, DeviceId>,
+    /// replica holders per key (devices other than home carrying a copy)
+    replicas: BTreeMap<ExpertKey, Vec<DeviceId>>,
+    /// replica bytes resident per device (≤ `replica_budget` each)
+    replica_bytes: Vec<usize>,
+    /// per-device replica pool: `REPLICA_BUDGET_FRAC` of the cache budget
+    replica_budget: usize,
+    /// layer boundaries seen (rebalance cadence) and rebalances executed
+    boundary_ticks: u64,
+    rebalances: u64,
 }
 
 impl<P> ExpertStore<P> {
@@ -68,7 +89,8 @@ impl<P> ExpertStore<P> {
     /// The general constructor: `placement` devices, each with its own
     /// `budget_per_device` bytes and an independent instance of the
     /// eviction policy (`sparsity_decay` tunes the sparsity policy's
-    /// activation EMA; other policies ignore it).
+    /// activation EMA — and the store's popularity tracker, which shares
+    /// the same machinery; other policies ignore it).
     pub fn build(
         placement: Placement,
         budget_per_device: usize,
@@ -85,6 +107,13 @@ impl<P> ExpertStore<P> {
             placement,
             clock,
             attr: StoreStats::UNATTRIBUTED,
+            popularity: PopularityTracker::new(sparsity_decay),
+            home_map: BTreeMap::new(),
+            replicas: BTreeMap::new(),
+            replica_bytes: vec![0; n],
+            replica_budget: (budget_per_device as f64 * REPLICA_BUDGET_FRAC) as usize,
+            boundary_ticks: 0,
+            rebalances: 0,
         }
     }
 
@@ -129,8 +158,15 @@ impl<P> ExpertStore<P> {
         self.devices.len()
     }
 
-    /// Home device of `key` under the shard policy.
+    /// Home device of `key`: the shard policy's static placement, or —
+    /// under `ShardPolicy::Balanced` — the measured-mass assignment from
+    /// the last rebalance (static seed until then).
     pub fn home(&self, key: ExpertKey) -> DeviceId {
+        if self.placement.shard == ShardPolicy::Balanced {
+            if let Some(dev) = self.home_map.get(&key) {
+                return *dev;
+            }
+        }
         self.placement.home(key)
     }
 
@@ -171,6 +207,16 @@ impl<P> ExpertStore<P> {
         }
     }
 
+    /// Charge `us` of stall to the current attribution requester WITHOUT
+    /// advancing the clock: per-device compute streams charge waits on
+    /// their own stream while the token timeline advances only at the
+    /// layer barrier (`advance_to`).
+    pub fn charge_stall(&mut self, cause: StallCause, us: f64) {
+        if us > 0.0 {
+            self.prefetch.stats.charge_stall(self.attr, cause, us);
+        }
+    }
+
     // ------------------------------------------------------- attribution
 
     /// Charge subsequent stalls to requester `id` (a serving request).
@@ -202,15 +248,59 @@ impl<P> ExpertStore<P> {
 
     // ---------------------------------------------------------- residency
 
-    /// Routed residency probe for `key`: feeds the home policy's
-    /// popularity signal and records exactly one cache hit or miss.
-    /// `Local` — resident on the home device, usable as-is. `Remote` —
-    /// resident on a peer (spilled there): usable after a `peer_fetch`
-    /// over the device link. `Miss` — not resident anywhere.
+    /// Routed residency probe for `key`: feeds the popularity tracker and
+    /// the home policy's activation signal, and records exactly one cache
+    /// hit or miss. `Local(d)` — usable as-is on device `d`: the home
+    /// device, or (with replication on) the replica holder whose bus
+    /// frees soonest. `Remote` — resident on a peer only as a spilled
+    /// copy: usable after a `peer_fetch` over the device link. `Miss` —
+    /// not resident anywhere.
     pub fn lookup(&mut self, key: ExpertKey) -> Lookup {
         let home = self.home(key);
+        // feed the measured-load signal only when something reads it —
+        // static placements without replication skip the tracker's
+        // map-and-decay work entirely (the "invisible unless opted into"
+        // contract)
+        if self.placement.shard == ShardPolicy::Balanced
+            || self.placement.replicate_top > 0
+        {
+            self.popularity.note(key);
+        }
         self.devices[home].note_activation(key);
-        if self.devices[home].contains(key) {
+        let home_resident = self.devices[home].contains(key);
+        if self.placement.replicate_top > 0 {
+            // resolve among all usable holders by bus-free-soonest; ties
+            // prefer home, then the replica list's (deterministic) order
+            let mut holders: Vec<DeviceId> = Vec::new();
+            if home_resident {
+                holders.push(home);
+            }
+            if let Some(reps) = self.replicas.get(&key) {
+                holders.extend(reps.iter().copied().filter(|d| *d != home));
+            }
+            if !holders.is_empty() {
+                let mut best = holders[0];
+                for &d in &holders[1..] {
+                    if self.prefetch.bus_free_us(d) < self.prefetch.bus_free_us(best) {
+                        best = d;
+                    }
+                }
+                if best == home {
+                    self.devices[home].access(key);
+                } else {
+                    // the home copy still served popularity's purpose —
+                    // keep its policy recency fresh (without it, replica
+                    // hits starve the hottest home copies into eviction,
+                    // which drops their replicas on the next refresh)
+                    if home_resident {
+                        self.devices[home].touch(key);
+                    }
+                    self.devices[best].record_replica_hit();
+                }
+                return Lookup::Local(best);
+            }
+        }
+        if home_resident {
             self.devices[home].access(key);
             return Lookup::Local(home);
         }
@@ -287,6 +377,250 @@ impl<P> ExpertStore<P> {
         let now = self.clock.now_us();
         self.prefetch.bus_copy(to, dur, bytes as f64, now);
         self.devices[to].insert(key, bytes);
+    }
+
+    // ------------------------------------------- popularity & rebalance
+
+    /// One layer boundary passed. Every `REBALANCE_INTERVAL`-th boundary
+    /// the store acts on its measured popularity: `Balanced` placements
+    /// re-home keys by greedy bin-packing of activation mass, and
+    /// `replicate_top > 0` placements refresh hot-expert replicas. Both
+    /// coordinators call this once per layer; it is a strict no-op —
+    /// observationally identical to the pre-popularity store — unless the
+    /// placement opted into either behavior.
+    pub fn rebalance_tick(&mut self) {
+        if self.placement.shard != ShardPolicy::Balanced
+            && self.placement.replicate_top == 0
+        {
+            return;
+        }
+        self.boundary_ticks += 1;
+        if self.boundary_ticks % REBALANCE_INTERVAL != 0 || self.popularity.is_empty() {
+            return;
+        }
+        self.rebalances += 1;
+        if self.placement.shard == ShardPolicy::Balanced {
+            self.rebalance_homes();
+        }
+        if self.placement.replicate_top > 0 {
+            self.refresh_replicas();
+        }
+    }
+
+    /// Greedy bin-packing of measured activation mass *with hysteresis*:
+    /// keys migrate hottest-fitting-first from the most- to the
+    /// least-loaded device only while the device mass gap exceeds
+    /// `REBALANCE_SLACK` of total mass, so an already-balanced placement
+    /// moves nothing — near-equal-mass keys (every layer of one expert
+    /// looks alike) would otherwise reshuffle on each rebalance and the
+    /// churn would swamp the balance win. Keys the router never chose
+    /// keep their current home, as do keys with a pinned or in-flight
+    /// copy (migrating those would strand the in-flight map or break pin
+    /// guarantees). Resident copies whose home moved migrate over the
+    /// peer link *into free capacity only* — total resident bytes are
+    /// conserved, no migration-triggered evictions; a copy that cannot
+    /// move keeps serving from its old device as a `Remote` hit until a
+    /// later `peer_fetch` re-homes it. Migration copies ride batched
+    /// per-destination plans on the destination buses (coalesced when
+    /// the placement coalesces).
+    fn rebalance_homes(&mut self) {
+        let n = self.devices.len();
+        if n <= 1 {
+            return;
+        }
+        let masses = self.popularity.masses();
+        let total: f64 = masses.iter().map(|(_, m)| *m).sum();
+        if total <= 0.0 {
+            return;
+        }
+        // per-device mass under the live homes
+        let mut load = vec![0.0f64; n];
+        let mut homes: Vec<DeviceId> = Vec::with_capacity(masses.len());
+        for (key, mass) in &masses {
+            let h = self.home(*key);
+            homes.push(h);
+            load[h] += *mass;
+        }
+        let mut moves: Vec<(ExpertKey, DeviceId, DeviceId)> = Vec::new();
+        for _ in 0..masses.len() {
+            let (mut hi, mut lo) = (0, 0);
+            for d in 1..n {
+                if load[d] > load[hi] {
+                    hi = d;
+                }
+                if load[d] < load[lo] {
+                    lo = d;
+                }
+            }
+            let gap = load[hi] - load[lo];
+            if gap <= total * REBALANCE_SLACK {
+                break; // within slack: stable, nothing migrates
+            }
+            let movable = |s: &Self, key: ExpertKey| {
+                !s.devices[hi].is_pinned(key) && !s.prefetch.inflight(hi, key)
+            };
+            // hottest movable key on `hi` that does not overshoot the
+            // midpoint (mass <= gap/2) — masses are sorted hottest-first
+            let mut pick = None;
+            for (i, (key, mass)) in masses.iter().enumerate() {
+                if homes[i] == hi && *mass <= gap * 0.5 && movable(self, *key) {
+                    pick = Some(i);
+                    break;
+                }
+            }
+            if pick.is_none() {
+                // every key on `hi` overshoots: the coldest one that
+                // still narrows the gap (mass < gap)
+                for (i, (key, mass)) in masses.iter().enumerate().rev() {
+                    if homes[i] == hi && *mass < gap && movable(self, *key) {
+                        pick = Some(i);
+                        break;
+                    }
+                }
+            }
+            let Some(i) = pick else { break };
+            let (key, mass) = masses[i];
+            homes[i] = lo;
+            load[hi] -= mass;
+            load[lo] += mass;
+            self.home_map.insert(key, lo);
+            // replicas were placed relative to the old home
+            self.drop_replicas_of(key);
+            if self.devices[hi].contains(key) {
+                moves.push((key, hi, lo));
+            }
+        }
+        let mut per_dst: Vec<Vec<(f64, f64, f64)>> = vec![Vec::new(); n];
+        for (key, old, new) in moves {
+            let Some(bytes) = self.devices[old].bytes_of(key) else { continue };
+            if self.devices[new].free_bytes() < bytes {
+                continue; // stays put; future lookups see Remote(old)
+            }
+            self.devices[old].remove(key);
+            self.devices[new].insert(key, bytes);
+            per_dst[new].push(self.p2p_item(bytes));
+        }
+        self.flush_copy_batches(&per_dst);
+    }
+
+    /// Popularity-proportional replication of the hottest experts: the
+    /// top-`replicate_top` keys by mass split the fleet-wide replica pool
+    /// (`REPLICA_BUDGET_FRAC` of each device's cache budget) by mass
+    /// share; expert i gets `floor(share_i · pool / bytes_i)` copies
+    /// (capped at the peer count), placed on the peers with the most
+    /// replica headroom. Only new (key, device) pairs pay a p2p copy —
+    /// surviving replicas carry over free; replicas that fell out of the
+    /// top set (or whose home moved) are invalidated.
+    fn refresh_replicas(&mut self) {
+        let n = self.devices.len();
+        if n <= 1 {
+            return;
+        }
+        let top: Vec<(ExpertKey, f64)> = self
+            .popularity
+            .masses()
+            .into_iter()
+            .take(self.placement.replicate_top)
+            .collect();
+        let total_mass: f64 = top.iter().map(|(_, m)| *m).sum();
+        let old = std::mem::take(&mut self.replicas);
+        self.replica_bytes = vec![0; n];
+        if total_mass <= 0.0 {
+            return;
+        }
+        let pool = self.replica_budget as f64 * n as f64;
+        let mut per_dst: Vec<Vec<(f64, f64, f64)>> = vec![Vec::new(); n];
+        for (key, mass) in top {
+            let home = self.home(key);
+            // replicate only home-resident copies (the copy source)
+            let Some(bytes) = self.devices[home].bytes_of(key) else { continue };
+            if bytes == 0 || bytes > self.replica_budget {
+                continue;
+            }
+            let copies = ((pool * (mass / total_mass) / bytes as f64) as usize).min(n - 1);
+            if copies == 0 {
+                continue;
+            }
+            // peers by replica headroom, deterministic tie on device id
+            let mut peers: Vec<DeviceId> = (0..n).filter(|d| *d != home).collect();
+            peers.sort_by_key(|d| (self.replica_bytes[*d], *d));
+            let mut placed = Vec::new();
+            for d in peers.into_iter().take(copies) {
+                if self.replica_bytes[d] + bytes > self.replica_budget {
+                    continue;
+                }
+                self.replica_bytes[d] += bytes;
+                let survived = old.get(&key).is_some_and(|v| v.contains(&d));
+                if !survived {
+                    per_dst[d].push(self.p2p_item(bytes));
+                }
+                placed.push(d);
+            }
+            if !placed.is_empty() {
+                self.replicas.insert(key, placed);
+            }
+        }
+        self.flush_copy_batches(&per_dst);
+    }
+
+    /// `(bytes, duration, overhead)` copy-batch item for moving `bytes`
+    /// over the GPU↔GPU link — one costing for rebalance migrations and
+    /// replica pushes alike.
+    fn p2p_item(&self, bytes: usize) -> (f64, f64, f64) {
+        let b = (bytes as f64).max(1.0);
+        (bytes as f64, self.placement.topo.p2p.copy_us(b), self.placement.topo.p2p.api_us)
+    }
+
+    /// Charge accumulated per-destination copy batches to the destination
+    /// buses (coalesced into one transaction each when the placement
+    /// coalesces).
+    fn flush_copy_batches(&mut self, per_dst: &[Vec<(f64, f64, f64)>]) {
+        let coalesce = self.placement.coalesce;
+        let now = self.clock.now_us();
+        for (dst, items) in per_dst.iter().enumerate() {
+            if !items.is_empty() {
+                self.prefetch.copy_batch(dst, items, coalesce, now);
+            }
+        }
+    }
+
+    /// Invalidate `key`'s replicas (its home moved — they were placed
+    /// relative to the old home). The byte accounting is rebuilt
+    /// wholesale by `refresh_replicas`, which always runs in the same
+    /// rebalance pass when replication is on; here the holders only need
+    /// to stop resolving.
+    fn drop_replicas_of(&mut self, key: ExpertKey) {
+        self.replicas.remove(&key);
+    }
+
+    /// Measured decayed activation mass of `key` (diagnostic surface).
+    pub fn popularity_mass(&self, key: ExpertKey) -> f64 {
+        self.popularity.mass(key)
+    }
+
+    /// Rebalances executed so far.
+    pub fn rebalances(&self) -> u64 {
+        self.rebalances
+    }
+
+    /// Devices currently holding a replica of `key`.
+    pub fn replica_devices_of(&self, key: ExpertKey) -> Vec<DeviceId> {
+        self.replicas.get(&key).cloned().unwrap_or_default()
+    }
+
+    /// Replica bytes resident on `dev` (≤ `replica_budget_per_device`).
+    pub fn replica_bytes_of(&self, dev: DeviceId) -> usize {
+        self.replica_bytes[dev]
+    }
+
+    /// The per-device replica pool size in bytes.
+    pub fn replica_budget_per_device(&self) -> usize {
+        self.replica_budget
+    }
+
+    /// When `dev`'s bus frees (the replica-resolution signal).
+    pub fn bus_free_of(&self, dev: DeviceId) -> f64 {
+        self.prefetch.bus_free_us(dev)
     }
 
     /// Pin/unpin `key` on its home device (prefetched-for-imminent-use

@@ -24,6 +24,37 @@ use super::ExpertKey;
 /// Index of a device in the store's placement (0-based, dense).
 pub type DeviceId = usize;
 
+/// Fraction of each device's expert-cache budget reserved for *replicas*
+/// of the hottest experts (popularity-proportional copy counts — see
+/// `ExpertStore::rebalance_tick`). Replica bytes are accounted separately
+/// from the resident set: they model a reserved VRAM pool *in addition
+/// to* the cache budget (like the pinned staging buffers), so replicated
+/// configs hold up to this much more modeled memory per device than
+/// non-replicated ones at the same budget. The sweep's tps margins do
+/// not lean on that extra capacity — replication alone is tps-neutral on
+/// the skewed trace (replay: 52.01 vs 52.07 tok/s), the win comes from
+/// compute streams spreading replica-resolved GEMVs — but carving the
+/// pool out of the cache budget instead is a ROADMAP follow-up.
+pub const REPLICA_BUDGET_FRAC: f64 = 0.2;
+
+/// Layer boundaries between popularity rebalances: `rebalance_tick` is
+/// called once per *processed* layer boundary by both coordinators, so
+/// the cadence follows work, not wall time — 128 boundaries ≈ 4 decode
+/// tokens single-stream at Mixtral depth, proportionally more often
+/// under batching (each sequence's layers count). That is safe because a
+/// rebalance that finds the placement within `REBALANCE_SLACK` migrates
+/// nothing — post-convergence rebalances are cheap no-ops — while the
+/// first rebalances land early enough to act on the warmed Zipf mass.
+pub const REBALANCE_INTERVAL: u64 = 128;
+
+/// Hysteresis slack for `Balanced` re-homing: keys migrate only while
+/// the busiest-vs-idlest device mass gap exceeds this fraction of total
+/// mass. Without the slack, near-equal-mass keys (all layers of one
+/// expert look alike) reshuffle on every rebalance and the migration /
+/// peer-fetch churn swamps the balance win — the replay measured 3x the
+/// bytes moved under naive full re-packing.
+pub const REBALANCE_SLACK: f64 = 0.02;
+
 /// Where expert bytes may live and how they move between devices.
 #[derive(Clone, Debug)]
 pub struct Placement {
@@ -35,6 +66,11 @@ pub struct Placement {
     /// on eviction, spill victims to a peer device with spare capacity
     /// (over the p2p link) instead of dropping them
     pub spill: bool,
+    /// replicate the `replicate_top` hottest experts (by measured
+    /// activation mass) onto peer devices, under a popularity-
+    /// proportional slice of each device's `REPLICA_BUDGET_FRAC` pool
+    /// (0 = replication off — the pre-replication behavior exactly)
+    pub replicate_top: usize,
 }
 
 impl Placement {
@@ -46,17 +82,19 @@ impl Placement {
             topo: TopologySpec::single(PCIE4),
             coalesce: false,
             spill: false,
+            replicate_top: 0,
         }
     }
 
     /// `n` devices under `shard`, cooperative behaviors on when there is
-    /// anything to cooperate across.
+    /// anything to cooperate across (replication stays opt-in).
     pub fn sharded(n: usize, shard: ShardPolicy) -> Self {
         Placement {
             shard,
             topo: TopologySpec::uniform(n, PCIE4),
             coalesce: n > 1,
             spill: n > 1,
+            replicate_top: 0,
         }
     }
 
@@ -64,15 +102,19 @@ impl Placement {
         self.topo.n_devices
     }
 
-    /// Home device of `key` under the shard policy.
+    /// Static home device of `key` under the shard policy (for
+    /// `Balanced` this is only the cold-start seed — use
+    /// `ExpertStore::home`, which overlays the measured-mass assignment).
     pub fn home(&self, key: ExpertKey) -> DeviceId {
         self.shard.place(key, self.topo.n_devices)
     }
 }
 
 /// Outcome of a routed residency probe (`ExpertStore::lookup`): the expert
-/// is resident on its home device, resident on a peer (reachable over the
-/// p2p link), or not resident anywhere.
+/// is usable in place on a device (its home, or — with replication on —
+/// the replica holder whose bus frees soonest), resident on a peer only as
+/// a spilled copy (reachable over the p2p link via `peer_fetch`), or not
+/// resident anywhere.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Lookup {
     Local(DeviceId),

@@ -16,7 +16,7 @@
 //!   popularity ages out and victims are the experts the router has
 //!   stopped choosing.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::config::ResidencyKind;
 
@@ -143,41 +143,90 @@ impl ResidencyPolicy for LfuPolicy {
     }
 }
 
+// ----------------------------------- decayed activation mass (shared EMA)
+
+/// Per-expert exponentially-decayed activation mass — the popularity
+/// signal behind both the sparsity eviction policy and the store's
+/// measured-load placement (`ShardPolicy::Balanced` bin-packing, hot-
+/// expert replication). Lazily decayed: the stored value is the EMA as of
+/// `stamp[key]` activation steps; `mass` decays it to the current step on
+/// read. Keys live in a `BTreeMap` so `masses()` iterates in a
+/// deterministic order (the rebalance assignment depends on it).
+#[derive(Debug, Clone)]
+pub struct PopularityTracker {
+    decay: f64,
+    step: u64,
+    ema: BTreeMap<ExpertKey, f64>,
+    stamp: BTreeMap<ExpertKey, u64>,
+}
+
+impl PopularityTracker {
+    pub fn new(decay: f64) -> Self {
+        assert!(decay > 0.0 && decay <= 1.0);
+        PopularityTracker { decay, step: 0, ema: BTreeMap::new(), stamp: BTreeMap::new() }
+    }
+
+    /// The router selected `key` (one activation step).
+    pub fn note(&mut self, key: ExpertKey) {
+        self.step += 1;
+        let decayed = self.mass(key);
+        self.ema.insert(key, decayed + 1.0);
+        self.stamp.insert(key, self.step);
+    }
+
+    /// Activation mass decayed to the current step. powf, not powi: the
+    /// step gap is unbounded in a long-running server and an i32 cast
+    /// would wrap negative past 2^31, exploding the coldest score.
+    pub fn mass(&self, key: ExpertKey) -> f64 {
+        match (self.ema.get(&key), self.stamp.get(&key)) {
+            (Some(v), Some(s)) => v * self.decay.powf((self.step - s) as f64),
+            _ => 0.0,
+        }
+    }
+
+    /// Every tracked key with its current mass, hottest first (ties break
+    /// by key order — deterministic for the greedy bin-packer).
+    pub fn masses(&self) -> Vec<(ExpertKey, f64)> {
+        let mut out: Vec<(ExpertKey, f64)> =
+            self.ema.keys().map(|k| (*k, self.mass(*k))).collect();
+        out.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| a.0.cmp(&b.0))
+        });
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.ema.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ema.is_empty()
+    }
+}
+
 // ------------------------------------------- sparsity-aware (MoE-Infinity)
 
 pub struct SparsityPolicy {
-    /// per-expert exponentially-decayed activation count, lazily decayed:
-    /// the stored value is the EMA as of `stamp[key]` activation steps
-    decay: f64,
+    /// shared decayed-activation-mass machinery (see `PopularityTracker`)
+    mass: PopularityTracker,
     /// admission threshold on the decayed count (see `SPARSITY_MIN_ADMIT`)
     min_admit: f64,
-    step: u64,
-    ema: HashMap<ExpertKey, f64>,
-    stamp: HashMap<ExpertKey, u64>,
     last_use: HashMap<ExpertKey, u64>,
 }
 
 impl SparsityPolicy {
     pub fn new(decay: f64) -> Self {
-        assert!(decay > 0.0 && decay <= 1.0);
         SparsityPolicy {
-            decay,
+            mass: PopularityTracker::new(decay),
             min_admit: SPARSITY_MIN_ADMIT,
-            step: 0,
-            ema: HashMap::new(),
-            stamp: HashMap::new(),
             last_use: HashMap::new(),
         }
     }
 
-    /// Activation score decayed to the current step. powf, not powi: the
-    /// step gap is unbounded in a long-running server and an i32 cast
-    /// would wrap negative past 2^31, exploding the coldest score.
     fn score(&self, key: ExpertKey) -> f64 {
-        match (self.ema.get(&key), self.stamp.get(&key)) {
-            (Some(v), Some(s)) => v * self.decay.powf((self.step - s) as f64),
-            _ => 0.0,
-        }
+        self.mass.mass(key)
     }
 }
 
@@ -186,10 +235,7 @@ impl ResidencyPolicy for SparsityPolicy {
         "sparsity"
     }
     fn on_activation(&mut self, key: ExpertKey, _now: u64) {
-        self.step += 1;
-        let decayed = self.score(key);
-        self.ema.insert(key, decayed + 1.0);
-        self.stamp.insert(key, self.step);
+        self.mass.note(key);
     }
     fn on_hit(&mut self, key: ExpertKey, now: u64) {
         self.last_use.insert(key, now);
@@ -293,6 +339,32 @@ mod tests {
     fn recency_policies_admit_everything() {
         assert!(LruPolicy::new().admits((0, 0)));
         assert!(LfuPolicy::new().admits((3, 7)));
+    }
+
+    #[test]
+    fn popularity_tracker_masses_decay_and_rank_deterministically() {
+        let mut t = PopularityTracker::new(0.9);
+        for _ in 0..5 {
+            t.note((0, 0));
+        }
+        t.note((0, 1));
+        let m = t.masses();
+        assert_eq!(m[0].0, (0, 0), "hottest first");
+        assert!(m[0].1 > m[1].1);
+        assert_eq!(t.len(), 2);
+        // unrelated steps decay (0,0)'s mass toward zero
+        let before = t.mass((0, 0));
+        for _ in 0..50 {
+            t.note((3, 3));
+        }
+        assert!(t.mass((0, 0)) < before * 0.1);
+        // equal-mass keys tie-break by key order
+        let mut tie = PopularityTracker::new(1.0);
+        tie.note((1, 1));
+        tie.note((0, 2));
+        let m = tie.masses();
+        assert_eq!(m[0].0, (0, 2));
+        assert_eq!(m[1].0, (1, 1));
     }
 
     #[test]

@@ -69,6 +69,10 @@ pub struct DeviceStats {
     /// f64 so the simulator's fractional per-expert byte models sum
     /// exactly; integer byte counts below 2^53 stay exact
     pub transferred_bytes: f64,
+    /// total microseconds this device's bus spent occupied (sum of copy
+    /// durations) — the load-imbalance signal the balanced shard policy
+    /// is judged on: max-over-devices busy time vs a static hash
+    pub bus_busy_us: f64,
 }
 
 /// Residency-movement statistics (the store's half of `PipelineStats`).
@@ -81,15 +85,18 @@ pub struct DeviceStats {
 ///
 /// So `per_device` sums and `attributed.values()` sums each reproduce
 /// their totals *bit-exactly* — the invariants the serving-accounting and
-/// sharded-store tests assert. Ledger entries are a few words per
-/// requester; callers that serve unbounded request streams can
-/// `take_attribution` retired ids.
+/// sharded-store tests assert. The continuous-batching scheduler retires
+/// a request's ledger entry into `retired` the moment it completes
+/// (`SeqBackend::retire` → `take_attribution`), so live ledger size is
+/// bounded by the in-flight batch even on unbounded request streams.
 #[derive(Debug, Clone)]
 pub struct StoreStats {
     pub demand_fetches: u64,
     pub prefetches: u64,
     pub bus_transactions: u64,
     pub transferred_bytes: f64,
+    /// device-order sum of per-device bus occupancy (see `DeviceStats`)
+    pub bus_busy_us: f64,
     pub stall_us: f64,
     pub stall_demand_us: f64,
     pub stall_prefetch_us: f64,
@@ -118,6 +125,7 @@ impl StoreStats {
             prefetches: 0,
             bus_transactions: 0,
             transferred_bytes: 0.0,
+            bus_busy_us: 0.0,
             stall_us: 0.0,
             stall_demand_us: 0.0,
             stall_prefetch_us: 0.0,
@@ -159,17 +167,19 @@ impl StoreStats {
 
     fn rederive_movement(&mut self) {
         let (mut df, mut pf, mut tx) = (0u64, 0u64, 0u64);
-        let mut bytes = 0.0f64;
+        let (mut bytes, mut busy) = (0.0f64, 0.0f64);
         for d in &self.per_device {
             df += d.demand_fetches;
             pf += d.prefetches;
             tx += d.bus_transactions;
             bytes += d.transferred_bytes;
+            busy += d.bus_busy_us;
         }
         self.demand_fetches = df;
         self.prefetches = pf;
         self.bus_transactions = tx;
         self.transferred_bytes = bytes;
+        self.bus_busy_us = busy;
     }
 }
 
@@ -224,11 +234,53 @@ impl<P> PrefetchPipeline<P> {
     ) -> f64 {
         self.stats.per_device[dev].transferred_bytes += bytes;
         self.stats.per_device[dev].bus_transactions += 1;
+        self.stats.per_device[dev].bus_busy_us += duration_us;
         self.stats.rederive_movement();
         let start = now_us.max(self.bus_free_us[dev]);
         let done = start + duration_us;
         self.bus_free_us[dev] = done;
         done
+    }
+
+    /// Batched raw occupancy on `dev`'s bus (rebalance migrations,
+    /// replica pushes): `items` are `(bytes, duration_us, overhead_us)`
+    /// copies toward `dev`. Coalesced: ONE transaction, the largest
+    /// per-copy overhead paid once, net legs back-to-back — the
+    /// `begin_coalesced` timing without in-flight tracking (the bytes are
+    /// already resident somewhere; nothing to consume). Otherwise each
+    /// item is an individual `bus_copy`. Returns the finish time of the
+    /// last byte (`now_us` if empty).
+    pub fn copy_batch(
+        &mut self,
+        dev: DeviceId,
+        items: &[(f64, f64, f64)],
+        coalesce: bool,
+        now_us: f64,
+    ) -> f64 {
+        if items.is_empty() {
+            return now_us;
+        }
+        if !coalesce {
+            let mut done = now_us;
+            for &(bytes, dur, _) in items {
+                done = self.bus_copy(dev, dur, bytes, now_us);
+            }
+            return done;
+        }
+        let overhead = items.iter().fold(0.0f64, |a, it| a.max(it.2));
+        let start = now_us.max(self.bus_free_us[dev]);
+        let mut t = start + overhead;
+        self.stats.per_device[dev].bus_transactions += 1;
+        self.stats.per_device[dev].bus_busy_us += overhead;
+        for &(bytes, dur, ovh) in items {
+            let net = (dur - ovh).max(0.0);
+            t += net;
+            self.stats.per_device[dev].transferred_bytes += bytes;
+            self.stats.per_device[dev].bus_busy_us += net;
+        }
+        self.stats.rederive_movement();
+        self.bus_free_us[dev] = t;
+        t
     }
 
     /// Overlapped prefetch of `key` toward `dev`: queues on that device's
@@ -263,6 +315,7 @@ impl<P> PrefetchPipeline<P> {
         self.stats.per_device[dev].prefetches += 1;
         self.stats.per_device[dev].transferred_bytes += bytes;
         self.stats.per_device[dev].bus_transactions += 1;
+        self.stats.per_device[dev].bus_busy_us += duration_us;
         self.stats.rederive_movement();
         let done = now_us + duration_us;
         self.bus_free_us[dev] = done;
@@ -288,10 +341,13 @@ impl<P> PrefetchPipeline<P> {
         let start = now_us.max(self.bus_free_us[dev]);
         let mut t = start + overhead;
         self.stats.per_device[dev].bus_transactions += 1;
+        self.stats.per_device[dev].bus_busy_us += overhead;
         for it in items {
-            t += (it.duration_us - it.overhead_us).max(0.0);
+            let net = (it.duration_us - it.overhead_us).max(0.0);
+            t += net;
             self.stats.per_device[dev].prefetches += 1;
             self.stats.per_device[dev].transferred_bytes += it.bytes;
+            self.stats.per_device[dev].bus_busy_us += net;
             self.inflight.insert((dev, it.key), (t, it.payload));
         }
         self.stats.rederive_movement();
@@ -438,6 +494,37 @@ mod tests {
         p.record_demand(0);
         assert_eq!(p.stats.demand_fetches, 2);
         assert_eq!(p.stats.transferred_bytes, 64.0);
+    }
+
+    #[test]
+    fn copy_batch_coalesced_matches_plan_timing_without_inflight() {
+        let mut p: PrefetchPipeline = PrefetchPipeline::new(2);
+        // two 100us copies with 12us per-copy overhead each, coalesced:
+        // same 12 + 88 + 88 shape as begin_coalesced
+        let done = p.copy_batch(1, &[(64.0, 100.0, 12.0), (64.0, 100.0, 12.0)], true, 0.0);
+        assert_eq!(done, 188.0);
+        assert_eq!(p.stats.per_device[1].bus_transactions, 1);
+        assert_eq!(p.stats.per_device[1].transferred_bytes, 128.0);
+        assert_eq!(p.stats.per_device[1].bus_busy_us, 188.0);
+        assert_eq!(p.inflight_len(), 0, "raw copies track nothing in flight");
+        // non-coalesced: two transactions queued back-to-back
+        let done = p.copy_batch(0, &[(8.0, 50.0, 12.0), (8.0, 50.0, 12.0)], false, 0.0);
+        assert_eq!(done, 100.0);
+        assert_eq!(p.stats.per_device[0].bus_transactions, 2);
+        // empty batches are free
+        assert_eq!(p.copy_batch(0, &[], true, 7.0), 7.0);
+    }
+
+    #[test]
+    fn bus_busy_sums_to_global_bit_exactly() {
+        let mut p: PrefetchPipeline = PrefetchPipeline::new(2);
+        p.bus_copy(0, 30.5, 10.0, 0.0);
+        p.begin(1, (0, 0), 40.25, 8.0, 0.0, ());
+        p.begin_blocking(1, (0, 1), 9.75, 1.0, 0.0, ());
+        let busy: f64 = p.stats.per_device.iter().map(|d| d.bus_busy_us).sum();
+        assert_eq!(busy, p.stats.bus_busy_us);
+        assert_eq!(p.stats.per_device[0].bus_busy_us, 30.5);
+        assert_eq!(p.stats.per_device[1].bus_busy_us, 50.0);
     }
 
     #[test]

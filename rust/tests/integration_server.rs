@@ -10,12 +10,13 @@ use std::sync::{Arc, Barrier};
 use std::thread;
 
 use floe::coordinator::policy::{SystemConfig, SystemKind};
-use floe::coordinator::sim::SimParams;
+use floe::coordinator::sim::{SimParams, SimServeBackend};
 use floe::hwsim::RTX3090;
 use floe::server::{serve_sim_listener, ServerOpts};
 use floe::util::json::{parse, Json};
 
-type ServerHandle = (std::net::SocketAddr, thread::JoinHandle<anyhow::Result<()>>);
+type ServerHandle =
+    (std::net::SocketAddr, thread::JoinHandle<anyhow::Result<SimServeBackend>>);
 
 fn sim_server(max_requests: usize, max_batch: usize, gather_ms: u64) -> ServerHandle {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
@@ -61,7 +62,16 @@ fn overlapping_clients_get_batched_responses_with_stats() {
 
     let responses: Vec<(usize, Json)> =
         clients.into_iter().map(|c| c.join().unwrap().unwrap()).collect();
-    server.join().unwrap().unwrap();
+    let backend = server.join().unwrap().unwrap();
+
+    // every served request was retired out of the attribution ledger the
+    // moment it completed: with all N globally-unique ids finished the
+    // live ledger has drained to zero (the leak regression was unbounded
+    // growth), while the retired bucket still carries the accounted time
+    let stats = backend.store().stats();
+    assert!(stats.attributed.is_empty(), "all requests finished — ledger must be empty");
+    assert_eq!(stats.stall_demand_us, stats.retired.demand_us);
+    assert_eq!(stats.stall_prefetch_us, stats.retired.prefetch_us);
 
     assert_eq!(responses.len(), N);
     let mut max_batch_seen = 0usize;

@@ -6,8 +6,10 @@
 //! * no request starves: every request completes and admission preserves
 //!   FIFO arrival order,
 //! * the decode batch never exceeds the `--max-batch` cap,
-//! * per-request attributed stall totals reproduce the store's global
-//!   stall counters *bit-exactly* (key-order component sums).
+//! * completed requests are retired out of the attribution ledger
+//!   (bounded by the in-flight batch), and the retired bucket plus the
+//!   remaining ledger reproduces the store's global stall counters
+//!   *bit-exactly* (key-order component sums).
 
 use floe::config::ResidencyKind;
 use floe::coordinator::policy::{SystemConfig, SystemKind};
@@ -76,42 +78,51 @@ fn scheduler_invariants_under_random_traces() {
             max_batch
         );
 
-        // exact attribution: nothing unattributed, and component-wise
-        // key-order sums reproduce the global counters bit-for-bit
+        // exact attribution: nothing unattributed, completed requests
+        // retired out of the live ledger, and retired + key-order ledger
+        // sums reproduce the global counters bit-for-bit
         prop_assert!(
             !rep.stats.attributed.contains_key(&StoreStats::UNATTRIBUTED),
             "stalls charged outside any request"
         );
-        let (mut demand, mut prefetch) = (0.0f64, 0.0f64);
+        prop_assert!(
+            rep.stats.attributed.is_empty(),
+            "completed requests left {} ledger entries",
+            rep.stats.attributed.len()
+        );
+        let (mut demand, mut prefetch) =
+            (rep.stats.retired.demand_us, rep.stats.retired.prefetch_us);
         for s in rep.stats.attributed.values() {
             demand += s.demand_us;
             prefetch += s.prefetch_us;
         }
         prop_assert!(
             demand == rep.stats.stall_demand_us,
-            "demand sum {demand} != global {}",
+            "retired+ledger demand sum {demand} != global {}",
             rep.stats.stall_demand_us
         );
         prop_assert!(
             prefetch == rep.stats.stall_prefetch_us,
-            "prefetch sum {prefetch} != global {}",
+            "retired+ledger prefetch sum {prefetch} != global {}",
             rep.stats.stall_prefetch_us
         );
         prop_assert!(
             rep.stats.stall_us == rep.stats.stall_demand_us + rep.stats.stall_prefetch_us,
             "stall total does not decompose"
         );
-        // each completion's split is exactly the store's ledger entry
+        // completion splits folded in retirement order reproduce the
+        // retired bucket bit-exactly (same op order as `retire`)
+        let (mut demand, mut prefetch) = (0.0f64, 0.0f64);
         for c in &rep.completions {
-            let ledger = rep.stats.attributed.get(&c.id).copied().unwrap_or_default();
-            prop_assert!(
-                c.stall == ledger,
-                "req {} completion split {:?} != ledger {:?}",
-                c.id,
-                c.stall,
-                ledger
-            );
+            demand += c.stall.demand_us;
+            prefetch += c.stall.prefetch_us;
         }
+        prop_assert!(
+            demand == rep.stats.retired.demand_us
+                && prefetch == rep.stats.retired.prefetch_us,
+            "completion splits ({demand}, {prefetch}) != retired {:?}",
+            rep.stats.retired
+        );
         Ok(())
     });
 }

@@ -7,18 +7,29 @@
 //!   kept as an executable specification — this is exactly the claim
 //!   that the exp-fig6/exp-fig8 JSON is byte-identical, since those
 //!   files are pure functions of these reports.
-//! * Sharded-store invariants under random op traces: per-device byte
+//! * `--devices N --shard-policy layer|expert|hash` with replication and
+//!   compute streams off must reproduce the PR 3 numbers *bit-exactly*:
+//!   `simulate` is pinned the same way to `simulate_sharded_reference`,
+//!   the verbatim pre-popularity multi-device decode path — the claim
+//!   that the popularity machinery is observationally free until opted
+//!   into.
+//! * Sharded-store invariants under random op traces (now including
+//!   `balanced` placements with live rebalances): per-device byte
 //!   budgets are never exceeded, pinned entries survive eviction on
-//!   every device, and per-device movement stats sum to the global
-//!   `StoreStats` bit-exactly.
+//!   every device, rebalance conserves total resident bytes, replicas
+//!   never exceed the replica budget, and per-device movement stats sum
+//!   to the global `StoreStats` bit-exactly.
 
 use floe::config::{ResidencyKind, ShardPolicy};
 use floe::coordinator::policy::{SystemConfig, SystemKind};
-use floe::coordinator::sim::{simulate, simulate_scalar_reference, SimParams};
+use floe::coordinator::sim::{
+    simulate, simulate_scalar_reference, simulate_sharded_reference, SimParams,
+};
 use floe::hwsim::{TopologySpec, PCIE4, RTX3090};
 use floe::prop_assert;
 use floe::store::{
     ExpertStore, Lookup, Placement, PlanMode, TransferPlan, DEFAULT_SPARSITY_DECAY,
+    REBALANCE_INTERVAL,
 };
 use floe::util::prop::check;
 use floe::util::rng::Rng;
@@ -100,17 +111,79 @@ fn fig6_single_device_lru_matches_pre_redesign_bit_exactly() {
     assert_eq!(new.tps.to_bits(), old.tps.to_bits(), "lfu diverged");
 }
 
+// ------------------------------------------- PR 3 multi-device equivalence
+
+/// The popularity redesign's regression pin: every static shard policy at
+/// 2 and 4 devices, with replication and compute streams off (the
+/// defaults), reproduces the pre-popularity plan-based simulator
+/// field-by-field via `f64::to_bits` — measured-load machinery must be
+/// observationally free until opted into.
+#[test]
+fn static_sharding_matches_pr3_reference_bit_exactly() {
+    for shard in [ShardPolicy::Layer, ShardPolicy::Expert, ShardPolicy::Hash] {
+        for devices in [2usize, 4] {
+            for vram in [11.0, 13.0] {
+                let mut p = SimParams::mixtral_on(
+                    RTX3090.clone(),
+                    SystemConfig::with_residency(SystemKind::Floe, ResidencyKind::Lru)
+                        .with_devices(devices, shard),
+                    vram,
+                );
+                p.routing = floe::coordinator::sim::RoutingModel {
+                    zipf_s: 1.2,
+                    stickiness: 0.5,
+                    seed: 7,
+                };
+                let new = simulate(&p, 64, 256);
+                let old = simulate_sharded_reference(&p, 64, 256);
+                let ctx = format!("{} x{} @ {vram} GB", shard.name(), devices);
+                assert_eq!(new.tps.to_bits(), old.tps.to_bits(), "tps diverged: {ctx}");
+                assert_eq!(
+                    new.total_us.to_bits(),
+                    old.total_us.to_bits(),
+                    "total_us diverged: {ctx}"
+                );
+                assert_eq!(
+                    new.stall_us.to_bits(),
+                    old.stall_us.to_bits(),
+                    "stall_us diverged: {ctx}"
+                );
+                assert_eq!(
+                    new.transferred_bytes.to_bits(),
+                    old.transferred_bytes.to_bits(),
+                    "transferred_bytes diverged: {ctx}"
+                );
+                assert_eq!(
+                    new.bus_transactions, old.bus_transactions,
+                    "bus_transactions diverged: {ctx}"
+                );
+                assert_eq!(
+                    new.max_device_bus_busy_us.to_bits(),
+                    old.max_device_bus_busy_us.to_bits(),
+                    "max_device_bus_busy_us diverged: {ctx}"
+                );
+                assert_eq!(
+                    new.cache_hit_rate.to_bits(),
+                    old.cache_hit_rate.to_bits(),
+                    "cache_hit_rate diverged: {ctx}"
+                );
+            }
+        }
+    }
+}
+
 // --------------------------------------------------- sharded-store props
 
 fn device_sums_match(s: &ExpertStore) -> Result<(), String> {
     let st = s.stats();
     let (mut df, mut pf, mut tx) = (0u64, 0u64, 0u64);
-    let mut bytes = 0.0f64;
+    let (mut bytes, mut busy) = (0.0f64, 0.0f64);
     for d in &st.per_device {
         df += d.demand_fetches;
         pf += d.prefetches;
         tx += d.bus_transactions;
         bytes += d.transferred_bytes;
+        busy += d.bus_busy_us;
     }
     prop_assert!(df == st.demand_fetches, "demand {} != {}", df, st.demand_fetches);
     prop_assert!(pf == st.prefetches, "prefetch {} != {}", pf, st.prefetches);
@@ -120,6 +193,12 @@ fn device_sums_match(s: &ExpertStore) -> Result<(), String> {
         "bytes {} != {} (must be bit-exact)",
         bytes,
         st.transferred_bytes
+    );
+    prop_assert!(
+        busy == st.bus_busy_us,
+        "busy {} != {} (must be bit-exact)",
+        busy,
+        st.bus_busy_us
     );
     Ok(())
 }
@@ -136,6 +215,7 @@ fn sharded_store_invariants_under_random_traces() {
             topo: TopologySpec::uniform(n_dev, PCIE4),
             coalesce: rng.f64() < 0.5,
             spill: rng.f64() < 0.5,
+            replicate_top: if rng.f64() < 0.5 { 2 } else { 0 },
         };
         let coalesce = placement.coalesce;
         let mut s: ExpertStore =
@@ -148,7 +228,7 @@ fn sharded_store_invariants_under_random_traces() {
         };
         for _ in 0..250 {
             let key = (rng.below(6), rng.below(8));
-            match rng.below(10) {
+            match rng.below(11) {
                 0 | 1 => {
                     if let Lookup::Remote(from) = s.lookup(key) {
                         s.peer_fetch(key, from);
@@ -210,6 +290,29 @@ fn sharded_store_invariants_under_random_traces() {
                     unpin(&mut pinned, key); // admit attempt resets the pin
                     s.admit(key, rng.range(1, budget / 2 + 2));
                 }
+                9 => {
+                    // force a full rebalance interval: Balanced placements
+                    // re-home by measured mass, replicating placements
+                    // refresh replicas — either way total resident bytes
+                    // are conserved (migrations go into free space only)
+                    let used_before = s.used();
+                    let resident_before = s.resident();
+                    for _ in 0..REBALANCE_INTERVAL {
+                        s.rebalance_tick();
+                    }
+                    prop_assert!(
+                        s.used() == used_before,
+                        "rebalance changed resident bytes {} -> {}",
+                        used_before,
+                        s.used()
+                    );
+                    prop_assert!(
+                        s.resident() == resident_before,
+                        "rebalance changed resident count {} -> {}",
+                        resident_before,
+                        s.resident()
+                    );
+                }
                 _ => s.tick(rng.f64() * 30.0),
             }
             // invariant 1: per-device byte budgets are never exceeded
@@ -231,6 +334,16 @@ fn sharded_store_invariants_under_random_traces() {
             }
             // invariant 3: per-device stats sum to the globals bit-exactly
             device_sums_match(&s)?;
+            // invariant 4: replicas never exceed the replica budget
+            for d in 0..s.n_devices() {
+                prop_assert!(
+                    s.replica_bytes_of(d) <= s.replica_budget_per_device(),
+                    "device {} replica bytes {} > budget {}",
+                    d,
+                    s.replica_bytes_of(d),
+                    s.replica_budget_per_device()
+                );
+            }
         }
         // totals are consistent with the per-device views
         let used: usize = (0..s.n_devices()).map(|d| s.used_of(d)).sum();
@@ -239,4 +352,127 @@ fn sharded_store_invariants_under_random_traces() {
         prop_assert!(resident == s.resident(), "resident sums diverge");
         Ok(())
     });
+}
+
+// --------------------------------------------------- popularity placement
+
+fn store_with(shard: ShardPolicy, n: usize, replicate_top: usize, budget: usize) -> ExpertStore {
+    ExpertStore::with_placement(
+        Placement {
+            shard,
+            topo: TopologySpec::uniform(n, PCIE4),
+            coalesce: true,
+            spill: true,
+            replicate_top,
+        },
+        budget,
+        ResidencyKind::Lru,
+        DEFAULT_SPARSITY_DECAY,
+    )
+}
+
+/// Drive a fixed skewed demand trace (two hot experts carry 80% of the
+/// traffic, and both collide onto device 0 under `hash` at two devices)
+/// and return the busiest device's bus occupancy.
+fn drive_skewed_trace(s: &mut ExpertStore) -> f64 {
+    let hot = [(0usize, 0usize), (0, 2)];
+    let cold = [(1usize, 1usize), (1, 3)];
+    for step in 0..(4 * REBALANCE_INTERVAL as usize) {
+        let keys: &[(usize, usize)] = if step % 5 == 4 { &cold } else { &hot };
+        for &key in keys {
+            s.lookup(key); // feeds the popularity tracker
+            s.demand_fetch_for(key, 10.0, 100.0); // occupies the home bus
+        }
+        s.rebalance_tick();
+        s.tick(25.0);
+    }
+    (0..s.n_devices())
+        .map(|d| s.device_stats(d).bus_busy_us)
+        .fold(0.0f64, f64::max)
+}
+
+/// The measured-load claim: on a skewed trace whose hot experts collide
+/// under static hashing, `Balanced` re-homing yields strictly lower
+/// max-device bus busy time — the imbalance `hash` cannot fix because it
+/// never observes the activation distribution.
+#[test]
+fn balanced_rebalance_spreads_hot_bus_traffic_below_hash() {
+    // under hash at n=2 every trace key lands on device 0:
+    // (l*0x9E3779B1 + e*0x85EBCA77) % 2 == (l + e) % 2, and all trace
+    // keys have even l + e
+    let mut hash = store_with(ShardPolicy::Hash, 2, 0, 10_000);
+    let hash_max = drive_skewed_trace(&mut hash);
+    assert_eq!(hash.rebalances(), 0, "static hash must never rebalance");
+    assert_eq!(
+        hash.device_stats(1).bus_busy_us,
+        0.0,
+        "trace construction: hash piles everything onto device 0"
+    );
+
+    let mut bal = store_with(ShardPolicy::Balanced, 2, 0, 10_000);
+    let bal_max = drive_skewed_trace(&mut bal);
+    assert!(bal.rebalances() > 0, "balanced placement never rebalanced");
+    assert_ne!(
+        bal.home((0, 0)),
+        bal.home((0, 2)),
+        "bin-packing must split the two hot experts across devices"
+    );
+    assert!(
+        bal_max < hash_max,
+        "balanced max-device busy {bal_max} not below hash {hash_max}"
+    );
+}
+
+/// Replication mechanics: the hot expert replicates onto peers under the
+/// popularity-proportional budget, the per-device replica bytes respect
+/// the pool, and `lookup` resolves to the holder whose bus frees soonest
+/// (home on ties).
+#[test]
+fn replicas_respect_budget_and_resolve_bus_free_soonest() {
+    let mut s = store_with(ShardPolicy::Balanced, 3, 2, 1000);
+    let hot = (0usize, 1usize);
+    for _ in 0..10 {
+        s.lookup(hot);
+    }
+    assert!(s.popularity_mass(hot) > 1.0, "lookups must feed the tracker");
+    assert_eq!(s.popularity_mass((7, 7)), 0.0);
+    assert!(s.warm_admit(hot, 150));
+    let seed_home = s.home(hot);
+    for _ in 0..REBALANCE_INTERVAL {
+        s.rebalance_tick();
+    }
+    assert!(s.rebalances() > 0);
+    // hysteresis keeps the single hot key where it is (re-homing the
+    // only loaded key cannot reduce the imbalance), so the copy stays
+    // put and replicas land on the two peers
+    let home = s.home(hot);
+    assert_eq!(home, seed_home);
+    assert_eq!(s.resident_bytes(hot), Some(150));
+    // per-device pool = 20% of 1000 = 200; fleet pool 600; the only hot
+    // expert takes the whole mass share -> floor(600/150) = 4 copies,
+    // capped at the 2 peers
+    let reps = s.replica_devices_of(hot);
+    assert_eq!(reps.len(), 2, "hot expert must replicate to both peers: {reps:?}");
+    assert!(!reps.contains(&home));
+    for d in 0..s.n_devices() {
+        assert!(
+            s.replica_bytes_of(d) <= s.replica_budget_per_device(),
+            "device {d} replica bytes over budget"
+        );
+    }
+    // ties (all buses equally busy after the replica pushes) go to home
+    let hits_before = s.cache_stats().hits;
+    assert_eq!(s.lookup(hot), Lookup::Local(home));
+    // a busy home bus routes the next probe to a replica holder...
+    s.bus_copy_to(home, 1_000.0, 8.0);
+    let Lookup::Local(first) = s.lookup(hot) else { panic!("replica must hit") };
+    assert_ne!(first, home);
+    // ...specifically the holder whose bus frees soonest
+    assert!(s.bus_free_of(first) < s.bus_free_of(home));
+    // ...and the *least* busy replica wins when they differ
+    s.bus_copy_to(first, 2_000.0, 8.0);
+    let Lookup::Local(second) = s.lookup(hot) else { panic!("replica must hit") };
+    assert!(second != home && second != first);
+    // exactly one hit was recorded per probe, replica or not
+    assert_eq!(s.cache_stats().hits, hits_before + 3);
 }

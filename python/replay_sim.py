@@ -889,6 +889,212 @@ def _prefill_stream(p, store, layer, per_expert):
     store.advance_to(slowest)
 
 
+# ------------------------------------------------- batched serving (PR 5)
+# Mirror of coordinator/sched.rs::Scheduler + sim.rs::SimServeBackend /
+# simulate_serving under the boundary-synchronous step: admissions at each
+# token boundary (FIFO, capped), one decode per active seq in admission
+# order, same-boundary expert repeats at the CALIBRATED reuse ratio
+# (sim.rs::boundary_compute_reuse, which replaced the flat 0.15).
+
+
+def boundary_compute_reuse(p):
+    full = expert_compute_us(p)
+    if p.system.kind == FLOE:
+        flops = 2.0 * DM * DFF * (1.0 + 2.0 * (1.0 - p.system.sparsity))
+    else:
+        flops = 2.0 * 3.0 * DM * DFF
+    flops_us = flops / (FP16_TF * 1e6)
+    act_bytes = (2 * DM + 2 * DFF) * 2.0
+    act_us = act_bytes / (HBM * EFF * 1e3)
+    r = (flops_us + act_us + LAUNCH) / full
+    return min(max(r, 0.02), 1.0)
+
+
+class TimedReq:
+    def __init__(self, arrival_us, rid, plen, max_tokens, seed):
+        self.arrival_us = arrival_us
+        self.rid = rid
+        self.plen = plen
+        self.max_tokens = max_tokens
+        self.seed = seed
+
+
+def gen_workload(n_requests, rate_hz, prompt_lo, prompt_hi, out_lo, out_hi, seed):
+    """Mirror of workload.rs::generate (draw order is load-bearing)."""
+    import math
+    rng = Rng(seed)
+    t_us = 0.0
+    out = []
+    for i in range(n_requests):
+        t_us += -math.log(1.0 - rng.f64()) / rate_hz * 1e6
+        plen = prompt_lo + rng.below(prompt_hi - prompt_lo)
+        for _ in range(plen):
+            rng.below(26)  # prompt bytes (content unused, draws consumed)
+        max_tokens = out_lo + rng.below(out_hi - out_lo)
+        rseed = seed ^ ((i * 0x9E3779B97F4A7C15) & MASK)
+        out.append(TimedReq(t_us, i, plen, max_tokens, rseed))
+    return out
+
+
+def workload_at(rate_hz, n_requests, seed):
+    return gen_workload(n_requests, rate_hz, 8, 24, 16, 48, seed)
+
+
+def _serving_prefill(p, store, per_bytes, exp_c, input_len):
+    for l in range(NL):
+        flops = 12.0 * input_len * float(DM) ** 2
+        store.tick(flops / (FP16_TF * 1e6) + 4.0 * LAUNCH)
+        if per_bytes > 0.0:
+            _prefill_stream(p, store, l, per_bytes)
+        store.tick(exp_c * NE * 0.5)
+
+
+class _SimSeq:
+    def __init__(self, req):
+        self.rng = Rng(req.seed)
+        self.prev = [[] for _ in range(NL)]
+        self.input_len = max(req.plen, 1)
+        self.emitted = 0
+        self.max_tokens = max(req.max_tokens, 1)
+
+
+def _serving_decode_token(p, store, seq, per_bytes, per_cached, exp_c, reuse,
+                          weights, boundary_seen, counters):
+    """sim.rs::sim_decode_token with a BoundaryShare (serving mode):
+    single device, dedup_inflight on, no compute streams."""
+    routing = sample_routing(p, seq.rng, seq.prev, weights)
+    kv_len = seq.input_len + seq.emitted
+    compute = 0.0
+    for l in range(NL):
+        store.rebalance_tick()
+        attn = attn_layer_us(kv_len)
+        store.tick(attn)
+        compute += attn
+        if l + 1 < NL and per_bytes > 0.0:
+            plans = [[] for _ in store.devices]
+            for e in routing[l + 1]:
+                key = (l + 1, e)
+                predicted = seq.rng.f64() < p.inter_hit
+                if (predicted and not store.contains(key)
+                        and not store.inflight_home(key)):  # dedup_inflight
+                    dur = pcie_copy_us(per_bytes)
+                    plans[store.home(key)].append((key, per_bytes, dur, PCIE_API))
+            for dst, plan in enumerate(plans):
+                if plan:
+                    store.submit(dst, "overlapped", plan)
+        for e in routing[l]:
+            key = (l, e)
+            looked = store.lookup(key)
+            resident = looked[0] != "miss"
+            if looked[0] == "local":
+                ready = store.now
+            elif looked[0] == "remote":
+                ready = store.peer_fetch(key, looked[1])
+            else:
+                done = store.take_inflight(key)
+                if done is not None:
+                    store.admit(key, per_cached)
+                    ready = done
+                else:
+                    ready = store.demand_to(
+                        store.home(key), pcie_copy_us(max(per_bytes, 1.0)), per_bytes)
+                    store.admit(key, per_cached)
+            store.stall_until(ready)
+            if not resident:
+                miss = max(1.0 - p.intra_recall, 0.0)
+                if miss > 0.0:
+                    extra = per_bytes * miss * 0.5
+                    done = store.bus_copy_to(store.home(key), pcie_copy_us(extra), extra)
+                    store.stall_until(done)
+            if key not in boundary_seen:
+                boundary_seen.add(key)
+                counters["full"] += 1
+                t_exp = exp_c
+            else:
+                counters["reused"] += 1
+                t_exp = exp_c * reuse
+            store.tick(t_exp)
+            compute += t_exp
+    return compute
+
+
+def simulate_serving(p, wl, cap, per_boundary_check=False):
+    max_ctx = max(t.plen + t.max_tokens for t in wl)
+    kv_tokens = max(cap, 1) * max_ctx
+    budget = cache_budget_bytes(p, kv_tokens)
+    store = Store(p.system, int(budget))
+    weights = zipf_cdf(NE, p.zipf_s)
+    per_cached = cached_bytes(p)
+    per_bytes = transfer_bytes(p)
+    exp_c = expert_compute_us(p)
+    reuse = boundary_compute_reuse(p)
+    # warm at construction (SimServeBackend::new)
+    order = sorted([(l, e) for l in range(NL) for e in range(NE)], key=lambda k: k[1])
+    full_flags = [False] * len(store.devices)
+    for key in order:
+        dev = store.home(key)
+        if full_flags[dev]:
+            continue
+        if not store.warm_admit(key, per_cached):
+            full_flags[dev] = True
+            if all(full_flags):
+                break
+
+    pending, active = [], []
+    next_i, tokens = 0, 0
+    counters = {"full": 0, "reused": 0}
+    saw_batch, saw_reuse, checks_ok = False, False, True
+    while True:
+        while next_i < len(wl) and wl[next_i].arrival_us <= store.now:
+            pending.append(wl[next_i])
+            next_i += 1
+        if not pending and not active:
+            if next_i >= len(wl):
+                break
+            store.advance_to(wl[next_i].arrival_us)
+            continue
+        # scheduler step: admit FIFO up to cap (prefill at admission) ...
+        while len(active) < max(cap, 1) and pending:
+            req = pending.pop(0)
+            _serving_prefill(p, store, per_bytes, exp_c, max(req.plen, 1))
+            active.append(_SimSeq(req))
+        # ... then one boundary-synchronous batch step
+        boundary_seen = set()
+        full_before = counters["full"]
+        pairs_before = counters["full"] + counters["reused"]
+        if len(active) > 1:
+            saw_batch = True
+        for s in active:
+            _serving_decode_token(
+                p, store, s, per_bytes, per_cached, exp_c, reuse,
+                weights, boundary_seen, counters)
+            s.emitted += 1
+            tokens += 1
+        if per_boundary_check:
+            full_d = counters["full"] - full_before
+            pair_d = counters["full"] + counters["reused"] - pairs_before
+            if full_d != len(boundary_seen) or full_d > pair_d:
+                checks_ok = False
+            if pair_d > full_d:
+                saw_reuse = True
+        active = [s for s in active if s.emitted < s.max_tokens]
+    return {
+        "tps": tokens / (store.now / 1e6),
+        "tokens": tokens,
+        "total_us": store.now,
+        "full": counters["full"],
+        "reused": counters["reused"],
+        "saw_batch": saw_batch,
+        "saw_reuse": saw_reuse,
+        "per_boundary_ok": checks_ok,
+    }
+
+
+def serving_params():
+    # experiments/serveload.rs::sweep_params (Floe, lru, skewed routing)
+    return Params(System(FLOE, "lru"), 14.25, zipf_s=1.2, stickiness=0.5, seed=7)
+
+
 def main():
     print("== shard.rs acceptance margins (Floe lru, zipf 1.2, stick 0.5, 11 GB/dev) ==")
     mk = lambda dev, coal, spill: Params(
@@ -962,6 +1168,37 @@ def main():
     hi = simulate(Params(System(FLOE), 24.0), 64, 128)
     print(f"  lo {lo['tps']:.2f} hi {hi['tps']:.2f} (assert hi >= lo*0.99): "
           f"{hi['tps'] >= lo['tps']*0.99}")
+
+    print("== PR 5 boundary-synchronous batching (calibrated reuse) ==")
+    pf = serving_params()
+    rf = boundary_compute_reuse(pf)
+    rn = boundary_compute_reuse(Params(System(NAIVE), 14.0))
+    print(f"  reuse floe/3090 = {rf:.4f} (sim.rs asserts |r-0.108| < 0.02): "
+          f"{abs(rf - 0.108) < 0.02}")
+    print(f"  reuse naive/3090 = {rn:.4f} (asserts 0 < naive < floe): "
+          f"{0.0 < rn < rf}")
+    wl = workload_at(8.0, 12, 23)
+    r1 = simulate_serving(pf, wl, 1)
+    r4 = simulate_serving(pf, wl, 4)
+    r8 = simulate_serving(pf, wl, 8)
+    print(f"  cap1 tps {r1['tps']:.2f}  cap4 {r4['tps']:.2f}  cap8 {r8['tps']:.2f}")
+    print(f"  cap4/cap1 = {r4['tps']/r1['tps']:.4f} (sim.rs asserts > 1.05): "
+          f"{r4['tps'] > 1.05 * r1['tps']}")
+    print(f"  cap8/cap1 = {r8['tps']/r1['tps']:.4f} (sim.rs asserts > 1.05): "
+          f"{r8['tps'] > 1.05 * r1['tps']}")
+    print(f"  cap1 reused {r1['reused']} (must be 0: one seq per boundary): "
+          f"{r1['reused'] == 0}")
+    print(f"  cap4 reused {r4['reused']} of {r4['full'] + r4['reused']} pair visits")
+    wl2 = workload_at(8.0, 12, 7)
+    s1 = simulate_serving(pf, wl2, 1)
+    s8 = simulate_serving(pf, wl2, 8)
+    print(f"  serveload test point cap8/cap1 = {s8['tps']/s1['tps']:.4f} "
+          f"(asserts > 1): {s8['tps'] > s1['tps']}")
+    wl3 = workload_at(16.0, 8, 11)
+    vis = simulate_serving(pf, wl3, 4, per_boundary_check=True)
+    print(f"  visits test (16 Hz, 8 req, cap 4): per-boundary full==distinct "
+          f"{vis['per_boundary_ok']}, saw_batch {vis['saw_batch']}, "
+          f"saw_reuse {vis['saw_reuse']}")
 
 
 if __name__ == "__main__":

@@ -3,14 +3,17 @@
 //!
 //! Requests enter a FIFO admission queue; at every token boundary the
 //! scheduler tops the in-flight decode batch up to `max_batch` (strictly
-//! in arrival order — no starvation), decodes one token for every active
-//! sequence, and retires finished sequences immediately so their slot is
-//! reusable at the very next boundary. The backend abstraction
-//! (`SeqBackend`) is what lets one scheduler drive both execution
-//! substrates: `coordinator::serve::Coordinator` (real PJRT compute on a
-//! wall timeline) and `coordinator::sim::SimServeBackend` (roofline
-//! latencies on a virtual timeline), so scheduler behavior — and its
-//! tests — cover the serving path without artifacts.
+//! in arrival order — no starvation), steps the whole batch through ONE
+//! boundary-synchronous `SeqBackend::step_batch` call, and retires
+//! finished sequences immediately so their slot is reusable at the very
+//! next boundary. The backend abstraction (`SeqBackend`) is what lets one
+//! scheduler drive both execution substrates:
+//! `coordinator::serve::Coordinator` (real PJRT compute on a wall
+//! timeline, batch-stepped through `Engine::decode_batch` so
+//! same-boundary expert GEMVs share real compute) and
+//! `coordinator::sim::SimServeBackend` (roofline latencies on a virtual
+//! timeline), so scheduler behavior — and its tests — cover the serving
+//! path without artifacts.
 //!
 //! Per-request accounting: queue wait (arrival → admission, in the
 //! backend's time base), prefill/decode compute, the attributed stall
@@ -59,6 +62,17 @@ pub trait SeqBackend {
     /// Decode one token for `seq`, attributing stalls to its request.
     fn step(&mut self, seq: &mut Self::Seq) -> Result<SeqStep>;
 
+    /// Decode one token for EVERY sequence at a token boundary. Backends
+    /// that can share work across the batch override this — the real
+    /// coordinator steps the whole batch through `Engine::decode_batch`,
+    /// so same-boundary expert GEMVs are grouped and each distinct
+    /// expert's weights are touched once. The default preserves the
+    /// sequential semantics exactly: one `step` per sequence, in batch
+    /// order, each failure isolated to its own slot.
+    fn step_batch(&mut self, seqs: &mut [&mut Self::Seq]) -> Vec<Result<SeqStep>> {
+        seqs.iter_mut().map(|s| self.step(s)).collect()
+    }
+
     /// Cumulative attributed stall decomposition for request `id`.
     fn stalls_of(&self, id: u64) -> StallSplit;
 
@@ -86,6 +100,9 @@ impl<'a, B: SeqBackend> SeqBackend for &'a mut B {
     }
     fn step(&mut self, seq: &mut Self::Seq) -> Result<SeqStep> {
         (**self).step(seq)
+    }
+    fn step_batch(&mut self, seqs: &mut [&mut Self::Seq]) -> Vec<Result<SeqStep>> {
+        (**self).step_batch(seqs)
     }
     fn stalls_of(&self, id: u64) -> StallSplit {
         (**self).stalls_of(id)
@@ -256,26 +273,46 @@ impl<B: SeqBackend> Scheduler<B> {
         let batch = self.active.len();
         self.max_batch_seen = self.max_batch_seen.max(batch);
         self.backend.on_boundary();
-        let mut i = 0;
-        while i < self.active.len() {
-            let a = &mut self.active[i];
-            a.batch_peak = a.batch_peak.max(batch);
-            let error = match self.backend.step(&mut a.seq) {
+        // one boundary-synchronous step for the whole batch: the backend
+        // decides how much work the sequences share (the real coordinator
+        // groups same-boundary expert GEMVs; the simulator's default
+        // sequential stepping models the sharing on its virtual timeline).
+        // results[k] corresponds to active[k] — admission order.
+        let results = {
+            let mut refs: Vec<&mut B::Seq> = self
+                .active
+                .iter_mut()
+                .map(|a| {
+                    a.batch_peak = a.batch_peak.max(batch);
+                    &mut a.seq
+                })
+                .collect();
+            self.backend.step_batch(&mut refs)
+        };
+        debug_assert_eq!(results.len(), self.active.len());
+        // retire finished/failed sequences in batch order. finished_us is
+        // stamped after the whole batch stepped — under layer-lockstep
+        // execution a token completes at the batch's boundary barrier.
+        let mut removed = 0;
+        for (k, res) in results.into_iter().enumerate() {
+            let idx = k - removed;
+            let error = match res {
                 Ok(st) => {
+                    let a = &mut self.active[idx];
                     if let Some(t) = st.token {
                         a.out.push(t);
                     }
                     a.tokens += 1;
                     a.decode_us += st.compute_us;
                     if !st.finished {
-                        i += 1;
                         continue;
                     }
                     None
                 }
                 Err(e) => Some(format!("{e:#}")),
             };
-            let a = self.active.remove(i);
+            let a = self.active.remove(idx);
+            removed += 1;
             done.push(self.retired(
                 a.id,
                 a.out,
@@ -463,6 +500,57 @@ mod tests {
         s.enqueue(req(0, 1));
         assert_eq!(s.drain().len(), 1);
         assert_eq!(s.max_batch_seen(), 1);
+    }
+
+    /// Backend that overrides `step_batch` (like the real coordinator):
+    /// the scheduler must hand it the whole active batch at once, and
+    /// per-slot failures must still retire only their own sequence.
+    struct BatchingFake {
+        inner: Fake,
+        batch_sizes: Vec<usize>,
+    }
+    impl SeqBackend for BatchingFake {
+        type Seq = FakeSeq;
+        fn now_us(&self) -> f64 {
+            self.inner.now_us()
+        }
+        fn on_boundary(&mut self) {
+            self.inner.on_boundary();
+        }
+        fn start(&mut self, req: &Request) -> Result<(FakeSeq, f64)> {
+            self.inner.start(req)
+        }
+        fn step(&mut self, s: &mut FakeSeq) -> Result<SeqStep> {
+            self.inner.step(s)
+        }
+        fn step_batch(&mut self, seqs: &mut [&mut FakeSeq]) -> Vec<Result<SeqStep>> {
+            self.batch_sizes.push(seqs.len());
+            seqs.iter_mut().map(|s| self.inner.step(s)).collect()
+        }
+        fn stalls_of(&self, id: u64) -> StallSplit {
+            self.inner.stalls_of(id)
+        }
+    }
+
+    #[test]
+    fn scheduler_steps_the_whole_batch_through_step_batch() {
+        let fake = Fake { now: 0.0, stalls: Default::default(), boundaries: 0 };
+        let mut s = Scheduler::new(BatchingFake { inner: fake, batch_sizes: Vec::new() }, 3);
+        s.enqueue(req(0, 1)); // retires at the first boundary
+        s.enqueue(req(1, 3));
+        s.enqueue(Request { seed: POISON_STEP, ..req(2, 3) }); // fails at step
+        s.enqueue(req(3, 3)); // joins once a slot frees
+        let done = s.drain();
+        assert_eq!(done.len(), 4);
+        let sizes = &s.backend().batch_sizes;
+        assert_eq!(sizes[0], 3, "first boundary must batch all co-admitted seqs");
+        assert!(sizes.iter().all(|&b| b >= 1 && b <= 3));
+        let by_id = |id: u64| done.iter().find(|c| c.id == id).unwrap();
+        assert!(by_id(2).error.is_some(), "poisoned slot retires with its error");
+        for id in [0, 1, 3] {
+            assert!(by_id(id).error.is_none(), "healthy seqs unaffected by slot failure");
+        }
+        assert_eq!(by_id(1).tokens, 3);
     }
 
     #[test]

@@ -399,15 +399,20 @@ impl FloePipeline {
     }
 }
 
-/// Adapter so the pipeline can be passed as a StepObserver.
-pub struct PipelineObserver<'a> {
-    pub pipeline: &'a mut FloePipeline,
-    pub weights: std::sync::Arc<crate::model::Weights>,
+/// The pipeline as a StepObserver: `LayerEvent::seq` indexes the decode
+/// batch, so each event is charged to its owning request's attribution
+/// id before the pipeline acts on it. The single adapter serves both
+/// prefill (a batch of one, `ids = [request id]`) and batched decode.
+struct BatchObserver<'a> {
+    pipeline: &'a mut FloePipeline,
+    weights: &'a std::sync::Arc<crate::model::Weights>,
+    ids: &'a [u64],
 }
 
-impl<'a> StepObserver for PipelineObserver<'a> {
+impl StepObserver for BatchObserver<'_> {
     fn on_layer(&mut self, ev: &LayerEvent<'_>) {
-        self.pipeline.observe(&self.weights, ev);
+        self.pipeline.set_attribution(self.ids[ev.seq]);
+        self.pipeline.observe(self.weights, ev);
     }
 }
 
@@ -547,9 +552,11 @@ impl SeqBackend for Coordinator {
         self.pipeline.set_attribution(r.id);
         let mut st = DecodeState::new(&self.engine.w)?;
         let wall = WallClock::start();
-        let mut obs = PipelineObserver {
+        let weights = std::sync::Arc::clone(&self.engine.w);
+        let mut obs = BatchObserver {
             pipeline: &mut self.pipeline,
-            weights: std::sync::Arc::clone(&self.engine.w),
+            weights: &weights,
+            ids: std::slice::from_ref(&r.id),
         };
         let logits = self.engine.prefill(&mut st, &r.prompt, self.mode, &mut obs)?;
         Ok((
@@ -567,22 +574,151 @@ impl SeqBackend for Coordinator {
     }
 
     fn step(&mut self, a: &mut EngineSeq) -> Result<SeqStep> {
-        let tok = crate::engine::sampler::sample(&a.logits, a.temperature, &mut a.rng);
-        a.n_out += 1;
-        let finished =
-            a.n_out >= a.max_tokens || a.st.pos + 1 >= self.engine.w.cfg.max_seq;
-        let mut compute_us = 0.0;
-        if !finished {
-            self.pipeline.set_attribution(a.id);
-            let wall = WallClock::start();
-            let mut obs = PipelineObserver {
-                pipeline: &mut self.pipeline,
-                weights: std::sync::Arc::clone(&self.engine.w),
-            };
-            a.logits = self.engine.decode_token(&mut a.st, tok, self.mode, &mut obs)?;
-            compute_us = wall.elapsed_s() * 1e6;
+        // a batch of one through the boundary-synchronous path: one code
+        // path for sequential and batched decode, no drift
+        self.step_batch(&mut [a]).pop().expect("batch of one")
+    }
+
+    /// One token boundary for the whole batch: every continuing sequence
+    /// steps through ONE `Engine::decode_batch` call, so same-boundary
+    /// expert GEMVs are grouped and each distinct expert's weights are
+    /// uploaded/materialized once per boundary instead of once per
+    /// request. The boundary's wall compute is attributed evenly across
+    /// the participating sequences (the work is genuinely shared — a
+    /// per-sequence split of a fused kernel is not observable); virtual
+    /// stalls keep exact per-request attribution via `LayerEvent::seq`.
+    fn step_batch(&mut self, seqs: &mut [&mut EngineSeq]) -> Vec<Result<SeqStep>> {
+        let max_seq = self.engine.w.cfg.max_seq;
+        // sequential semantics per slot: the token emitted at this
+        // boundary is sampled from last boundary's logits
+        let sampled: Vec<(u8, bool)> = seqs
+            .iter_mut()
+            .map(|a| {
+                let tok =
+                    crate::engine::sampler::sample(&a.logits, a.temperature, &mut a.rng);
+                a.n_out += 1;
+                let finished = a.n_out >= a.max_tokens || a.st.pos + 1 >= max_seq;
+                (tok, finished)
+            })
+            .collect();
+        let cont: Vec<usize> =
+            (0..seqs.len()).filter(|&i| !sampled[i].1).collect();
+        if cont.is_empty() {
+            return sampled
+                .into_iter()
+                .map(|(tok, finished)| {
+                    Ok(SeqStep { token: Some(tok), finished, compute_us: 0.0 })
+                })
+                .collect();
         }
-        Ok(SeqStep { token: Some(tok), finished, compute_us })
+        let ids: Vec<u64> = cont.iter().map(|&i| seqs[i].id).collect();
+        let toks: Vec<u8> = cont.iter().map(|&i| sampled[i].0).collect();
+        let weights = std::sync::Arc::clone(&self.engine.w);
+        let wall = WallClock::start();
+        let decoded = {
+            let mut obs = BatchObserver {
+                pipeline: &mut self.pipeline,
+                weights: &weights,
+                ids: &ids,
+            };
+            let mut states: Vec<&mut DecodeState> = seqs
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| !sampled[*i].1)
+                .map(|(_, a)| &mut a.st)
+                .collect();
+            self.engine.decode_batch(&mut states, &toks, self.mode, &mut obs)
+        };
+        let per_seq_us = wall.elapsed_s() * 1e6 / cont.len() as f64;
+        match decoded {
+            Ok(mut logits) => {
+                for (k, &i) in cont.iter().enumerate() {
+                    seqs[i].logits = std::mem::take(&mut logits[k]);
+                }
+                sampled
+                    .into_iter()
+                    .map(|(tok, finished)| {
+                        Ok(SeqStep {
+                            token: Some(tok),
+                            finished,
+                            compute_us: if finished { 0.0 } else { per_seq_us },
+                        })
+                    })
+                    .collect()
+            }
+            Err(e) => {
+                // Engine-level batch failure: one bad sequence must never
+                // take its batchmates down (the scheduler invariant). With
+                // a single continuing sequence there is no batchmate to
+                // protect — surface the error directly instead of
+                // re-executing the deterministic failure.
+                if cont.len() == 1 {
+                    let mut e = Some(e);
+                    return sampled
+                        .into_iter()
+                        .map(|(tok, finished)| {
+                            if finished {
+                                Ok(SeqStep {
+                                    token: Some(tok),
+                                    finished,
+                                    compute_us: 0.0,
+                                })
+                            } else {
+                                Err(e.take().expect("single continuing slot"))
+                            }
+                        })
+                        .collect();
+                }
+                // Otherwise re-step each continuing sequence ALONE and let
+                // only the faulty one surface its own error. Re-execution
+                // of a partially-decoded token is value-idempotent (pos/x
+                // commit only after full success; KV writes at `pos`
+                // overwrite the same deterministic values). Caveat:
+                // re-observed layers re-charge the SHARED virtual
+                // transfer clock, so stall/queue-wait accounting for
+                // in-flight requests is perturbed at this boundary — a
+                // bounded accounting distortion accepted to preserve
+                // request isolation on a failure path.
+                let mut out: Vec<Result<SeqStep>> = Vec::with_capacity(seqs.len());
+                for (i, &(tok, finished)) in sampled.iter().enumerate() {
+                    if finished {
+                        out.push(Ok(SeqStep {
+                            token: Some(tok),
+                            finished,
+                            compute_us: 0.0,
+                        }));
+                        continue;
+                    }
+                    let id = seqs[i].id;
+                    let wall = WallClock::start();
+                    let solo = {
+                        let mut obs = BatchObserver {
+                            pipeline: &mut self.pipeline,
+                            weights: &weights,
+                            ids: std::slice::from_ref(&id),
+                        };
+                        self.engine.decode_batch(
+                            &mut [&mut seqs[i].st],
+                            &[tok],
+                            self.mode,
+                            &mut obs,
+                        )
+                    };
+                    out.push(match solo {
+                        Ok(mut l) => {
+                            seqs[i].logits = l.pop().expect("batch of one");
+                            Ok(SeqStep {
+                                token: Some(tok),
+                                finished: false,
+                                compute_us: wall.elapsed_s() * 1e6,
+                            })
+                        }
+                        Err(e) => Err(e),
+                    });
+                }
+                out
+            }
+        }
     }
 
     fn stalls_of(&self, id: u64) -> StallSplit {

@@ -225,11 +225,81 @@ fn cache_budget_bytes(p: &SimParams, kv_tokens: usize) -> f64 {
     (p.vram_gb * 1e9 - resident).max(0.0)
 }
 
-/// A boundary's batched expert GEMV re-runs against weights the first run
-/// just pulled through SRAM/L2: repeats cost only the activation movement
-/// + launch remainder of a weight-bound GEMV (the FluxMoE residency-
-/// decoupling argument — batching multiplies reuse per byte touched).
-const BOUNDARY_COMPUTE_REUSE: f64 = 0.15;
+/// Same-boundary compute-reuse ratio: what a batched *repeat* of an
+/// expert GEMV costs relative to the boundary's first visit.
+///
+/// The engine's boundary-synchronous `decode_batch` groups a boundary's
+/// routed pairs by expert and runs one multi-row kernel per group
+/// (`NativeExpert::forward_rows`), so only
+/// the first visit streams the expert's weights; each extra row pays its
+/// own FLOPs at compute peak, its activation traffic, and one launch —
+/// never the weight movement. This derivation prices exactly that from
+/// the run's roofline specs (it replaces the former flat 0.15 constant,
+/// which overcharged repeats of memory-bound experts and undercharged
+/// compute-dense ones). `benches/decode_hotpath.rs` measures the native
+/// sparse Rule-Up kernel's realized marginal-row ratio — the same rule
+/// the Floe decode path runs — into BENCH_decode.json
+/// (`measured_reuse`) so the calibration is tracked against measurement
+/// across PRs; the serving margins downstream of this constant are
+/// replay-verified (python/replay_sim.py).
+pub fn boundary_compute_reuse(p: &SimParams) -> f64 {
+    let full = expert_compute_us(p);
+    let d = &p.dims;
+    // marginal batched row: the SYSTEM's per-row FLOPs at compute peak —
+    // FloE's kernel runs the up GEMV dense (INT2) but skips `sparsity`
+    // of the gate/down channels per row, so its repeat row computes
+    // 2·d·f·(1 + 2(1-s)) flops, not the dense 6·d·f ...
+    let flops = match p.system.kind {
+        SystemKind::Floe => {
+            2.0 * d.d_model as f64
+                * d.d_ff as f64
+                * (1.0 + 2.0 * (1.0 - p.system.sparsity))
+        }
+        _ => d.expert_flops(),
+    };
+    let flops_us = flops / (p.gpu.fp16_tflops * 1e6);
+    // ... + activation traffic (x in, y out, gate/up intermediates) ...
+    let act_bytes = (2 * d.d_model + 2 * d.d_ff) as f64 * 2.0;
+    let act_us = act_bytes / (p.gpu.hbm_gbps * p.gpu.efficiency * 1e3);
+    // ... + one extra kernel launch for the row block
+    ((flops_us + act_us + p.gpu.launch_us) / full).clamp(0.02, 1.0)
+}
+
+/// Per-token-boundary expert-sharing state for batched serving: which
+/// experts already paid the full weight-bound GEMV at this boundary,
+/// plus the visit accounting the scheduler-level tests pin (full-cost
+/// visits per boundary == distinct routed experts, not routed pairs).
+#[derive(Debug, Default, Clone)]
+pub struct BoundaryShare {
+    seen: HashSet<(usize, usize)>,
+    /// GEMVs that streamed their expert's weights (first visit at the
+    /// boundary) — cumulative across boundaries
+    pub full_visits: u64,
+    /// GEMVs amortized against an earlier same-boundary visit
+    pub reused_visits: u64,
+}
+
+impl BoundaryShare {
+    /// New token boundary: everyone pays full price again.
+    pub fn reset(&mut self) {
+        self.seen.clear();
+    }
+    /// Distinct experts visited at the current boundary so far.
+    pub fn distinct_this_boundary(&self) -> usize {
+        self.seen.len()
+    }
+    /// Record a visit; returns true when this is the boundary's first
+    /// visit of `key` (full-cost GEMV).
+    fn visit(&mut self, key: (usize, usize)) -> bool {
+        if self.seen.insert(key) {
+            self.full_visits += 1;
+            true
+        } else {
+            self.reused_visits += 1;
+            false
+        }
+    }
+}
 
 /// Per-run constants derived from `SimParams` + the resolved cache budget,
 /// shared by the single-request and batched-serving drivers.
@@ -252,6 +322,9 @@ struct SimCtx {
     /// and the token clock advances at the layer barrier. Off keeps the
     /// single-compute-timeline op sequence bit-exact.
     streams: bool,
+    /// calibrated same-boundary repeat-GEMV cost ratio (serving mode
+    /// only — consulted when a `BoundaryShare` is threaded through)
+    boundary_reuse: f64,
 }
 
 impl SimCtx {
@@ -273,6 +346,7 @@ impl SimCtx {
             dedup_inflight,
             coalesce: p.system.coalesce,
             streams: p.system.compute_streams && p.system.devices > 1,
+            boundary_reuse: boundary_compute_reuse(p),
         }
     }
 }
@@ -404,12 +478,14 @@ fn warm_cache(p: &SimParams, c: &SimCtx, store: &mut ExpertStore) {
 /// One token through all layers: attention, next-layer prefetch issue,
 /// expert execution with residency/stall accounting. Returns this token's
 /// compute µs. `boundary` (serving mode) tracks experts already computed
-/// at this token boundary by other sequences in the batch, which repeats
-/// at `BOUNDARY_COMPUTE_REUSE` of the full GEMV cost. `streams`
-/// (multi-device, `--compute-streams`) carries the per-device compute
-/// timelines: expert GEMVs overlap across devices and the token clock
-/// advances at each layer barrier; `None` is the single-compute-timeline
-/// path, bit-exact with the pre-streams simulator.
+/// at this token boundary by other sequences in the batch — repeats cost
+/// `SimCtx::boundary_reuse` of the full GEMV (the calibrated ratio from
+/// `boundary_compute_reuse`, matching the engine's grouped multi-row
+/// execution). `streams` (multi-device, `--compute-streams`) carries the
+/// per-device compute timelines: expert GEMVs overlap across devices and
+/// the token clock advances at each layer barrier; `None` is the
+/// single-compute-timeline path, bit-exact with the pre-streams
+/// simulator.
 fn sim_decode_token(
     p: &SimParams,
     c: &SimCtx,
@@ -417,7 +493,7 @@ fn sim_decode_token(
     rng: &mut Rng,
     prev: &mut Vec<Vec<usize>>,
     kv_len: usize,
-    mut boundary: Option<&mut HashSet<(usize, usize)>>,
+    mut boundary: Option<&mut BoundaryShare>,
     mut streams: Option<&mut ComputeStreams>,
 ) -> f64 {
     let d = &p.dims;
@@ -483,7 +559,10 @@ fn sim_decode_token(
         for &e in &routing[l] {
             let key = (l, e);
             let looked = if c.resident_fits {
-                Lookup::Local(0)
+                // everything-resident fast path: execute on the key's
+                // home device (the placeholder index was never read
+                // before compute streams consumed it as exec_dev)
+                Lookup::Local(store.home(key))
             } else {
                 store.lookup(key)
             };
@@ -522,12 +601,13 @@ fn sim_decode_token(
             };
             let t_exp = match boundary.as_deref_mut() {
                 // first GEMV of this expert at this boundary pays the
-                // weight-bound cost; batched repeats are amortized
-                Some(seen) => {
-                    if seen.insert(key) {
+                // weight-bound cost; batched repeats ride the streamed
+                // weights at the calibrated marginal-row ratio
+                Some(share) => {
+                    if share.visit(key) {
                         c.exp_compute
                     } else {
-                        c.exp_compute * BOUNDARY_COMPUTE_REUSE
+                        c.exp_compute * c.boundary_reuse
                     }
                 }
                 None => c.exp_compute,
@@ -981,8 +1061,8 @@ pub struct SimServeBackend {
     p: SimParams,
     ctx: SimCtx,
     store: ExpertStore,
-    /// experts already computed at the current token boundary
-    boundary: HashSet<(usize, usize)>,
+    /// same-boundary expert sharing: seen-set + full/reused visit counts
+    boundary: BoundaryShare,
     /// per-device compute timelines (multi-device `--compute-streams`),
     /// shared by every sequence in the batch
     streams: Option<ComputeStreams>,
@@ -998,11 +1078,16 @@ impl SimServeBackend {
         warm_cache(&p, &ctx, &mut store);
         let streams =
             if ctx.streams { Some(ComputeStreams::new(store.n_devices())) } else { None };
-        SimServeBackend { p, ctx, store, boundary: HashSet::new(), streams }
+        SimServeBackend { p, ctx, store, boundary: BoundaryShare::default(), streams }
     }
 
     pub fn store(&self) -> &ExpertStore {
         &self.store
+    }
+
+    /// Same-boundary sharing counters (full vs amortized GEMV visits).
+    pub fn boundary_stats(&self) -> &BoundaryShare {
+        &self.boundary
     }
 
     /// Idle until `t_us` (waiting for the next arrival) — free time, not
@@ -1020,7 +1105,7 @@ impl SeqBackend for SimServeBackend {
     }
 
     fn on_boundary(&mut self) {
-        self.boundary.clear();
+        self.boundary.reset();
     }
 
     fn start(&mut self, r: &Request) -> Result<(SimSeq, f64)> {
@@ -1309,18 +1394,92 @@ mod tests {
         // the acceptance criterion: with a backlog of concurrent requests
         // on a skewed trace, a larger batch cap shares residency and
         // amortizes boundary weight reads → higher aggregate tokens/s.
-        // The default budget keeps evictions (and so stalls) active
-        // without LRU thrash: past ~cap 6 at tighter budgets the joint
-        // working set of the batch outgrows the cache and throughput
-        // falls again — the expected capacity/concurrency U-shape,
-        // visible by lowering --vram on exp-serve-load.
+        // The 1.05x floor at cap 4 is the PR-5 acceptance margin under
+        // the calibrated reuse ratio (replay-verified: cap4/cap1 ≈ 1.075,
+        // cap8/cap1 ≈ 1.103 on this trace). The default budget keeps evictions (and so
+        // stalls) active without LRU thrash: past ~cap 6 at tighter
+        // budgets the joint working set of the batch outgrows the cache
+        // and throughput falls again — the expected capacity/concurrency
+        // U-shape, visible by lowering --vram on exp-serve-load.
         let p = sweep_params(ResidencyKind::Lru, DEFAULT_VRAM_GB);
         let wl = workload_at(8.0, 12, 23);
         let tps1 = simulate_serving(&p, &wl, 1).unwrap().aggregate_tps();
         let tps4 = simulate_serving(&p, &wl, 4).unwrap().aggregate_tps();
         let tps8 = simulate_serving(&p, &wl, 8).unwrap().aggregate_tps();
-        assert!(tps4 > tps1 * 1.03, "cap4 {tps4} vs cap1 {tps1}");
-        assert!(tps8 > tps1 * 1.03, "cap8 {tps8} vs cap1 {tps1}");
+        assert!(tps4 > tps1 * 1.05, "cap4 {tps4} vs cap1 {tps1}");
+        assert!(tps8 > tps1 * 1.05, "cap8 {tps8} vs cap1 {tps1}");
+    }
+
+    #[test]
+    fn calibrated_boundary_reuse_tracks_the_roofline() {
+        // the repeat-row ratio prices FLOPs + activations + one launch
+        // against the full weight-bound GEMV: memory-bound experts
+        // amortize hard (dense fp16 repeats are nearly free), FloE's
+        // compressed experts less so, and the ratio is a proper fraction
+        let floe = SimParams::mixtral_on(
+            RTX3090.clone(),
+            SystemConfig::new(SystemKind::Floe),
+            14.0,
+        );
+        let naive = SimParams::mixtral_on(
+            RTX3090.clone(),
+            SystemConfig::new(SystemKind::NaiveOffload),
+            14.0,
+        );
+        let rf = boundary_compute_reuse(&floe);
+        let rn = boundary_compute_reuse(&naive);
+        assert!(rf > 0.02 && rf < 0.5, "floe reuse {rf}");
+        assert!(rn > 0.0 && rn < rf, "dense reuse {rn} must amortize harder");
+        // replay-pinned operating point: ~0.108 on the 3090 (the flat
+        // 0.15 the sim used to hardcode both overpriced FloE repeats —
+        // whose sparse kernel skips most gate/down FLOPs per row — and
+        // was not derived from anything)
+        assert!((rf - 0.108).abs() < 0.02, "floe/3090 reuse drifted: {rf}");
+    }
+
+    /// The scheduler-level sharing pin: at every token boundary the
+    /// number of FULL-price expert GEMVs equals the number of *distinct*
+    /// routed experts — never the number of routed (sequence, expert)
+    /// pairs — and with batch > 1 on a skewed trace some pairs actually
+    /// ride the amortized path.
+    #[test]
+    fn boundary_full_visits_equal_distinct_routed_experts() {
+        let p = sweep_params(ResidencyKind::Lru, DEFAULT_VRAM_GB);
+        let wl = workload_at(16.0, 8, 11);
+        let max_ctx = wl
+            .iter()
+            .map(|t| t.req.prompt.len() + t.req.max_tokens)
+            .max()
+            .unwrap();
+        let backend = SimServeBackend::new(p, 4 * max_ctx);
+        let mut sched = Scheduler::new(backend, 4);
+        for t in &wl {
+            sched.enqueue_at(t.req.clone(), t.arrival_us);
+        }
+        let (mut saw_batch, mut saw_reuse) = (false, false);
+        while sched.has_work() {
+            let before = sched.backend().boundary_stats().clone();
+            let batch = sched.active_len().max(1);
+            let _ = sched.step();
+            let bs = sched.backend().boundary_stats();
+            let full_delta = bs.full_visits - before.full_visits;
+            let pair_delta =
+                full_delta + (bs.reused_visits - before.reused_visits);
+            assert_eq!(
+                full_delta,
+                bs.distinct_this_boundary() as u64,
+                "full-price visits must equal distinct routed experts"
+            );
+            assert!(full_delta <= pair_delta);
+            if batch > 1 {
+                saw_batch = true;
+            }
+            if pair_delta > full_delta {
+                saw_reuse = true;
+            }
+        }
+        assert!(saw_batch, "trace never batched");
+        assert!(saw_reuse, "batched boundaries never shared an expert");
     }
 
     #[test]

@@ -36,52 +36,64 @@ struct NativeExpert {
 }
 
 impl NativeExpert {
-    fn forward(&self, x: &[f32], y: &mut [f32]) {
-        y.iter_mut().for_each(|v| *v = 0.0);
+    /// Forward a batch of activation rows with ONE pass over the weight
+    /// channels: channel j's gate/up columns and down row are loaded once
+    /// and every row rides them while hot (the multi-row amortization the
+    /// boundary-synchronous decode path banks on — see
+    /// `tensor::gemm_channel_major` for the rule-free kernel). Per row
+    /// the op order is identical to a batch of one, so each row's output
+    /// is bit-identical to a solo call; the sparsity rules skip
+    /// per-(row, channel), exactly as before.
+    fn forward_rows(&self, xs: &[&[f32]], ys: &mut [&mut [f32]]) {
+        debug_assert_eq!(xs.len(), ys.len());
+        for y in ys.iter_mut() {
+            y.iter_mut().for_each(|v| *v = 0.0);
+        }
         let f = self.w.f();
         for j in 0..f {
-            let (g, v, h) = match &self.rule {
-                Rule::Up(t) => {
-                    let v = dot(x, self.w.wu_t.row(j));
-                    if v.abs() < *t {
-                        continue;
+            let wu = self.w.wu_t.row(j);
+            let wg = self.w.wg_t.row(j);
+            let wd = self.w.wd.row(j);
+            for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                let h = match &self.rule {
+                    Rule::Up(t) => {
+                        let v = dot(x, wu);
+                        if v.abs() < *t {
+                            continue;
+                        }
+                        silu(dot(x, wg)) * v
                     }
-                    let g = silu(dot(x, self.w.wg_t.row(j)));
-                    (g, v, g * v)
-                }
-                Rule::Gate(t) => {
-                    let g = silu(dot(x, self.w.wg_t.row(j)));
-                    if g.abs() < *t {
-                        continue;
+                    Rule::Gate(t) => {
+                        let g = silu(dot(x, wg));
+                        if g.abs() < *t {
+                            continue;
+                        }
+                        g * dot(x, wu)
                     }
-                    let v = dot(x, self.w.wu_t.row(j));
-                    (g, v, g * v)
-                }
-                Rule::GateChannel(ts) => {
-                    let g = silu(dot(x, self.w.wg_t.row(j)));
-                    if g.abs() < ts[j] {
-                        continue;
+                    Rule::GateChannel(ts) => {
+                        let g = silu(dot(x, wg));
+                        if g.abs() < ts[j] {
+                            continue;
+                        }
+                        g * dot(x, wu)
                     }
-                    let v = dot(x, self.w.wu_t.row(j));
-                    (g, v, g * v)
-                }
-                Rule::Down(t) => {
-                    let g = silu(dot(x, self.w.wg_t.row(j)));
-                    let v = dot(x, self.w.wu_t.row(j));
-                    let h = g * v;
-                    if h.abs() < *t {
-                        continue;
+                    Rule::Down(t) => {
+                        let g = silu(dot(x, wg));
+                        let v = dot(x, wu);
+                        let h = g * v;
+                        if h.abs() < *t {
+                            continue;
+                        }
+                        h
                     }
-                    (g, v, h)
-                }
-                Rule::None => {
-                    let g = silu(dot(x, self.w.wg_t.row(j)));
-                    let v = dot(x, self.w.wu_t.row(j));
-                    (g, v, g * v)
-                }
-            };
-            let _ = (g, v);
-            axpy(y, h, self.w.wd.row(j));
+                    Rule::None => {
+                        let g = silu(dot(x, wg));
+                        let v = dot(x, wu);
+                        g * v
+                    }
+                };
+                axpy(y, h, wd);
+            }
         }
     }
 }
@@ -120,16 +132,35 @@ fn mode_key(mode: ExpertMode) -> (u8, u32, u8) {
 pub struct NativeExpertCache {
     w: Arc<Weights>,
     cache: HashMap<(usize, usize, (u8, u32, u8)), NativeExpert>,
+    /// Reused output buffer: `forward_batch` hands out `batch × d_model`
+    /// rows of it, so steady-state decode allocates nothing per call.
+    /// (This folds the old dead per-call `scratch` resize and the old
+    /// per-call `y` allocation into one live buffer.)
     scratch: Vec<f32>,
+    /// Experts materialized (dequantized + channel-major transposed)
+    /// since startup. Batched decode materializes once per distinct
+    /// (layer, expert, mode), never per routed pair — pinned by
+    /// tests/batch_decode.rs.
+    materializations: u64,
 }
 
 impl NativeExpertCache {
     pub fn new(w: Arc<Weights>) -> Self {
-        NativeExpertCache { w, cache: HashMap::new(), scratch: Vec::new() }
+        NativeExpertCache {
+            w,
+            cache: HashMap::new(),
+            scratch: Vec::new(),
+            materializations: 0,
+        }
     }
 
     pub fn clear(&mut self) {
         self.cache.clear();
+    }
+
+    /// Experts materialized since startup (monotonic; survives `clear`).
+    pub fn materialization_count(&self) -> u64 {
+        self.materializations
     }
 
     fn dequant_mat(&self, layer: usize, expert: usize, proj: &str, bits: u8) -> Result<Mat> {
@@ -206,6 +237,35 @@ impl NativeExpertCache {
         })
     }
 
+    /// Forward a batch of rows through one materialized expert with a
+    /// single pass over its weight channels. Returns `xs.len() × d_model`
+    /// output rows borrowed from the reused scratch buffer (valid until
+    /// the next call) — the zero-allocation hot path of batched decode.
+    pub fn forward_batch(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        xs: &[&[f32]],
+        mode: ExpertMode,
+    ) -> Result<&[f32]> {
+        let key = (layer, expert, mode_key(mode));
+        if !self.cache.contains_key(&key) {
+            let ne = self.materialize(layer, expert, mode)?;
+            self.cache.insert(key, ne);
+            self.materializations += 1;
+        }
+        let d = self.w.cfg.d_model;
+        // forward_rows zeroes every row, so a stale prefix is harmless
+        self.scratch.resize(xs.len() * d, 0.0);
+        let ne = self.cache.get(&key).unwrap();
+        let mut rows: Vec<&mut [f32]> = self.scratch.chunks_mut(d).collect();
+        ne.forward_rows(xs, &mut rows);
+        Ok(&self.scratch[..xs.len() * d])
+    }
+
+    /// Single-row convenience over `forward_batch` (the allocation sits
+    /// at this public boundary only; the decode hot path stays on the
+    /// borrowing batch call).
     pub fn forward(
         &mut self,
         layer: usize,
@@ -213,15 +273,70 @@ impl NativeExpertCache {
         h: &[f32],
         mode: ExpertMode,
     ) -> Result<Vec<f32>> {
-        let key = (layer, expert, mode_key(mode));
-        if !self.cache.contains_key(&key) {
-            let ne = self.materialize(layer, expert, mode)?;
-            self.cache.insert(key, ne);
+        Ok(self.forward_batch(layer, expert, &[h], mode)?.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Mat;
+    use crate::util::rng::Rng;
+
+    fn rand_expert(rng: &mut Rng, d: usize, f: usize, rule: Rule) -> NativeExpert {
+        let mk = |rng: &mut Rng| {
+            let mut m = Mat::zeros(f, d);
+            rng.fill_normal_f32(&mut m.data, 0.25);
+            m
+        };
+        NativeExpert {
+            w: ExpertWeights { wg_t: mk(rng), wu_t: mk(rng), wd: mk(rng) },
+            rule,
         }
-        let ne = self.cache.get(&key).unwrap();
-        self.scratch.resize(self.w.cfg.d_model, 0.0);
-        let mut y = vec![0.0f32; self.w.cfg.d_model];
-        ne.forward(h, &mut y);
-        Ok(y)
+    }
+
+    /// The invariant batched decode rests on: under every sparsity rule,
+    /// a batch of rows through `forward_rows` is bit-identical to each
+    /// row forwarded alone (same per-row op order; the batch only changes
+    /// how often weight channels are streamed).
+    #[test]
+    fn batched_rows_bit_identical_to_solo_under_every_rule() {
+        let (d, f, b) = (24, 48, 4);
+        let mut rng = Rng::new(9);
+        let chess: Vec<f32> = (0..f).map(|_| rng.f32() * 0.3).collect();
+        let rules: Vec<Rule> = vec![
+            Rule::None,
+            Rule::Up(0.2),
+            Rule::Gate(0.15),
+            Rule::GateChannel(chess),
+            Rule::Down(0.1),
+        ];
+        for rule in rules {
+            let ne = rand_expert(&mut rng, d, f, rule);
+            let xs_store: Vec<Vec<f32>> = (0..b)
+                .map(|_| {
+                    let mut x = vec![0.0; d];
+                    rng.fill_normal_f32(&mut x, 1.0);
+                    x
+                })
+                .collect();
+            let xs: Vec<&[f32]> = xs_store.iter().map(|x| x.as_slice()).collect();
+            let mut batched = vec![vec![0.0f32; d]; b];
+            {
+                let mut ys: Vec<&mut [f32]> =
+                    batched.iter_mut().map(|y| y.as_mut_slice()).collect();
+                ne.forward_rows(&xs, &mut ys);
+            }
+            for (x, y) in xs_store.iter().zip(&batched) {
+                let mut solo = vec![0.0f32; d];
+                {
+                    let mut ys: Vec<&mut [f32]> = vec![solo.as_mut_slice()];
+                    ne.forward_rows(&[x.as_slice()], &mut ys);
+                }
+                for (a, c) in solo.iter().zip(y) {
+                    assert_eq!(a.to_bits(), c.to_bits());
+                }
+            }
+        }
     }
 }

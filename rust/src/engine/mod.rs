@@ -8,15 +8,35 @@
 //! layer's hidden state + routing so the coordinator can drive the dual
 //! predictors and the simulated clock without touching the math.
 //!
+//! The hot path is **boundary-synchronous batched decode**
+//! (`decode_batch`, DESIGN.md §7): N sequences step through each layer in
+//! lockstep, and at every MoE boundary the routed (sequence, expert)
+//! pairs are grouped by expert so each activated expert is visited once —
+//! the native path runs the register-blocked multi-row kernel
+//! (`NativeExpert::forward_rows`; `tensor::gemm_channel_major` and
+//! `forward_sparse_batch` are its public rule-free/Rule-Up mirrors, which
+//! the bench measures for calibration), the HLO path resolves weight
+//! buffers and the threshold argument once per group and uploads each
+//! sequence's activation row once per boundary. `decode_token` is literally a batch of one, so there is no
+//! sibling sequential implementation to drift from, and a batch of N is
+//! bit-identical to N solo decodes (pinned by tests/batch_decode.rs).
+//!
 //! Perf notes (EXPERIMENTS.md §Perf): all weight tensors are uploaded to
 //! device buffers once at load and executions run through `execute_b`
 //! (the literal-argument `execute` path in the xla crate leaks its
-//! internally created input buffers).
+//! internally created input buffers). KV caches are device-resident
+//! across steps: `DecodeState` holds per-layer buffers and each step's
+//! attention-output cache literals re-enter device buffers directly —
+//! no host `Vec` materialization, no per-layer re-upload of host caches.
+//! (The residual per-step cost is the output-tuple download `exec_b`
+//! forces; the binding returns one tuple literal per execution.)
+//! Sparsity-threshold scalars are uploaded once per (layer, expert,
+//! level) and served from a buffer cache thereafter.
 
 pub mod compress;
 pub mod sampler;
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 use std::sync::Arc;
 
@@ -25,7 +45,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::config::ExpertMode;
 use crate::model::Weights;
 use crate::runtime::{to_vec_f32, PjRtBuffer, Runtime};
-use crate::tensor::{softmax_inplace, top_k};
+use crate::tensor::{axpy, softmax_inplace, top_k};
 
 /// Which compiled graph family executes the expert math.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -38,28 +58,34 @@ pub enum ComputePath {
     Native,
 }
 
-/// Per-request decode state. KV caches live as host vectors, uploaded to
-/// device buffers per step (CPU PJRT: the "device" is host memory, so the
-/// upload is a memcpy).
+/// One layer's device-resident KV cache pair.
+struct KvLayer {
+    kc: PjRtBuffer,
+    vc: PjRtBuffer,
+}
+
+/// Per-request decode state. KV caches live as per-layer *device buffers*
+/// persisted across steps: the engine uploads zeroed caches on first use,
+/// and each step's attention outputs re-enter device buffers without
+/// round-tripping through host vectors.
 pub struct DecodeState {
     pub x: Vec<f32>,
     pub pos: usize,
     kv_dims: [usize; 4],
-    kc: Vec<Vec<f32>>,
-    vc: Vec<Vec<f32>>,
+    n_layers: usize,
+    /// None until the engine's first step uploads the zero caches
+    kv: Option<Vec<KvLayer>>,
 }
 
 impl DecodeState {
     pub fn new(w: &Weights) -> Result<Self> {
         let c = &w.cfg;
-        let dims = [1, c.n_heads, c.max_seq, c.head_dim];
-        let n: usize = dims.iter().product();
         Ok(DecodeState {
             x: vec![0.0; c.d_model],
             pos: 0,
-            kv_dims: dims,
-            kc: vec![vec![0.0; n]; c.n_layers],
-            vc: vec![vec![0.0; n]; c.n_layers],
+            kv_dims: [1, c.n_heads, c.max_seq, c.head_dim],
+            n_layers: c.n_layers,
+            kv: None,
         })
     }
 }
@@ -67,6 +93,10 @@ impl DecodeState {
 /// Layer-step information surfaced to the coordinator.
 pub struct LayerEvent<'a> {
     pub layer: usize,
+    /// index of the owning sequence within the decode batch (always 0
+    /// for single-sequence decode) — serving maps it to a request id for
+    /// stall attribution
+    pub seq: usize,
     /// hidden state entering the MoE block (router/up-projection input)
     pub h_mid: &'a [f32],
     /// (expert, weight) pairs actually routed to
@@ -83,6 +113,56 @@ impl StepObserver for NoObserver {
     fn on_layer(&mut self, _ev: &LayerEvent<'_>) {}
 }
 
+/// Boundary-synchronous decode instrumentation: how much same-boundary
+/// grouping actually shares. `group_visits` is the number of expert
+/// weight-argument resolutions / kernel groups executed — it equals the
+/// number of *distinct* routed experts per boundary, while `pair_visits`
+/// counts routed (sequence, expert) pairs; the gap is the shared work.
+#[derive(Debug, Default, Clone)]
+pub struct BatchStats {
+    /// MoE boundaries executed (token steps × layers)
+    pub boundaries: u64,
+    /// routed (sequence, expert) pairs
+    pub pair_visits: u64,
+    /// expert groups executed (distinct experts per boundary)
+    pub group_visits: u64,
+    /// threshold scalars uploaded cold
+    pub threshold_uploads: u64,
+    /// threshold arguments served from the buffer cache
+    pub threshold_hits: u64,
+}
+
+/// Group one boundary's routed (sequence, slot) pairs by expert id.
+/// BTreeMap keeps execution order deterministic (ascending expert);
+/// grouping only reorders *scheduling* — each pair's math reads its own
+/// activation row alone, so values cannot depend on group order.
+pub(crate) fn group_by_expert(
+    routed: &[Vec<(usize, f32)>],
+) -> BTreeMap<usize, Vec<(usize, usize)>> {
+    let mut groups: BTreeMap<usize, Vec<(usize, usize)>> = BTreeMap::new();
+    for (seq, r) in routed.iter().enumerate() {
+        for (slot, &(e, _)) in r.iter().enumerate() {
+            groups.entry(e).or_default().push((seq, slot));
+        }
+    }
+    groups
+}
+
+/// Threshold-cache key quantization (matches `compress::mode_key`).
+fn thr_key(layer: usize, expert: usize, level: f64) -> (usize, usize, u32) {
+    (layer, expert, (level * 1000.0).round() as u32)
+}
+
+/// Borrow a named weight buffer out of the upload map (free function so
+/// callers can hold the reference while other engine fields are in use).
+fn buf_in<'a>(
+    bufs: &'a HashMap<String, PjRtBuffer>,
+    name: &str,
+) -> Result<&'a PjRtBuffer> {
+    bufs.get(name)
+        .ok_or_else(|| anyhow!("no buffer for tensor {name}"))
+}
+
 pub struct Engine {
     pub rt: Runtime,
     pub w: Arc<Weights>,
@@ -93,6 +173,10 @@ pub struct Engine {
     bufs: HashMap<String, PjRtBuffer>,
     /// eval-mode materialized native experts
     native: compress::NativeExpertCache,
+    /// sparsity-threshold scalars, uploaded once per (layer, expert,
+    /// level) — batched decode resolves them once per expert *group*
+    thr_bufs: HashMap<(usize, usize, u32), PjRtBuffer>,
+    stats: BatchStats,
     pub path: ComputePath,
 }
 
@@ -130,6 +214,8 @@ impl Engine {
             w: Arc::clone(&w),
             bufs,
             native: compress::NativeExpertCache::new(w),
+            thr_bufs: HashMap::new(),
+            stats: BatchStats::default(),
             path: ComputePath::Hlo,
         })
     }
@@ -138,13 +224,58 @@ impl Engine {
         &self.w.cfg
     }
 
-    fn buf(&self, name: &str) -> Result<&PjRtBuffer> {
-        self.bufs
-            .get(name)
-            .ok_or_else(|| anyhow!("no buffer for tensor {name}"))
+    /// Batched-decode sharing counters (monotonic since load).
+    pub fn batch_stats(&self) -> &BatchStats {
+        &self.stats
     }
 
-    /// One expert forward through the selected compute path.
+    /// Native experts materialized since load (see `NativeExpertCache`).
+    pub fn native_materializations(&self) -> u64 {
+        self.native.materialization_count()
+    }
+
+    fn buf(&self, name: &str) -> Result<&PjRtBuffer> {
+        buf_in(&self.bufs, name)
+    }
+
+    /// Upload (once) and cache the "up" sparsity threshold scalar.
+    fn ensure_threshold(&mut self, layer: usize, expert: usize, level: f64) -> Result<()> {
+        let key = thr_key(layer, expert, level);
+        if self.thr_bufs.contains_key(&key) {
+            self.stats.threshold_hits += 1;
+            return Ok(());
+        }
+        let t = self.w.threshold("up", layer, expert, level)?;
+        let buf = self.rt.upload_scalar_f32(t)?;
+        self.thr_bufs.insert(key, buf);
+        self.stats.threshold_uploads += 1;
+        Ok(())
+    }
+
+    /// Upload the zeroed KV caches for `st` once; thereafter each step's
+    /// attention-output cache literals re-enter device buffers directly.
+    fn ensure_kv(&self, st: &mut DecodeState) -> Result<()> {
+        if st.kv.is_some() {
+            return Ok(());
+        }
+        let n: usize = st.kv_dims.iter().product();
+        let zeros = vec![0.0f32; n];
+        let mut kv = Vec::with_capacity(st.n_layers);
+        for _ in 0..st.n_layers {
+            kv.push(KvLayer {
+                kc: self.rt.upload_f32(&zeros, &st.kv_dims)?,
+                vc: self.rt.upload_f32(&zeros, &st.kv_dims)?,
+            });
+        }
+        st.kv = Some(kv);
+        Ok(())
+    }
+
+    /// One expert forward through the selected compute path — the scalar
+    /// eval/sweep entry point, executed as a group of one through
+    /// `expert_group_forward` (the same discipline as `decode_token`:
+    /// one dispatch implementation, so the eval path and the decode hot
+    /// path cannot drift apart).
     pub fn expert_forward(
         &mut self,
         layer: usize,
@@ -152,20 +283,61 @@ impl Engine {
         h: &[f32],
         mode: ExpertMode,
     ) -> Result<Vec<f32>> {
-        if self.path == ComputePath::Native || compress::requires_native(mode) {
-            return self.native.forward(layer, expert, h, mode);
-        }
         let d = self.w.cfg.d_model;
-        let x = self.rt.upload_f32(h, &[1, d])?;
+        let h_mids = vec![h.to_vec()];
+        let needs_hlo =
+            self.path != ComputePath::Native && !compress::requires_native(mode);
+        let h_bufs = if needs_hlo {
+            vec![self.rt.upload_f32(h, &[1, d])?]
+        } else {
+            Vec::new()
+        };
+        let mut slot_y = vec![vec![vec![0.0f32; d]; 1]];
+        self.expert_group_forward(layer, expert, mode, &[(0, 0)], &h_mids, &h_bufs, &mut slot_y)?;
+        Ok(slot_y.swap_remove(0).swap_remove(0))
+    }
+
+    /// Execute one (boundary, expert) group: weight buffers and the
+    /// threshold argument are resolved once per group, then every member
+    /// row is computed against them — the native path in ONE multi-row
+    /// kernel pass over the host rows (`h_mids`), the HLO path as
+    /// per-row executions of the batch-1 graph over the caller's
+    /// already-uploaded activation buffers (`h_bufs`, one upload per
+    /// (sequence, boundary) — never per routed pair).
+    fn expert_group_forward(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        mode: ExpertMode,
+        members: &[(usize, usize)],
+        h_mids: &[Vec<f32>],
+        h_bufs: &[PjRtBuffer],
+        slot_y: &mut [Vec<Vec<f32>>],
+    ) -> Result<()> {
+        let d = self.w.cfg.d_model;
+        if self.path == ComputePath::Native || compress::requires_native(mode) {
+            let xs: Vec<&[f32]> =
+                members.iter().map(|&(s, _)| h_mids[s].as_slice()).collect();
+            let rows = self.native.forward_batch(layer, expert, &xs, mode)?;
+            for (m, &(s, slot)) in members.iter().enumerate() {
+                slot_y[s][slot].copy_from_slice(&rows[m * d..(m + 1) * d]);
+            }
+            return Ok(());
+        }
+        // resolve the group's graph and non-activation arguments ONCE;
+        // one shared member loop below executes them per row
         let en = |t: &str| Weights::expert_name(layer, expert, t);
-        let out = match mode {
-            ExpertMode::Dense => self.rt.exec_b(
+        let (graph, tail): (&str, Vec<&PjRtBuffer>) = match mode {
+            ExpertMode::Dense => (
                 "expert_dense_b1",
-                &[&x, self.buf(&en("wg"))?, self.buf(&en("wu"))?, self.buf(&en("wd"))?],
-            )?,
+                vec![
+                    buf_in(&self.bufs, &en("wg"))?,
+                    buf_in(&self.bufs, &en("wu"))?,
+                    buf_in(&self.bufs, &en("wd"))?,
+                ],
+            ),
             ExpertMode::Sparse { level } => {
-                let t = self.rt.upload_scalar_f32(
-                    self.w.threshold("up", layer, expert, level)?)?;
+                self.ensure_threshold(layer, expert, level)?;
                 let name = if self.path == ComputePath::HloPallas
                     && self.rt.loaded("expert_sparse_pallas_b1")
                 {
@@ -173,15 +345,18 @@ impl Engine {
                 } else {
                     "expert_sparse_b1"
                 };
-                self.rt.exec_b(
+                (
                     name,
-                    &[&x, self.buf(&en("wg"))?, self.buf(&en("wu"))?,
-                      self.buf(&en("wd"))?, &t],
-                )?
+                    vec![
+                        buf_in(&self.bufs, &en("wg"))?,
+                        buf_in(&self.bufs, &en("wu"))?,
+                        buf_in(&self.bufs, &en("wd"))?,
+                        &self.thr_bufs[&thr_key(layer, expert, level)],
+                    ],
+                )
             }
             ExpertMode::Floe { level } => {
-                let t = self.rt.upload_scalar_f32(
-                    self.w.threshold("up", layer, expert, level)?)?;
+                self.ensure_threshold(layer, expert, level)?;
                 let name = if self.path == ComputePath::HloPallas
                     && self.rt.loaded("expert_floe_pallas_b1")
                 {
@@ -189,32 +364,197 @@ impl Engine {
                 } else {
                     "expert_floe_b1"
                 };
-                self.rt.exec_b(
+                (
                     name,
-                    &[&x, self.buf(&en("wg"))?, self.buf(&en("up_q"))?,
-                      self.buf(&en("up_q_scale"))?, self.buf(&en("up_q_zero"))?,
-                      self.buf(&en("wd"))?, &t],
-                )?
+                    vec![
+                        buf_in(&self.bufs, &en("wg"))?,
+                        buf_in(&self.bufs, &en("up_q"))?,
+                        buf_in(&self.bufs, &en("up_q_scale"))?,
+                        buf_in(&self.bufs, &en("up_q_zero"))?,
+                        buf_in(&self.bufs, &en("wd"))?,
+                        &self.thr_bufs[&thr_key(layer, expert, level)],
+                    ],
+                )
             }
             ExpertMode::Uniform { bits } => {
                 let q = |p: &str| en(&format!("q{bits}.{p}"));
-                self.rt.exec_b(
-                    "expert_q_b1",
-                    &[&x,
-                      self.buf(&q("wg"))?, self.buf(&format!("{}_scale", q("wg")))?,
-                      self.buf(&format!("{}_zero", q("wg")))?,
-                      self.buf(&q("wu"))?, self.buf(&format!("{}_scale", q("wu")))?,
-                      self.buf(&format!("{}_zero", q("wu")))?,
-                      self.buf(&q("wd"))?, self.buf(&format!("{}_scale", q("wd")))?,
-                      self.buf(&format!("{}_zero", q("wd")))?],
-                )?
+                let names = [
+                    q("wg"), format!("{}_scale", q("wg")), format!("{}_zero", q("wg")),
+                    q("wu"), format!("{}_scale", q("wu")), format!("{}_zero", q("wu")),
+                    q("wd"), format!("{}_scale", q("wd")), format!("{}_zero", q("wd")),
+                ];
+                let mut args = Vec::with_capacity(9);
+                for nm in &names {
+                    args.push(buf_in(&self.bufs, nm)?);
+                }
+                ("expert_q_b1", args)
             }
-            other => return self.native.forward(layer, expert, h, other),
+            // every mode the four HLO graphs don't cover satisfies
+            // `requires_native` and took the native path above; a new
+            // mode reaching here means `requires_native` was not updated
+            other => unreachable!(
+                "expert mode {other:?} has no HLO graph and is not \
+                 routed native — update compress::requires_native"
+            ),
         };
-        to_vec_f32(&out[0])
+        for &(s, slot) in members {
+            let mut call: Vec<&PjRtBuffer> = Vec::with_capacity(1 + tail.len());
+            call.push(&h_bufs[s]);
+            call.extend(tail.iter().copied());
+            let out = self.rt.exec_b(graph, &call)?;
+            slot_y[s][slot].copy_from_slice(&to_vec_f32(&out[0])?);
+        }
+        Ok(())
     }
 
-    /// Run one token through all layers. Returns the logits.
+    /// Step every sequence one token, layer by layer in lockstep. At each
+    /// MoE boundary the routed (sequence, expert) pairs are grouped by
+    /// expert and each activated expert is visited once
+    /// (`expert_group_forward`); per sequence the expert outputs are then
+    /// combined *in routing order*, so the accumulation order — and
+    /// therefore every bit of every logit — matches N independent
+    /// sequential decodes. Returns each sequence's logits.
+    pub fn decode_batch(
+        &mut self,
+        sts: &mut [&mut DecodeState],
+        tokens: &[u8],
+        mode: ExpertMode,
+        obs: &mut dyn StepObserver,
+    ) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(!sts.is_empty(), "empty decode batch");
+        anyhow::ensure!(sts.len() == tokens.len(), "batch/token length mismatch");
+        let c = self.w.cfg.clone();
+        let n = sts.len();
+        for st in sts.iter() {
+            anyhow::ensure!(st.pos < c.max_seq, "KV cache full");
+        }
+        for st in sts.iter_mut() {
+            self.ensure_kv(st)?;
+        }
+        let mut xs: Vec<Vec<f32>> = tokens
+            .iter()
+            .map(|&t| self.w.embed_row(t).map(<[f32]>::to_vec))
+            .collect::<Result<_>>()?;
+        let pos_bufs: Vec<PjRtBuffer> = sts
+            .iter()
+            .map(|st| self.rt.upload_scalar_i32(st.pos as i32))
+            .collect::<Result<_>>()?;
+        // per-(sequence, routing-slot) expert outputs, reused across layers
+        let mut slot_y = vec![vec![vec![0.0f32; c.d_model]; c.top_k]; n];
+        let mut moe = vec![0.0f32; c.d_model];
+        let mut x2s: Vec<Vec<f32>> = vec![Vec::new(); n];
+        let mut h_mids: Vec<Vec<f32>> = vec![Vec::new(); n];
+        let mut routed_all: Vec<Vec<(usize, f32)>> = vec![Vec::new(); n];
+        for l in 0..c.n_layers {
+            {
+                // ---- attention pass, one sequence at a time (batch-1
+                // graph); the seven layer-weight buffers resolve once ----
+                let pre = format!("layer{l}.");
+                let aw = [
+                    buf_in(&self.bufs, &format!("{pre}wq"))?,
+                    buf_in(&self.bufs, &format!("{pre}wk"))?,
+                    buf_in(&self.bufs, &format!("{pre}wv"))?,
+                    buf_in(&self.bufs, &format!("{pre}wo"))?,
+                    buf_in(&self.bufs, &format!("{pre}norm1"))?,
+                    buf_in(&self.bufs, &format!("{pre}norm2"))?,
+                    buf_in(&self.bufs, &format!("{pre}router"))?,
+                ];
+                for i in 0..n {
+                    let xl = self.rt.upload_f32(&xs[i], &[1, c.d_model])?;
+                    let mut out = {
+                        let kv = &sts[i].kv.as_ref().expect("kv ensured")[l];
+                        self.rt.exec_b(
+                            "attn_step_b1",
+                            &[&xl, &kv.kc, &kv.vc, &pos_bufs[i],
+                              aw[0], aw[1], aw[2], aw[3], aw[4], aw[5], aw[6]],
+                        )?
+                    };
+                    // (x2, h_mid, router_logits, kc', vc')
+                    let vc = out.pop().context("vc")?;
+                    let kc = out.pop().context("kc")?;
+                    let rl = to_vec_f32(&out.pop().context("rl")?)?;
+                    h_mids[i] = to_vec_f32(&out.pop().context("h")?)?;
+                    x2s[i] = to_vec_f32(&out.pop().context("x2")?)?;
+                    // KV residency: the output cache literals go straight
+                    // back to device buffers for the next step
+                    let kv = &mut sts[i].kv.as_mut().expect("kv ensured")[l];
+                    kv.kc = self.rt.upload_literal(&kc)?;
+                    kv.vc = self.rt.upload_literal(&vc)?;
+
+                    // Mixtral routing: softmax over the top-k logits
+                    let idx = top_k(&rl, c.top_k);
+                    let mut wts: Vec<f32> = idx.iter().map(|&k| rl[k]).collect();
+                    softmax_inplace(&mut wts);
+                    routed_all[i] = idx.into_iter().zip(wts).collect();
+
+                    obs.on_layer(&LayerEvent {
+                        layer: l,
+                        seq: i,
+                        h_mid: &h_mids[i],
+                        routed: &routed_all[i],
+                    });
+                }
+            }
+
+            // ---- boundary-synchronous expert execution: group by
+            // expert; each distinct expert is visited once, and each
+            // sequence's activation row is uploaded once per boundary
+            // (shared by all of its groups), not once per routed pair ----
+            let needs_hlo =
+                self.path != ComputePath::Native && !compress::requires_native(mode);
+            let h_bufs: Vec<PjRtBuffer> = if needs_hlo {
+                h_mids
+                    .iter()
+                    .map(|h| self.rt.upload_f32(h, &[1, c.d_model]))
+                    .collect::<Result<_>>()?
+            } else {
+                Vec::new()
+            };
+            let groups = group_by_expert(&routed_all);
+            self.stats.boundaries += 1;
+            self.stats.group_visits += groups.len() as u64;
+            for (&e, members) in &groups {
+                self.stats.pair_visits += members.len() as u64;
+                self.expert_group_forward(l, e, mode, members, &h_mids, &h_bufs, &mut slot_y)?;
+            }
+
+            // ---- combine per sequence in routing order (the sequential
+            // accumulation order, so grouping cannot perturb sums) ----
+            for i in 0..n {
+                moe.iter_mut().for_each(|v| *v = 0.0);
+                for (slot, &(_, wgt)) in routed_all[i].iter().enumerate() {
+                    axpy(&mut moe, wgt, &slot_y[i][slot]);
+                }
+                for (k, x) in xs[i].iter_mut().enumerate() {
+                    *x = x2s[i][k] + moe[k];
+                }
+            }
+        }
+        let mut all = Vec::with_capacity(n);
+        for i in 0..n {
+            let xl = self.rt.upload_f32(&xs[i], &[1, c.d_model])?;
+            let out = self.rt.exec_b(
+                "logits_b1",
+                &[&xl, self.buf("final_norm")?, self.buf("lm_head")?],
+            )?;
+            all.push(to_vec_f32(&out[0])?);
+        }
+        // Commit per-sequence state only after every fallible step
+        // succeeded: a batch error leaves pos/x untouched, so the serving
+        // path's solo retry re-executes the token against unadvanced
+        // state — KV writes at `pos` are overwrites of the same
+        // deterministic values, which is what makes the retry
+        // value-idempotent.
+        for (i, st) in sts.iter_mut().enumerate() {
+            st.pos += 1;
+            st.x.copy_from_slice(&xs[i]);
+        }
+        Ok(all)
+    }
+
+    /// Run one token through all layers. Returns the logits. Literally a
+    /// batch of one through `decode_batch`, so the sequential reference
+    /// and the batched path cannot drift apart.
     pub fn decode_token(
         &mut self,
         st: &mut DecodeState,
@@ -222,60 +562,8 @@ impl Engine {
         mode: ExpertMode,
         obs: &mut dyn StepObserver,
     ) -> Result<Vec<f32>> {
-        let c = self.w.cfg.clone();
-        anyhow::ensure!(st.pos < c.max_seq, "KV cache full");
-        let mut x = self.w.embed_row(token)?.to_vec();
-        let pos = self.rt.upload_scalar_i32(st.pos as i32)?;
-        for l in 0..c.n_layers {
-            let pre = format!("layer{l}.");
-            let xl = self.rt.upload_f32(&x, &[1, c.d_model])?;
-            let kcb = self.rt.upload_f32(&st.kc[l], &st.kv_dims)?;
-            let vcb = self.rt.upload_f32(&st.vc[l], &st.kv_dims)?;
-            let mut out = self.rt.exec_b(
-                "attn_step_b1",
-                &[&xl, &kcb, &vcb, &pos,
-                  self.buf(&format!("{pre}wq"))?, self.buf(&format!("{pre}wk"))?,
-                  self.buf(&format!("{pre}wv"))?, self.buf(&format!("{pre}wo"))?,
-                  self.buf(&format!("{pre}norm1"))?, self.buf(&format!("{pre}norm2"))?,
-                  self.buf(&format!("{pre}router"))?],
-            )?;
-            // (x2, h_mid, router_logits, kc', vc')
-            let vc = to_vec_f32(&out.pop().context("vc")?)?;
-            let kc = to_vec_f32(&out.pop().context("kc")?)?;
-            let rl = to_vec_f32(&out.pop().context("rl")?)?;
-            let h_mid = to_vec_f32(&out.pop().context("h")?)?;
-            let x2 = to_vec_f32(&out.pop().context("x2")?)?;
-            st.kc[l] = kc;
-            st.vc[l] = vc;
-
-            // Mixtral routing: softmax over the top-k logits
-            let idx = top_k(&rl, c.top_k);
-            let mut wts: Vec<f32> = idx.iter().map(|&i| rl[i]).collect();
-            softmax_inplace(&mut wts);
-            let routed: Vec<(usize, f32)> =
-                idx.into_iter().zip(wts.into_iter()).collect();
-
-            obs.on_layer(&LayerEvent { layer: l, h_mid: &h_mid, routed: &routed });
-
-            let mut moe = vec![0.0f32; c.d_model];
-            for &(e, wgt) in &routed {
-                let y = self.expert_forward(l, e, &h_mid, mode)?;
-                for (m, yi) in moe.iter_mut().zip(&y) {
-                    *m += wgt * yi;
-                }
-            }
-            for i in 0..c.d_model {
-                x[i] = x2[i] + moe[i];
-            }
-        }
-        st.pos += 1;
-        st.x.copy_from_slice(&x);
-        let xl = self.rt.upload_f32(&x, &[1, c.d_model])?;
-        let out = self.rt.exec_b(
-            "logits_b1",
-            &[&xl, self.buf("final_norm")?, self.buf("lm_head")?],
-        )?;
-        to_vec_f32(&out[0])
+        let mut out = self.decode_batch(&mut [st], &[token], mode, obs)?;
+        Ok(out.pop().expect("batch of one"))
     }
 
     /// Feed a prompt; returns the logits after the last prompt token.
@@ -331,5 +619,43 @@ impl Engine {
               self.buf(&en("up_q_zero"))?],
         )?;
         to_vec_f32(&out[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Grouping is pure bookkeeping over the routing table — testable
+    /// without a runtime: every (sequence, slot) pair lands in exactly
+    /// one group, group count == distinct experts, and order is
+    /// deterministic (ascending expert id).
+    #[test]
+    fn group_by_expert_counts_distinct_and_covers_all_pairs() {
+        let routed = vec![
+            vec![(3usize, 0.6f32), (1, 0.4)],
+            vec![(1, 0.7), (5, 0.3)],
+            vec![(3, 0.5), (1, 0.5)],
+        ];
+        let groups = group_by_expert(&routed);
+        // distinct experts routed: {1, 3, 5}
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups.keys().copied().collect::<Vec<_>>(), vec![1, 3, 5]);
+        let pairs: usize = groups.values().map(Vec::len).sum();
+        assert_eq!(pairs, 6, "every routed pair appears in exactly one group");
+        assert_eq!(groups[&1], vec![(0, 1), (1, 0), (2, 1)]);
+        assert_eq!(groups[&3], vec![(0, 0), (2, 0)]);
+        assert_eq!(groups[&5], vec![(1, 1)]);
+        // a batch of one degenerates to one group per routed slot
+        let solo = group_by_expert(&routed[..1]);
+        assert_eq!(solo.len(), 2);
+        assert!(solo.values().all(|m| m.len() == 1));
+    }
+
+    #[test]
+    fn threshold_key_quantizes_levels_stably() {
+        assert_eq!(thr_key(1, 2, 0.8), (1, 2, 800));
+        assert_eq!(thr_key(1, 2, 0.85), thr_key(1, 2, 0.85));
+        assert_ne!(thr_key(1, 2, 0.8), thr_key(1, 2, 0.9));
     }
 }

@@ -20,25 +20,35 @@ pub struct QuantView<'a> {
     pub packed: bool,
 }
 
+/// Walk packed INT2 codes (4 per byte along the input axis) in canonical
+/// order, yielding `(input_row, col, code)` to the visitor. This is the
+/// single bit-unpacking code path: `unpack_int2` and the packed branch of
+/// `QuantView::dequant` are both thin adapters over it, so the walk order
+/// (packed row, sub-row shift, column) exists exactly once.
+fn walk_int2(packed: &[u8], d: usize, f: usize, mut visit: impl FnMut(usize, usize, u8)) {
+    assert_eq!(packed.len(), d / 4 * f);
+    for pr in 0..d / 4 {
+        for (k, shift) in [0u8, 2, 4, 6].iter().enumerate() {
+            let i = pr * 4 + k;
+            for j in 0..f {
+                visit(i, j, (packed[pr * f + j] >> *shift) & 3);
+            }
+        }
+    }
+}
+
 impl<'a> QuantView<'a> {
     /// Dequantize into `out` ([d, f] row-major f32).
     pub fn dequant(&self, out: &mut [f32]) {
         assert_eq!(out.len(), self.d * self.f);
         if self.packed {
             assert_eq!(self.bits, 2);
-            assert_eq!(self.codes.len(), self.d / 4 * self.f);
-            for pr in 0..self.d / 4 {
-                for (k, shift) in [0u8, 2, 4, 6].iter().enumerate() {
-                    let i = pr * 4 + k;
-                    let gi = i / self.group_size;
-                    for j in 0..self.f {
-                        let code = (self.codes[pr * self.f + j] >> shift) & 3;
-                        let s = self.scale[gi * self.f + j];
-                        let z = self.zero[gi * self.f + j];
-                        out[i * self.f + j] = (code as f32 - z) * s;
-                    }
-                }
-            }
+            walk_int2(self.codes, self.d, self.f, |i, j, code| {
+                let gi = i / self.group_size;
+                let s = self.scale[gi * self.f + j];
+                let z = self.zero[gi * self.f + j];
+                out[i * self.f + j] = (code as f32 - z) * s;
+            });
         } else {
             assert_eq!(self.codes.len(), self.d * self.f);
             for i in 0..self.d {
@@ -62,16 +72,8 @@ impl<'a> QuantView<'a> {
 
 /// Unpack INT2 codes (4 per byte along the input axis) into u8 [d, f].
 pub fn unpack_int2(packed: &[u8], d: usize, f: usize) -> Vec<u8> {
-    assert_eq!(packed.len(), d / 4 * f);
     let mut out = vec![0u8; d * f];
-    for pr in 0..d / 4 {
-        for (k, shift) in [0u8, 2, 4, 6].iter().enumerate() {
-            let i = pr * 4 + k;
-            for j in 0..f {
-                out[i * f + j] = (packed[pr * f + j] >> shift) & 3;
-            }
-        }
-    }
+    walk_int2(packed, d, f, |i, j, code| out[i * f + j] = code);
     out
 }
 

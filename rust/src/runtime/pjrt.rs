@@ -143,6 +143,18 @@ impl Runtime {
         self.upload_f32(&[v], &[])
     }
 
+    /// Re-enter an execution-output literal as a device buffer without
+    /// materializing a host `Vec` (KV-cache residency: the attention
+    /// step's output caches flow straight back into the next step's
+    /// arguments). `buffer_from_host_literal` aborts on rank-0/1 literals
+    /// in xla_extension 0.5.1 — only the rank-4 KV caches come through
+    /// here, so the abort path is unreachable from the engine.
+    pub fn upload_literal(&self, lit: &Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("upload literal: {e:?}"))
+    }
+
     pub fn upload_scalar_i32(&self, v: i32) -> Result<xla::PjRtBuffer> {
         self.client
             .buffer_from_host_buffer(&[v], &[], None)

@@ -91,6 +91,10 @@ impl Runtime {
         unreachable!("pjrt stub: no runtime was constructed")
     }
 
+    pub fn upload_literal(&self, _lit: &Literal) -> Result<PjRtBuffer> {
+        unreachable!("pjrt stub: no runtime was constructed")
+    }
+
     pub fn upload_scalar_i32(&self, _v: i32) -> Result<PjRtBuffer> {
         unreachable!("pjrt stub: no runtime was constructed")
     }

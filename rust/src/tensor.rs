@@ -89,6 +89,27 @@ pub fn gemv_channel_major(x: &[f32], w: &Mat, out: &mut [f32]) {
     }
 }
 
+/// Multi-row batched GEMV against a channel-major matrix — the rule-free
+/// primitive of boundary-synchronous batched decode (the decode path
+/// itself runs `engine::compress::NativeExpert::forward_rows`, the same
+/// blocking with the sparsity rules folded in; this is the public mirror
+/// the benches measure): each weight row is streamed once per *batch* and
+/// every activation row rides it while it is hot, instead of re-streaming
+/// the whole matrix per row. Row `b`'s outputs are bit-identical to
+/// `gemv_channel_major(xs[b], w, outs[b])` — the inner accumulation is
+/// the same 4-way-unrolled `dot` in the same channel order, so batching
+/// changes scheduling, never values.
+pub fn gemm_channel_major(xs: &[&[f32]], w: &Mat, outs: &mut [&mut [f32]]) {
+    debug_assert_eq!(xs.len(), outs.len());
+    for j in 0..w.rows {
+        let row = w.row(j);
+        for (x, out) in xs.iter().zip(outs.iter_mut()) {
+            debug_assert_eq!(x.len(), w.cols);
+            out[j] = dot(x, row);
+        }
+    }
+}
+
 /// Channel-major expert weights (the compact layout of paper Fig 5).
 #[derive(Clone)]
 pub struct ExpertWeights {
@@ -118,6 +139,28 @@ impl ExpertWeights {
         }
     }
 
+    /// Dense forward over a batch of activation rows: channel j's gate/up
+    /// columns and down row are streamed once per *batch* and applied to
+    /// every row while hot (same-boundary GEMV sharing). Per row the op
+    /// order matches `forward_dense` exactly, so each row's output is
+    /// bit-identical to a solo call — the invariant batched decode pins.
+    pub fn forward_dense_batch(&self, xs: &[&[f32]], ys: &mut [&mut [f32]]) {
+        debug_assert_eq!(xs.len(), ys.len());
+        for y in ys.iter_mut() {
+            y.iter_mut().for_each(|v| *v = 0.0);
+        }
+        for j in 0..self.f() {
+            let wu = self.wu_t.row(j);
+            let wg = self.wg_t.row(j);
+            let wd = self.wd.row(j);
+            for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                let v = dot(x, wu);
+                let g = silu(dot(x, wg));
+                axpy(y, g * v, wd);
+            }
+        }
+    }
+
     /// Paper Algorithm 1 with *real* channel skipping: channels whose
     /// |x·Wu_j| < t skip the gate GEMV and the down accumulation entirely.
     /// Returns the number of active channels.
@@ -132,6 +175,42 @@ impl ExpertWeights {
             active += 1;
             let g = silu(dot(x, self.wg_t.row(j)));
             axpy(y, g * v, self.wd.row(j));
+        }
+        active
+    }
+
+    /// Sparse forward over a batch of rows (paper Algorithm 1 / Rule-Up —
+    /// the FloE-path rule): channel j's gate/up columns and down row
+    /// stream once per batch, and each row applies its own
+    /// |x·Wu_j| < t skip. Per row the op order matches `forward_sparse`
+    /// exactly, so each row's output is bit-identical to a solo call.
+    /// Returns the number of active (row, channel) pairs. This is the
+    /// public mirror of `NativeExpert::forward_rows`'s Up rule, measured
+    /// by benches/decode_hotpath.rs for the reuse calibration.
+    pub fn forward_sparse_batch(
+        &self,
+        xs: &[&[f32]],
+        t: f32,
+        ys: &mut [&mut [f32]],
+    ) -> usize {
+        debug_assert_eq!(xs.len(), ys.len());
+        for y in ys.iter_mut() {
+            y.iter_mut().for_each(|v| *v = 0.0);
+        }
+        let mut active = 0;
+        for j in 0..self.f() {
+            let wu = self.wu_t.row(j);
+            let wg = self.wg_t.row(j);
+            let wd = self.wd.row(j);
+            for (x, y) in xs.iter().zip(ys.iter_mut()) {
+                let v = dot(x, wu);
+                if v.abs() < t {
+                    continue;
+                }
+                active += 1;
+                let g = silu(dot(x, wg));
+                axpy(y, g * v, wd);
+            }
         }
         active
     }
@@ -237,6 +316,112 @@ mod tests {
         for (a, b) in ys.iter().zip(&ym) {
             assert!((a - b).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn gemm_rows_bit_identical_to_gemv() {
+        let mut rng = Rng::new(11);
+        let (d, f, b) = (48, 96, 5);
+        let mut w = Mat::zeros(f, d);
+        rng.fill_normal_f32(&mut w.data, 0.3);
+        let xs_store: Vec<Vec<f32>> = (0..b)
+            .map(|_| {
+                let mut x = vec![0.0; d];
+                rng.fill_normal_f32(&mut x, 1.0);
+                x
+            })
+            .collect();
+        let xs: Vec<&[f32]> = xs_store.iter().map(|x| x.as_slice()).collect();
+        let mut batched = vec![vec![0.0f32; f]; b];
+        {
+            let mut outs: Vec<&mut [f32]> =
+                batched.iter_mut().map(|o| o.as_mut_slice()).collect();
+            gemm_channel_major(&xs, &w, &mut outs);
+        }
+        for (x, out) in xs.iter().zip(&batched) {
+            let mut solo = vec![0.0f32; f];
+            gemv_channel_major(x, &w, &mut solo);
+            for (a, c) in solo.iter().zip(out) {
+                assert_eq!(a.to_bits(), c.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn dense_batch_bit_identical_to_solo_forward() {
+        let mut rng = Rng::new(12);
+        let (d, f, b) = (32, 64, 4);
+        let mk = |rng: &mut Rng| {
+            let mut m = Mat::zeros(f, d);
+            rng.fill_normal_f32(&mut m.data, 0.2);
+            m
+        };
+        let ew = ExpertWeights { wg_t: mk(&mut rng), wu_t: mk(&mut rng), wd: mk(&mut rng) };
+        let xs_store: Vec<Vec<f32>> = (0..b)
+            .map(|_| {
+                let mut x = vec![0.0; d];
+                rng.fill_normal_f32(&mut x, 1.0);
+                x
+            })
+            .collect();
+        let xs: Vec<&[f32]> = xs_store.iter().map(|x| x.as_slice()).collect();
+        let mut batched = vec![vec![0.0f32; d]; b];
+        {
+            let mut ys: Vec<&mut [f32]> =
+                batched.iter_mut().map(|y| y.as_mut_slice()).collect();
+            ew.forward_dense_batch(&xs, &mut ys);
+        }
+        for (x, y) in xs.iter().zip(&batched) {
+            let mut solo = vec![0.0f32; d];
+            ew.forward_dense(x, &mut solo);
+            for (a, c) in solo.iter().zip(y) {
+                assert_eq!(a.to_bits(), c.to_bits(), "batched row diverged from solo");
+            }
+        }
+        // batch of one is exactly the solo kernel too
+        let mut one = vec![0.0f32; d];
+        {
+            let mut ys: Vec<&mut [f32]> = vec![one.as_mut_slice()];
+            ew.forward_dense_batch(&xs[..1], &mut ys);
+        }
+        assert_eq!(one, batched[0]);
+    }
+
+    #[test]
+    fn sparse_batch_bit_identical_to_solo_and_counts_active() {
+        let mut rng = Rng::new(13);
+        let (d, f, b) = (32, 64, 4);
+        let mk = |rng: &mut Rng| {
+            let mut m = Mat::zeros(f, d);
+            rng.fill_normal_f32(&mut m.data, 0.2);
+            m
+        };
+        let ew = ExpertWeights { wg_t: mk(&mut rng), wu_t: mk(&mut rng), wd: mk(&mut rng) };
+        let xs_store: Vec<Vec<f32>> = (0..b)
+            .map(|_| {
+                let mut x = vec![0.0; d];
+                rng.fill_normal_f32(&mut x, 1.0);
+                x
+            })
+            .collect();
+        let xs: Vec<&[f32]> = xs_store.iter().map(|x| x.as_slice()).collect();
+        let t = 0.3;
+        let mut batched = vec![vec![0.0f32; d]; b];
+        let active_batch = {
+            let mut ys: Vec<&mut [f32]> =
+                batched.iter_mut().map(|y| y.as_mut_slice()).collect();
+            ew.forward_sparse_batch(&xs, t, &mut ys)
+        };
+        let mut active_solo = 0;
+        for (x, y) in xs_store.iter().zip(&batched) {
+            let mut solo = vec![0.0f32; d];
+            active_solo += ew.forward_sparse(x, t, &mut solo);
+            for (a, c) in solo.iter().zip(y) {
+                assert_eq!(a.to_bits(), c.to_bits());
+            }
+        }
+        assert_eq!(active_batch, active_solo);
+        assert!(active_batch > 0 && active_batch < b * f, "threshold inert: {active_batch}");
     }
 
     #[test]

@@ -128,10 +128,15 @@ def p2p_copy_us(bytes_):
 # ---------------------------------------------------------------- systems
 FLOE, NAIVE, ADV, FIDDLER, GPU = "floe", "naive", "adv", "fiddler", "gpu"
 
+# --overlap: refuse speculative prefetch once the bus queue is this deep
+# (store/prefetch.rs::PREFETCH_BACKLOG_US)
+PREFETCH_BACKLOG_US = 2000.0
+
 
 class System:
     def __init__(self, kind, residency="lru", devices=1, shard="layer",
-                 coalesce=None, spill=None, replicate_top=0, compute_streams=False):
+                 coalesce=None, spill=None, replicate_top=0, compute_streams=False,
+                 overlap=False):
         self.kind = kind
         self.sparsity = 0.9
         self.quant_bits = 3
@@ -143,6 +148,9 @@ class System:
         self.spill = (devices > 1) if spill is None else spill
         self.replicate_top = replicate_top if devices > 1 else 0
         self.compute_streams = compute_streams and devices > 1
+        # event-driven compute/transfer overlap (PR 6): a layer's experts
+        # resolve upfront, GEMVs dispatch in transfer-readiness order
+        self.overlap = overlap
 
 
 class Params:
@@ -392,7 +400,14 @@ class Store:
         self.inflight = {}
         self.now = 0.0
         self.stall_us = 0.0
+        # attributed split (StoreStats::stall_demand_us / stall_prefetch_us)
+        self.stall_demand = 0.0
+        self.stall_prefetch = 0.0
         self.demand_fetches = 0
+        # priority demand lane (--overlap): critical copies serialize
+        # among themselves here instead of queueing behind speculative
+        # prefetch traffic on bus_free
+        self.demand_free = [0.0] * n
         self.prefetches = 0
         self.bus_transactions = 0
         self.transferred_bytes = 0.0
@@ -408,6 +423,7 @@ class Store:
         self.replica_budget = int(budget_per_device * 0.2)
         self.boundary_ticks = 0
         self.rebalances = 0
+        self.writebacks = 0
 
     def pop_note(self, key):
         self.pop_step += 1
@@ -430,9 +446,12 @@ class Store:
         if n <= 1:
             return 0
         l, e = key
-        if self.system.shard == "balanced":
+        # the overlay is written by Balanced re-homing and by replica
+        # write-back promotion (any placement with replication on)
+        if self.system.shard == "balanced" or self.system.replicate_top > 0:
             if key in self.home_map:
                 return self.home_map[key]
+        if self.system.shard == "balanced":
             return e % n  # cold-start seed (expert-style)
         if self.system.shard == "layer":
             return l % n
@@ -568,12 +587,12 @@ class Store:
                 if self.replica_bytes[d] + bytes_ > self.replica_budget:
                     continue
                 self.replica_bytes[d] += bytes_
-                if not (key in old and d in old[key]):
+                if not (key in old and d in old[key][1]):
                     b = max(float(bytes_), 1.0)
                     per_dst[d].append((float(bytes_), p2p_copy_us(b), P2P_API))
                 placed.append(d)
             if placed:
-                self.replicas[key] = placed
+                self.replicas[key] = (bytes_, placed)
         for dst, items in enumerate(per_dst):
             if items:
                 self.copy_batch(dst, items, self.system.coalesce)
@@ -585,10 +604,23 @@ class Store:
         if t > self.now:
             self.now = t
 
-    def stall_until(self, t):
+    def stall_until(self, t, cause="demand"):
         if t > self.now:
-            self.stall_us += t - self.now
+            d = t - self.now
+            self.stall_us += d
+            if cause == "prefetch":
+                self.stall_prefetch += d
+            else:
+                self.stall_demand += d
             self.now = t
+
+    def charge_stall(self, cause, d):
+        """Stream-path stall (no clock advance) with attribution."""
+        self.stall_us += d
+        if cause == "prefetch":
+            self.stall_prefetch += d
+        else:
+            self.stall_demand += d
 
     def lookup(self, key):
         home = self.home(key)
@@ -600,7 +632,7 @@ class Store:
             holders = []
             if home_resident:
                 holders.append(home)
-            for d in self.replicas.get(key, []):
+            for d in self.replicas.get(key, (0, []))[1]:
                 if d != home:
                     holders.append(d)
             if holders:
@@ -638,14 +670,42 @@ class Store:
         self.bus_free[dev] = done
         return done
 
+    def priority_copy_to(self, dev, dur, bytes_):
+        # demand lane: jumps the queued speculative prefetch traffic but
+        # serializes with other critical copies; the bus time it occupies
+        # still pushes the prefetch queue back by `dur`
+        self.transferred_bytes += bytes_
+        self.bus_transactions += 1
+        self.bus_busy[dev] += dur
+        start = max(self.now, self.demand_free[dev])
+        done = start + dur
+        self.demand_free[dev] = done
+        self.bus_free[dev] = max(self.bus_free[dev], self.now) + dur
+        return done
+
+    def critical_copy_to(self, dev, dur, bytes_):
+        """On-critical-path copy (demand fetch / intra top-up): under
+        --overlap it rides the priority lane, preempting queued
+        speculative prefetch; otherwise FIFO with everything else."""
+        if self.system.overlap:
+            return self.priority_copy_to(dev, dur, bytes_)
+        return self.bus_copy_to(dev, dur, bytes_)
+
     def demand_to(self, dev, dur, bytes_):
         self.demand_fetches += 1
-        return self.bus_copy_to(dev, dur, bytes_)
+        return self.critical_copy_to(dev, dur, bytes_)
 
     def submit(self, dst, mode, items):
         # items: (key, bytes, dur, ovh)
         if mode == "overlapped":
             for key, b, dur, _ in items:
+                if (self.system.overlap
+                        and self.bus_free[dst] - self.now > PREFETCH_BACKLOG_US):
+                    # bounded speculative backlog (--overlap): prefetch is
+                    # best-effort; refusing copies once the queue is this
+                    # deep breaks the evict-before-use reissue storm at
+                    # thrash-depth VRAM
+                    continue
                 self.prefetches += 1
                 done = self.bus_copy_to(dst, dur, b)
                 self.inflight[(dst, key)] = done
@@ -675,7 +735,7 @@ class Store:
                 done = self.now + dur
                 self.bus_free[dst] = done
                 self.inflight[(dst, key)] = done
-                self.stall_until(done)
+                self.stall_until(done, "prefetch")
 
     def take_inflight(self, key):
         dev = self.home(key)
@@ -701,9 +761,44 @@ class Store:
 
     def admit_on(self, dev, key, bytes_):
         ok, evicted = self.devices[dev].insert_evicting(key, bytes_)
+        for v in evicted:
+            self.rescue_victim(dev, v)
+        return ok
+
+    def rescue_victim(self, dev, victim):
+        # mirror of ExpertStore::rescue_victim: replica write-back first
+        # (home copy with live replicas promotes a holder), then spill
+        if self.writeback_from(dev, victim[0]):
+            return
         if self.system.spill:
-            for v in evicted:
-                self.spill_from(dev, v)
+            self.spill_from(dev, victim)
+
+    def writeback_from(self, dev, key):
+        if self.home(key) != dev:
+            return False  # a spilled copy died, not the home copy
+        if key not in self.replicas:
+            return False
+        rep_bytes, holders = self.replicas.pop(key)
+        best = holders[0]
+        for d in holders[1:]:
+            if self.bus_free[d] < self.bus_free[best]:
+                best = d
+        prev_home = self.home_map.get(key)
+        self.home_map[key] = best
+        self.replica_bytes[best] = max(self.replica_bytes[best] - rep_bytes, 0)
+        rest = [d for d in holders if d != best]
+        if rest:
+            self.replicas[key] = (rep_bytes, rest)
+        ok, evicted = self.devices[best].insert_evicting(key, rep_bytes)
+        for v in evicted:
+            self.rescue_victim(best, v)
+        if not ok:
+            if prev_home is None:
+                self.home_map.pop(key, None)
+            else:
+                self.home_map[key] = prev_home
+        else:
+            self.writebacks += 1
         return ok
 
     def spill_from(self, frm, victim):
@@ -727,9 +822,8 @@ class Store:
         if self.devices[home].policy.admits(key):
             self.devices[frm].remove(key)
             ok, evicted = self.devices[home].insert_evicting(key, b)
-            if self.system.spill:
-                for v in evicted:
-                    self.spill_from(home, v)
+            for v in evicted:
+                self.rescue_victim(home, v)
         return done
 
     def hit_rate(self):
@@ -786,17 +880,85 @@ def simulate(p, input_len, output_len):
         routing = sample_routing(p, rng, prev, weights)
         for l in range(NL):
             store.rebalance_tick()
+
+            def resolve(e):
+                # mirror of sim.rs::resolve_expert — returns
+                # (ready, cause, key, resident, exec_dev) or None (Fiddler
+                # computed inline on CPU)
+                nonlocal compute_us
+                key = (l, e)
+                looked = ("local", 0) if resident_fits else store.lookup(key)
+                resident = looked[0] != "miss"
+                if looked[0] == "local":
+                    return (store.now, "demand", key, resident, looked[1])
+                if looked[0] == "remote":
+                    ready = store.peer_fetch(key, looked[1])
+                    return (ready, "demand", key, resident, store.home(key))
+                done = store.take_inflight(key)
+                if done is not None:
+                    store.admit(key, per_cached)
+                    return (done, "prefetch", key, resident, store.home(key))
+                if p.system.kind == FIDDLER:
+                    t = cpu_expert_us()
+                    store.tick(t)
+                    compute_us += t
+                    return None
+                ready = store.demand_to(
+                    store.home(key), pcie_copy_us(max(per_bytes, 1.0)), per_bytes)
+                store.admit(key, per_cached)
+                return (ready, "demand", key, resident, store.home(key))
+
+            def exec_one(w):
+                # mirror of sim.rs::exec_expert
+                nonlocal compute_us, layer_end
+                ready, cause, key, resident, exec_dev = w
+                if streams is not None:
+                    start = max(streams[exec_dev], store.now)
+                    if ready > start:
+                        store.charge_stall(cause, ready - start)
+                        start = ready
+                    if p.system.kind == FLOE and not resident:
+                        miss = max(1.0 - p.intra_recall, 0.0)
+                        if miss > 0.0:
+                            extra = per_bytes * miss * 0.5
+                            done = store.critical_copy_to(
+                                store.home(key), pcie_copy_us(extra), extra)
+                            if done > start:
+                                store.charge_stall("demand", done - start)
+                                start = done
+                    end = start + exp_c  # gemv_scale 1.0 (uniform fleet)
+                    streams[exec_dev] = end
+                    layer_end = max(layer_end, end)
+                    compute_us += exp_c
+                else:
+                    store.stall_until(ready, cause)
+                    if p.system.kind == FLOE and not resident:
+                        miss = max(1.0 - p.intra_recall, 0.0)
+                        if miss > 0.0:
+                            extra = per_bytes * miss * 0.5
+                            done = store.critical_copy_to(
+                                store.home(key), pcie_copy_us(extra), extra)
+                            store.stall_until(done)
+                    store.tick(exp_c)
+                    compute_us += exp_c
+
+            if p.system.overlap:
+                # overlap: resolve the layer's experts *before* attention —
+                # demand fetches take bus priority over the next layer's
+                # speculative prefetch and stream under attention compute
+                # (resolve_expert consumes no RNG, so draw order holds)
+                work = [w for w in (resolve(e) for e in routing[l]) if w is not None]
             attn = attn_layer_us(kv_len)
             store.tick(attn)
             compute_us += attn
             if l + 1 < NL and per_bytes > 0.0:
-                hit_rate, overlap = 0.0, False
+                hit_rate, ov_pf = 0.0, False
                 if p.system.kind == FLOE:
-                    hit_rate, overlap = p.inter_hit, True
+                    hit_rate, ov_pf = p.inter_hit, True
                 elif p.system.kind == ADV:
-                    hit_rate, overlap = p.adv_prefetch_hit, False
+                    hit_rate, ov_pf = p.adv_prefetch_hit, False
                 if hit_rate > 0.0:
-                    mode = ("blocking" if not overlap else
+                    mode = ("blocking" if not ov_pf else
                             ("coalesced" if p.system.coalesce else "overlapped"))
                     plans = [[] for _ in store.devices]
                     for e in routing[l + 1]:
@@ -809,70 +971,33 @@ def simulate(p, input_len, output_len):
                         if plan:
                             store.submit(dst, mode, plan)
             layer_end = store.now
-            for e in routing[l]:
-                key = (l, e)
-                looked = ("local", 0) if resident_fits else store.lookup(key)
-                resident = looked[0] != "miss"
-                if looked[0] == "local":
-                    ready, exec_dev = store.now, looked[1]
-                elif looked[0] == "remote":
-                    ready = store.peer_fetch(key, looked[1])
-                    exec_dev = store.home(key)
-                else:
-                    done = store.take_inflight(key)
-                    if done is not None:
-                        store.admit(key, per_cached)
-                        ready, exec_dev = done, store.home(key)
-                    elif p.system.kind == FIDDLER:
-                        t = cpu_expert_us()
-                        store.tick(t)
-                        compute_us += t
-                        continue
-                    else:
-                        ready = store.demand_to(
-                            store.home(key), pcie_copy_us(max(per_bytes, 1.0)), per_bytes)
-                        store.admit(key, per_cached)
-                        exec_dev = store.home(key)
-                if streams is not None:
-                    start = max(streams[exec_dev], store.now)
-                    if ready > start:
-                        store.stall_us += ready - start
-                        start = ready
-                    if p.system.kind == FLOE and not resident:
-                        miss = max(1.0 - p.intra_recall, 0.0)
-                        if miss > 0.0:
-                            extra = per_bytes * miss * 0.5
-                            done = store.bus_copy_to(
-                                store.home(key), pcie_copy_us(extra), extra)
-                            if done > start:
-                                store.stall_us += done - start
-                                start = done
-                    end = start + exp_c  # gemv_scale 1.0 (uniform fleet)
-                    streams[exec_dev] = end
-                    layer_end = max(layer_end, end)
-                    compute_us += exp_c
-                else:
-                    store.stall_until(ready)
-                    if p.system.kind == FLOE and not resident:
-                        miss = max(1.0 - p.intra_recall, 0.0)
-                        if miss > 0.0:
-                            extra = per_bytes * miss * 0.5
-                            done = store.bus_copy_to(
-                                store.home(key), pcie_copy_us(extra), extra)
-                            store.stall_until(done)
-                    store.tick(exp_c)
-                    compute_us += exp_c
+            if not p.system.overlap:
+                # lockstep: resolve → execute in routing order (the frozen
+                # busy-until op sequence)
+                for e in routing[l]:
+                    w = resolve(e)
+                    if w is not None:
+                        exec_one(w)
+            else:
+                # dispatch GEMVs in readiness order — ties keep routing
+                # order (stable sort mirrors the event heap's
+                # time-then-sequence ordering)
+                for w in sorted(work, key=lambda w: w[0]):
+                    exec_one(w)
             if streams is not None:
                 store.advance_to(layer_end)
     total = store.now
     return {
         "tps": output_len / (total / 1e6),
         "stall_us": store.stall_us,
+        "stall_demand": store.stall_demand,
+        "stall_prefetch": store.stall_prefetch,
         "bytes": store.transferred_bytes,
         "bus_tx": store.bus_transactions,
         "hit": store.hit_rate(),
         "max_busy": max(store.bus_busy),
         "rebalances": store.rebalances,
+        "writebacks": store.writebacks,
     }
 
 
@@ -967,6 +1092,48 @@ def _serving_decode_token(p, store, seq, per_bytes, per_cached, exp_c, reuse,
     compute = 0.0
     for l in range(NL):
         store.rebalance_tick()
+        def resolve(e):
+            # (ready, cause, key, resident, t_exp) — boundary-share visit
+            # happens at resolve time, in routing order (resolve_expert)
+            key = (l, e)
+            looked = store.lookup(key)
+            resident = looked[0] != "miss"
+            if looked[0] == "local":
+                ready, cause = store.now, "demand"
+            elif looked[0] == "remote":
+                ready, cause = store.peer_fetch(key, looked[1]), "demand"
+            else:
+                done = store.take_inflight(key)
+                if done is not None:
+                    store.admit(key, per_cached)
+                    ready, cause = done, "prefetch"
+                else:
+                    ready = store.demand_to(
+                        store.home(key), pcie_copy_us(max(per_bytes, 1.0)), per_bytes)
+                    store.admit(key, per_cached)
+                    cause = "demand"
+            if key not in boundary_seen:
+                boundary_seen.add(key)
+                counters["full"] += 1
+                t_exp = exp_c
+            else:
+                counters["reused"] += 1
+                t_exp = exp_c * reuse
+            return (ready, cause, key, resident, t_exp)
+
+        def exec_one(w):
+            nonlocal compute
+            ready, cause, key, resident, t_exp = w
+            store.stall_until(ready, cause)
+            if not resident:
+                miss = max(1.0 - p.intra_recall, 0.0)
+                if miss > 0.0:
+                    extra = per_bytes * miss * 0.5
+                    done = store.critical_copy_to(store.home(key), pcie_copy_us(extra), extra)
+                    store.stall_until(done)
+            store.tick(t_exp)
+            compute += t_exp
+
         attn = attn_layer_us(kv_len)
         store.tick(attn)
         compute += attn
@@ -983,39 +1150,87 @@ def _serving_decode_token(p, store, seq, per_bytes, per_cached, exp_c, reuse,
                 if plan:
                     store.submit(dst, "overlapped", plan)
         for e in routing[l]:
-            key = (l, e)
-            looked = store.lookup(key)
-            resident = looked[0] != "miss"
-            if looked[0] == "local":
-                ready = store.now
-            elif looked[0] == "remote":
-                ready = store.peer_fetch(key, looked[1])
-            else:
-                done = store.take_inflight(key)
-                if done is not None:
-                    store.admit(key, per_cached)
-                    ready = done
+            exec_one(resolve(e))
+    return compute
+
+
+def _serving_decode_boundary(p, store, seqs, per_bytes, per_cached, exp_c, reuse,
+                             weights, boundary_seen, counters):
+    """sim.rs::sim_decode_boundary (SimServeBackend::step_batch under
+    --overlap): layer-synchronous batch decode. Each layer resolves the
+    whole batch's experts first (demand fetches hit the bus before the
+    next layer's speculative prefetch), runs every sequence's attention,
+    then releases GEMVs across the *batch* in readiness order — one
+    sequence's in-flight transfer hides under the other sequences'
+    compute instead of stalling its own lane. Per-sequence RNG streams
+    see the exact lockstep draw order (routing at token start, prefetch
+    draws in layer order), so routing is identical to the per-seq path."""
+    routings = [sample_routing(p, s.rng, s.prev, weights) for s in seqs]
+    kv_lens = [s.input_len + s.emitted for s in seqs]
+    computes = [0.0] * len(seqs)
+    for l in range(NL):
+        store.rebalance_tick()
+        work = []
+        for si in range(len(seqs)):
+            for e in routings[si][l]:
+                key = (l, e)
+                looked = store.lookup(key)
+                resident = looked[0] != "miss"
+                if looked[0] == "local":
+                    ready, cause = store.now, "demand"
+                elif looked[0] == "remote":
+                    ready, cause = store.peer_fetch(key, looked[1]), "demand"
                 else:
-                    ready = store.demand_to(
-                        store.home(key), pcie_copy_us(max(per_bytes, 1.0)), per_bytes)
-                    store.admit(key, per_cached)
-            store.stall_until(ready)
+                    done = store.take_inflight(key)
+                    if done is not None:
+                        store.admit(key, per_cached)
+                        ready, cause = done, "prefetch"
+                    else:
+                        ready = store.demand_to(
+                            store.home(key), pcie_copy_us(max(per_bytes, 1.0)),
+                            per_bytes)
+                        store.admit(key, per_cached)
+                        cause = "demand"
+                if key not in boundary_seen:
+                    boundary_seen.add(key)
+                    counters["full"] += 1
+                    t_exp = exp_c
+                else:
+                    counters["reused"] += 1
+                    t_exp = exp_c * reuse
+                work.append((ready, cause, key, resident, t_exp, si))
+        for si in range(len(seqs)):
+            attn = attn_layer_us(kv_lens[si])
+            store.tick(attn)
+            computes[si] += attn
+        if l + 1 < NL and per_bytes > 0.0:
+            plans = [[] for _ in store.devices]
+            for si, s in enumerate(seqs):
+                for e in routings[si][l + 1]:
+                    key = (l + 1, e)
+                    predicted = s.rng.f64() < p.inter_hit
+                    if (predicted and not store.contains(key)
+                            and not store.inflight_home(key)):
+                        dur = pcie_copy_us(per_bytes)
+                        plans[store.home(key)].append((key, per_bytes, dur, PCIE_API))
+            for dst, plan in enumerate(plans):
+                if plan:
+                    store.submit(dst, "overlapped", plan)
+        # stable sort by readiness = the event heap's time-then-sequence
+        # order; ties keep (seq, routing) push order
+        for w in sorted(work, key=lambda w: w[0]):
+            ready, cause, key, resident, t_exp, si = w
+            store.stall_until(ready, cause)
             if not resident:
                 miss = max(1.0 - p.intra_recall, 0.0)
                 if miss > 0.0:
                     extra = per_bytes * miss * 0.5
-                    done = store.bus_copy_to(store.home(key), pcie_copy_us(extra), extra)
+                    done = store.critical_copy_to(
+                        store.home(key), pcie_copy_us(extra), extra)
                     store.stall_until(done)
-            if key not in boundary_seen:
-                boundary_seen.add(key)
-                counters["full"] += 1
-                t_exp = exp_c
-            else:
-                counters["reused"] += 1
-                t_exp = exp_c * reuse
             store.tick(t_exp)
-            compute += t_exp
-    return compute
+            computes[si] += t_exp
+    return computes
 
 
 def simulate_serving(p, wl, cap, per_boundary_check=False):
@@ -1064,12 +1279,22 @@ def simulate_serving(p, wl, cap, per_boundary_check=False):
         pairs_before = counters["full"] + counters["reused"]
         if len(active) > 1:
             saw_batch = True
-        for s in active:
-            _serving_decode_token(
-                p, store, s, per_bytes, per_cached, exp_c, reuse,
+        if p.system.overlap:
+            # step_batch override: layer-synchronous event dispatch across
+            # the whole boundary (mid-boundary GEMV release)
+            _serving_decode_boundary(
+                p, store, active, per_bytes, per_cached, exp_c, reuse,
                 weights, boundary_seen, counters)
-            s.emitted += 1
-            tokens += 1
+            for s in active:
+                s.emitted += 1
+                tokens += 1
+        else:
+            for s in active:
+                _serving_decode_token(
+                    p, store, s, per_bytes, per_cached, exp_c, reuse,
+                    weights, boundary_seen, counters)
+                s.emitted += 1
+                tokens += 1
         if per_boundary_check:
             full_d = counters["full"] - full_before
             pair_d = counters["full"] + counters["reused"] - pairs_before
@@ -1082,6 +1307,9 @@ def simulate_serving(p, wl, cap, per_boundary_check=False):
         "tps": tokens / (store.now / 1e6),
         "tokens": tokens,
         "total_us": store.now,
+        "stall_us": store.stall_us,
+        "stall_demand": store.stall_demand,
+        "stall_prefetch": store.stall_prefetch,
         "full": counters["full"],
         "reused": counters["reused"],
         "saw_batch": saw_batch,
@@ -1090,9 +1318,10 @@ def simulate_serving(p, wl, cap, per_boundary_check=False):
     }
 
 
-def serving_params():
+def serving_params(overlap=False):
     # experiments/serveload.rs::sweep_params (Floe, lru, skewed routing)
-    return Params(System(FLOE, "lru"), 14.25, zipf_s=1.2, stickiness=0.5, seed=7)
+    return Params(System(FLOE, "lru", overlap=overlap), 14.25,
+                  zipf_s=1.2, stickiness=0.5, seed=7)
 
 
 def main():
@@ -1199,6 +1428,37 @@ def main():
     print(f"  visits test (16 Hz, 8 req, cap 4): per-boundary full==distinct "
           f"{vis['per_boundary_ok']}, saw_batch {vis['saw_batch']}, "
           f"saw_reuse {vis['saw_reuse']}")
+
+    print("== PR 6 event-core overlap (serve op point: Floe lru 14.25 GB, "
+          "8 Hz x 12 req, seed 23) ==")
+    po = serving_params(overlap=True)
+    for cap, base in ((1, r1), (4, r4), (8, r8)):
+        ov = simulate_serving(po, wl, cap)
+        share_b = base["stall_demand"] / base["total_us"]
+        share_o = ov["stall_demand"] / ov["total_us"]
+        ratio = ov["tps"] / base["tps"]
+        print(f"  cap{cap}: tps {base['tps']:.2f} -> {ov['tps']:.2f} "
+              f"({ratio:.4f}x, sim.rs asserts >= 1.03 at cap 4), demand-stall "
+              f"share {share_b:.4f} -> {share_o:.4f} "
+              f"(strict decrease: {share_o < share_b})")
+
+    print("== PR 6 single-shot overlap (Floe lru 11 GB, 64/256) ==")
+    base1 = simulate(Params(System(FLOE, "lru"), 11.0,
+                            zipf_s=1.2, stickiness=0.5, seed=7), 64, 256)
+    ov1 = simulate(Params(System(FLOE, "lru", overlap=True), 11.0,
+                          zipf_s=1.2, stickiness=0.5, seed=7), 64, 256)
+    print(f"  tps {base1['tps']:.2f} -> {ov1['tps']:.2f} "
+          f"({ov1['tps']/base1['tps']:.4f}x), demand stall "
+          f"{base1['stall_demand']:.0f} -> {ov1['stall_demand']:.0f} us "
+          f"(decrease: {ov1['stall_demand'] < base1['stall_demand']})")
+
+    print("== PR 6 replica write-back (pop margins re-verified, writebacks live) ==")
+    bal_pop2 = simulate(mkp("balanced", 2, True), 64, 256)
+    print(f"  2-dev pop writebacks {bal_pop2['writebacks']} "
+          f"(must be > 0 to exercise the path)")
+    print(f"  2-dev tps pop/hash = {bal_pop2['tps']/hash_coop['tps']:.4f} "
+          f"(floor 1.02), 4-dev = {bp4['tps']/hc4['tps']:.4f} (floor 1.10), "
+          f"4-dev writebacks {bp4['writebacks']}")
 
 
 if __name__ == "__main__":

@@ -11,9 +11,12 @@
 //! `make artifacts` + `--features pjrt`; without them only the native
 //! kernel rows and the sim calibration constant are emitted.
 
+use std::sync::Arc;
+
 use floe::config::ExpertMode;
 use floe::coordinator::policy::{SystemConfig, SystemKind};
 use floe::coordinator::sim::{boundary_compute_reuse, SimParams};
+use floe::engine::pool::{KernelJob, KernelPool};
 use floe::engine::{ComputePath, DecodeState, Engine, NoObserver};
 use floe::experiments::{jarr, jnum, jobj, jstr};
 use floe::hwsim::RTX3090;
@@ -25,6 +28,9 @@ use floe::util::timing::{bench, bench_budget, black_box};
 
 const KERNEL_BATCHES: [usize; 4] = [1, 2, 4, 8];
 const ENGINE_BATCHES: [usize; 3] = [1, 2, 4];
+const POOL_THREADS: [usize; 4] = [1, 2, 4, 8];
+const POOL_GROUPS: usize = 8;
+const POOL_ROWS_PER_GROUP: usize = 2;
 
 /// Native multi-row kernel amortization at growing batch sizes over one
 /// synthetic channel-major expert. Three kernels: the rule-free GEMV
@@ -115,6 +121,115 @@ fn native_kernel_rows(t: &mut Table) -> (Vec<Json>, f64) {
         }
     }
     (rows, measured_reuse)
+}
+
+/// Kernel-pool scaling rows (PR 6): a fixed same-boundary workload of
+/// `POOL_GROUPS` disjoint expert groups — distinct synthetic experts,
+/// each forwarding `POOL_ROWS_PER_GROUP` activation rows through the
+/// sparse Rule-Up kernel — dispatched on `KernelPool`s of growing size.
+/// Artifact-free, so CI tracks the scaling curve in stub mode on every
+/// push. The rows double as a correctness pin: before timing, every
+/// pool size's output (including the 1-thread pool) is asserted
+/// bit-identical (`f32::to_bits`) to inline single-threaded execution
+/// of the same jobs — the pool may only move wall-clock, never a bit.
+fn kernel_pool_rows(t: &mut Table) -> Vec<Json> {
+    let (d, f) = (256, 1024);
+    let mut rng = Rng::new(11);
+    let mk = |rng: &mut Rng| {
+        let mut m = Mat::zeros(f, d);
+        rng.fill_normal_f32(&mut m.data, 0.2);
+        m
+    };
+    let experts: Vec<Arc<ExpertWeights>> = (0..POOL_GROUPS)
+        .map(|_| {
+            Arc::new(ExpertWeights {
+                wg_t: mk(&mut rng),
+                wu_t: mk(&mut rng),
+                wd: mk(&mut rng),
+            })
+        })
+        .collect();
+    let xs: Vec<Vec<f32>> = (0..POOL_GROUPS * POOL_ROWS_PER_GROUP)
+        .map(|_| {
+            let mut x = vec![0.0; d];
+            rng.fill_normal_f32(&mut x, 1.0);
+            x
+        })
+        .collect();
+    let thr = {
+        let mut mags: Vec<f32> = (0..f)
+            .map(|j| floe::tensor::dot(&xs[0], experts[0].wu_t.row(j)).abs())
+            .collect();
+        mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        mags[(f as f64 * 0.8) as usize]
+    };
+    // jobs mirror the engine's dispatch: each closure owns an Arc of its
+    // expert plus cloned activation rows and returns a flat rows×d buffer
+    let jobs = || -> Vec<KernelJob> {
+        experts
+            .iter()
+            .enumerate()
+            .map(|(g, ew)| {
+                let ew = Arc::clone(ew);
+                let rows: Vec<Vec<f32>> = (0..POOL_ROWS_PER_GROUP)
+                    .map(|r| xs[g * POOL_ROWS_PER_GROUP + r].clone())
+                    .collect();
+                Box::new(move || {
+                    let mut out = vec![0.0f32; rows.len() * d];
+                    {
+                        let xr: Vec<&[f32]> =
+                            rows.iter().map(|x| x.as_slice()).collect();
+                        let mut ys: Vec<&mut [f32]> = out.chunks_mut(d).collect();
+                        ew.forward_sparse_batch(&xr, thr, &mut ys);
+                    }
+                    out
+                }) as KernelJob
+            })
+            .collect()
+    };
+    let inline: Vec<Vec<f32>> = jobs().into_iter().map(|j| j()).collect();
+    let mut rows = Vec::new();
+    let mut t1_us = 0.0;
+    for &threads in &POOL_THREADS {
+        let pool = KernelPool::new(threads);
+        let pooled = pool.run(jobs());
+        assert_eq!(inline.len(), pooled.len());
+        for (g, (a, b)) in inline.iter().zip(&pooled).enumerate() {
+            assert_eq!(a.len(), b.len());
+            for (k, (x, y)) in a.iter().zip(b).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "pool({threads}) group {g} elem {k}: {x} != {y}"
+                );
+            }
+        }
+        let stats = bench(8, 64, || {
+            let out = pool.run(jobs());
+            black_box(&out);
+        });
+        let us = stats.p50_us();
+        if threads == 1 {
+            t1_us = us;
+        }
+        let speedup = t1_us / us;
+        t.row(vec![
+            "kernel-pool".into(),
+            format!("sparse groups={POOL_GROUPS} rows={POOL_ROWS_PER_GROUP}"),
+            format!("{threads} thr"),
+            format!("{us:.1} us/boundary"),
+            format!("{speedup:.2}x vs 1thr (bit-exact)"),
+        ]);
+        rows.push(jobj(vec![
+            ("threads", jnum(threads as f64)),
+            ("groups", jnum(POOL_GROUPS as f64)),
+            ("rows_per_group", jnum(POOL_ROWS_PER_GROUP as f64)),
+            ("us_per_boundary", jnum(us)),
+            ("speedup_vs_1", jnum(speedup)),
+            ("bit_exact_vs_inline", jnum(1.0)),
+        ]));
+    }
+    rows
 }
 
 /// Per-token engine rows: the classic sequential cases plus batched
@@ -234,6 +349,7 @@ fn main() {
         &["path", "mode", "batch", "latency", "tok/s | marginal"],
     );
     let (kernel_rows, measured_reuse) = native_kernel_rows(&mut t);
+    let pool_rows = kernel_pool_rows(&mut t);
     // the simulator's calibrated constant, for trajectory tracking next
     // to the measured kernel ratio (they answer the same question for
     // the modeled GPU and the real CPU kernel respectively)
@@ -251,6 +367,7 @@ fn main() {
     );
     let out = jobj(vec![
         ("native_kernel", jarr(kernel_rows)),
+        ("kernel_pool", jarr(pool_rows)),
         ("measured_reuse", jnum(measured_reuse)),
         ("sim_boundary_reuse_floe_3090", jnum(sim_reuse)),
         ("engine", jarr(engine_rows)),

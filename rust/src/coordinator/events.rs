@@ -1,0 +1,201 @@
+//! Discrete-event core for the simulator (DESIGN.md §8).
+//!
+//! A time-ordered min-heap of simulation events. The decode simulator
+//! (`coordinator::sim`) produces events — transfer completions, GEMV
+//! completions, layer-boundary barriers — and consumes them in time
+//! order; the serving driver feeds request arrivals through the same
+//! structure. With overlap modeling off the producers push and pop one
+//! event at a time, so the event core replays the busy-until timelines
+//! it replaced *bit-exactly*; with `--overlap` on, a transfer that
+//! completes mid-boundary pops before later-ready work and releases its
+//! waiting expert GEMV early instead of charging the full stall at the
+//! barrier.
+//!
+//! Determinism: events are ordered by `f64::total_cmp` on their time
+//! stamp, ties broken by push order (a monotonic sequence number), so a
+//! heap fed the same events in the same order pops the same sequence —
+//! there is no hash-map or pointer-identity iteration anywhere. An
+//! opt-in byte log records every popped event (kind tag + time bits +
+//! payload id); two runs with the same seed and config must produce
+//! byte-identical logs, which the determinism tests assert.
+
+use std::collections::BinaryHeap;
+
+/// What kind of simulated completion an event marks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// An expert transfer (prefetch, demand fetch or intra top-up)
+    /// finished landing on its destination device.
+    TransferComplete,
+    /// An expert GEMV finished on its execution device.
+    GemvComplete,
+    /// A layer boundary barrier: every routed expert's output is ready
+    /// and the token clock advances past the slowest stream.
+    BoundaryBarrier,
+    /// A serving request reached its workload arrival time.
+    RequestArrival,
+}
+
+impl EventKind {
+    fn tag(self) -> u8 {
+        match self {
+            EventKind::TransferComplete => 0,
+            EventKind::GemvComplete => 1,
+            EventKind::BoundaryBarrier => 2,
+            EventKind::RequestArrival => 3,
+        }
+    }
+}
+
+/// One scheduled event. `id` is consumer-defined: the work-item index
+/// within a layer, a packed (layer, expert) key, or a request index.
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub t_us: f64,
+    pub kind: EventKind,
+    pub id: u64,
+}
+
+/// Pack an expert key into an event id (layer in the high word).
+pub fn key_id(key: (usize, usize)) -> u64 {
+    ((key.0 as u64) << 32) | key.1 as u64
+}
+
+/// Heap entry: ordered so `BinaryHeap` (a max-heap) pops the EARLIEST
+/// time first, ties broken by insertion order.
+struct HeapItem {
+    ev: Event,
+    seq: u64,
+}
+
+impl PartialEq for HeapItem {
+    fn eq(&self, other: &Self) -> bool {
+        self.ev.t_us.total_cmp(&other.ev.t_us).is_eq() && self.seq == other.seq
+    }
+}
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // reversed on both keys: earliest time wins, then lowest seq
+        other
+            .ev
+            .t_us
+            .total_cmp(&self.ev.t_us)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// The event heap plus its optional pop log.
+pub struct EventCore {
+    heap: BinaryHeap<HeapItem>,
+    seq: u64,
+    log: Option<Vec<u8>>,
+}
+
+impl EventCore {
+    pub fn new() -> Self {
+        EventCore { heap: BinaryHeap::new(), seq: 0, log: None }
+    }
+
+    /// An event core that records every popped event into a byte log
+    /// (17 bytes per event: kind tag, `t_us.to_bits()` LE, id LE) for
+    /// the determinism pins.
+    pub fn recording() -> Self {
+        EventCore { heap: BinaryHeap::new(), seq: 0, log: Some(Vec::new()) }
+    }
+
+    pub fn push(&mut self, t_us: f64, kind: EventKind, id: u64) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(HeapItem { ev: Event { t_us, kind, id }, seq });
+    }
+
+    /// Pop the earliest event (push order breaks time ties), recording
+    /// it when the log is on.
+    pub fn pop(&mut self) -> Option<Event> {
+        let ev = self.heap.pop()?.ev;
+        if let Some(log) = self.log.as_mut() {
+            log.push(ev.kind.tag());
+            log.extend_from_slice(&ev.t_us.to_bits().to_le_bytes());
+            log.extend_from_slice(&ev.id.to_le_bytes());
+        }
+        Some(ev)
+    }
+
+    /// Earliest pending event time, without popping.
+    pub fn next_time(&self) -> Option<f64> {
+        self.heap.peek().map(|h| h.ev.t_us)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// The recorded pop log so far (empty when recording is off).
+    pub fn log_bytes(&self) -> &[u8] {
+        self.log.as_deref().unwrap_or(&[])
+    }
+}
+
+impl Default for EventCore {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_with_stable_ties() {
+        let mut core = EventCore::new();
+        core.push(5.0, EventKind::GemvComplete, 1);
+        core.push(3.0, EventKind::TransferComplete, 2);
+        core.push(3.0, EventKind::TransferComplete, 3); // same time: push order
+        core.push(4.0, EventKind::BoundaryBarrier, 4);
+        let order: Vec<u64> = std::iter::from_fn(|| core.pop()).map(|e| e.id).collect();
+        assert_eq!(order, vec![2, 3, 4, 1]);
+        assert!(core.is_empty());
+    }
+
+    #[test]
+    fn next_time_peeks_without_popping() {
+        let mut core = EventCore::new();
+        assert_eq!(core.next_time(), None);
+        core.push(7.5, EventKind::RequestArrival, 0);
+        assert_eq!(core.next_time(), Some(7.5));
+        assert_eq!(core.len(), 1);
+    }
+
+    #[test]
+    fn recorded_logs_are_byte_identical_across_identical_runs() {
+        let run = || {
+            let mut core = EventCore::recording();
+            for i in 0..50u64 {
+                // deterministic scatter of times, including exact ties
+                core.push(((i * 37) % 11) as f64, EventKind::TransferComplete, i);
+            }
+            while core.pop().is_some() {}
+            core.log_bytes().to_vec()
+        };
+        let (a, b) = (run(), run());
+        assert!(!a.is_empty());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn key_id_packs_layer_and_expert() {
+        assert_eq!(key_id((3, 7)), (3u64 << 32) | 7);
+        assert_eq!(key_id((0, 0)), 0);
+    }
+}

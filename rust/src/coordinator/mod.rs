@@ -3,6 +3,9 @@
 //! * `policy` — the system design space: FloE vs the four baselines
 //!   (DeepSpeed-MII-style naive offload, Mixtral-Offloading-style advanced
 //!   offload, Fiddler CPU co-execution, fully GPU-resident INT2).
+//! * `events` — the discrete-event core: a deterministic time-ordered
+//!   heap (transfer-complete, gemv-complete, boundary-barrier,
+//!   request-arrival) the simulator produces into and consumes from.
 //! * `sim` — discrete-event end-to-end decode simulation at arbitrary
 //!   model scale over the hwsim hardware models; regenerates Figs 6/8,
 //!   and hosts the batched-serving simulator behind `exp-serve-load`.
@@ -14,6 +17,7 @@
 //!   transfers) driving the PJRT engine one token at a time, with a
 //!   simulated PCIe clock accounted alongside real compute time.
 
+pub mod events;
 pub mod policy;
 pub mod sched;
 pub mod serve;

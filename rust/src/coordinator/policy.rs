@@ -81,6 +81,20 @@ pub struct SystemConfig {
     /// without it reproduces the single-compute-timeline numbers
     /// bit-exactly)
     pub compute_streams: bool,
+    /// event-driven compute/transfer overlap (`--overlap`): a layer's
+    /// expert fetches are resolved upfront and their completions release
+    /// waiting GEMVs mid-boundary in readiness order, so resident
+    /// experts compute while demand fetches are in flight instead of
+    /// charging the full stall at the barrier. Off by default — off
+    /// keeps the event core bit-exact with the frozen busy-until
+    /// reference (DESIGN.md §8)
+    pub overlap: bool,
+    /// heterogeneous fleet: per-device GEMV throughput descends across
+    /// the placement (`TopologySpec::heterogeneous`) instead of being
+    /// uniform — exercised by `exp-shard-sweep`'s hetero rows. Only
+    /// observable with compute streams on (the single compute timeline
+    /// never consults per-device scale)
+    pub hetero_fleet: bool,
 }
 
 impl SystemConfig {
@@ -100,6 +114,8 @@ impl SystemConfig {
             spill: false,
             replicate_top: 0,
             compute_streams: false,
+            overlap: false,
+            hetero_fleet: false,
         }
     }
 
@@ -131,12 +147,30 @@ impl SystemConfig {
         self
     }
 
+    /// Event-driven compute/transfer overlap (`--overlap`).
+    pub fn with_overlap(mut self, on: bool) -> Self {
+        self.overlap = on;
+        self
+    }
+
+    /// Heterogeneous per-device GEMV throughput (`exp-shard-sweep`'s
+    /// hetero rows). No observable effect at one device.
+    pub fn with_hetero_fleet(mut self, on: bool) -> Self {
+        self.hetero_fleet = on;
+        self
+    }
+
     /// The store placement this configuration selects, over per-device
     /// host links of spec `h2d`.
     pub fn placement(&self, h2d: PcieSpec) -> Placement {
+        let topo = if self.hetero_fleet {
+            TopologySpec::heterogeneous(self.devices, h2d)
+        } else {
+            TopologySpec::uniform(self.devices, h2d)
+        };
         Placement {
             shard: self.shard,
-            topo: TopologySpec::uniform(self.devices, h2d),
+            topo,
             coalesce: self.coalesce,
             spill: self.spill,
             replicate_top: if self.devices > 1 { self.replicate_top } else { 0 },
@@ -199,6 +233,23 @@ mod tests {
         let solo = SystemConfig::new(SystemKind::Floe).with_replication(2);
         assert_eq!(solo.replicate_top, 0);
         assert_eq!(solo.placement(crate::hwsim::PCIE4).replicate_top, 0);
+    }
+
+    #[test]
+    fn overlap_and_hetero_stay_opt_in() {
+        let base = SystemConfig::new(SystemKind::Floe);
+        assert!(!base.overlap && !base.hetero_fleet);
+        let on = SystemConfig::new(SystemKind::Floe)
+            .with_devices(2, ShardPolicy::Balanced)
+            .with_overlap(true)
+            .with_hetero_fleet(true);
+        assert!(on.overlap && on.hetero_fleet);
+        let topo = on.placement(crate::hwsim::PCIE4).topo;
+        assert_eq!(topo.gemv_scale.len(), 2);
+        assert!(
+            topo.gemv_scale[1] < topo.gemv_scale[0],
+            "hetero fleets descend in GEMV throughput"
+        );
     }
 
     #[test]

@@ -62,6 +62,14 @@ pub trait SeqBackend {
     /// Decode one token for `seq`, attributing stalls to its request.
     fn step(&mut self, seq: &mut Self::Seq) -> Result<SeqStep>;
 
+    /// The system drained before the next request arrives: advance the
+    /// backend's time base to `t_us` as *idle* time (never a stall).
+    /// Wall-clock backends ignore this (time passes on its own); virtual
+    /// timelines (the simulator) jump their clock — the event-driven
+    /// backend routes the jump through its heap as a `RequestArrival`
+    /// event so idle gaps appear in the event log like any other wait.
+    fn idle_until(&mut self, _t_us: f64) {}
+
     /// Decode one token for EVERY sequence at a token boundary. Backends
     /// that can share work across the batch override this — the real
     /// coordinator steps the whole batch through `Engine::decode_batch`,
@@ -100,6 +108,9 @@ impl<'a, B: SeqBackend> SeqBackend for &'a mut B {
     }
     fn step(&mut self, seq: &mut Self::Seq) -> Result<SeqStep> {
         (**self).step(seq)
+    }
+    fn idle_until(&mut self, t_us: f64) {
+        (**self).idle_until(t_us)
     }
     fn step_batch(&mut self, seqs: &mut [&mut Self::Seq]) -> Vec<Result<SeqStep>> {
         (**self).step_batch(seqs)

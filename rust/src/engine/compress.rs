@@ -30,7 +30,7 @@ enum Rule {
     Down(f32),
 }
 
-struct NativeExpert {
+pub(crate) struct NativeExpert {
     w: ExpertWeights,
     rule: Rule,
 }
@@ -43,8 +43,10 @@ impl NativeExpert {
     /// `tensor::gemm_channel_major` for the rule-free kernel). Per row
     /// the op order is identical to a batch of one, so each row's output
     /// is bit-identical to a solo call; the sparsity rules skip
-    /// per-(row, channel), exactly as before.
-    fn forward_rows(&self, xs: &[&[f32]], ys: &mut [&mut [f32]]) {
+    /// per-(row, channel), exactly as before. `&self` and plain-`Vec`
+    /// weights make this safe to run from the kernel pool's workers
+    /// (`engine::pool`) — one expert per core, disjoint outputs.
+    pub(crate) fn forward_rows(&self, xs: &[&[f32]], ys: &mut [&mut [f32]]) {
         debug_assert_eq!(xs.len(), ys.len());
         for y in ys.iter_mut() {
             y.iter_mut().for_each(|v| *v = 0.0);
@@ -131,7 +133,10 @@ fn mode_key(mode: ExpertMode) -> (u8, u32, u8) {
 
 pub struct NativeExpertCache {
     w: Arc<Weights>,
-    cache: HashMap<(usize, usize, (u8, u32, u8)), NativeExpert>,
+    /// `Arc` so the kernel pool can hold an expert across a dispatch
+    /// while the cache stays borrowable; single-owner refcount bumps are
+    /// the only overhead on the sequential path
+    cache: HashMap<(usize, usize, (u8, u32, u8)), Arc<NativeExpert>>,
     /// Reused output buffer: `forward_batch` hands out `batch × d_model`
     /// rows of it, so steady-state decode allocates nothing per call.
     /// (This folds the old dead per-call `scratch` resize and the old
@@ -237,6 +242,24 @@ impl NativeExpertCache {
         })
     }
 
+    /// Materialize-if-absent and hand out a shared reference to the
+    /// expert — the kernel pool's entry point (workers compute through
+    /// the `Arc` while other experts dispatch).
+    pub(crate) fn ensure(
+        &mut self,
+        layer: usize,
+        expert: usize,
+        mode: ExpertMode,
+    ) -> Result<Arc<NativeExpert>> {
+        let key = (layer, expert, mode_key(mode));
+        if !self.cache.contains_key(&key) {
+            let ne = self.materialize(layer, expert, mode)?;
+            self.cache.insert(key, Arc::new(ne));
+            self.materializations += 1;
+        }
+        Ok(Arc::clone(self.cache.get(&key).unwrap()))
+    }
+
     /// Forward a batch of rows through one materialized expert with a
     /// single pass over its weight channels. Returns `xs.len() × d_model`
     /// output rows borrowed from the reused scratch buffer (valid until
@@ -248,16 +271,10 @@ impl NativeExpertCache {
         xs: &[&[f32]],
         mode: ExpertMode,
     ) -> Result<&[f32]> {
-        let key = (layer, expert, mode_key(mode));
-        if !self.cache.contains_key(&key) {
-            let ne = self.materialize(layer, expert, mode)?;
-            self.cache.insert(key, ne);
-            self.materializations += 1;
-        }
+        let ne = self.ensure(layer, expert, mode)?;
         let d = self.w.cfg.d_model;
         // forward_rows zeroes every row, so a stale prefix is harmless
         self.scratch.resize(xs.len() * d, 0.0);
-        let ne = self.cache.get(&key).unwrap();
         let mut rows: Vec<&mut [f32]> = self.scratch.chunks_mut(d).collect();
         ne.forward_rows(xs, &mut rows);
         Ok(&self.scratch[..xs.len() * d])

@@ -34,6 +34,7 @@
 //! level) and served from a buffer cache thereafter.
 
 pub mod compress;
+pub mod pool;
 pub mod sampler;
 
 use std::collections::{BTreeMap, HashMap};
@@ -178,6 +179,12 @@ pub struct Engine {
     thr_bufs: HashMap<(usize, usize, u32), PjRtBuffer>,
     stats: BatchStats,
     pub path: ComputePath,
+    /// kernel-pool width for the native path (`--kernel-threads`;
+    /// defaults to the available cores). 1 disables parallel dispatch.
+    kernel_threads: usize,
+    /// lazily spawned worker pool — only native-path decodes with more
+    /// than one expert group and `kernel_threads > 1` ever build it
+    pool: Option<pool::KernelPool>,
 }
 
 impl Engine {
@@ -217,7 +224,26 @@ impl Engine {
             thr_bufs: HashMap::new(),
             stats: BatchStats::default(),
             path: ComputePath::Hlo,
+            kernel_threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            pool: None,
         })
+    }
+
+    /// Set the native-path kernel pool width (`--kernel-threads`). 1
+    /// forces sequential group execution; any width produces bit-identical
+    /// outputs (the pool only changes scheduling).
+    pub fn set_kernel_threads(&mut self, threads: usize) {
+        let threads = threads.max(1);
+        if threads != self.kernel_threads {
+            self.kernel_threads = threads;
+            self.pool = None; // respawn lazily at the new width
+        }
+    }
+
+    pub fn kernel_threads(&self) -> usize {
+        self.kernel_threads
     }
 
     pub fn cfg(&self) -> &crate::config::ModelConfig {
@@ -513,9 +539,46 @@ impl Engine {
             let groups = group_by_expert(&routed_all);
             self.stats.boundaries += 1;
             self.stats.group_visits += groups.len() as u64;
-            for (&e, members) in &groups {
-                self.stats.pair_visits += members.len() as u64;
-                self.expert_group_forward(l, e, mode, members, &h_mids, &h_bufs, &mut slot_y)?;
+            let native = self.path == ComputePath::Native || compress::requires_native(mode);
+            if native && self.kernel_threads > 1 && groups.len() > 1 {
+                // parallel native dispatch: every group's expert is
+                // materialized up front (cache mutation stays on this
+                // thread), then disjoint groups run across the pool.
+                // Outputs come back in dispatch order — ascending expert,
+                // the BTreeMap's iteration order — and each row's math is
+                // untouched, so results are bit-identical to the
+                // sequential loop below at any thread count.
+                let mut jobs: Vec<pool::KernelJob> = Vec::with_capacity(groups.len());
+                for (&e, members) in &groups {
+                    self.stats.pair_visits += members.len() as u64;
+                    let ne = self.native.ensure(l, e, mode)?;
+                    let xs: Vec<Vec<f32>> =
+                        members.iter().map(|&(s, _)| h_mids[s].clone()).collect();
+                    let d = c.d_model;
+                    jobs.push(Box::new(move || {
+                        let mut out = vec![0.0f32; xs.len() * d];
+                        let x_refs: Vec<&[f32]> =
+                            xs.iter().map(|x| x.as_slice()).collect();
+                        let mut rows: Vec<&mut [f32]> = out.chunks_mut(d).collect();
+                        ne.forward_rows(&x_refs, &mut rows);
+                        out
+                    }));
+                }
+                let pool = self
+                    .pool
+                    .get_or_insert_with(|| pool::KernelPool::new(self.kernel_threads));
+                let outs = pool.run(jobs);
+                for ((_, members), rows) in groups.iter().zip(&outs) {
+                    for (m, &(s, slot)) in members.iter().enumerate() {
+                        slot_y[s][slot]
+                            .copy_from_slice(&rows[m * c.d_model..(m + 1) * c.d_model]);
+                    }
+                }
+            } else {
+                for (&e, members) in &groups {
+                    self.stats.pair_visits += members.len() as u64;
+                    self.expert_group_forward(l, e, mode, members, &h_mids, &h_bufs, &mut slot_y)?;
+                }
             }
 
             // ---- combine per sequence in routing order (the sequential

@@ -1,0 +1,161 @@
+//! Persistent kernel worker pool (DESIGN.md §8): disjoint same-boundary
+//! expert groups of `Engine::decode_batch` execute concurrently, one
+//! expert's weight stream per core.
+//!
+//! The pool is deliberately dumb: jobs are boxed closures that own their
+//! inputs and return a flat output buffer, and `run` returns outputs in
+//! *dispatch order* regardless of which worker finished first. All the
+//! determinism therefore lives at the call site — the engine dispatches
+//! groups in ascending-expert order and combines per sequence in routing
+//! order, so batched decode stays bit-identical to the sequential path at
+//! any thread count (pinned by tests/batch_decode.rs and the
+//! decode_hotpath stub row). Workers are plain `std::thread`s over std
+//! mpsc channels: no new dependencies, and the pool survives across
+//! decode calls so steady-state dispatch spawns nothing.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// One unit of pool work: a closure computing a flat `rows × d_model`
+/// output buffer. Closures own everything they touch (cloned activation
+/// rows, an `Arc` of the materialized expert), so jobs are `'static` and
+/// `Send` by construction.
+pub type KernelJob = Box<dyn FnOnce() -> Vec<f32> + Send>;
+
+struct Dispatch {
+    idx: usize,
+    job: KernelJob,
+    reply: Sender<(usize, Vec<f32>)>,
+}
+
+/// Fixed-size persistent worker pool over one shared job queue.
+pub struct KernelPool {
+    tx: Option<Sender<Dispatch>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl KernelPool {
+    /// Spawn `threads` persistent workers (clamped to ≥ 1) sharing one
+    /// job queue. Size it from `--kernel-threads` or the available
+    /// cores (`Engine` does the latter by default).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let (tx, rx) = channel::<Dispatch>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("kernel-pool-{i}"))
+                    .spawn(move || loop {
+                        // hold the queue lock only for the dequeue, never
+                        // across the compute
+                        let d = {
+                            let q = rx.lock().expect("kernel pool queue poisoned");
+                            q.recv()
+                        };
+                        let Ok(d) = d else { return };
+                        let rows = (d.job)();
+                        // the dispatcher may have bailed; dropped replies
+                        // are fine
+                        let _ = d.reply.send((d.idx, rows));
+                    })
+                    .expect("spawn kernel pool worker")
+            })
+            .collect();
+        KernelPool { tx: Some(tx), workers }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Execute `jobs` across the workers; blocks until all complete and
+    /// returns their outputs in dispatch order — NOT completion order —
+    /// which is what lets the caller keep a deterministic combine order
+    /// at any thread count.
+    pub fn run(&self, jobs: Vec<KernelJob>) -> Vec<Vec<f32>> {
+        let n = jobs.len();
+        let (reply_tx, reply_rx) = channel();
+        let tx = self.tx.as_ref().expect("kernel pool closed");
+        for (idx, job) in jobs.into_iter().enumerate() {
+            tx.send(Dispatch { idx, job, reply: reply_tx.clone() })
+                .expect("kernel pool workers exited early");
+        }
+        drop(reply_tx);
+        let mut out: Vec<Option<Vec<f32>>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (idx, rows) = reply_rx
+                .recv()
+                .expect("kernel pool worker died mid-dispatch");
+            out[idx] = Some(rows);
+        }
+        out.into_iter().map(|r| r.expect("every dispatch replies once")).collect()
+    }
+}
+
+impl Drop for KernelPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the queue: idle workers see Err and exit
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn square_jobs(n: usize) -> Vec<KernelJob> {
+        (0..n)
+            .map(|i| {
+                Box::new(move || vec![(i * i) as f32, i as f32]) as KernelJob
+            })
+            .collect()
+    }
+
+    #[test]
+    fn outputs_arrive_in_dispatch_order_at_any_thread_count() {
+        for threads in [1, 2, 4, 7] {
+            let pool = KernelPool::new(threads);
+            assert_eq!(pool.threads(), threads);
+            let out = pool.run(square_jobs(16));
+            for (i, rows) in out.iter().enumerate() {
+                assert_eq!(rows[0], (i * i) as f32, "{threads} threads");
+                assert_eq!(rows[1], i as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_of_one_matches_inline_bit_exactly() {
+        // the decode_hotpath stub-row invariant: a 1-thread pool is the
+        // single-threaded computation, routed through a channel
+        let inline: Vec<Vec<f32>> =
+            square_jobs(8).into_iter().map(|j| j()).collect();
+        let pooled = KernelPool::new(1).run(square_jobs(8));
+        assert_eq!(inline.len(), pooled.len());
+        for (a, b) in inline.iter().zip(&pooled) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn pool_survives_many_dispatch_rounds() {
+        let pool = KernelPool::new(3);
+        for round in 0..50usize {
+            let out = pool.run(square_jobs(round % 5 + 1));
+            assert_eq!(out.len(), round % 5 + 1);
+        }
+    }
+
+    #[test]
+    fn empty_dispatch_is_a_noop() {
+        let pool = KernelPool::new(2);
+        assert!(pool.run(Vec::new()).is_empty());
+    }
+}

@@ -60,6 +60,7 @@ pub fn workload_at(
     })
 }
 
+#[allow(clippy::too_many_arguments)]
 pub fn run(
     residency: ResidencyKind,
     n_requests: usize,
@@ -68,19 +69,22 @@ pub fn run(
     devices: usize,
     shard: ShardPolicy,
     sparsity_decay: f64,
+    overlap: bool,
 ) -> Result<()> {
     let mut p = sweep_params(residency, vram_gb);
-    p.system = p.system.clone().with_devices(devices, shard);
+    p.system = p.system.clone().with_devices(devices, shard).with_overlap(overlap);
     p.system.sparsity_decay = sparsity_decay;
     let sharded_note = if devices > 1 {
         format!(" x {devices} devices ({})", shard.name())
     } else {
         String::new()
     };
+    let overlap_note = if overlap { ", overlap" } else { "" };
     let mut t = Table::new(
         &format!(
-            "Serve-load sweep — FloE, RTX-3090, {vram_gb} GB{sharded_note}, skewed \
-             routing, {n_requests} requests, {} residency (simulated)",
+            "Serve-load sweep — FloE, RTX-3090, {vram_gb} GB{sharded_note}\
+             {overlap_note}, skewed routing, {n_requests} requests, {} residency \
+             (simulated)",
             residency.name()
         ),
         &["rate req/s", "batch cap", "agg tok/s", "mean wait ms",
@@ -96,6 +100,7 @@ pub fn run(
                 ("rate_hz", jnum(rate)),
                 ("batch_cap", jnum(cap as f64)),
                 ("policy", jstr(residency.name())),
+                ("overlap", jnum(overlap as usize as f64)),
                 ("aggregate_tps", jnum(rep.aggregate_tps())),
                 ("mean_queue_wait_us", jnum(rep.mean_queue_wait_us())),
                 ("p95_latency_us", jnum(rep.p95_latency_us())),

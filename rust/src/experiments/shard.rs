@@ -109,6 +109,24 @@ pub fn sweep_point(
     p
 }
 
+/// `sweep_point` on a heterogeneous fleet (`--hetero-fleet`): per-device
+/// GEMV throughput descends across the placement
+/// (`TopologySpec::heterogeneous`). Only the "pop" rows can observe it —
+/// gemv_scale is consulted exclusively by per-device compute streams.
+pub fn sweep_point_fleet(
+    residency: ResidencyKind,
+    vram_gb: f64,
+    devices: usize,
+    shard: ShardPolicy,
+    mode: ShardMode,
+    seed: u64,
+    hetero: bool,
+) -> SimParams {
+    let mut p = sweep_point(residency, vram_gb, devices, shard, mode, seed);
+    p.system.hetero_fleet = hetero;
+    p
+}
+
 pub fn run(residency: ResidencyKind, seed: u64, sparsity_decay: f64) -> Result<()> {
     let mut t = Table::new(
         &format!(
@@ -116,14 +134,14 @@ pub fn run(residency: ResidencyKind, seed: u64, sparsity_decay: f64) -> Result<(
              {} residency (simulated; VRAM per device)",
             residency.name()
         ),
-        &["devices", "GB/dev", "shard", "mode", "tps", "bus tx", "GB moved",
-          "stall ms", "max bus ms", "cache hit"],
+        &["devices", "GB/dev", "shard", "mode", "fleet", "tps", "bus tx",
+          "GB moved", "stall ms", "max bus ms", "cache hit"],
     );
     let mut js = Vec::new();
     // the headline reports, captured from the sweep loop itself
     // (same parameters — no re-simulation)
     let (mut h_one, mut h_indep, mut h_coal) = (None, None, None);
-    let (mut h_hash, mut h_pop) = (None, None);
+    let (mut h_hash, mut h_pop, mut h_pop_het) = (None, None, None);
     for &devices in &DEVICES {
         for &vram in &VRAM_PER_DEVICE_GB {
             let shards: &[ShardPolicy] =
@@ -132,54 +150,74 @@ pub fn run(residency: ResidencyKind, seed: u64, sparsity_decay: f64) -> Result<(
                 if devices == 1 { &[ShardMode::Independent] } else { &ShardMode::ALL };
             for &shard in shards {
                 for &mode in modes {
-                    let mut p = sweep_point(residency, vram, devices, shard, mode, seed);
-                    p.system.sparsity_decay = sparsity_decay;
-                    let rep = simulate(&p, 64, 256);
-                    if vram == VRAM_PER_DEVICE_GB[0] {
-                        match (devices, shard, mode) {
-                            (1, ShardPolicy::Layer, ShardMode::Independent) => {
-                                h_one = Some(rep.clone())
+                    // the hetero-fleet axis rides only on the "pop" rows:
+                    // gemv_scale is consulted exclusively by per-device
+                    // compute streams, so every other mode would print an
+                    // identical duplicate row
+                    let fleets: &[bool] =
+                        if mode == ShardMode::Popularity && devices > 1 {
+                            &[false, true]
+                        } else {
+                            &[false]
+                        };
+                    for &hetero in fleets {
+                        let mut p = sweep_point_fleet(
+                            residency, vram, devices, shard, mode, seed, hetero,
+                        );
+                        p.system.sparsity_decay = sparsity_decay;
+                        let rep = simulate(&p, 64, 256);
+                        if vram == VRAM_PER_DEVICE_GB[0] {
+                            match (devices, shard, mode, hetero) {
+                                (1, ShardPolicy::Layer, ShardMode::Independent, false) => {
+                                    h_one = Some(rep.clone())
+                                }
+                                (2, ShardPolicy::Layer, ShardMode::Independent, false) => {
+                                    h_indep = Some(rep.clone())
+                                }
+                                (2, ShardPolicy::Layer, ShardMode::Coalesced, false) => {
+                                    h_coal = Some(rep.clone())
+                                }
+                                (2, ShardPolicy::Hash, ShardMode::Cooperative, false) => {
+                                    h_hash = Some(rep.clone())
+                                }
+                                (2, ShardPolicy::Balanced, ShardMode::Popularity, false) => {
+                                    h_pop = Some(rep.clone())
+                                }
+                                (2, ShardPolicy::Balanced, ShardMode::Popularity, true) => {
+                                    h_pop_het = Some(rep.clone())
+                                }
+                                _ => {}
                             }
-                            (2, ShardPolicy::Layer, ShardMode::Independent) => {
-                                h_indep = Some(rep.clone())
-                            }
-                            (2, ShardPolicy::Layer, ShardMode::Coalesced) => {
-                                h_coal = Some(rep.clone())
-                            }
-                            (2, ShardPolicy::Hash, ShardMode::Cooperative) => {
-                                h_hash = Some(rep.clone())
-                            }
-                            (2, ShardPolicy::Balanced, ShardMode::Popularity) => {
-                                h_pop = Some(rep.clone())
-                            }
-                            _ => {}
                         }
+                        let fleet = if hetero { "hetero" } else { "uniform" };
+                        t.row(vec![
+                            devices.to_string(),
+                            format!("{vram:.0}"),
+                            shard.name().to_string(),
+                            mode.name().to_string(),
+                            fleet.to_string(),
+                            f2(rep.tps),
+                            rep.bus_transactions.to_string(),
+                            f2(rep.transferred_gb),
+                            f2(rep.stall_us / 1e3),
+                            f2(rep.max_device_bus_busy_us / 1e3),
+                            f2(rep.cache_hit_rate),
+                        ]);
+                        js.push(jobj(vec![
+                            ("devices", jnum(devices as f64)),
+                            ("vram_per_device_gb", jnum(vram)),
+                            ("shard", jstr(shard.name())),
+                            ("mode", jstr(mode.name())),
+                            ("fleet", jstr(fleet)),
+                            ("policy", jstr(residency.name())),
+                            ("tps", jnum(rep.tps)),
+                            ("bus_transactions", jnum(rep.bus_transactions as f64)),
+                            ("transferred_gb", jnum(rep.transferred_gb)),
+                            ("stall_us", jnum(rep.stall_us)),
+                            ("max_device_bus_busy_us", jnum(rep.max_device_bus_busy_us)),
+                            ("cache_hit", jnum(rep.cache_hit_rate)),
+                        ]));
                     }
-                    t.row(vec![
-                        devices.to_string(),
-                        format!("{vram:.0}"),
-                        shard.name().to_string(),
-                        mode.name().to_string(),
-                        f2(rep.tps),
-                        rep.bus_transactions.to_string(),
-                        f2(rep.transferred_gb),
-                        f2(rep.stall_us / 1e3),
-                        f2(rep.max_device_bus_busy_us / 1e3),
-                        f2(rep.cache_hit_rate),
-                    ]);
-                    js.push(jobj(vec![
-                        ("devices", jnum(devices as f64)),
-                        ("vram_per_device_gb", jnum(vram)),
-                        ("shard", jstr(shard.name())),
-                        ("mode", jstr(mode.name())),
-                        ("policy", jstr(residency.name())),
-                        ("tps", jnum(rep.tps)),
-                        ("bus_transactions", jnum(rep.bus_transactions as f64)),
-                        ("transferred_gb", jnum(rep.transferred_gb)),
-                        ("stall_us", jnum(rep.stall_us)),
-                        ("max_device_bus_busy_us", jnum(rep.max_device_bus_busy_us)),
-                        ("cache_hit", jnum(rep.cache_hit_rate)),
-                    ]));
                 }
             }
         }
@@ -262,6 +300,18 @@ pub fn run(residency: ResidencyKind, seed: u64, sparsity_decay: f64) -> Result<(
         pop.tps / hash.tps,
         pop.max_device_bus_busy_us / 1e3,
         hash.max_device_bus_busy_us / 1e3,
+    );
+    let pop_het = h_pop_het.expect("sweep covered 2-dev balanced pop hetero");
+    println!(
+        "hetero fleet: the same pop configuration on a flagship+older-card \
+         fleet (per-device GEMV throughput descending to 65%) serves {:.2} \
+         tok/s vs {:.2} uniform ({:.1}% tax) — the compute streams absorb \
+         the slow devices' latency where the single-timeline modes would \
+         serialize it (hetero rows exist only under streams; gemv_scale is \
+         invisible elsewhere).",
+        pop_het.tps,
+        pop.tps,
+        100.0 * (1.0 - pop_het.tps / pop.tps),
     );
     save_json(
         "shard_sweep",
@@ -409,6 +459,48 @@ mod tests {
             on.tps,
             off.tps
         );
+    }
+
+    /// The hetero-fleet contract: with per-device compute streams on
+    /// (the "pop" rows) a descending-throughput fleet pays a real,
+    /// deterministic throughput tax; with streams off, `gemv_scale` is
+    /// never consulted and the report stays bit-identical to uniform.
+    #[test]
+    fn hetero_fleet_taxes_streams_and_is_invisible_without_them() {
+        let at = |mode: ShardMode, hetero: bool| {
+            simulate(
+                &sweep_point_fleet(
+                    ResidencyKind::Lru,
+                    VRAM_PER_DEVICE_GB[0],
+                    2,
+                    ShardPolicy::Balanced,
+                    mode,
+                    7,
+                    hetero,
+                ),
+                64,
+                256,
+            )
+        };
+        // streams on (pop): the slow device's GEMVs stretch its stream
+        let (uni, het) = (at(ShardMode::Popularity, false), at(ShardMode::Popularity, true));
+        assert!(
+            het.tps < uni.tps,
+            "hetero {} not slower than uniform {} under streams",
+            het.tps,
+            uni.tps
+        );
+        // and deterministically so
+        let het2 = at(ShardMode::Popularity, true);
+        assert_eq!(het.tps.to_bits(), het2.tps.to_bits());
+        assert_eq!(het.stall_us.to_bits(), het2.stall_us.to_bits());
+        // streams off (coop): gemv_scale never read — bit-identical
+        let (uni_c, het_c) =
+            (at(ShardMode::Cooperative, false), at(ShardMode::Cooperative, true));
+        assert_eq!(uni_c.tps.to_bits(), het_c.tps.to_bits());
+        assert_eq!(uni_c.total_us.to_bits(), het_c.total_us.to_bits());
+        assert_eq!(uni_c.stall_us.to_bits(), het_c.stall_us.to_bits());
+        assert_eq!(uni_c.bus_transactions, het_c.bus_transactions);
     }
 
     #[test]

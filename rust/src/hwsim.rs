@@ -129,6 +129,22 @@ impl TopologySpec {
         TopologySpec { n_devices: n, h2d, p2p: P2P_LINK, gemv_scale: vec![1.0; n] }
     }
 
+    /// A heterogeneous fleet: device 0 runs at the run's `GpuSpec`
+    /// throughput and each later device descends linearly to 65% of it
+    /// (a flagship + mixed older cards — the common scavenged-fleet
+    /// shape). Transfer links stay uniform; only GEMV throughput varies,
+    /// so the effect is confined to per-device compute streams.
+    pub fn heterogeneous(n: usize, h2d: PcieSpec) -> Self {
+        let n = n.max(1);
+        let mut t = Self::uniform(n, h2d);
+        if n > 1 {
+            for (i, s) in t.gemv_scale.iter_mut().enumerate() {
+                *s = 1.0 - 0.35 * i as f64 / (n - 1) as f64;
+            }
+        }
+        t
+    }
+
     /// Expert GEMV latency on device `dev` given the homogeneous-spec
     /// latency `base_us` (per-device compute streams divide by the
     /// device's relative throughput).
@@ -338,6 +354,26 @@ mod tests {
         het.gemv_scale[1] = 0.5;
         assert_eq!(het.gemv_us(0, 120.0), 120.0);
         assert_eq!(het.gemv_us(1, 120.0), 240.0);
+    }
+
+    #[test]
+    fn heterogeneous_fleet_descends_from_spec_throughput() {
+        let het = TopologySpec::heterogeneous(4, PCIE4);
+        assert_eq!(het.gemv_scale[0], 1.0, "device 0 runs at spec");
+        for w in het.gemv_scale.windows(2) {
+            assert!(w[1] < w[0], "scales must strictly descend: {:?}", het.gemv_scale);
+        }
+        assert!(
+            (het.gemv_scale[3] - 0.65).abs() < 1e-12,
+            "slowest device bottoms at 65%: {}",
+            het.gemv_scale[3]
+        );
+        // every device is no faster than the uniform fleet
+        for (dev, _) in het.gemv_scale.iter().enumerate() {
+            assert!(het.gemv_us(dev, 100.0) >= 100.0);
+        }
+        // degenerate fleets collapse to uniform
+        assert_eq!(TopologySpec::heterogeneous(1, PCIE4).gemv_scale, vec![1.0]);
     }
 
     #[test]

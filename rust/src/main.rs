@@ -87,6 +87,17 @@ impl Args {
     fn compute_streams(&self) -> bool {
         self.get("compute-streams").is_some()
     }
+    fn overlap(&self) -> bool {
+        self.get("overlap").is_some()
+    }
+    fn hetero_fleet(&self) -> bool {
+        self.get("hetero-fleet").is_some()
+    }
+    /// `--kernel-threads N`: size of the engine's native kernel pool
+    /// (None = leave the engine at its available-cores default).
+    fn kernel_threads(&self) -> Option<usize> {
+        self.get("kernel-threads").and_then(|v| v.parse().ok())
+    }
     fn budget(&self) -> EvalBudget {
         EvalBudget {
             n_bytes: self.usize("eval-bytes", 768),
@@ -106,6 +117,9 @@ fn main() -> Result<()> {
                 eng.path = ComputePath::HloPallas;
             } else if args.get("native").is_some() {
                 eng.path = ComputePath::Native;
+            }
+            if let Some(t) = args.kernel_threads() {
+                eng.set_kernel_threads(t);
             }
             let prompt = args.get("prompt").unwrap_or("the miller ").to_string();
             let mode = args.mode()?;
@@ -138,12 +152,14 @@ fn main() -> Result<()> {
                 other => bail!("unknown system {other}"),
             };
             let mut system = SystemConfig::with_residency(kind, args.residency()?)
-                .with_devices(args.devices(), args.shard()?);
+                .with_devices(args.devices(), args.shard()?)
+                .with_overlap(args.overlap());
             system.sparsity = args.f64("level", 0.8);
             system.sparsity_decay = args.sparsity_decay();
             if args.devices() > 1 {
                 system.replicate_top = args.replicate_top();
                 system.compute_streams = args.compute_streams();
+                system = system.with_hetero_fleet(args.hetero_fleet());
             }
             let opts = floe::server::ServerOpts {
                 port: args.usize("port", 7399) as u16,
@@ -170,6 +186,9 @@ fn main() -> Result<()> {
         }
         "eval" => {
             let mut eng = Engine::load(&art)?;
+            if let Some(t) = args.kernel_threads() {
+                eng.set_kernel_threads(t);
+            }
             let data = floe::evalsuite::EvalData::load(&art)?;
             let mode = args.mode()?;
             let b = args.budget();
@@ -217,6 +236,7 @@ fn main() -> Result<()> {
             args.devices(),
             args.shard()?,
             args.sparsity_decay(),
+            args.overlap(),
         )?,
         "exp-shard-sweep" => exp::shard::run(
             args.residency()?,
@@ -240,7 +260,11 @@ fn main() -> Result<()> {
             exp::shard::run(ResidencyKind::Lru, 7, decay)?;
             exp::serveload::run(
                 ResidencyKind::Lru, 16, 7, exp::serveload::DEFAULT_VRAM_GB,
-                1, ShardPolicy::Layer, decay,
+                1, ShardPolicy::Layer, decay, false,
+            )?;
+            exp::serveload::run(
+                ResidencyKind::Lru, 16, 7, exp::serveload::DEFAULT_VRAM_GB,
+                1, ShardPolicy::Layer, decay, true,
             )?;
             exp::fig4::run(&art)?;
             exp::table7::run_compression(&art)?;
@@ -268,7 +292,14 @@ fn main() -> Result<()> {
                  popularity flags (serve, --devices > 1): --replicate-top K \
                  (replicate the K hottest experts across devices) \
                  --compute-streams (per-device compute timelines — FLOP \
-                 scaling, not just cache/bus scaling)\n\
+                 scaling, not just cache/bus scaling) \
+                 --hetero-fleet (descending per-device GEMV throughput)\n\
+                 event-core flags: --overlap (serve, exp-serve-load: \
+                 transfer completions release waiting expert GEMVs \
+                 mid-boundary instead of stalling at the barrier)\n\
+                 engine flags (generate, eval): --kernel-threads N \
+                 (native kernel pool size; default = available cores; \
+                 1 reproduces single-threaded output bit-exactly)\n\
                  serve flags: --backend real|sim --max-batch 8 --gather-ms 0 \
                  --port 7399 --max-requests 0\n\
                  env: FLOE_ARTIFACTS (default ./artifacts)"

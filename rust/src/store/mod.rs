@@ -69,8 +69,10 @@ pub struct ExpertStore<P = ()> {
     /// `Balanced` home overlay: measured-mass assignment from the last
     /// rebalance; keys absent here fall back to the static seed
     home_map: BTreeMap<ExpertKey, DeviceId>,
-    /// replica holders per key (devices other than home carrying a copy)
-    replicas: BTreeMap<ExpertKey, Vec<DeviceId>>,
+    /// replica holders per key — (bytes per copy, devices other than
+    /// home carrying one); the byte size is what write-back promotion
+    /// moves from the replica pool into a holder's cache budget
+    replicas: BTreeMap<ExpertKey, (usize, Vec<DeviceId>)>,
     /// replica bytes resident per device (≤ `replica_budget` each)
     replica_bytes: Vec<usize>,
     /// per-device replica pool: `REPLICA_BUDGET_FRAC` of the cache budget
@@ -78,6 +80,9 @@ pub struct ExpertStore<P = ()> {
     /// layer boundaries seen (rebalance cadence) and rebalances executed
     boundary_ticks: u64,
     rebalances: u64,
+    /// replica write-backs executed (home evictions that promoted a
+    /// replica holder instead of dropping the expert)
+    writebacks: u64,
 }
 
 impl<P> ExpertStore<P> {
@@ -114,7 +119,19 @@ impl<P> ExpertStore<P> {
             replica_budget: (budget_per_device as f64 * REPLICA_BUDGET_FRAC) as usize,
             boundary_ticks: 0,
             rebalances: 0,
+            writebacks: 0,
         }
+    }
+
+    /// Turn the event-core overlap bus model on (priority demand lane,
+    /// bounded speculative backlog). Off by default — and off, the bus
+    /// timing is bit-exact with the pre-event-core pipeline.
+    pub fn set_overlap(&mut self, on: bool) {
+        self.prefetch.set_overlap(on);
+    }
+
+    pub fn overlap(&self) -> bool {
+        self.prefetch.overlap()
     }
 
     /// Single-device store over a fresh virtual microsecond timeline (sim,
@@ -162,7 +179,12 @@ impl<P> ExpertStore<P> {
     /// under `ShardPolicy::Balanced` — the measured-mass assignment from
     /// the last rebalance (static seed until then).
     pub fn home(&self, key: ExpertKey) -> DeviceId {
-        if self.placement.shard == ShardPolicy::Balanced {
+        // the overlay is written by Balanced re-homing and by replica
+        // write-back promotion (any placement with replication on);
+        // placements with neither stay on the pure static path
+        if self.placement.shard == ShardPolicy::Balanced
+            || self.placement.replicate_top > 0
+        {
             if let Some(dev) = self.home_map.get(&key) {
                 return *dev;
             }
@@ -275,16 +297,10 @@ impl<P> ExpertStore<P> {
             if home_resident {
                 holders.push(home);
             }
-            if let Some(reps) = self.replicas.get(&key) {
+            if let Some((_, reps)) = self.replicas.get(&key) {
                 holders.extend(reps.iter().copied().filter(|d| *d != home));
             }
-            if !holders.is_empty() {
-                let mut best = holders[0];
-                for &d in &holders[1..] {
-                    if self.prefetch.bus_free_us(d) < self.prefetch.bus_free_us(best) {
-                        best = d;
-                    }
-                }
+            if let Some(best) = self.prefetch.bus_free_soonest(&holders) {
                 if best == home {
                     self.devices[home].access(key);
                 } else {
@@ -352,10 +368,70 @@ impl<P> ExpertStore<P> {
 
     fn admit_on(&mut self, dev: DeviceId, key: ExpertKey, bytes: usize) -> bool {
         let (ok, evicted) = self.devices[dev].insert_evicting(key, bytes);
+        for victim in evicted {
+            self.rescue_victim(dev, victim);
+        }
+        ok
+    }
+
+    /// An eviction victim's rescue chain: replica write-back first (a
+    /// home copy with live replicas promotes a holder — zero bus
+    /// traffic), then peer spill when the placement spills.
+    fn rescue_victim(&mut self, dev: DeviceId, victim: (ExpertKey, usize)) {
+        if self.writeback_from(dev, victim.0) {
+            return;
+        }
         if self.placement.spill {
-            for victim in evicted {
-                self.spill_from(dev, victim);
-            }
+            self.spill_from(dev, victim);
+        }
+    }
+
+    /// Replica write-back on home eviction: when the evicted copy was
+    /// `key`'s *home* copy and replicas are live, promote the
+    /// bus-free-soonest holder to home instead of letting the next
+    /// replica refresh drop the expert to Miss (refreshes require a
+    /// home-resident source). The promoted bytes are already on the
+    /// holder, so no bus traffic moves — they transfer from the reserved
+    /// replica pool into the holder's cache budget through normal
+    /// admission, whose own victims recurse through the same rescue
+    /// chain (bounded: each promotion removes a key from the replica
+    /// map). Returns true if a holder was promoted.
+    fn writeback_from(&mut self, dev: DeviceId, key: ExpertKey) -> bool {
+        if self.home(key) != dev {
+            return false; // a spilled copy died, not the home copy
+        }
+        let Some((rep_bytes, holders)) = self.replicas.remove(&key) else {
+            return false;
+        };
+        // bus-free-soonest holder, ties to the replica list's
+        // (deterministic) order — the same resolution rule as `lookup`
+        let best = self
+            .prefetch
+            .bus_free_soonest(&holders)
+            .expect("replica entries always carry at least one holder");
+        let prev_home = self.home_map.insert(key, best);
+        self.replica_bytes[best] = self.replica_bytes[best].saturating_sub(rep_bytes);
+        // surviving sibling holders stay replicas of the new home;
+        // their pool accounting is untouched
+        let rest: Vec<DeviceId> =
+            holders.into_iter().filter(|d| *d != best).collect();
+        if !rest.is_empty() {
+            self.replicas.insert(key, (rep_bytes, rest));
+        }
+        let (ok, evicted) = self.devices[best].insert_evicting(key, rep_bytes);
+        for victim in evicted {
+            self.rescue_victim(best, victim);
+        }
+        if !ok {
+            // the holder cannot take it (oversized for the device, or
+            // every resident entry is pinned): the promotion rolls back
+            // and the freed replica copy is simply gone
+            match prev_home {
+                Some(d) => self.home_map.insert(key, d),
+                None => self.home_map.remove(&key),
+            };
+        } else {
+            self.writebacks += 1;
         }
         ok
     }
@@ -550,14 +626,14 @@ impl<P> ExpertStore<P> {
                     continue;
                 }
                 self.replica_bytes[d] += bytes;
-                let survived = old.get(&key).is_some_and(|v| v.contains(&d));
+                let survived = old.get(&key).is_some_and(|(_, v)| v.contains(&d));
                 if !survived {
                     per_dst[d].push(self.p2p_item(bytes));
                 }
                 placed.push(d);
             }
             if !placed.is_empty() {
-                self.replicas.insert(key, placed);
+                self.replicas.insert(key, (bytes, placed));
             }
         }
         self.flush_copy_batches(&per_dst);
@@ -603,9 +679,15 @@ impl<P> ExpertStore<P> {
         self.rebalances
     }
 
+    /// Replica write-backs executed so far (home evictions rescued by
+    /// promoting a replica holder).
+    pub fn writebacks(&self) -> u64 {
+        self.writebacks
+    }
+
     /// Devices currently holding a replica of `key`.
     pub fn replica_devices_of(&self, key: ExpertKey) -> Vec<DeviceId> {
-        self.replicas.get(&key).cloned().unwrap_or_default()
+        self.replicas.get(&key).map(|(_, v)| v.clone()).unwrap_or_default()
     }
 
     /// Replica bytes resident on `dev` (≤ `replica_budget_per_device`).
@@ -665,6 +747,14 @@ impl<P> ExpertStore<P> {
                 let mut done = self.clock.now_us();
                 for it in plan.items {
                     let now = self.clock.now_us();
+                    if self.prefetch.backlogged(dst, now) {
+                        // bounded speculative backlog (--overlap only):
+                        // prefetch is best-effort — refusing copies once
+                        // the queue is PREFETCH_BACKLOG_US deep breaks
+                        // the evict-before-use reissue storm at
+                        // thrash-depth VRAM
+                        continue;
+                    }
                     done = self
                         .prefetch
                         .begin(dst, it.key, it.duration_us, it.bytes, now, it.payload);
@@ -769,6 +859,13 @@ impl<P> ExpertStore<P> {
         self.bus_copy_to(0, duration_us, bytes)
     }
 
+    /// On-critical-path copy (intra-recall top-up): rides the priority
+    /// demand lane in overlap mode, plain FIFO `bus_copy_to` otherwise.
+    pub fn critical_copy_to(&mut self, dev: DeviceId, duration_us: f64, bytes: f64) -> f64 {
+        let now = self.clock.now_us();
+        self.prefetch.critical_copy(dev, duration_us, bytes, now)
+    }
+
     /// Pull a remote-resident `key` from peer `from` over the device
     /// link (GPU↔GPU — cheaper than a host refetch), counting a demand
     /// fetch on the home device's bus. The copy migrates home when the
@@ -793,10 +890,8 @@ impl<P> ExpertStore<P> {
                 // cannot evict
                 self.devices[from].insert(key, bytes);
             }
-            if self.placement.spill {
-                for victim in evicted {
-                    self.spill_from(home, victim);
-                }
+            for victim in evicted {
+                self.rescue_victim(home, victim);
             }
         }
         done

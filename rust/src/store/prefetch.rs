@@ -183,9 +183,23 @@ impl StoreStats {
     }
 }
 
+/// `--overlap`: refuse speculative prefetch once a device's bus queue is
+/// this deep. Prefetch is best-effort — under thrash-depth VRAM an
+/// unbounded queue feeds an evict-before-use reissue storm that starves
+/// the demand lane (mirrored as `PREFETCH_BACKLOG_US` in
+/// `python/replay_sim.py`).
+pub const PREFETCH_BACKLOG_US: f64 = 2000.0;
+
 pub struct PrefetchPipeline<P = ()> {
     /// busy-until timeline of each device's host link
     bus_free_us: Vec<f64>,
+    /// busy-until timeline of each device's *priority demand lane*
+    /// (`--overlap` only): critical copies serialize among themselves
+    /// here instead of queueing behind speculative prefetch traffic
+    demand_free_us: Vec<f64>,
+    /// event-core overlap mode: critical copies preempt the prefetch
+    /// queue and deep speculative backlogs are refused
+    overlap: bool,
     inflight: HashMap<(DeviceId, ExpertKey), (f64, P)>,
     pub stats: StoreStats,
 }
@@ -201,9 +215,29 @@ impl<P> PrefetchPipeline<P> {
         let n = n_devices.max(1);
         PrefetchPipeline {
             bus_free_us: vec![0.0; n],
+            demand_free_us: vec![0.0; n],
+            overlap: false,
             inflight: HashMap::new(),
             stats: StoreStats::new(n),
         }
+    }
+
+    /// Turn the event-core overlap bus model on: demand fetches ride the
+    /// priority lane and speculative backlogs are bounded. Off (the
+    /// default), every copy is FIFO on `bus_free_us` — bit-exact with
+    /// the pre-event-core pipeline.
+    pub fn set_overlap(&mut self, on: bool) {
+        self.overlap = on;
+    }
+
+    pub fn overlap(&self) -> bool {
+        self.overlap
+    }
+
+    /// Should a speculative prefetch toward `dev` be refused right now?
+    /// Only ever true in overlap mode (`PREFETCH_BACKLOG_US` queue bound).
+    pub fn backlogged(&self, dev: DeviceId, now_us: f64) -> bool {
+        self.overlap && self.bus_free_us[dev] - now_us > PREFETCH_BACKLOG_US
     }
 
     pub fn n_devices(&self) -> usize {
@@ -220,6 +254,23 @@ impl<P> PrefetchPipeline<P> {
 
     pub fn bus_free_us(&self, dev: DeviceId) -> f64 {
         self.bus_free_us[dev]
+    }
+
+    /// The device in `devs` whose bus frees soonest; ties resolve to the
+    /// earliest entry, so callers get a deterministic winner when every
+    /// bus is idle. This is THE replica-resolution rule — `lookup` (which
+    /// holder serves a hit) and replica write-back (which holder gets
+    /// promoted to home) both route through it, so the two can never
+    /// drift apart.
+    pub fn bus_free_soonest(&self, devs: &[DeviceId]) -> Option<DeviceId> {
+        let mut it = devs.iter().copied();
+        let mut best = it.next()?;
+        for d in it {
+            if self.bus_free_us[d] < self.bus_free_us[best] {
+                best = d;
+            }
+        }
+        Some(best)
     }
 
     /// Raw bus occupancy on `dev`'s link (prefill legs, recall top-ups,
@@ -355,8 +406,49 @@ impl<P> PrefetchPipeline<P> {
         t
     }
 
-    /// Demand fetch of a missing expert toward `dev`: queues on its bus,
-    /// returns the time the bytes land.
+    /// Priority-lane copy (`--overlap`): starts as soon as both the
+    /// moment `now_us` and the previous critical copy allow, jumping the
+    /// queued speculative prefetch traffic; the bus time it occupies
+    /// still pushes the prefetch queue back by `duration_us`.
+    pub fn priority_copy(
+        &mut self,
+        dev: DeviceId,
+        duration_us: f64,
+        bytes: f64,
+        now_us: f64,
+    ) -> f64 {
+        self.stats.per_device[dev].transferred_bytes += bytes;
+        self.stats.per_device[dev].bus_transactions += 1;
+        self.stats.per_device[dev].bus_busy_us += duration_us;
+        self.stats.rederive_movement();
+        let start = now_us.max(self.demand_free_us[dev]);
+        let done = start + duration_us;
+        self.demand_free_us[dev] = done;
+        self.bus_free_us[dev] = self.bus_free_us[dev].max(now_us) + duration_us;
+        done
+    }
+
+    /// On-critical-path copy (demand fetch, intra-recall top-up): rides
+    /// the priority lane in overlap mode, plain FIFO `bus_copy`
+    /// otherwise — so with overlap off this is bit-exact with the
+    /// pre-event-core pipeline.
+    pub fn critical_copy(
+        &mut self,
+        dev: DeviceId,
+        duration_us: f64,
+        bytes: f64,
+        now_us: f64,
+    ) -> f64 {
+        if self.overlap {
+            self.priority_copy(dev, duration_us, bytes, now_us)
+        } else {
+            self.bus_copy(dev, duration_us, bytes, now_us)
+        }
+    }
+
+    /// Demand fetch of a missing expert toward `dev`: queues on its bus
+    /// (the priority lane in overlap mode), returns the time the bytes
+    /// land.
     pub fn demand(
         &mut self,
         dev: DeviceId,
@@ -365,7 +457,7 @@ impl<P> PrefetchPipeline<P> {
         now_us: f64,
     ) -> f64 {
         self.stats.per_device[dev].demand_fetches += 1;
-        self.bus_copy(dev, duration_us, bytes, now_us)
+        self.critical_copy(dev, duration_us, bytes, now_us)
     }
 
     /// Count a demand fetch on `dev` that moves nothing (GPU-resident

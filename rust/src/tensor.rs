@@ -121,6 +121,16 @@ pub struct ExpertWeights {
     pub wd: Mat,
 }
 
+// The kernel-pool contract (engine::pool): materialized expert weights
+// are plain owned buffers, so a shared expert may be read from worker
+// threads while other experts dispatch. A field that broke this (an Rc,
+// a raw device handle) would fail here at compile time, not at 3am.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Mat>();
+    assert_send_sync::<ExpertWeights>();
+};
+
 impl ExpertWeights {
     pub fn d(&self) -> usize {
         self.wg_t.cols

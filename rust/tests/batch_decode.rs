@@ -104,6 +104,51 @@ fn batched_hlo_decode_bit_identical_to_sequential() {
     assert_batched_matches_sequential(ComputePath::Hlo, ExpertMode::Sparse { level: 0.8 });
 }
 
+/// The kernel-pool pin (PR 6): batched native decode logits are
+/// bit-identical at ANY worker-pool size. Disjoint same-boundary expert
+/// groups execute concurrently on the persistent pool, but outputs are
+/// combined in routing order — so parallelism must not perturb a single
+/// bit relative to the 1-thread (sequential) pool.
+#[test]
+fn batched_native_decode_bit_identical_at_any_pool_size() {
+    let Some(art) = art_dir() else { return };
+    let mode = ExpertMode::Floe { level: 0.8 };
+    let (n, steps) = (4usize, 5usize);
+    let run = |threads: usize| -> Vec<Vec<Vec<f32>>> {
+        let mut eng = Engine::load(&art).unwrap();
+        eng.path = ComputePath::Native;
+        eng.set_kernel_threads(threads);
+        assert_eq!(eng.kernel_threads(), threads);
+        let mut sts: Vec<DecodeState> =
+            (0..n).map(|_| DecodeState::new(&eng.w).unwrap()).collect();
+        let mut out = Vec::new();
+        for t in 0..steps {
+            let toks: Vec<u8> = (0..n).map(|i| tok(i, t)).collect();
+            let mut refs: Vec<&mut DecodeState> = sts.iter_mut().collect();
+            out.push(
+                eng.decode_batch(&mut refs, &toks, mode, &mut NoObserver).unwrap(),
+            );
+        }
+        out
+    };
+    let single = run(1);
+    for threads in [2usize, 4, 8] {
+        let multi = run(threads);
+        for (t, (a_step, b_step)) in single.iter().zip(&multi).enumerate() {
+            for (i, (a, b)) in a_step.iter().zip(b_step).enumerate() {
+                assert_eq!(a.len(), b.len());
+                for (k, (x, y)) in a.iter().zip(b).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "pool size {threads}: seq {i} step {t} logit {k} diverged"
+                    );
+                }
+            }
+        }
+    }
+}
+
 /// Per-boundary sharing accounting: expert groups executed (weight
 /// arguments resolved once each) equal the sum over boundaries of
 /// DISTINCT routed experts, routed pairs exceed groups whenever two

@@ -23,7 +23,8 @@
 use floe::config::{ResidencyKind, ShardPolicy};
 use floe::coordinator::policy::{SystemConfig, SystemKind};
 use floe::coordinator::sim::{
-    simulate, simulate_scalar_reference, simulate_sharded_reference, SimParams,
+    simulate, simulate_busyuntil_reference, simulate_scalar_reference,
+    simulate_sharded_reference, SimParams,
 };
 use floe::hwsim::{TopologySpec, PCIE4, RTX3090};
 use floe::prop_assert;
@@ -169,6 +170,86 @@ fn static_sharding_matches_pr3_reference_bit_exactly() {
                 );
             }
         }
+    }
+}
+
+// --------------------------------------- event-core busy-until equivalence
+
+/// The event-core acceptance pin, multi-device corners: with overlap
+/// off, `simulate` (all time progression through the event heap) replays
+/// the frozen pre-event-core busy-until timelines bit-exactly — every
+/// static shard policy at 2 and 4 devices, plus popularity placement
+/// with replication, per-device compute streams, and the heterogeneous
+/// fleet column. (The single-device systems × VRAM corners live in
+/// sim.rs's unit tests.)
+#[test]
+fn event_core_matches_busyuntil_reference_across_device_corners() {
+    let mk = |devices: usize, shard: ShardPolicy, vram: f64| {
+        let mut p = SimParams::mixtral_on(
+            RTX3090.clone(),
+            SystemConfig::with_residency(SystemKind::Floe, ResidencyKind::Lru)
+                .with_devices(devices, shard),
+            vram,
+        );
+        p.routing =
+            floe::coordinator::sim::RoutingModel { zipf_s: 1.2, stickiness: 0.5, seed: 7 };
+        p
+    };
+    let mut corners: Vec<(SimParams, String)> = Vec::new();
+    for shard in [
+        ShardPolicy::Layer,
+        ShardPolicy::Expert,
+        ShardPolicy::Hash,
+        ShardPolicy::Balanced,
+    ] {
+        for devices in [2usize, 4] {
+            corners.push((mk(devices, shard, 11.0), format!("{} x{}", shard.name(), devices)));
+        }
+    }
+    // popularity machinery fully on: replication + compute streams
+    let mut p = mk(2, ShardPolicy::Balanced, 11.0);
+    p.system = p.system.clone().with_replication(2);
+    p.system.compute_streams = true;
+    corners.push((p, "balanced x2 rep2 streams".into()));
+    // ...and the heterogeneous fleet column (per-device gemv_scale)
+    let mut p = mk(4, ShardPolicy::Balanced, 13.0);
+    p.system = p.system.clone().with_replication(2).with_hetero_fleet(true);
+    p.system.compute_streams = true;
+    corners.push((p, "balanced x4 rep2 streams hetero".into()));
+
+    for (p, ctx) in corners {
+        let new = simulate(&p, 64, 256);
+        let old = simulate_busyuntil_reference(&p, 64, 256);
+        assert_eq!(new.tps.to_bits(), old.tps.to_bits(), "tps diverged: {ctx}");
+        assert_eq!(
+            new.total_us.to_bits(),
+            old.total_us.to_bits(),
+            "total_us diverged: {ctx}"
+        );
+        assert_eq!(
+            new.stall_us.to_bits(),
+            old.stall_us.to_bits(),
+            "stall_us diverged: {ctx}"
+        );
+        assert_eq!(
+            new.transferred_bytes.to_bits(),
+            old.transferred_bytes.to_bits(),
+            "transferred_bytes diverged: {ctx}"
+        );
+        assert_eq!(
+            new.bus_transactions, old.bus_transactions,
+            "bus_transactions diverged: {ctx}"
+        );
+        assert_eq!(
+            new.max_device_bus_busy_us.to_bits(),
+            old.max_device_bus_busy_us.to_bits(),
+            "max_device_bus_busy_us diverged: {ctx}"
+        );
+        assert_eq!(
+            new.cache_hit_rate.to_bits(),
+            old.cache_hit_rate.to_bits(),
+            "cache_hit_rate diverged: {ctx}"
+        );
     }
 }
 
@@ -475,4 +556,116 @@ fn replicas_respect_budget_and_resolve_bus_free_soonest() {
     assert!(second != home && second != first);
     // exactly one hit was recorded per probe, replica or not
     assert_eq!(s.cache_stats().hits, hits_before + 3);
+}
+
+/// Replica write-back (PR 6): evicting the HOME copy of a replicated
+/// expert promotes a replica holder to home instead of dropping the key
+/// — specifically the holder whose bus frees soonest, the same rule
+/// `lookup` uses. Randomized conservation property: the key survives the
+/// eviction as a home copy on the promoted device, the promoted holder
+/// leaves the replica set (count conservation: total copies shrink by
+/// exactly the evicted one), replica-pool bytes are released, and every
+/// per-device budget and stat sum stays intact.
+#[test]
+fn home_eviction_writes_back_to_bus_free_soonest_replica_holder() {
+    check("replica-writeback-conservation", 40, |rng: &mut Rng| {
+        let n = rng.range(2, 5);
+        let budget = rng.range(800, 1601);
+        // small enough that the popularity-proportional pool replicates
+        // it, and fillers large enough to force home evictions
+        let hot_bytes = rng.range(50, budget / 6 + 1);
+        let filler = rng.range(150, budget / 3 + 1);
+        let mut s = store_with(ShardPolicy::Balanced, n, 2, budget);
+        let hot = (0usize, 1usize);
+        for _ in 0..10 {
+            s.lookup(hot); // feed the popularity tracker
+        }
+        prop_assert!(s.warm_admit(hot, hot_bytes), "hot admit failed");
+        let home0 = s.home(hot);
+        for _ in 0..REBALANCE_INTERVAL {
+            s.rebalance_tick();
+        }
+        let holders = s.replica_devices_of(hot);
+        prop_assert!(
+            !holders.is_empty(),
+            "no replicas formed (n {} budget {} bytes {})",
+            n,
+            budget,
+            hot_bytes
+        );
+        // random bus traffic on the holders; promotion must pick the
+        // one whose bus frees soonest (first holder wins ties — the
+        // implementation's strict-less scan)
+        for &d in &holders {
+            if rng.f64() < 0.5 {
+                s.bus_copy_to(d, rng.f64() * 400.0 + 10.0, 8.0);
+            }
+        }
+        let mut expect = holders[0];
+        for &d in &holders[1..] {
+            if s.bus_free_of(d) < s.bus_free_of(expect) {
+                expect = d;
+            }
+        }
+        let wb_before = s.writebacks();
+        // fill the home device with other keys homed there until the hot
+        // key's home copy is evicted (LRU: hot is the oldest entry)
+        let mut evicted = false;
+        'fill: for e in 2..60 {
+            for l in 0..6 {
+                let key = (l, e);
+                if key != hot && s.home(key) == home0 {
+                    s.warm_admit(key, filler);
+                }
+            }
+            if !s.resident_keys_of(home0).contains(&hot) {
+                evicted = true;
+                break 'fill;
+            }
+        }
+        prop_assert!(evicted, "hot key never evicted from its home device");
+        prop_assert!(
+            s.writebacks() == wb_before + 1,
+            "writebacks {} != {}",
+            s.writebacks(),
+            wb_before + 1
+        );
+        // count conservation: the key survived, as a home copy on the
+        // bus-free-soonest holder
+        prop_assert!(s.contains(hot), "write-back lost the key");
+        let new_home = s.home(hot);
+        prop_assert!(
+            new_home == expect,
+            "promoted device {} but bus frees soonest on {}",
+            new_home,
+            expect
+        );
+        prop_assert!(
+            s.resident_keys_of(new_home).contains(&hot),
+            "promoted home copy not resident on device {}",
+            new_home
+        );
+        prop_assert!(
+            !s.replica_devices_of(hot).contains(&new_home),
+            "promoted device still listed as a replica holder"
+        );
+        // byte conservation: replica-pool bytes released at the promoted
+        // device, budgets and per-device stat sums intact everywhere
+        for d in 0..s.n_devices() {
+            prop_assert!(
+                s.used_of(d) <= s.budget_of(d),
+                "device {} used {} > budget {}",
+                d,
+                s.used_of(d),
+                s.budget_of(d)
+            );
+            prop_assert!(
+                s.replica_bytes_of(d) <= s.replica_budget_per_device(),
+                "device {} replica bytes over budget",
+                d
+            );
+        }
+        device_sums_match(&s)?;
+        Ok(())
+    });
 }

@@ -3,6 +3,14 @@
 //! prints the streamed responses.
 //!
 //!   make artifacts && cargo run --release --example serve_chat
+//!
+//! Two serving features ride on the same protocol (DESIGN.md §9):
+//! `{"cmd":"stats"}` on any connection returns the per-request inspector
+//! report (queue-wait p50/p95/p99, demand-vs-prefetch stall split, batch
+//! occupancy, per-device bus busy share), and `ServerOpts::record` (CLI:
+//! `floe serve --record session.fltl`) writes the whole session as a
+//! timeline artifact at exit — `floe replay --artifact session.fltl`
+//! re-derives the same report offline, bit-for-bit.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;

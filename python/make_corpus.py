@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""Generate the committed replay-corpus artifacts (rust/tests/replay_corpus/).
+
+Writes two *spec-only* timeline artifacts (format v1, see DESIGN.md S9 and
+rust/src/coordinator/timeline.rs) at the serve-load operating point the
+regression pin uses: FloE on a simulated RTX-3090 at 14.25 GB, skewed sticky
+routing, batch cap 4, 12 requests at 8 req/s (seed 23) -- once lockstep and
+once with `--overlap`. The artifacts carry no observation section: the
+replayer re-drives the session from the spec and the in-tree test
+(rust/tests/replay_corpus.rs) asserts both that these bytes are exactly what
+the Rust encoder would emit and that the replayed tok/s ratio holds.
+
+Spec-only artifacts are committed (instead of full recordings) so the corpus
+stays a few hundred bytes and never embeds floats computed by a second
+implementation of the simulator: every observation byte is re-derived by the
+replayer itself.
+"""
+
+import os
+import struct
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "replay_corpus")
+
+MAGIC = b"FLTL"
+VERSION = 1
+FLAG_REPLAYABLE = 1 << 1  # no observations section: bit 0 stays clear
+
+
+def u8(v):
+    return struct.pack("<B", v)
+
+
+def u32(v):
+    return struct.pack("<I", v)
+
+
+def u64(v):
+    return struct.pack("<Q", v)
+
+
+def f64(v):
+    return struct.pack("<d", v)
+
+
+def spec_bytes(overlap):
+    """SessionSpec at exp::serveload::sweep_params(Lru, 14.25), cap 4."""
+    b = b""
+    b += u8(0)  # hw: Rtx3090
+    # SystemConfig (defaults of SystemConfig::new(Floe), overlap toggled)
+    b += u8(0)  # kind: Floe (SystemKind::ALL[0])
+    b += f64(0.9)  # sparsity
+    b += u8(3)  # quant_bits
+    b += f64(0.15)  # intra_margin
+    b += u64(50)  # chunk_channels
+    b += u8(0)  # residency: Lru (ResidencyKind::ALL[0])
+    b += f64(0.999)  # sparsity_decay (store::DEFAULT_SPARSITY_DECAY)
+    b += u64(1)  # devices
+    b += u8(0)  # shard: Layer (ShardPolicy::ALL[0])
+    b += u8(0)  # coalesce
+    b += u8(0)  # spill
+    b += u64(0)  # replicate_top
+    b += u8(0)  # compute_streams
+    b += u8(1 if overlap else 0)  # overlap
+    b += u8(0)  # hetero_fleet
+    b += f64(14.25)  # vram_gb (serveload::DEFAULT_VRAM_GB)
+    # RoutingModel (serveload::sweep_params)
+    b += f64(1.2)  # zipf_s
+    b += f64(0.5)  # stickiness
+    b += u64(7)  # seed
+    # predictor hit rates (SimParams::mixtral_on defaults)
+    b += f64(0.88)  # inter_hit
+    b += f64(0.95)  # intra_recall
+    b += f64(0.75)  # adv_prefetch_hit
+    b += u64(4)  # max_batch
+    # workload: Spec (serveload::workload_at(8.0, 12, 23) shape)
+    b += u8(0)
+    b += u64(12)  # n_requests
+    b += f64(8.0)  # arrival_rate_hz
+    b += u64(8) + u64(24)  # prompt_len
+    b += u64(16) + u64(48)  # output_tokens
+    b += u64(23)  # seed
+    return b
+
+
+def artifact(overlap):
+    return MAGIC + u32(VERSION) + u32(FLAG_REPLAYABLE) + spec_bytes(overlap)
+
+
+def main():
+    os.makedirs(OUT_DIR, exist_ok=True)
+    for overlap, name in [
+        (False, "serveload_cap4_lockstep.fltl"),
+        (True, "serveload_cap4_overlap.fltl"),
+    ]:
+        path = os.path.join(OUT_DIR, name)
+        data = artifact(overlap)
+        with open(path, "wb") as f:
+            f.write(data)
+        print(f"wrote {path} ({len(data)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,9 +16,14 @@
 //!   FloE prefetch pipeline (dual predictors + expert cache + compact
 //!   transfers) driving the PJRT engine one token at a time, with a
 //!   simulated PCIe clock accounted alongside real compute time.
+//! * `timeline` — deterministic record/replay of serving sessions as
+//!   versioned byte artifacts (scheduler decisions + event-core pops +
+//!   per-request accounting), plus the per-request inspector behind the
+//!   server's `stats` command and `floe record`/`floe replay`.
 
 pub mod events;
 pub mod policy;
 pub mod sched;
 pub mod serve;
 pub mod sim;
+pub mod timeline;

@@ -25,9 +25,18 @@ use std::collections::VecDeque;
 
 use anyhow::Result;
 
-use crate::store::StallSplit;
+use crate::store::{StallSplit, StoreStats};
 
 use super::serve::Request;
+
+/// Read-only view of a backend's store accounting, used by the `stats`
+/// protocol command and by timeline artifacts (`coordinator::timeline`).
+/// `None` for backends without an expert store.
+#[derive(Debug, Clone)]
+pub struct BackendSnapshot {
+    pub stats: StoreStats,
+    pub cache_hit_rate: f64,
+}
 
 /// Outcome of decoding one token for one sequence.
 #[derive(Debug, Clone)]
@@ -93,6 +102,19 @@ pub trait SeqBackend {
     fn retire(&mut self, id: u64) -> StallSplit {
         self.stalls_of(id)
     }
+
+    /// Snapshot of the backend's store accounting (globals + per-device
+    /// sums + cache hit rate) for the inspector. Defaults to `None` for
+    /// backends without a store.
+    fn snapshot(&self) -> Option<BackendSnapshot> {
+        None
+    }
+
+    /// The event core's popped-event byte log (17 bytes per pop; empty
+    /// unless the backend was built with event logging on).
+    fn event_log_bytes(&self) -> &[u8] {
+        &[]
+    }
 }
 
 impl<'a, B: SeqBackend> SeqBackend for &'a mut B {
@@ -120,6 +142,12 @@ impl<'a, B: SeqBackend> SeqBackend for &'a mut B {
     }
     fn retire(&mut self, id: u64) -> StallSplit {
         (**self).retire(id)
+    }
+    fn snapshot(&self) -> Option<BackendSnapshot> {
+        (**self).snapshot()
+    }
+    fn event_log_bytes(&self) -> &[u8] {
+        (**self).event_log_bytes()
     }
 }
 

@@ -31,7 +31,7 @@ use crate::store::{
 use crate::transfer::{CompactExpert, TransferEngine};
 
 use super::policy::{SystemConfig, SystemKind};
-use super::sched::{Scheduler, SeqBackend, SeqStep, ServeCompletion};
+use super::sched::{BackendSnapshot, Scheduler, SeqBackend, SeqStep, ServeCompletion};
 
 /// Merged running statistics of the FloE pipeline: predictor quality
 /// (tracked here) + residency/movement accounting (tracked by the store).
@@ -729,6 +729,14 @@ impl SeqBackend for Coordinator {
         // fold the finished request's ledger entry into `retired` so the
         // attribution map stays bounded by the in-flight batch
         self.pipeline.take_attribution(id)
+    }
+
+    fn snapshot(&self) -> Option<BackendSnapshot> {
+        let store = self.pipeline.store();
+        Some(BackendSnapshot {
+            stats: store.stats().clone(),
+            cache_hit_rate: store.cache_stats().hit_rate(),
+        })
     }
 }
 

@@ -52,7 +52,7 @@ use crate::workload::TimedRequest;
 
 use super::events::{key_id, EventCore, EventKind};
 use super::policy::{SystemConfig, SystemKind};
-use super::sched::{Scheduler, SeqBackend, SeqStep, ServeCompletion};
+use super::sched::{BackendSnapshot, Scheduler, SeqBackend, SeqStep, ServeCompletion};
 use super::serve::Request;
 
 /// Synthetic routing-trace generator: per-layer Zipf popularity with
@@ -1795,6 +1795,17 @@ impl SeqBackend for SimServeBackend {
         // fold the finished request's ledger entry into `retired` so the
         // attribution map stays bounded by the in-flight batch
         self.store.take_attribution(id)
+    }
+
+    fn snapshot(&self) -> Option<BackendSnapshot> {
+        Some(BackendSnapshot {
+            stats: self.store.stats().clone(),
+            cache_hit_rate: self.store.cache_stats().hit_rate(),
+        })
+    }
+
+    fn event_log_bytes(&self) -> &[u8] {
+        self.core.log_bytes()
     }
 }
 

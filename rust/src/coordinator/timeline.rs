@@ -1,0 +1,1366 @@
+//! Deterministic serving record/replay + per-request inspector
+//! (DESIGN.md §9).
+//!
+//! A serving session on the simulator backend is a pure function of its
+//! [`SessionSpec`]: hardware preset, `SystemConfig`, routing model,
+//! scheduler cap and workload. The **recorder** ([`record`]) drives the
+//! exact `simulate_serving` loop through a transparent
+//! [`RecordingBackend`] wrapper and captures everything the session
+//! produced — scheduler-level arrival/admission/retirement entries, the
+//! event core's 17-byte-per-pop log, per-request completion accounting
+//! and the final `StoreStats` — as a versioned, byte-serializable
+//! [`Timeline`] artifact. The **replayer** ([`replay`]) re-runs the spec
+//! from nothing and asserts bit-exact reproduction (`f64::to_bits` on
+//! every float, byte-identical event logs); any divergence reports the
+//! first mismatching entry with both causal histories. The **inspector**
+//! ([`inspect`]) re-derives per-request queue-wait percentiles, the
+//! stall-cause split, batch occupancy and per-device bus busy share from
+//! the recorded timeline, and checks that the per-request ledger sums
+//! reproduce the store's global counters bit-exactly.
+//!
+//! Per-boundary routing and `TransferPlan` issue are deliberately *not*
+//! stored: both are pure functions of the spec (seeded per-sequence RNGs,
+//! deterministic cache state), and their effects are cross-checked
+//! through the `GemvComplete`/`TransferComplete` pops in the
+//! byte-compared event log. See DESIGN.md §9 for the byte schema and the
+//! determinism contract.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use anyhow::Result;
+
+use crate::config::{ResidencyKind, ShardPolicy};
+use crate::hwsim::RTX3090;
+use crate::store::{DeviceStats, StallSplit, StoreStats};
+use crate::util::json::Json;
+use crate::workload::{self, TimedRequest, WorkloadSpec};
+
+use super::policy::{SystemConfig, SystemKind};
+use super::sched::{BackendSnapshot, Scheduler, SeqBackend, SeqStep, ServeCompletion};
+use super::serve::Request;
+use super::sim::{RoutingModel, SimParams, SimServeBackend};
+
+/// Artifact magic bytes.
+pub const MAGIC: [u8; 4] = *b"FLTL";
+/// Current artifact format version.
+pub const VERSION: u32 = 1;
+
+const FLAG_OBSERVATIONS: u32 = 1 << 0;
+const FLAG_REPLAYABLE: u32 = 1 << 1;
+
+/// Hardware preset a spec's `SimParams` are rebuilt from. Only the
+/// RTX 3090 host model is recordable today — the preset every serving
+/// experiment and the server's sim backend use — but the tag keeps the
+/// byte format extensible without a version bump.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HwPreset {
+    Rtx3090,
+}
+
+/// Where the arrival trace comes from.
+#[derive(Clone, Debug)]
+pub enum WorkloadSource {
+    /// Compact seeded form: the replayer re-expands it through
+    /// `workload::generate`, so the artifact stores only exactly
+    /// representable constants (committed corpus artifacts use this —
+    /// no cross-language float generation).
+    Spec(WorkloadSpec),
+    /// Fully expanded arrival trace (live server recordings, where
+    /// arrivals came off the wire rather than from a generator).
+    Trace(Vec<TimedRequest>),
+}
+
+impl WorkloadSource {
+    /// Expand to the concrete arrival trace.
+    pub fn trace(&self) -> Vec<TimedRequest> {
+        match self {
+            WorkloadSource::Spec(spec) => workload::generate(spec),
+            WorkloadSource::Trace(t) => t.clone(),
+        }
+    }
+}
+
+/// Everything needed to re-create a serving session from nothing.
+#[derive(Clone, Debug)]
+pub struct SessionSpec {
+    pub hw: HwPreset,
+    pub system: SystemConfig,
+    pub vram_gb: f64,
+    pub routing: RoutingModel,
+    pub inter_hit: f64,
+    pub intra_recall: f64,
+    pub adv_prefetch_hit: f64,
+    pub max_batch: usize,
+    pub workload: WorkloadSource,
+}
+
+impl SessionSpec {
+    /// Capture the recordable knobs of `p`. The GPU is assumed to be the
+    /// RTX 3090 host model (`SimParams::mixtral_on`) — the only preset
+    /// the serving paths use; custom `GpuSpec`s are not captured.
+    pub fn from_params(p: &SimParams, max_batch: usize, workload: WorkloadSource) -> Self {
+        SessionSpec {
+            hw: HwPreset::Rtx3090,
+            system: p.system.clone(),
+            vram_gb: p.vram_gb,
+            routing: p.routing.clone(),
+            inter_hit: p.inter_hit,
+            intra_recall: p.intra_recall,
+            adv_prefetch_hit: p.adv_prefetch_hit,
+            max_batch,
+            workload,
+        }
+    }
+
+    /// Reconstruct the simulator parameters bit-exactly.
+    pub fn params(&self) -> SimParams {
+        let HwPreset::Rtx3090 = self.hw;
+        let mut p = SimParams::mixtral_on(RTX3090.clone(), self.system.clone(), self.vram_gb);
+        p.routing = self.routing.clone();
+        p.inter_hit = self.inter_hit;
+        p.intra_recall = self.intra_recall;
+        p.adv_prefetch_hit = self.adv_prefetch_hit;
+        p
+    }
+
+    /// The concrete arrival trace this spec drives.
+    pub fn trace(&self) -> Vec<TimedRequest> {
+        self.workload.trace()
+    }
+}
+
+/// Scheduler-level decision kinds in the recorded timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EntryKind {
+    /// A request entered the admission queue (`t_us` = arrival time in
+    /// the backend time base, `ord` = arrival index).
+    Arrival,
+    /// The scheduler admitted a request into the decode batch (`t_us` =
+    /// backend clock when prefill started, `ord` = admission index).
+    Admit,
+    /// The request retired (`t_us` = backend clock at retirement,
+    /// `ord` = retirement index).
+    Retire,
+}
+
+impl EntryKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EntryKind::Arrival => "Arrival",
+            EntryKind::Admit => "Admit",
+            EntryKind::Retire => "Retire",
+        }
+    }
+
+    fn code(self) -> u8 {
+        match self {
+            EntryKind::Arrival => 0,
+            EntryKind::Admit => 1,
+            EntryKind::Retire => 2,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<Self, String> {
+        match c {
+            0 => Ok(EntryKind::Arrival),
+            1 => Ok(EntryKind::Admit),
+            2 => Ok(EntryKind::Retire),
+            _ => Err(format!("bad timeline entry kind {c}")),
+        }
+    }
+}
+
+/// One scheduler-level decision on the recorded timeline.
+#[derive(Clone, Copy, Debug)]
+pub struct TimelineEntry {
+    pub kind: EntryKind,
+    pub t_us: f64,
+    pub id: u64,
+    pub ord: u64,
+}
+
+impl TimelineEntry {
+    fn render(&self) -> String {
+        format!("{} #{} t={}us id={}", self.kind.name(), self.ord, self.t_us, self.id)
+    }
+
+    fn bits(&self) -> (u8, u64, u64, u64) {
+        (self.kind.code(), self.t_us.to_bits(), self.id, self.ord)
+    }
+}
+
+/// The numeric accounting of one `ServeCompletion`. Sampled text is
+/// omitted: the sim backend emits none, and byte-identical text on the
+/// real backend is already covered by the engine bit-exactness tests.
+#[derive(Clone, Debug, Default)]
+pub struct CompletionRecord {
+    pub id: u64,
+    pub tokens: u64,
+    pub batch_peak: u64,
+    pub arrival_us: f64,
+    pub queue_wait_us: f64,
+    pub prefill_us: f64,
+    pub decode_us: f64,
+    pub stall: StallSplit,
+    pub finished_us: f64,
+}
+
+impl CompletionRecord {
+    pub fn of(c: &ServeCompletion) -> Self {
+        CompletionRecord {
+            id: c.id,
+            tokens: c.tokens as u64,
+            batch_peak: c.batch_peak as u64,
+            arrival_us: c.arrival_us,
+            queue_wait_us: c.queue_wait_us,
+            prefill_us: c.prefill_us,
+            decode_us: c.decode_us,
+            stall: c.stall,
+            finished_us: c.finished_us,
+        }
+    }
+
+    fn render(&self) -> String {
+        format!(
+            "id={} tokens={} wait={}us stall=({},{})us finished={}us",
+            self.id,
+            self.tokens,
+            self.queue_wait_us,
+            self.stall.demand_us,
+            self.stall.prefetch_us,
+            self.finished_us
+        )
+    }
+
+    fn bits(&self) -> [u64; 10] {
+        [
+            self.id,
+            self.tokens,
+            self.batch_peak,
+            self.arrival_us.to_bits(),
+            self.queue_wait_us.to_bits(),
+            self.prefill_us.to_bits(),
+            self.decode_us.to_bits(),
+            self.stall.demand_us.to_bits(),
+            self.stall.prefetch_us.to_bits(),
+            self.finished_us.to_bits(),
+        ]
+    }
+}
+
+/// Final `StoreStats` snapshot: globals, the retired stall bucket and
+/// per-device movement sums. The live attribution ledger is not stored —
+/// a quiescent session has drained it into `retired`.
+#[derive(Clone, Debug, Default)]
+pub struct StatsRecord {
+    pub demand_fetches: u64,
+    pub prefetches: u64,
+    pub bus_transactions: u64,
+    pub transferred_bytes: f64,
+    pub bus_busy_us: f64,
+    pub stall_us: f64,
+    pub stall_demand_us: f64,
+    pub stall_prefetch_us: f64,
+    pub retired: StallSplit,
+    pub per_device: Vec<DeviceStats>,
+}
+
+impl StatsRecord {
+    pub fn of(s: &StoreStats) -> Self {
+        StatsRecord {
+            demand_fetches: s.demand_fetches,
+            prefetches: s.prefetches,
+            bus_transactions: s.bus_transactions,
+            transferred_bytes: s.transferred_bytes,
+            bus_busy_us: s.bus_busy_us,
+            stall_us: s.stall_us,
+            stall_demand_us: s.stall_demand_us,
+            stall_prefetch_us: s.stall_prefetch_us,
+            retired: s.retired,
+            per_device: s.per_device.clone(),
+        }
+    }
+}
+
+/// Everything a recorded session *produced*, as opposed to what defines
+/// it (the spec).
+#[derive(Clone, Debug)]
+pub struct Observations {
+    pub entries: Vec<TimelineEntry>,
+    /// the event core's 17-byte-per-pop log (`EventCore::log_bytes`)
+    pub event_log: Vec<u8>,
+    /// per-request accounting, in retirement order
+    pub completions: Vec<CompletionRecord>,
+    pub stats: StatsRecord,
+    pub total_us: f64,
+    pub max_batch_seen: u64,
+    pub cache_hit_rate: f64,
+}
+
+/// A serving session as a byte-serializable artifact.
+#[derive(Clone, Debug)]
+pub struct Timeline {
+    pub spec: SessionSpec,
+    pub obs: Option<Observations>,
+    /// true when the session is a pure function of the spec (recorded by
+    /// the deterministic driver): the replayer asserts bit-exact
+    /// reproduction. Live server recordings are *not* replayable —
+    /// wall-clock arrival interleaving is outside the spec — but still
+    /// carry a full observation section for offline inspection.
+    pub replayable: bool,
+}
+
+// ---------------------------------------------------------------------------
+// byte serialization (schema: DESIGN.md §9)
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Self {
+        Enc { buf: Vec::new() }
+    }
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        self.u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.buf.len() - self.at < n {
+            return Err(format!("timeline truncated at byte {} (need {n} more)", self.at));
+        }
+        let s = &self.buf[self.at..self.at + n];
+        self.at += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn bytes(&mut self) -> Result<Vec<u8>, String> {
+        let n = self.u64()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+    fn done(&self) -> Result<(), String> {
+        if self.at == self.buf.len() {
+            Ok(())
+        } else {
+            Err(format!("{} trailing bytes after timeline", self.buf.len() - self.at))
+        }
+    }
+}
+
+fn enum_code<T: PartialEq + Copy>(all: &[T], v: T) -> u8 {
+    all.iter().position(|x| *x == v).expect("enum variant missing from ALL") as u8
+}
+
+fn enum_at<T: Copy>(all: &[T], code: u8, what: &str) -> Result<T, String> {
+    all.get(code as usize).copied().ok_or_else(|| format!("bad {what} code {code}"))
+}
+
+fn put_spec(e: &mut Enc, s: &SessionSpec) {
+    e.u8(match s.hw {
+        HwPreset::Rtx3090 => 0,
+    });
+    let sys = &s.system;
+    e.u8(enum_code(&SystemKind::ALL, sys.kind));
+    e.f64(sys.sparsity);
+    e.u8(sys.quant_bits);
+    e.f64(sys.intra_margin);
+    e.u64(sys.chunk_channels as u64);
+    e.u8(enum_code(&ResidencyKind::ALL, sys.residency));
+    e.f64(sys.sparsity_decay);
+    e.u64(sys.devices as u64);
+    e.u8(enum_code(&ShardPolicy::ALL, sys.shard));
+    e.u8(sys.coalesce as u8);
+    e.u8(sys.spill as u8);
+    e.u64(sys.replicate_top as u64);
+    e.u8(sys.compute_streams as u8);
+    e.u8(sys.overlap as u8);
+    e.u8(sys.hetero_fleet as u8);
+    e.f64(s.vram_gb);
+    e.f64(s.routing.zipf_s);
+    e.f64(s.routing.stickiness);
+    e.u64(s.routing.seed);
+    e.f64(s.inter_hit);
+    e.f64(s.intra_recall);
+    e.f64(s.adv_prefetch_hit);
+    e.u64(s.max_batch as u64);
+    match &s.workload {
+        WorkloadSource::Spec(w) => {
+            e.u8(0);
+            e.u64(w.n_requests as u64);
+            e.f64(w.arrival_rate_hz);
+            e.u64(w.prompt_len.0 as u64);
+            e.u64(w.prompt_len.1 as u64);
+            e.u64(w.output_tokens.0 as u64);
+            e.u64(w.output_tokens.1 as u64);
+            e.u64(w.seed);
+        }
+        WorkloadSource::Trace(trace) => {
+            e.u8(1);
+            e.u64(trace.len() as u64);
+            for t in trace {
+                e.f64(t.arrival_us);
+                e.u64(t.req.id);
+                e.u64(t.req.max_tokens as u64);
+                e.u32(t.req.temperature.to_bits());
+                e.u64(t.req.seed);
+                e.bytes(&t.req.prompt);
+            }
+        }
+    }
+}
+
+fn get_spec(d: &mut Dec) -> Result<SessionSpec, String> {
+    let hw = match d.u8()? {
+        0 => HwPreset::Rtx3090,
+        c => return Err(format!("bad hardware preset code {c}")),
+    };
+    let kind = enum_at(&SystemKind::ALL, d.u8()?, "system kind")?;
+    let sparsity = d.f64()?;
+    let quant_bits = d.u8()?;
+    let intra_margin = d.f64()?;
+    let chunk_channels = d.u64()? as usize;
+    let residency = enum_at(&ResidencyKind::ALL, d.u8()?, "residency")?;
+    let sparsity_decay = d.f64()?;
+    let devices = d.u64()? as usize;
+    let shard = enum_at(&ShardPolicy::ALL, d.u8()?, "shard policy")?;
+    let coalesce = d.u8()? != 0;
+    let spill = d.u8()? != 0;
+    let replicate_top = d.u64()? as usize;
+    let compute_streams = d.u8()? != 0;
+    let overlap = d.u8()? != 0;
+    let hetero_fleet = d.u8()? != 0;
+    let system = SystemConfig {
+        kind,
+        sparsity,
+        quant_bits,
+        intra_margin,
+        chunk_channels,
+        residency,
+        sparsity_decay,
+        devices,
+        shard,
+        coalesce,
+        spill,
+        replicate_top,
+        compute_streams,
+        overlap,
+        hetero_fleet,
+    };
+    let vram_gb = d.f64()?;
+    let routing = RoutingModel { zipf_s: d.f64()?, stickiness: d.f64()?, seed: d.u64()? };
+    let inter_hit = d.f64()?;
+    let intra_recall = d.f64()?;
+    let adv_prefetch_hit = d.f64()?;
+    let max_batch = d.u64()? as usize;
+    let workload = match d.u8()? {
+        0 => WorkloadSource::Spec(WorkloadSpec {
+            n_requests: d.u64()? as usize,
+            arrival_rate_hz: d.f64()?,
+            prompt_len: (d.u64()? as usize, d.u64()? as usize),
+            output_tokens: (d.u64()? as usize, d.u64()? as usize),
+            seed: d.u64()?,
+        }),
+        1 => {
+            let n = d.u64()? as usize;
+            let mut trace = Vec::new();
+            for _ in 0..n {
+                let arrival_us = d.f64()?;
+                let id = d.u64()?;
+                let max_tokens = d.u64()? as usize;
+                let temperature = f32::from_bits(d.u32()?);
+                let seed = d.u64()?;
+                let prompt = d.bytes()?;
+                trace.push(TimedRequest {
+                    arrival_us,
+                    req: Request { id, prompt, max_tokens, temperature, seed },
+                });
+            }
+            WorkloadSource::Trace(trace)
+        }
+        c => return Err(format!("bad workload tag {c}")),
+    };
+    Ok(SessionSpec {
+        hw,
+        system,
+        vram_gb,
+        routing,
+        inter_hit,
+        intra_recall,
+        adv_prefetch_hit,
+        max_batch,
+        workload,
+    })
+}
+
+fn put_obs(e: &mut Enc, o: &Observations) {
+    e.u64(o.entries.len() as u64);
+    for t in &o.entries {
+        e.u8(t.kind.code());
+        e.f64(t.t_us);
+        e.u64(t.id);
+        e.u64(t.ord);
+    }
+    e.bytes(&o.event_log);
+    e.u64(o.completions.len() as u64);
+    for c in &o.completions {
+        e.u64(c.id);
+        e.u64(c.tokens);
+        e.u64(c.batch_peak);
+        e.f64(c.arrival_us);
+        e.f64(c.queue_wait_us);
+        e.f64(c.prefill_us);
+        e.f64(c.decode_us);
+        e.f64(c.stall.demand_us);
+        e.f64(c.stall.prefetch_us);
+        e.f64(c.finished_us);
+    }
+    let s = &o.stats;
+    e.u64(s.demand_fetches);
+    e.u64(s.prefetches);
+    e.u64(s.bus_transactions);
+    e.f64(s.transferred_bytes);
+    e.f64(s.bus_busy_us);
+    e.f64(s.stall_us);
+    e.f64(s.stall_demand_us);
+    e.f64(s.stall_prefetch_us);
+    e.f64(s.retired.demand_us);
+    e.f64(s.retired.prefetch_us);
+    e.u64(s.per_device.len() as u64);
+    for dev in &s.per_device {
+        e.u64(dev.demand_fetches);
+        e.u64(dev.prefetches);
+        e.u64(dev.bus_transactions);
+        e.f64(dev.transferred_bytes);
+        e.f64(dev.bus_busy_us);
+    }
+    e.f64(o.total_us);
+    e.u64(o.max_batch_seen);
+    e.f64(o.cache_hit_rate);
+}
+
+fn get_obs(d: &mut Dec) -> Result<Observations, String> {
+    let n = d.u64()? as usize;
+    let mut entries = Vec::new();
+    for _ in 0..n {
+        entries.push(TimelineEntry {
+            kind: EntryKind::from_code(d.u8()?)?,
+            t_us: d.f64()?,
+            id: d.u64()?,
+            ord: d.u64()?,
+        });
+    }
+    let event_log = d.bytes()?;
+    let n = d.u64()? as usize;
+    let mut completions = Vec::new();
+    for _ in 0..n {
+        completions.push(CompletionRecord {
+            id: d.u64()?,
+            tokens: d.u64()?,
+            batch_peak: d.u64()?,
+            arrival_us: d.f64()?,
+            queue_wait_us: d.f64()?,
+            prefill_us: d.f64()?,
+            decode_us: d.f64()?,
+            stall: StallSplit { demand_us: d.f64()?, prefetch_us: d.f64()? },
+            finished_us: d.f64()?,
+        });
+    }
+    let mut stats = StatsRecord {
+        demand_fetches: d.u64()?,
+        prefetches: d.u64()?,
+        bus_transactions: d.u64()?,
+        transferred_bytes: d.f64()?,
+        bus_busy_us: d.f64()?,
+        stall_us: d.f64()?,
+        stall_demand_us: d.f64()?,
+        stall_prefetch_us: d.f64()?,
+        retired: StallSplit { demand_us: d.f64()?, prefetch_us: d.f64()? },
+        per_device: Vec::new(),
+    };
+    let n = d.u64()? as usize;
+    for _ in 0..n {
+        stats.per_device.push(DeviceStats {
+            demand_fetches: d.u64()?,
+            prefetches: d.u64()?,
+            bus_transactions: d.u64()?,
+            transferred_bytes: d.f64()?,
+            bus_busy_us: d.f64()?,
+        });
+    }
+    Ok(Observations {
+        entries,
+        event_log,
+        completions,
+        stats,
+        total_us: d.f64()?,
+        max_batch_seen: d.u64()?,
+        cache_hit_rate: d.f64()?,
+    })
+}
+
+impl Timeline {
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.buf.extend_from_slice(&MAGIC);
+        e.u32(VERSION);
+        let mut flags = 0;
+        if self.obs.is_some() {
+            flags |= FLAG_OBSERVATIONS;
+        }
+        if self.replayable {
+            flags |= FLAG_REPLAYABLE;
+        }
+        e.u32(flags);
+        put_spec(&mut e, &self.spec);
+        if let Some(o) = &self.obs {
+            put_obs(&mut e, o);
+        }
+        e.buf
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<Self, String> {
+        let mut d = Dec { buf, at: 0 };
+        if d.take(4)? != MAGIC.as_slice() {
+            return Err("not a timeline artifact (bad magic)".to_string());
+        }
+        let version = d.u32()?;
+        if version != VERSION {
+            return Err(format!("unsupported timeline version {version} (have {VERSION})"));
+        }
+        let flags = d.u32()?;
+        let spec = get_spec(&mut d)?;
+        let obs = if flags & FLAG_OBSERVATIONS != 0 {
+            Some(get_obs(&mut d)?)
+        } else {
+            None
+        };
+        d.done()?;
+        Ok(Timeline { spec, obs, replayable: flags & FLAG_REPLAYABLE != 0 })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// recorder
+
+/// Transparent `SeqBackend` wrapper that records scheduler-level
+/// decisions (arrival / admission / retirement) as [`TimelineEntry`]s.
+/// Every call delegates 1:1 to the inner backend — a recorded session is
+/// bit-exact with an unrecorded one.
+pub struct RecordingBackend<B: SeqBackend> {
+    inner: B,
+    entries: Vec<TimelineEntry>,
+    trace: Vec<TimedRequest>,
+    arrivals: u64,
+    admits: u64,
+    retires: u64,
+}
+
+impl<B: SeqBackend> RecordingBackend<B> {
+    pub fn new(inner: B) -> Self {
+        RecordingBackend {
+            inner,
+            entries: Vec::new(),
+            trace: Vec::new(),
+            arrivals: 0,
+            admits: 0,
+            retires: 0,
+        }
+    }
+
+    /// Record a request entering the admission queue. The drive loop (or
+    /// the server's admit path) calls this right before
+    /// `Scheduler::enqueue_at` — arrivals are an input to the scheduler,
+    /// not a backend callback, so they cannot be observed from inside
+    /// the trait.
+    pub fn note_arrival(&mut self, arrival_us: f64, req: &Request) {
+        self.entries.push(TimelineEntry {
+            kind: EntryKind::Arrival,
+            t_us: arrival_us,
+            id: req.id,
+            ord: self.arrivals,
+        });
+        self.arrivals += 1;
+        self.trace.push(TimedRequest { arrival_us, req: req.clone() });
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    /// Tear down into (inner backend, recorded entries, arrival trace).
+    pub fn finish(self) -> (B, Vec<TimelineEntry>, Vec<TimedRequest>) {
+        (self.inner, self.entries, self.trace)
+    }
+}
+
+impl<B: SeqBackend> SeqBackend for RecordingBackend<B> {
+    type Seq = B::Seq;
+    fn now_us(&self) -> f64 {
+        self.inner.now_us()
+    }
+    fn on_boundary(&mut self) {
+        self.inner.on_boundary();
+    }
+    fn start(&mut self, req: &Request) -> Result<(Self::Seq, f64)> {
+        self.entries.push(TimelineEntry {
+            kind: EntryKind::Admit,
+            t_us: self.inner.now_us(),
+            id: req.id,
+            ord: self.admits,
+        });
+        self.admits += 1;
+        self.inner.start(req)
+    }
+    fn step(&mut self, seq: &mut Self::Seq) -> Result<SeqStep> {
+        self.inner.step(seq)
+    }
+    fn idle_until(&mut self, t_us: f64) {
+        self.inner.idle_until(t_us);
+    }
+    fn step_batch(&mut self, seqs: &mut [&mut Self::Seq]) -> Vec<Result<SeqStep>> {
+        self.inner.step_batch(seqs)
+    }
+    fn stalls_of(&self, id: u64) -> StallSplit {
+        self.inner.stalls_of(id)
+    }
+    fn retire(&mut self, id: u64) -> StallSplit {
+        let split = self.inner.retire(id);
+        self.entries.push(TimelineEntry {
+            kind: EntryKind::Retire,
+            t_us: self.inner.now_us(),
+            id,
+            ord: self.retires,
+        });
+        self.retires += 1;
+        split
+    }
+    fn snapshot(&self) -> Option<BackendSnapshot> {
+        self.inner.snapshot()
+    }
+    fn event_log_bytes(&self) -> &[u8] {
+        self.inner.event_log_bytes()
+    }
+}
+
+/// Record a serving session: drive the spec through the *exact*
+/// `simulate_serving` loop (same admission, idle-skip and batch-step
+/// order) over an event-logging sim backend wrapped in a
+/// [`RecordingBackend`], and capture everything it produced.
+pub fn record(spec: &SessionSpec) -> Timeline {
+    let workload = spec.trace();
+    let max_ctx = workload
+        .iter()
+        .map(|t| t.req.prompt.len() + t.req.max_tokens)
+        .max()
+        .unwrap_or(512);
+    let kv_tokens = spec.max_batch.max(1) * max_ctx;
+    let backend = SimServeBackend::new_traced(spec.params(), kv_tokens);
+    let mut sched = Scheduler::new(RecordingBackend::new(backend), spec.max_batch);
+    let mut completions: Vec<CompletionRecord> = Vec::new();
+    let mut next = 0usize;
+    loop {
+        while next < workload.len() && workload[next].arrival_us <= sched.backend().now_us() {
+            let t = &workload[next];
+            sched.backend_mut().note_arrival(t.arrival_us, &t.req);
+            sched.enqueue_at(t.req.clone(), t.arrival_us);
+            next += 1;
+        }
+        if !sched.has_work() {
+            if next >= workload.len() {
+                break;
+            }
+            let t = workload[next].arrival_us;
+            sched.backend_mut().idle_until(t);
+            continue;
+        }
+        completions.extend(sched.step().iter().map(CompletionRecord::of));
+    }
+    let total_us = sched.backend().now_us();
+    let max_batch_seen = sched.max_batch_seen() as u64;
+    let (backend, entries, _trace) = sched.into_backend().finish();
+    let snap = backend.snapshot().expect("sim backend always snapshots");
+    Timeline {
+        spec: spec.clone(),
+        obs: Some(Observations {
+            entries,
+            event_log: backend.event_log().to_vec(),
+            completions,
+            stats: StatsRecord::of(&snap.stats),
+            total_us,
+            max_batch_seen,
+            cache_hit_rate: snap.cache_hit_rate,
+        }),
+        replayable: true,
+    }
+}
+
+/// What the server's recording-enabled loop hands back at teardown; the
+/// listener assembles it into a (non-replayable) [`Timeline`] via
+/// [`server_timeline`].
+#[derive(Clone, Debug)]
+pub struct SessionRecording {
+    pub entries: Vec<TimelineEntry>,
+    pub trace: Vec<TimedRequest>,
+    pub completions: Vec<CompletionRecord>,
+    pub event_log: Vec<u8>,
+    pub snapshot: Option<BackendSnapshot>,
+    pub total_us: f64,
+    pub max_batch_seen: u64,
+}
+
+/// Wrap a live server recording as an inspect-only artifact: the
+/// workload is the observed arrival trace, and the replayable flag stays
+/// off (wall-clock arrival interleaving is not a pure function of the
+/// spec).
+pub fn server_timeline(p: &SimParams, max_batch: usize, rec: &SessionRecording) -> Timeline {
+    Timeline {
+        spec: SessionSpec::from_params(p, max_batch, WorkloadSource::Trace(rec.trace.clone())),
+        obs: Some(Observations {
+            entries: rec.entries.clone(),
+            event_log: rec.event_log.clone(),
+            completions: rec.completions.clone(),
+            stats: rec.snapshot.as_ref().map(|s| StatsRecord::of(&s.stats)).unwrap_or_default(),
+            total_us: rec.total_us,
+            max_batch_seen: rec.max_batch_seen,
+            cache_hit_rate: rec.snapshot.as_ref().map(|s| s.cache_hit_rate).unwrap_or(0.0),
+        }),
+        replayable: false,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// replayer
+
+/// First mismatching timeline position, with both causal histories.
+#[derive(Debug)]
+pub struct Divergence {
+    pub channel: &'static str,
+    pub index: usize,
+    pub recorded: String,
+    pub replayed: String,
+    pub recorded_context: Vec<String>,
+    pub replayed_context: Vec<String>,
+}
+
+impl fmt::Display for Divergence {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut lines = vec![
+            format!("replay diverged in {} at index {}:", self.channel, self.index),
+            format!("  recorded: {}", self.recorded),
+            format!("  replayed: {}", self.replayed),
+        ];
+        if !self.recorded_context.is_empty() {
+            lines.push("  recorded causal history:".to_string());
+            lines.extend(self.recorded_context.iter().map(|l| format!("    {l}")));
+        }
+        if !self.replayed_context.is_empty() {
+            lines.push("  replayed causal history:".to_string());
+            lines.extend(self.replayed_context.iter().map(|l| format!("    {l}")));
+        }
+        write!(f, "{}", lines.join("\n"))
+    }
+}
+
+/// Why a replay did not verify.
+#[derive(Debug)]
+pub enum ReplayError {
+    /// The artifact was recorded live (wall-clock arrivals): inspectable,
+    /// but not a pure function of its spec.
+    NotReplayable,
+    Diverged(Box<Divergence>),
+}
+
+impl fmt::Display for ReplayError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ReplayError::NotReplayable => {
+                write!(f, "artifact is a live recording; inspect-only (not replayable)")
+            }
+            ReplayError::Diverged(d) => write!(f, "{d}"),
+        }
+    }
+}
+
+fn context(lines: &[String], idx: usize) -> Vec<String> {
+    let lo = idx.saturating_sub(3);
+    let hi = (idx + 4).min(lines.len());
+    lines[lo..hi].iter().enumerate().map(|(k, l)| format!("[{}] {}", lo + k, l)).collect()
+}
+
+fn end_or(lines: &[String], idx: usize) -> &str {
+    lines.get(idx).map(|s| s.as_str()).unwrap_or("<end of log>")
+}
+
+fn diverge(
+    channel: &'static str,
+    idx: usize,
+    recorded: &[String],
+    replayed: &[String],
+) -> Box<Divergence> {
+    Box::new(Divergence {
+        channel,
+        index: idx,
+        recorded: end_or(recorded, idx).to_string(),
+        replayed: end_or(replayed, idx).to_string(),
+        recorded_context: context(recorded, idx),
+        replayed_context: context(replayed, idx),
+    })
+}
+
+/// Decode the event core's 17-byte pop records into one line per pop.
+fn decode_event_log(log: &[u8]) -> Vec<String> {
+    let mut out = Vec::new();
+    for rec in log.chunks(17) {
+        if rec.len() < 17 {
+            out.push(format!("<truncated {}-byte record>", rec.len()));
+            break;
+        }
+        let kind = match rec[0] {
+            0 => "TransferComplete".to_string(),
+            1 => "GemvComplete".to_string(),
+            2 => "BoundaryBarrier".to_string(),
+            3 => "RequestArrival".to_string(),
+            k => format!("Unknown({k})"),
+        };
+        let t = f64::from_bits(u64::from_le_bytes(rec[1..9].try_into().unwrap()));
+        let id = u64::from_le_bytes(rec[9..17].try_into().unwrap());
+        out.push(format!("{kind} t={t}us id={id}"));
+    }
+    out
+}
+
+type ScalarRow = (String, u64, String);
+
+fn int_row(rows: &mut Vec<ScalarRow>, name: &str, v: u64) {
+    rows.push((name.to_string(), v, v.to_string()));
+}
+
+fn f64_row(rows: &mut Vec<ScalarRow>, name: &str, v: f64) {
+    rows.push((name.to_string(), v.to_bits(), format!("{v}")));
+}
+
+fn scalar_rows(o: &Observations) -> Vec<ScalarRow> {
+    let mut rows = Vec::new();
+    let s = &o.stats;
+    int_row(&mut rows, "demand_fetches", s.demand_fetches);
+    int_row(&mut rows, "prefetches", s.prefetches);
+    int_row(&mut rows, "bus_transactions", s.bus_transactions);
+    f64_row(&mut rows, "transferred_bytes", s.transferred_bytes);
+    f64_row(&mut rows, "bus_busy_us", s.bus_busy_us);
+    f64_row(&mut rows, "stall_us", s.stall_us);
+    f64_row(&mut rows, "stall_demand_us", s.stall_demand_us);
+    f64_row(&mut rows, "stall_prefetch_us", s.stall_prefetch_us);
+    f64_row(&mut rows, "retired.demand_us", s.retired.demand_us);
+    f64_row(&mut rows, "retired.prefetch_us", s.retired.prefetch_us);
+    for (i, dev) in s.per_device.iter().enumerate() {
+        int_row(&mut rows, &format!("dev{i}.demand_fetches"), dev.demand_fetches);
+        int_row(&mut rows, &format!("dev{i}.prefetches"), dev.prefetches);
+        int_row(&mut rows, &format!("dev{i}.bus_transactions"), dev.bus_transactions);
+        f64_row(&mut rows, &format!("dev{i}.transferred_bytes"), dev.transferred_bytes);
+        f64_row(&mut rows, &format!("dev{i}.bus_busy_us"), dev.bus_busy_us);
+    }
+    f64_row(&mut rows, "total_us", o.total_us);
+    int_row(&mut rows, "max_batch_seen", o.max_batch_seen);
+    f64_row(&mut rows, "cache_hit_rate", o.cache_hit_rate);
+    rows
+}
+
+/// Bit-exact comparison of two observation sets, channel by channel in
+/// causal order: scheduler entries, event-core log, per-request
+/// completions, then the store-stats scalars.
+pub fn diff_observations(
+    recorded: &Observations,
+    replayed: &Observations,
+) -> Result<(), Box<Divergence>> {
+    let n = recorded.entries.len().max(replayed.entries.len());
+    for i in 0..n {
+        let a = recorded.entries.get(i).map(TimelineEntry::bits);
+        let b = replayed.entries.get(i).map(TimelineEntry::bits);
+        if a != b {
+            let ra: Vec<String> = recorded.entries.iter().map(TimelineEntry::render).collect();
+            let rb: Vec<String> = replayed.entries.iter().map(TimelineEntry::render).collect();
+            return Err(diverge("scheduler entries", i, &ra, &rb));
+        }
+    }
+    if recorded.event_log != replayed.event_log {
+        let ra = decode_event_log(&recorded.event_log);
+        let rb = decode_event_log(&replayed.event_log);
+        let n = ra.len().max(rb.len());
+        let i = (0..n).find(|&i| ra.get(i) != rb.get(i)).unwrap_or(0);
+        return Err(diverge("event log", i, &ra, &rb));
+    }
+    let n = recorded.completions.len().max(replayed.completions.len());
+    for i in 0..n {
+        let a = recorded.completions.get(i).map(CompletionRecord::bits);
+        let b = replayed.completions.get(i).map(CompletionRecord::bits);
+        if a != b {
+            let ra: Vec<String> =
+                recorded.completions.iter().map(CompletionRecord::render).collect();
+            let rb: Vec<String> =
+                replayed.completions.iter().map(CompletionRecord::render).collect();
+            return Err(diverge("completions", i, &ra, &rb));
+        }
+    }
+    let ra = scalar_rows(recorded);
+    let rb = scalar_rows(replayed);
+    let n = ra.len().max(rb.len());
+    for i in 0..n {
+        let a = ra.get(i).map(|(name, bits, _)| (name.clone(), *bits));
+        let b = rb.get(i).map(|(name, bits, _)| (name.clone(), *bits));
+        if a != b {
+            let la: Vec<String> = ra.iter().map(|(n, _, v)| format!("{n}={v}")).collect();
+            let lb: Vec<String> = rb.iter().map(|(n, _, v)| format!("{n}={v}")).collect();
+            return Err(diverge("store stats", i, &la, &lb));
+        }
+    }
+    Ok(())
+}
+
+/// Re-drive a recorded session from its spec and assert bit-exact
+/// reproduction. Spec-only artifacts (no observation section) are
+/// replayed twice — a pure determinism check. Returns the freshly
+/// replayed observations on success.
+pub fn replay(tl: &Timeline) -> Result<Observations, ReplayError> {
+    if !tl.replayable {
+        return Err(ReplayError::NotReplayable);
+    }
+    let fresh = record(&tl.spec).obs.expect("record always attaches observations");
+    let reference = match &tl.obs {
+        Some(o) => o.clone(),
+        None => record(&tl.spec).obs.expect("record always attaches observations"),
+    };
+    diff_observations(&reference, &fresh).map_err(ReplayError::Diverged)?;
+    Ok(fresh)
+}
+
+// ---------------------------------------------------------------------------
+// inspector
+
+/// Per-request serving report derived from a recorded timeline (or from
+/// the same accounting live, before the artifact is written). Every field
+/// is re-derived from the per-request records; `ledger_exact` asserts the
+/// re-derivation reproduces the store's global `StoreStats` counters
+/// bit-exactly (true at quiescence — it reads false while requests are
+/// still in flight, when the globals include live ledger entries).
+#[derive(Clone, Debug)]
+pub struct InspectorReport {
+    pub requests: u64,
+    pub tokens: u64,
+    pub total_us: f64,
+    pub aggregate_tps: f64,
+    pub queue_wait_p50_us: f64,
+    pub queue_wait_p95_us: f64,
+    pub queue_wait_p99_us: f64,
+    pub stall_demand_us: f64,
+    pub stall_prefetch_us: f64,
+    pub demand_stall_share: f64,
+    pub mean_batch_peak: f64,
+    pub max_batch_seen: u64,
+    pub cache_hit_rate: f64,
+    pub device_busy_share: Vec<f64>,
+    pub ledger_exact: bool,
+}
+
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+}
+
+/// Inspect a recorded observation section.
+pub fn inspect(obs: &Observations) -> InspectorReport {
+    inspect_parts(
+        &obs.completions,
+        Some(&obs.stats),
+        obs.cache_hit_rate,
+        obs.total_us,
+        obs.max_batch_seen,
+    )
+}
+
+/// Inspector over the raw parts — the live server's `stats` command and
+/// the offline artifact path both go through here, so their numbers agree
+/// bit-for-bit on the same inputs.
+pub fn inspect_parts(
+    completions: &[CompletionRecord],
+    stats: Option<&StatsRecord>,
+    cache_hit_rate: f64,
+    total_us: f64,
+    max_batch_seen: u64,
+) -> InspectorReport {
+    let mut waits: Vec<f64> = completions.iter().map(|c| c.queue_wait_us).collect();
+    waits.sort_by(f64::total_cmp);
+    let tokens: u64 = completions.iter().map(|c| c.tokens).sum();
+    // Fold per-request stalls in retirement order — the same order (and
+    // the same f64 additions) the store's ledger used to fold them into
+    // `retired`, so the sums agree bit-for-bit.
+    let mut demand = 0.0;
+    let mut prefetch = 0.0;
+    for c in completions {
+        demand += c.stall.demand_us;
+        prefetch += c.stall.prefetch_us;
+    }
+    let ledger_exact = match stats {
+        Some(s) => {
+            demand.to_bits() == s.retired.demand_us.to_bits()
+                && prefetch.to_bits() == s.retired.prefetch_us.to_bits()
+                && s.stall_demand_us.to_bits() == s.retired.demand_us.to_bits()
+                && s.stall_prefetch_us.to_bits() == s.retired.prefetch_us.to_bits()
+        }
+        None => false,
+    };
+    let span = total_us.max(1e-9);
+    let (stall_demand_us, stall_prefetch_us) = match stats {
+        Some(s) => (s.stall_demand_us, s.stall_prefetch_us),
+        None => (demand, prefetch),
+    };
+    let n = completions.len() as f64;
+    InspectorReport {
+        requests: completions.len() as u64,
+        tokens,
+        total_us,
+        aggregate_tps: tokens as f64 / (total_us / 1e6).max(1e-9),
+        queue_wait_p50_us: pct(&waits, 0.50),
+        queue_wait_p95_us: pct(&waits, 0.95),
+        queue_wait_p99_us: pct(&waits, 0.99),
+        stall_demand_us,
+        stall_prefetch_us,
+        demand_stall_share: stall_demand_us / span,
+        mean_batch_peak: if completions.is_empty() {
+            0.0
+        } else {
+            completions.iter().map(|c| c.batch_peak as f64).sum::<f64>() / n
+        },
+        max_batch_seen,
+        cache_hit_rate,
+        device_busy_share: stats
+            .map(|s| s.per_device.iter().map(|d| d.bus_busy_us / span).collect())
+            .unwrap_or_default(),
+        ledger_exact,
+    }
+}
+
+impl InspectorReport {
+    /// JSON form — the server's `stats` protocol response and the
+    /// offline CLI both serialize through this (and through
+    /// `util::json::write`'s shortest-roundtrip float formatting), so
+    /// live and artifact-derived reports compare exactly.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("requests".to_string(), Json::Num(self.requests as f64));
+        m.insert("tokens".to_string(), Json::Num(self.tokens as f64));
+        m.insert("total_us".to_string(), Json::Num(self.total_us));
+        m.insert("aggregate_tps".to_string(), Json::Num(self.aggregate_tps));
+        m.insert("queue_wait_p50_us".to_string(), Json::Num(self.queue_wait_p50_us));
+        m.insert("queue_wait_p95_us".to_string(), Json::Num(self.queue_wait_p95_us));
+        m.insert("queue_wait_p99_us".to_string(), Json::Num(self.queue_wait_p99_us));
+        m.insert("stall_demand_us".to_string(), Json::Num(self.stall_demand_us));
+        m.insert("stall_prefetch_us".to_string(), Json::Num(self.stall_prefetch_us));
+        m.insert("demand_stall_share".to_string(), Json::Num(self.demand_stall_share));
+        m.insert("mean_batch_peak".to_string(), Json::Num(self.mean_batch_peak));
+        m.insert("max_batch_seen".to_string(), Json::Num(self.max_batch_seen as f64));
+        m.insert("cache_hit_rate".to_string(), Json::Num(self.cache_hit_rate));
+        m.insert(
+            "device_busy_share".to_string(),
+            Json::Arr(self.device_busy_share.iter().map(|&v| Json::Num(v)).collect()),
+        );
+        m.insert("ledger_exact".to_string(), Json::Bool(self.ledger_exact));
+        Json::Obj(m)
+    }
+
+    /// Human-readable table for the CLI.
+    pub fn render(&self) -> String {
+        let busy = self
+            .device_busy_share
+            .iter()
+            .map(|v| format!("{v:.3}"))
+            .collect::<Vec<_>>()
+            .join(", ");
+        let lines = [
+            format!("{:<22}{}", "requests", self.requests),
+            format!("{:<22}{}", "tokens", self.tokens),
+            format!("{:<22}{:.1}", "total_us", self.total_us),
+            format!("{:<22}{:.2}", "aggregate_tps", self.aggregate_tps),
+            format!("{:<22}{:.1}", "queue_wait_p50_us", self.queue_wait_p50_us),
+            format!("{:<22}{:.1}", "queue_wait_p95_us", self.queue_wait_p95_us),
+            format!("{:<22}{:.1}", "queue_wait_p99_us", self.queue_wait_p99_us),
+            format!("{:<22}{:.1}", "stall_demand_us", self.stall_demand_us),
+            format!("{:<22}{:.1}", "stall_prefetch_us", self.stall_prefetch_us),
+            format!("{:<22}{:.4}", "demand_stall_share", self.demand_stall_share),
+            format!("{:<22}{:.2}", "mean_batch_peak", self.mean_batch_peak),
+            format!("{:<22}{}", "max_batch_seen", self.max_batch_seen),
+            format!("{:<22}{:.4}", "cache_hit_rate", self.cache_hit_rate),
+            format!("{:<22}[{}]", "device_busy_share", busy),
+            format!("{:<22}{}", "ledger_exact", self.ledger_exact),
+        ];
+        lines.join("\n")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::sim::simulate_serving;
+
+    fn tiny_spec(overlap: bool, seed: u64) -> SessionSpec {
+        let system = SystemConfig::new(SystemKind::Floe).with_overlap(overlap);
+        let mut p = SimParams::mixtral_on(RTX3090.clone(), system, 14.25);
+        p.routing = RoutingModel { zipf_s: 1.2, stickiness: 0.5, seed: 7 };
+        SessionSpec::from_params(
+            &p,
+            2,
+            WorkloadSource::Spec(WorkloadSpec {
+                n_requests: 4,
+                arrival_rate_hz: 8.0,
+                prompt_len: (4, 10),
+                output_tokens: (4, 10),
+                seed,
+            }),
+        )
+    }
+
+    #[test]
+    fn spec_roundtrips_through_bytes() {
+        let spec = tiny_spec(true, 11);
+        let tl = Timeline { spec, obs: None, replayable: true };
+        let bytes = tl.to_bytes();
+        let back = Timeline::from_bytes(&bytes).unwrap();
+        assert!(back.replayable);
+        assert!(back.obs.is_none());
+        assert_eq!(back.spec.max_batch, 2);
+        assert!(back.spec.system.overlap);
+        assert_eq!(back.to_bytes(), bytes);
+
+        // expanded-trace form
+        let trace = tl.spec.trace();
+        let spec2 = SessionSpec { workload: WorkloadSource::Trace(trace.clone()), ..tl.spec };
+        let tl2 = Timeline { spec: spec2, obs: None, replayable: false };
+        let bytes2 = tl2.to_bytes();
+        let back2 = Timeline::from_bytes(&bytes2).unwrap();
+        assert_eq!(back2.spec.trace(), trace);
+        assert_eq!(back2.to_bytes(), bytes2);
+    }
+
+    #[test]
+    fn truncated_or_corrupt_bytes_error() {
+        let tl = record(&tiny_spec(false, 3));
+        let bytes = tl.to_bytes();
+        assert!(Timeline::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(Timeline::from_bytes(&bad).is_err());
+        let mut vers = bytes;
+        vers[4] = 99;
+        assert!(Timeline::from_bytes(&vers).is_err());
+    }
+
+    #[test]
+    fn record_replay_roundtrip_is_bit_exact() {
+        for overlap in [false, true] {
+            let tl = record(&tiny_spec(overlap, 5));
+            let obs = tl.obs.as_ref().unwrap();
+            assert!(!obs.entries.is_empty());
+            assert!(!obs.event_log.is_empty());
+            assert_eq!(obs.event_log.len() % 17, 0);
+            assert_eq!(obs.completions.len(), 4);
+            // full byte round-trip, then bit-exact replay
+            let back = Timeline::from_bytes(&tl.to_bytes()).unwrap();
+            let fresh = replay(&back).unwrap();
+            assert_eq!(fresh.event_log, obs.event_log);
+            // spec-only artifact: replay is a pure determinism check
+            let spec_only = Timeline { spec: tl.spec.clone(), obs: None, replayable: true };
+            replay(&spec_only).unwrap();
+        }
+    }
+
+    #[test]
+    fn recording_wrapper_is_transparent() {
+        // the recorded session must be bit-exact with the plain
+        // (unrecorded) serving simulation — recording off is today's
+        // behavior
+        let spec = tiny_spec(true, 9);
+        let rep = simulate_serving(&spec.params(), &spec.trace(), spec.max_batch).unwrap();
+        let obs = record(&spec).obs.unwrap();
+        assert_eq!(obs.total_us.to_bits(), rep.total_us.to_bits());
+        assert_eq!(obs.completions.len(), rep.completions.len());
+        assert_eq!(obs.max_batch_seen as usize, rep.max_batch_seen);
+        assert_eq!(obs.cache_hit_rate.to_bits(), rep.cache_hit_rate.to_bits());
+        assert_eq!(obs.stats.stall_us.to_bits(), rep.stats.stall_us.to_bits());
+        assert_eq!(obs.stats.transferred_bytes.to_bits(), rep.stats.transferred_bytes.to_bits());
+        assert_eq!(obs.stats.bus_transactions, rep.stats.bus_transactions);
+        for (a, b) in obs.completions.iter().zip(&rep.completions) {
+            assert_eq!(a.bits(), CompletionRecord::of(b).bits());
+        }
+    }
+
+    #[test]
+    fn tampered_artifact_reports_divergence() {
+        let mut tl = record(&tiny_spec(true, 5));
+        {
+            let obs = tl.obs.as_mut().unwrap();
+            let n = obs.event_log.len();
+            obs.event_log[n - 1] ^= 1;
+        }
+        match replay(&tl) {
+            Err(ReplayError::Diverged(d)) => {
+                assert_eq!(d.channel, "event log");
+                assert!(!d.recorded_context.is_empty());
+            }
+            other => panic!("expected divergence, got {other:?}"),
+        }
+        let live = Timeline { replayable: false, ..tl };
+        assert!(matches!(replay(&live), Err(ReplayError::NotReplayable)));
+    }
+
+    #[test]
+    fn inspector_rederives_ledger_bit_exactly() {
+        let tl = record(&tiny_spec(true, 5));
+        let obs = tl.obs.unwrap();
+        let rep = inspect(&obs);
+        assert!(rep.ledger_exact, "completion fold must reproduce StoreStats globals");
+        assert_eq!(rep.requests, 4);
+        assert!(rep.tokens > 0);
+        assert!(rep.aggregate_tps > 0.0);
+        assert!(rep.queue_wait_p50_us <= rep.queue_wait_p95_us);
+        assert!(rep.queue_wait_p95_us <= rep.queue_wait_p99_us);
+        assert_eq!(rep.stall_demand_us.to_bits(), obs.stats.stall_demand_us.to_bits());
+        assert_eq!(rep.device_busy_share.len(), obs.stats.per_device.len());
+        // serializes through the shared JSON path without panicking
+        let j = crate::util::json::write(&rep.to_json());
+        assert!(j.contains("\"ledger_exact\":true"));
+        assert!(!rep.render().is_empty());
+    }
+}

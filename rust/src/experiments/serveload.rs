@@ -106,6 +106,10 @@ pub fn run(
                 ("p95_latency_us", jnum(rep.p95_latency_us())),
                 ("stall_demand_us", jnum(rep.stats.stall_demand_us)),
                 ("stall_prefetch_us", jnum(rep.stats.stall_prefetch_us)),
+                ("total_us", jnum(rep.total_us)),
+                // demand-stall share of the cell's wall clock — the
+                // inspector's span semantics (timeline::inspect_parts)
+                ("demand_stall_share", jnum(rep.stats.stall_demand_us / rep.total_us.max(1e-9))),
                 ("max_batch_seen", jnum(rep.max_batch_seen as f64)),
                 ("cache_hit_rate", jnum(rep.cache_hit_rate)),
             ]));

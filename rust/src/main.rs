@@ -3,16 +3,20 @@
 //! Subcommands:
 //!   generate   one-off generation through the engine
 //!   serve      line-JSON TCP server (see server.rs)
+//!   record     record a simulated serving session as a timeline artifact
+//!   replay     re-drive a recorded artifact, assert bit-exact, inspect
 //!   eval       perplexity + probe accuracy for one compression mode
 //!   exp-*      regenerate a paper table/figure (DESIGN.md §5 index)
 //!   exp-all    everything (EXPERIMENTS.md source of truth)
 
 use std::collections::HashMap;
+use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use floe::config::{ExpertMode, ResidencyKind, ShardPolicy};
 use floe::coordinator::policy::{SystemConfig, SystemKind};
+use floe::coordinator::timeline::{self, ReplayError, SessionSpec, Timeline, WorkloadSource};
 use floe::engine::{ComputePath, Engine, NoObserver};
 use floe::experiments as exp;
 use floe::experiments::fig3::EvalBudget;
@@ -168,6 +172,7 @@ fn main() -> Result<()> {
                 max_requests: args.usize("max-requests", 0),
                 max_batch: args.usize("max-batch", 8),
                 gather_ms: args.usize("gather-ms", 0) as u64,
+                record: args.get("record").map(PathBuf::from),
             };
             match args.get("backend").unwrap_or("real") {
                 // full TCP path over the simulated coordinator: no
@@ -182,6 +187,67 @@ fn main() -> Result<()> {
                 }
                 "real" => floe::server::serve(&art, opts)?,
                 other => bail!("unknown backend {other} (real|sim)"),
+            }
+        }
+        // record a simulated serving session (the exp-serve-load system
+        // shape) as a replayable timeline artifact, then print the
+        // per-request inspector report over it
+        "record" => {
+            let mut p = exp::serveload::sweep_params(
+                args.residency()?,
+                args.f64("vram", exp::serveload::DEFAULT_VRAM_GB),
+            );
+            p.system = p
+                .system
+                .clone()
+                .with_devices(args.devices(), args.shard()?)
+                .with_overlap(args.overlap());
+            let spec = SessionSpec::from_params(
+                &p,
+                args.usize("cap", 4),
+                WorkloadSource::Spec(floe::workload::WorkloadSpec {
+                    n_requests: args.usize("requests", 12),
+                    arrival_rate_hz: args.f64("rate", 8.0),
+                    prompt_len: (8, 24),
+                    output_tokens: (16, 48),
+                    seed: args.usize("seed", 23) as u64,
+                }),
+            );
+            let tl = timeline::record(&spec);
+            let bytes = tl.to_bytes();
+            let out = PathBuf::from(args.get("out").unwrap_or("serveload_timeline.fltl"));
+            std::fs::write(&out, &bytes).with_context(|| format!("write {}", out.display()))?;
+            println!("recorded {} bytes -> {}", bytes.len(), out.display());
+            let obs = tl.obs.as_ref().expect("record attaches observations");
+            println!("{}", timeline::inspect(obs).render());
+        }
+        // re-drive a recorded artifact through the simulator and assert
+        // bit-exact reproduction; print the inspector report either way
+        "replay" => {
+            let path = PathBuf::from(
+                args.get("artifact").context("replay requires --artifact <path>")?,
+            );
+            let bytes = std::fs::read(&path).with_context(|| format!("read {}", path.display()))?;
+            let tl = Timeline::from_bytes(&bytes).map_err(|e| anyhow::anyhow!("{e}"))?;
+            match timeline::replay(&tl) {
+                Ok(obs) => {
+                    println!("replay OK — bit-exact ({})", path.display());
+                    println!("{}", timeline::inspect(&obs).render());
+                }
+                Err(ReplayError::NotReplayable) => match &tl.obs {
+                    Some(obs) => {
+                        println!(
+                            "{}: live recording (not replayable); inspecting observations",
+                            path.display()
+                        );
+                        println!("{}", timeline::inspect(obs).render());
+                    }
+                    None => bail!("{}: no observations to inspect", path.display()),
+                },
+                Err(ReplayError::Diverged(d)) => {
+                    eprintln!("{d}");
+                    bail!("replay diverged from the recorded session");
+                }
             }
         }
         "eval" => {
@@ -277,10 +343,10 @@ fn main() -> Result<()> {
             println!(
                 "floe — FloE (ICML 2025) reproduction\n\n\
                  usage: floe <cmd> [--flag value]...\n\n\
-                 cmds: generate serve eval exp-fig2 exp-fig3a exp-fig3b \
-                 exp-fig4 exp-fig6 exp-fig7 exp-fig8 exp-fig9 exp-policy-sweep \
-                 exp-serve-load exp-shard-sweep exp-table1 exp-table3 \
-                 exp-compression exp-all\n\n\
+                 cmds: generate serve record replay eval exp-fig2 exp-fig3a \
+                 exp-fig3b exp-fig4 exp-fig6 exp-fig7 exp-fig8 exp-fig9 \
+                 exp-policy-sweep exp-serve-load exp-shard-sweep exp-table1 \
+                 exp-table3 exp-compression exp-all\n\n\
                  common flags: --mode dense|sparse|floe|cats|chess|uniform \
                  --level 0.8 --bits 2 --policy lru|lfu|sparsity \
                  --sparsity-decay 0.999 --prompt '...' --tokens 48\n\
@@ -301,7 +367,15 @@ fn main() -> Result<()> {
                  (native kernel pool size; default = available cores; \
                  1 reproduces single-threaded output bit-exactly)\n\
                  serve flags: --backend real|sim --max-batch 8 --gather-ms 0 \
-                 --port 7399 --max-requests 0\n\
+                 --port 7399 --max-requests 0 --record session.fltl (write \
+                 the session as a timeline artifact at exit; protocol cmd \
+                 {{\"cmd\":\"stats\"}} returns the live inspector report)\n\
+                 record flags: --out serveload_timeline.fltl --cap 4 \
+                 --rate 8 --requests 12 --seed 23 --overlap (records the \
+                 exp-serve-load system shape as a replayable artifact)\n\
+                 replay flags: --artifact <path> (re-drives the recorded \
+                 session and asserts bit-exact reproduction, then prints \
+                 the per-request inspector report)\n\
                  env: FLOE_ARTIFACTS (default ./artifacts)"
             );
         }

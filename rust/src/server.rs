@@ -12,6 +12,20 @@
 //!             {"id": n, "error": "...", "tag": ...} when an admitted
 //!             request fails in the backend — either way the connection
 //!             (and the server) keeps serving
+//!   stats:    {"cmd": "stats", "tag": ...} → one JSON object with the
+//!             per-request inspector report over everything served so
+//!             far (queue-wait p50/p95/p99, demand-vs-prefetch stall
+//!             split, batch occupancy, per-device bus busy share —
+//!             `coordinator::timeline::InspectorReport`); a stats reply
+//!             counts toward `--max-requests`
+//!
+//! Recording: with `ServerOpts::record` set (CLI `--record <path>`), the
+//! session is captured through `coordinator::timeline::RecordingBackend`
+//! — scheduler arrivals/admissions/retirements, the sim backend's event
+//! log, per-request accounting and the final store stats — and written at
+//! exit as an inspect-only timeline artifact (`floe replay` reports live
+//! recordings as not replayable: wall-clock arrival interleaving is not a
+//! pure function of the spec).
 //!
 //! Response fields: `id` is the server-assigned arrival index;
 //! `queue_wait_us` is time from arrival to admission into the decode
@@ -37,7 +51,7 @@
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, RecvTimeoutError};
 use std::sync::{Arc, Condvar, Mutex};
@@ -50,6 +64,9 @@ use crate::coordinator::policy::SystemConfig;
 use crate::coordinator::sched::{Scheduler, SeqBackend, ServeCompletion};
 use crate::coordinator::serve::{Coordinator, Request};
 use crate::coordinator::sim::{SimParams, SimServeBackend};
+use crate::coordinator::timeline::{
+    self, CompletionRecord, InspectorReport, RecordingBackend, SessionRecording, StatsRecord,
+};
 use crate::model::tokenizer::ByteTokenizer;
 use crate::util::json::{parse, write as jwrite, Json};
 
@@ -57,7 +74,8 @@ pub struct ServerOpts {
     pub port: u16,
     pub system: SystemConfig,
     pub vram_budget_bytes: usize,
-    /// exit after serving this many requests (0 = run forever)
+    /// exit after this many responses — request completions plus `stats`
+    /// replies (0 = run forever)
     pub max_requests: usize,
     /// continuous-batching cap: at most this many sequences decode
     /// concurrently (admission stays FIFO)
@@ -66,6 +84,9 @@ pub struct ServerOpts {
     /// after the first arrival so near-simultaneous requests decode
     /// together (0 = admit immediately)
     pub gather_ms: u64,
+    /// write the session as a timeline artifact here at exit (sim
+    /// backend: includes the event-core log)
+    pub record: Option<PathBuf>,
 }
 
 impl Default for ServerOpts {
@@ -77,6 +98,7 @@ impl Default for ServerOpts {
             max_requests: 0,
             max_batch: 8,
             gather_ms: 0,
+            record: None,
         }
     }
 }
@@ -158,13 +180,28 @@ impl ConnTx {
 }
 
 /// A parsed request en route from a reader thread to the coordinator.
-struct Inbound {
+struct InboundReq {
     req: Request,
     tag: Option<Json>,
     conn: ConnTx,
     /// reader-side arrival stamp: queue wait includes time spent in the
     /// mpsc channel and the gather window, not just the scheduler queue
     arrival: Instant,
+}
+
+/// One message from a reader thread to the coordinator.
+enum Inbound {
+    Req(InboundReq),
+    /// `{"cmd":"stats"}` — answered inline from the running accounting
+    Stats { tag: Option<Json>, conn: ConnTx },
+}
+
+/// What the coordinator loop hands back at exit: the backend plus the
+/// session recording (scheduler timeline entries, arrival trace,
+/// per-request accounting, event log and final store snapshot).
+pub struct ServeOutcome<B> {
+    pub backend: B,
+    pub recording: SessionRecording,
 }
 
 /// Serve over the real engine (requires artifacts + the `pjrt` feature
@@ -187,34 +224,51 @@ pub fn serve_sim(params: SimParams, opts: ServerOpts) -> Result<()> {
 }
 
 /// `serve_sim` over a pre-bound listener (tests bind port 0 and read the
-/// ephemeral address back). Returns the backend at exit so callers can
-/// inspect the store's final accounting — the loopback integration test
-/// asserts the attribution ledger retired down to the in-flight batch.
+/// ephemeral address back). Returns the backend + session recording at
+/// exit so callers can inspect the store's final accounting — the
+/// loopback integration test asserts the attribution ledger retired down
+/// to the in-flight batch. With `opts.record` set, the backend logs
+/// event-core pops and the session is written as a timeline artifact.
 pub fn serve_sim_listener(
     listener: TcpListener,
     params: SimParams,
     opts: ServerOpts,
-) -> Result<SimServeBackend> {
+) -> Result<ServeOutcome<SimServeBackend>> {
     // KV reservation for the largest context the protocol admits
     let kv_tokens = opts.max_batch.max(1) * (MAX_TOKENS_CAP + 256);
-    let backend = SimServeBackend::new(params, kv_tokens);
-    serve_on(listener, backend, &opts)
+    let backend = if opts.record.is_some() {
+        SimServeBackend::new_traced(params.clone(), kv_tokens)
+    } else {
+        SimServeBackend::new(params.clone(), kv_tokens)
+    };
+    let out = serve_on(listener, backend, &opts)?;
+    if let Some(path) = &opts.record {
+        let tl = timeline::server_timeline(&params, opts.max_batch, &out.recording);
+        std::fs::write(path, tl.to_bytes())
+            .with_context(|| format!("write timeline artifact {}", path.display()))?;
+        println!("recorded session timeline to {}", path.display());
+    }
+    Ok(out)
 }
 
-/// The coordinator loop over any `SeqBackend`. Returns the backend after
-/// `opts.max_requests` responses (the accept thread exits with the
-/// process; its listener keeps the port until then).
+/// The coordinator loop over any `SeqBackend`. Returns the backend and
+/// the session recording after `opts.max_requests` responses (the accept
+/// thread exits with the process; its listener keeps the port until
+/// then).
 pub fn serve_on<B: SeqBackend>(
     listener: TcpListener,
     backend: B,
     opts: &ServerOpts,
-) -> Result<B> {
+) -> Result<ServeOutcome<B>> {
     let addr = listener.local_addr()?;
     println!("floe serving on {addr} (max-batch {})", opts.max_batch.max(1));
     let (tx, rx) = mpsc::channel::<Inbound>();
     thread::spawn(move || accept_loop(listener, tx));
 
-    let mut sched = Scheduler::new(backend, opts.max_batch);
+    let mut sched = Scheduler::new(RecordingBackend::new(backend), opts.max_batch);
+    // per-request accounting history, in retirement order — feeds the
+    // `stats` command live and the recorded artifact at exit
+    let mut history: Vec<CompletionRecord> = Vec::new();
     // per-request response route: connection + echoed tag
     let mut routes: HashMap<u64, (ConnTx, Option<Json>)> = HashMap::new();
     // connections with responses in flight, drained before a capped exit
@@ -228,21 +282,30 @@ pub fn serve_on<B: SeqBackend>(
             // idle: block for the next arrival, then optionally hold the
             // batch-formation window so co-arrivals decode together
             match rx.recv_timeout(Duration::from_millis(100)) {
-                Ok(inb) => {
+                Ok(Inbound::Req(inb)) => {
                     if opts.gather_ms > 0 {
                         thread::sleep(Duration::from_millis(opts.gather_ms));
                     }
                     admit(&mut sched, &mut routes, inb);
                 }
+                Ok(Inbound::Stats { tag, conn }) => {
+                    handle_stats(&sched, &history, tag, conn, opts, &mut to_drain, &mut served);
+                }
                 Err(RecvTimeoutError::Timeout) => continue,
-                Err(RecvTimeoutError::Disconnected) => return Ok(sched.into_backend()),
+                Err(RecvTimeoutError::Disconnected) => return Ok(finish(sched, history)),
             }
         }
         // token boundary: drain whatever arrived while decoding
         while let Ok(inb) = rx.try_recv() {
-            admit(&mut sched, &mut routes, inb);
+            match inb {
+                Inbound::Req(inb) => admit(&mut sched, &mut routes, inb),
+                Inbound::Stats { tag, conn } => {
+                    handle_stats(&sched, &history, tag, conn, opts, &mut to_drain, &mut served);
+                }
+            }
         }
         for done in sched.step() {
+            history.push(CompletionRecord::of(&done));
             if let Some(conn) = respond(&mut routes, &done) {
                 if opts.max_requests > 0 {
                     to_drain.insert(conn.key(), conn);
@@ -255,21 +318,85 @@ pub fn serve_on<B: SeqBackend>(
             for conn in to_drain.values() {
                 conn.drain(Duration::from_secs(2));
             }
-            return Ok(sched.into_backend());
+            return Ok(finish(sched, history));
         }
     }
 }
 
+/// Tear the scheduler down into the exit outcome.
+fn finish<B: SeqBackend>(
+    sched: Scheduler<RecordingBackend<B>>,
+    completions: Vec<CompletionRecord>,
+) -> ServeOutcome<B> {
+    let total_us = sched.backend().now_us();
+    let max_batch_seen = sched.max_batch_seen() as u64;
+    let (backend, entries, trace) = sched.into_backend().finish();
+    let event_log = backend.event_log_bytes().to_vec();
+    let snapshot = backend.snapshot();
+    ServeOutcome {
+        backend,
+        recording: SessionRecording {
+            entries,
+            trace,
+            completions,
+            event_log,
+            snapshot,
+            total_us,
+            max_batch_seen,
+        },
+    }
+}
+
+/// The live inspector report: same per-request fold and store snapshot
+/// the recorded artifact captures, through the same `inspect_parts`
+/// path, so a `stats` reply and an offline inspection of the artifact
+/// agree bit-for-bit on a quiescent server.
+fn live_report<B: SeqBackend>(
+    sched: &Scheduler<RecordingBackend<B>>,
+    history: &[CompletionRecord],
+) -> InspectorReport {
+    let snap = sched.backend().snapshot();
+    let stats = snap.as_ref().map(|s| StatsRecord::of(&s.stats));
+    timeline::inspect_parts(
+        history,
+        stats.as_ref(),
+        snap.as_ref().map(|s| s.cache_hit_rate).unwrap_or(0.0),
+        sched.backend().now_us(),
+        sched.max_batch_seen() as u64,
+    )
+}
+
+fn handle_stats<B: SeqBackend>(
+    sched: &Scheduler<RecordingBackend<B>>,
+    history: &[CompletionRecord],
+    tag: Option<Json>,
+    conn: ConnTx,
+    opts: &ServerOpts,
+    to_drain: &mut HashMap<usize, ConnTx>,
+    served: &mut usize,
+) {
+    let mut j = live_report(sched, history).to_json();
+    if let (Json::Obj(m), Some(tag)) = (&mut j, tag) {
+        m.insert("tag".to_string(), tag);
+    }
+    conn.send_line(jwrite(&j));
+    if opts.max_requests > 0 {
+        to_drain.insert(conn.key(), conn);
+    }
+    *served += 1;
+}
+
 fn admit<B: SeqBackend>(
-    sched: &mut Scheduler<B>,
+    sched: &mut Scheduler<RecordingBackend<B>>,
     routes: &mut HashMap<u64, (ConnTx, Option<Json>)>,
-    inb: Inbound,
+    inb: InboundReq,
 ) {
     routes.insert(inb.req.id, (inb.conn, inb.tag));
     // arrival in the backend's time base: now minus the wall time the
     // request already spent between the reader thread and this drain
     let dwell_us = inb.arrival.elapsed().as_secs_f64() * 1e6;
     let arrival_us = (sched.backend().now_us() - dwell_us).max(0.0);
+    sched.backend_mut().note_arrival(arrival_us, &inb.req);
     sched.enqueue_at(inb.req, arrival_us);
 }
 
@@ -343,15 +470,27 @@ fn reader_loop(stream: TcpStream, tx: mpsc::Sender<Inbound>, ids: Arc<AtomicU64>
         if line.trim().is_empty() {
             continue;
         }
+        if let Ok(j) = parse(&line) {
+            if j.get("cmd").and_then(Json::as_str) == Some("stats") {
+                let inb = Inbound::Stats {
+                    tag: j.get("tag").cloned(),
+                    conn: writer.clone(),
+                };
+                if tx.send(inb).is_err() {
+                    break; // coordinator exited
+                }
+                continue;
+            }
+        }
         let id = ids.fetch_add(1, Ordering::Relaxed);
         match parse_request(&line, id) {
             Ok((req, tag)) => {
-                let inb = Inbound {
+                let inb = Inbound::Req(InboundReq {
                     req,
                     tag,
                     conn: writer.clone(),
                     arrival: Instant::now(),
-                };
+                });
                 if tx.send(inb).is_err() {
                     break; // coordinator exited
                 }

@@ -6,19 +6,28 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::{Arc, Barrier};
 use std::thread;
 
 use floe::coordinator::policy::{SystemConfig, SystemKind};
 use floe::coordinator::sim::{SimParams, SimServeBackend};
+use floe::coordinator::timeline::{self, ReplayError, Timeline};
 use floe::hwsim::RTX3090;
-use floe::server::{serve_sim_listener, ServerOpts};
-use floe::util::json::{parse, Json};
+use floe::server::{serve_sim_listener, ServeOutcome, ServerOpts};
+use floe::util::json::{parse, write as jwrite, Json};
 
-type ServerHandle =
-    (std::net::SocketAddr, thread::JoinHandle<anyhow::Result<SimServeBackend>>);
+type ServerHandle = (
+    std::net::SocketAddr,
+    thread::JoinHandle<anyhow::Result<ServeOutcome<SimServeBackend>>>,
+);
 
-fn sim_server(max_requests: usize, max_batch: usize, gather_ms: u64) -> ServerHandle {
+fn sim_server_recording(
+    max_requests: usize,
+    max_batch: usize,
+    gather_ms: u64,
+    record: Option<PathBuf>,
+) -> ServerHandle {
     let listener = TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap();
     let system = SystemConfig::new(SystemKind::Floe);
@@ -30,9 +39,14 @@ fn sim_server(max_requests: usize, max_batch: usize, gather_ms: u64) -> ServerHa
         max_requests,
         max_batch,
         gather_ms,
+        record,
     };
     let handle = thread::spawn(move || serve_sim_listener(listener, params, opts));
     (addr, handle)
+}
+
+fn sim_server(max_requests: usize, max_batch: usize, gather_ms: u64) -> ServerHandle {
+    sim_server_recording(max_requests, max_batch, gather_ms, None)
 }
 
 #[test]
@@ -62,7 +76,7 @@ fn overlapping_clients_get_batched_responses_with_stats() {
 
     let responses: Vec<(usize, Json)> =
         clients.into_iter().map(|c| c.join().unwrap().unwrap()).collect();
-    let backend = server.join().unwrap().unwrap();
+    let backend = server.join().unwrap().unwrap().backend;
 
     // every served request was retired out of the attribution ledger the
     // moment it completed: with all N globally-unique ids finished the
@@ -142,4 +156,52 @@ fn pipelined_requests_on_one_connection_all_complete() {
     tags.sort();
     assert_eq!(tags, vec![0, 1, 2]);
     server.join().unwrap().unwrap();
+}
+
+/// PR 7 satellite: serve a pipelined session with recording on, ask the
+/// live server for its `stats` report, then re-derive the same report
+/// offline from the written timeline artifact — the two JSON lines must
+/// match byte for byte (both flow through `timeline::inspect_parts` and
+/// `util::json::write`, so every f64 survives exactly).
+#[test]
+fn stats_rederived_offline_from_artifact_matches_live_protocol() {
+    const M: usize = 3;
+    let path = std::env::temp_dir().join(format!("floe_stats_{}.fltl", std::process::id()));
+    // cap = M completions + the stats reply
+    let (addr, server) = sim_server_recording(M + 1, 2, 50, Some(path.clone()));
+    let mut conn = TcpStream::connect(addr).unwrap();
+    for i in 0..M {
+        writeln!(conn, r#"{{"prompt":"record me","max_tokens":{},"tag":{i}}}"#, 4 + i).unwrap();
+    }
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    for _ in 0..M {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = parse(line.trim()).unwrap();
+        assert!(j.get("tokens").is_some(), "{j:?}");
+    }
+    // all M responses read — the session is quiescent; ask for the live
+    // inspector report (no tag, so the reply is the bare report object)
+    writeln!(conn, r#"{{"cmd":"stats"}}"#).unwrap();
+    let mut live = String::new();
+    reader.read_line(&mut live).unwrap();
+    let out = server.join().unwrap().unwrap();
+
+    // the live ledger drained at quiescence (leak regression guard)
+    assert!(out.backend.store().stats().attributed.is_empty());
+
+    let bytes = std::fs::read(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let tl = Timeline::from_bytes(&bytes).unwrap();
+    assert!(!tl.replayable, "live sessions are inspect-only");
+    assert!(
+        matches!(timeline::replay(&tl), Err(ReplayError::NotReplayable)),
+        "replaying a live recording must refuse, not diverge"
+    );
+    let obs = tl.obs.as_ref().expect("live recording carries observations");
+    assert_eq!(obs.completions.len(), M);
+    let offline = timeline::inspect(obs);
+    assert!(offline.ledger_exact, "quiescent session must re-derive the ledger exactly");
+    assert_eq!(offline.requests, M as u64);
+    assert_eq!(live.trim(), jwrite(&offline.to_json()));
 }

@@ -1,0 +1,87 @@
+//! The committed replay corpus (PR 7): every artifact under
+//! `tests/replay_corpus/` must decode, replay bit-exactly, and pin the
+//! overlap speedup at the serve-load operating point.
+//!
+//! The corpus artifacts are *spec-only* (no observation section): the
+//! replayer re-derives every observation byte, so the committed files
+//! never embed floats computed outside the simulator. They are written
+//! by `python/make_corpus.py`; the first test asserts the committed
+//! bytes are exactly what the Rust encoder emits for the same spec, so
+//! the two writers cannot drift silently.
+
+use floe::config::ResidencyKind;
+use floe::coordinator::timeline::{inspect, replay, SessionSpec, Timeline, WorkloadSource};
+use floe::experiments::serveload;
+use floe::workload::WorkloadSpec;
+
+const LOCKSTEP: &[u8] = include_bytes!("replay_corpus/serveload_cap4_lockstep.fltl");
+const OVERLAP: &[u8] = include_bytes!("replay_corpus/serveload_cap4_overlap.fltl");
+
+/// The corpus operating point: `exp-serve-load`'s system at its default
+/// VRAM budget, batch cap 4, 12 requests at 8 req/s (seed 23).
+fn corpus_spec(overlap: bool) -> SessionSpec {
+    let mut p = serveload::sweep_params(ResidencyKind::Lru, serveload::DEFAULT_VRAM_GB);
+    p.system = p.system.clone().with_overlap(overlap);
+    SessionSpec::from_params(
+        &p,
+        4,
+        WorkloadSource::Spec(WorkloadSpec {
+            n_requests: 12,
+            arrival_rate_hz: 8.0,
+            prompt_len: (8, 24),
+            output_tokens: (16, 48),
+            seed: 23,
+        }),
+    )
+}
+
+#[test]
+fn committed_artifacts_match_the_rust_encoder_byte_for_byte() {
+    for (bytes, overlap, name) in [(LOCKSTEP, false, "lockstep"), (OVERLAP, true, "overlap")] {
+        let expect =
+            Timeline { spec: corpus_spec(overlap), obs: None, replayable: true }.to_bytes();
+        if bytes != expect.as_slice() {
+            let at = bytes
+                .iter()
+                .zip(expect.iter())
+                .position(|(a, b)| a != b)
+                .unwrap_or(bytes.len().min(expect.len()));
+            panic!(
+                "{name}: committed artifact diverges from the encoder at byte {at} \
+                 (committed {} bytes, encoder {} bytes) — regenerate with \
+                 python/make_corpus.py",
+                bytes.len(),
+                expect.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn corpus_replays_bit_exactly() {
+    for (bytes, name) in [(LOCKSTEP, "lockstep"), (OVERLAP, "overlap")] {
+        let tl = Timeline::from_bytes(bytes).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(tl.replayable, "{name}: corpus artifacts must be replayable");
+        let obs = replay(&tl).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(!obs.event_log.is_empty(), "{name}: event log empty");
+        assert_eq!(obs.event_log.len() % 17, 0, "{name}: 17-byte pop framing broken");
+        assert_eq!(obs.completions.len(), 12, "{name}: one record per request");
+    }
+}
+
+/// Regression pin: at the serve-load operating point (cap 4), `--overlap`
+/// buys at least 5% aggregate tok/s over lockstep boundaries (1.09x when
+/// pinned).
+#[test]
+fn overlap_speedup_pin_holds_on_replay() {
+    let tps = |bytes: &[u8]| {
+        let tl = Timeline::from_bytes(bytes).unwrap();
+        inspect(&replay(&tl).unwrap()).aggregate_tps
+    };
+    let lockstep = tps(LOCKSTEP);
+    let overlap = tps(OVERLAP);
+    assert!(
+        overlap >= 1.05 * lockstep,
+        "overlap {overlap:.2} tok/s < 1.05x lockstep {lockstep:.2} tok/s"
+    );
+}

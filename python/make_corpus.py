@@ -1,14 +1,16 @@
 #!/usr/bin/env python3
 """Generate the committed replay-corpus artifacts (rust/tests/replay_corpus/).
 
-Writes two *spec-only* timeline artifacts (format v1, see DESIGN.md S9 and
+Writes three *spec-only* timeline artifacts (format v1, see DESIGN.md S9 and
 rust/src/coordinator/timeline.rs) at the serve-load operating point the
 regression pin uses: FloE on a simulated RTX-3090 at 14.25 GB, skewed sticky
-routing, batch cap 4, 12 requests at 8 req/s (seed 23) -- once lockstep and
-once with `--overlap`. The artifacts carry no observation section: the
+routing, batch cap 4, 12 requests at 8 req/s (seed 23) -- once lockstep, once
+with `--overlap`, and once as a 2-node x 1-device round-robin *cluster*
+session at the same aggregate VRAM (2 x 14.25 GB, the FLAG_CLUSTER
+extension of DESIGN.md S10). The artifacts carry no observation section: the
 replayer re-drives the session from the spec and the in-tree test
 (rust/tests/replay_corpus.rs) asserts both that these bytes are exactly what
-the Rust encoder would emit and that the replayed tok/s ratio holds.
+the Rust encoder would emit and that the replayed tok/s ratios hold.
 
 Spec-only artifacts are committed (instead of full recordings) so the corpus
 stays a few hundred bytes and never embeds floats computed by a second
@@ -24,6 +26,7 @@ OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "replay
 MAGIC = b"FLTL"
 VERSION = 1
 FLAG_REPLAYABLE = 1 << 1  # no observations section: bit 0 stays clear
+FLAG_CLUSTER = 1 << 2  # ClusterExt section appended after the spec
 
 
 def u8(v):
@@ -82,18 +85,38 @@ def spec_bytes(overlap):
     return b
 
 
-def artifact(overlap):
-    return MAGIC + u32(VERSION) + u32(FLAG_REPLAYABLE) + spec_bytes(overlap)
+def cluster_bytes():
+    """ClusterExt: 2 nodes x 1 device, round-robin, 28.5 GB aggregate,
+    64 GB host pools, no failure, no observation section (spec-only)."""
+    b = b""
+    b += u32(2)  # n_nodes
+    b += u32(1)  # devices_per_node
+    b += u8(0)  # shard: Layer (ShardPolicy::ALL[0])
+    b += u8(0)  # placement: RoundRobin (ClusterPlacement::tag)
+    b += f64(2.0 * 14.25)  # vram_gb_total (fixed aggregate)
+    b += f64(64.0)  # host_ram_gb
+    b += u8(0)  # failure: absent
+    b += u8(0)  # obs: absent
+    return b
+
+
+def artifact(overlap, cluster=False):
+    flags = FLAG_REPLAYABLE | (FLAG_CLUSTER if cluster else 0)
+    b = MAGIC + u32(VERSION) + u32(flags) + spec_bytes(overlap)
+    if cluster:
+        b += cluster_bytes()
+    return b
 
 
 def main():
     os.makedirs(OUT_DIR, exist_ok=True)
-    for overlap, name in [
-        (False, "serveload_cap4_lockstep.fltl"),
-        (True, "serveload_cap4_overlap.fltl"),
+    for overlap, cluster, name in [
+        (False, False, "serveload_cap4_lockstep.fltl"),
+        (True, False, "serveload_cap4_overlap.fltl"),
+        (False, True, "cluster_2x1_rr.fltl"),
     ]:
         path = os.path.join(OUT_DIR, name)
-        data = artifact(overlap)
+        data = artifact(overlap, cluster)
         with open(path, "wb") as f:
             f.write(data)
         print(f"wrote {path} ({len(data)} bytes)")

@@ -65,6 +65,7 @@ class Rng:
 HBM, EFF, LAUNCH, DISPATCH, FP16_TF = 936.0, 0.70, 9.0, 12.0, 71.0
 PCIE_GBPS, PCIE_API = 25.6, 12.0
 P2P_GBPS, P2P_API = 50.0, 6.0
+NET_GBPS, NET_API = 1.6, 150.0  # hwsim::NET_LINK (latency-dominated)
 CPU_GFLOPS = 95.0
 DM, DFF, NL, NE, TOPK = 4096, 14336, 32, 8, 2
 
@@ -123,6 +124,10 @@ def pcie_copy_us(bytes_):
 
 def p2p_copy_us(bytes_):
     return bytes_ / (P2P_GBPS * 1e3) + P2P_API
+
+
+def net_copy_us(bytes_):
+    return bytes_ / (NET_GBPS * 1e3) + NET_API
 
 
 # ---------------------------------------------------------------- systems
@@ -393,7 +398,13 @@ class Store:
     def __init__(self, system, budget_per_device):
         n = max(system.devices, 1)
         self.system = system
-        self.devices = [ResidentSet(budget_per_device, make_policy(system.residency))
+        # PR 8 satellite: replicas are carved OUT of the cache budget —
+        # with replication on the resident set runs on budget - replica
+        # pool, so resident + replica bytes never exceed the device budget
+        self.replica_budget = int(budget_per_device * 0.05)
+        resident_budget = (budget_per_device - self.replica_budget
+                           if system.replicate_top > 0 else budget_per_device)
+        self.devices = [ResidentSet(resident_budget, make_policy(system.residency))
                         for _ in range(n)]
         self.bus_free = [0.0] * n
         self.bus_busy = [0.0] * n
@@ -420,10 +431,18 @@ class Store:
         self.home_map = {}
         self.replicas = {}
         self.replica_bytes = [0] * n
-        self.replica_budget = int(budget_per_device * 0.2)
         self.boundary_ticks = 0
         self.rebalances = 0
         self.writebacks = 0
+        # cluster member dimension (PR 8): this store is node `node_id`
+        # of an `n_nodes` cluster with one local host-RAM expert pool
+        self.n_nodes = 1
+        self.node_id = 0
+        self.host_pool = set()
+        self.host_bytes = 0
+        self.host_budget = int(64e9)
+        self.net_pulls = 0
+        self.net_bytes = 0.0
 
     def pop_note(self, key):
         self.pop_step += 1
@@ -831,6 +850,58 @@ class Store:
         m = sum(d.misses for d in self.devices)
         return h / (h + m) if h + m else 0.0
 
+    # ---------------- cluster tier (mirror of store/mod.rs cluster tier)
+
+    def seed_host_pool(self, keys, bytes_per_key):
+        for key in keys:
+            if key in self.host_pool:
+                continue
+            if self.host_bytes + bytes_per_key > self.host_budget:
+                break
+            self.host_pool.add(key)
+            self.host_bytes += bytes_per_key
+
+    def host_adopt(self, key, bytes_):
+        if self.host_bytes + bytes_ <= self.host_budget and key not in self.host_pool:
+            self.host_pool.add(key)
+            self.host_bytes += bytes_
+
+    def demand_link_us(self, key, bytes_):
+        """ExpertStore::demand_link_us: host PCIe when the home node's
+        pool stages the key (or the topology is unclustered), else the
+        network link with first-touch host adoption."""
+        if self.n_nodes <= 1:
+            return pcie_copy_us(bytes_)
+        if key in self.host_pool:
+            return pcie_copy_us(bytes_)
+        dur = net_copy_us(bytes_)
+        self.net_pulls += 1
+        self.net_bytes += bytes_
+        self.host_adopt(key, int(bytes_))
+        return dur
+
+    def net_restore(self, keys, bytes_per_key):
+        """ExpertStore::net_restore: coalesced Net-link plans per home
+        device; host-resident keys cost only the api handshake."""
+        n = len(self.devices)
+        plans = [[] for _ in range(n)]
+        for key in keys:
+            dev = self.home(key)
+            if key in self.host_pool:
+                plans[dev].append((0.0, NET_API, NET_API))
+            else:
+                b = max(float(bytes_per_key), 1.0)
+                plans[dev].append((float(bytes_per_key), net_copy_us(b), NET_API))
+                self.host_adopt(key, bytes_per_key)
+        done = self.now
+        for dev, items in enumerate(plans):
+            if not items:
+                continue
+            self.net_pulls += len(items)
+            self.net_bytes += sum(it[0] for it in items)
+            done = max(done, self.copy_batch(dev, items, True))
+        return done
+
 
 def simulate(p, input_len, output_len):
     rng = Rng(p.seed)
@@ -903,8 +974,8 @@ def simulate(p, input_len, output_len):
                     store.tick(t)
                     compute_us += t
                     return None
-                ready = store.demand_to(
-                    store.home(key), pcie_copy_us(max(per_bytes, 1.0)), per_bytes)
+                dur = store.demand_link_us(key, max(per_bytes, 1.0))
+                ready = store.demand_to(store.home(key), dur, per_bytes)
                 store.admit(key, per_cached)
                 return (ready, "demand", key, resident, store.home(key))
 
@@ -1076,6 +1147,7 @@ def _serving_prefill(p, store, per_bytes, exp_c, input_len):
 
 class _SimSeq:
     def __init__(self, req):
+        self.rid = req.rid
         self.rng = Rng(req.seed)
         self.prev = [[] for _ in range(NL)]
         self.input_len = max(req.plen, 1)
@@ -1108,8 +1180,8 @@ def _serving_decode_token(p, store, seq, per_bytes, per_cached, exp_c, reuse,
                     store.admit(key, per_cached)
                     ready, cause = done, "prefetch"
                 else:
-                    ready = store.demand_to(
-                        store.home(key), pcie_copy_us(max(per_bytes, 1.0)), per_bytes)
+                    dur = store.demand_link_us(key, max(per_bytes, 1.0))
+                    ready = store.demand_to(store.home(key), dur, per_bytes)
                     store.admit(key, per_cached)
                     cause = "demand"
             if key not in boundary_seen:
@@ -1186,9 +1258,8 @@ def _serving_decode_boundary(p, store, seqs, per_bytes, per_cached, exp_c, reuse
                         store.admit(key, per_cached)
                         ready, cause = done, "prefetch"
                     else:
-                        ready = store.demand_to(
-                            store.home(key), pcie_copy_us(max(per_bytes, 1.0)),
-                            per_bytes)
+                        dur = store.demand_link_us(key, max(per_bytes, 1.0))
+                        ready = store.demand_to(store.home(key), dur, per_bytes)
                         store.admit(key, per_cached)
                         cause = "demand"
                 if key not in boundary_seen:
@@ -1324,6 +1395,248 @@ def serving_params(overlap=False):
                   zipf_s=1.2, stickiness=0.5, seed=7)
 
 
+# ------------------------------------------------------------- cluster (PR 8)
+# Mirror of coordinator/cluster.rs::simulate_cluster: N member nodes,
+# each a simulate_serving-shaped backend over a cluster-member store,
+# joined on the deterministic cluster clock.
+
+
+def predicted_first_expert(zipf_s, seed):
+    # sim.rs::predicted_first_expert (exact first routing draw)
+    w = zipf_cdf(NE, zipf_s)
+    rng = Rng(seed)
+    r = rng.f64() * w[NE - 1]
+    return min(partition_point(w, r), NE - 1)
+
+
+def member_params(base, devices, shard, vram_gb):
+    # SystemConfig::with_devices + per-device VRAM slice
+    s = System(base.system.kind, base.system.residency, devices=devices,
+               shard=shard, overlap=base.system.overlap)
+    p = Params(s, vram_gb, zipf_s=base.zipf_s, stickiness=base.stickiness,
+               seed=base.seed)
+    p.inter_hit = base.inter_hit
+    p.intra_recall = base.intra_recall
+    return p
+
+
+class _ClusterNode:
+    """One node coordinator: Scheduler<SimServeBackend> as a member."""
+
+    def __init__(self, p, kv_tokens, cap, node_id, n_nodes, host_ram_gb):
+        self.p = p
+        self.cap = max(cap, 1)
+        budget = cache_budget_bytes(p, kv_tokens)
+        store = Store(p.system, int(budget))
+        store.n_nodes = n_nodes
+        store.node_id = node_id
+        store.host_budget = int(host_ram_gb * 1e9)
+        self.store = store
+        self.weights = zipf_cdf(NE, p.zipf_s)
+        self.per_cached = cached_bytes(p)
+        self.per_bytes = transfer_bytes(p)
+        self.exp_c = expert_compute_us(p)
+        self.reuse = boundary_compute_reuse(p)
+        self.counters = {"full": 0, "reused": 0}
+        # warm at construction (SimServeBackend::new)
+        order = sorted([(l, e) for l in range(NL) for e in range(NE)],
+                       key=lambda k: k[1])
+        full_flags = [False] * len(store.devices)
+        for key in order:
+            dev = store.home(key)
+            if full_flags[dev]:
+                continue
+            if not store.warm_admit(key, self.per_cached):
+                full_flags[dev] = True
+                if all(full_flags):
+                    break
+        # stage the host pools (sim.rs::seed_cluster_host_pools): own
+        # expert-mod shard first, then the rest, until host RAM fills
+        if n_nodes > 1:
+            b = int(max(self.per_bytes, 1.0))
+            own, rest = [], []
+            for l in range(NL):
+                for e in range(NE):
+                    (own if e % n_nodes == node_id % n_nodes else rest).append((l, e))
+            store.seed_host_pool(own, b)
+            store.seed_host_pool(rest, b)
+        self.pending = []  # (TimedReq, arrival stamp)
+        self.active = []
+        self.completions = []  # {id, tokens, error, finished_us}
+        self.tokens = 0
+        self.alive = True
+
+    def has_work(self):
+        return bool(self.pending or self.active)
+
+    def enqueue_at(self, req, stamp):
+        self.pending.append((req, stamp))
+
+    def step(self):
+        # sched.rs::step: idle to the head arrival when empty, admit the
+        # ripe FIFO prefix (prefill clock advance cannot pull later
+        # arrivals into the same boundary), one boundary batch, retire
+        store = self.store
+        if not self.active and self.pending and self.pending[0][1] > store.now:
+            store.advance_to(self.pending[0][1])
+        ripe = store.now
+        while (len(self.active) < self.cap and self.pending
+               and self.pending[0][1] <= ripe):
+            req, _stamp = self.pending.pop(0)
+            _serving_prefill(self.p, store, self.per_bytes, self.exp_c,
+                             max(req.plen, 1))
+            self.active.append(_SimSeq(req))
+        boundary_seen = set()
+        if self.p.system.overlap:
+            _serving_decode_boundary(
+                self.p, store, self.active, self.per_bytes, self.per_cached,
+                self.exp_c, self.reuse, self.weights, boundary_seen,
+                self.counters)
+            for s in self.active:
+                s.emitted += 1
+                self.tokens += 1
+        else:
+            for s in self.active:
+                _serving_decode_token(
+                    self.p, store, s, self.per_bytes, self.per_cached,
+                    self.exp_c, self.reuse, self.weights, boundary_seen,
+                    self.counters)
+                s.emitted += 1
+                self.tokens += 1
+        done = [s for s in self.active if s.emitted >= s.max_tokens]
+        self.active = [s for s in self.active if s.emitted < s.max_tokens]
+        for s in done:
+            self.completions.append({"id": s.rid, "tokens": s.emitted,
+                                     "error": None, "finished_us": store.now})
+
+    def fail_active(self, msg):
+        n = len(self.active)
+        for s in self.active:
+            self.completions.append({"id": s.rid, "tokens": s.emitted,
+                                     "error": msg, "finished_us": self.store.now})
+        self.active = []
+        return n
+
+    def drain_pending(self):
+        out = self.pending
+        self.pending = []
+        return out
+
+
+def simulate_cluster(base, n_nodes, devices_per_node, vram_total, wl,
+                     placement="round-robin", host_ram_gb=64.0, cap=4,
+                     failure=None, shard="layer"):
+    """cluster.rs::simulate_cluster. `failure` is (node, t_us) or None."""
+    n = max(n_nodes, 1)
+    max_ctx = max(t.plen + t.max_tokens for t in wl)
+    kv_tokens = max(cap, 1) * max_ctx
+    vram_per_device = vram_total / (n * devices_per_node)
+    nodes = [_ClusterNode(
+        member_params(base, devices_per_node, shard, vram_per_device),
+        kv_tokens, cap, j, n, host_ram_gb) for j in range(n)]
+    rr = [0]
+    assignments = {}
+    errored = 0
+    rehomed = 0
+    idx = 0
+    pending_failure = failure
+
+    def load(j):
+        return len(nodes[j].active) + len(nodes[j].pending)
+
+    def place(t):
+        survivors = [j for j in range(n) if nodes[j].alive]
+        if placement == "round-robin":
+            j = survivors[rr[0] % len(survivors)]
+            rr[0] += 1
+            return j
+        if placement == "least-loaded":
+            best = survivors[0]
+            for j in survivors[1:]:
+                if load(j) < load(best):
+                    best = j
+            return best
+        # expert-affinity: the node hottest for the predicted first
+        # expert, ties toward least-loaded then lowest id
+        e = predicted_first_expert(base.zipf_s, t.seed)
+        best = survivors[0]
+        best_m = sum(nodes[best].store.pop_mass((l, e)) for l in range(NL))
+        for j in survivors[1:]:
+            m = sum(nodes[j].store.pop_mass((l, e)) for l in range(NL))
+            if m > best_m or (m == best_m and load(j) < load(best)):
+                best, best_m = j, m
+        return best
+
+    while True:
+        t_arr = wl[idx].arrival_us if idx < len(wl) else None
+        t_fail = pending_failure[1] if pending_failure else None
+        if t_arr is None and t_fail is None:
+            horizon = float("inf")
+        else:
+            horizon = min(t for t in (t_arr, t_fail) if t is not None)
+        # advance every working alive node to the horizon (earliest
+        # clock first, ties toward the lowest id)
+        while True:
+            cands = [j for j in range(n) if nodes[j].alive
+                     and nodes[j].has_work() and nodes[j].store.now < horizon]
+            if not cands:
+                break
+            nodes[min(cands, key=lambda j: (nodes[j].store.now, j))].step()
+        if t_arr is None and t_fail is None:
+            break
+        if t_fail is not None and (t_arr is None or t_fail <= t_arr):
+            fnode, ft = pending_failure
+            pending_failure = None
+            if not nodes[fnode].alive:
+                continue
+            dead = nodes[fnode]
+            dead.store.advance_to(ft)
+            errored += dead.fail_active("node %d down" % fnode)
+            dead.alive = False
+            survivors = [j for j in range(n) if nodes[j].alive]
+            for req, stamp in dead.drain_pending():
+                j = survivors[rr[0] % len(survivors)]
+                rr[0] += 1
+                assignments[req.rid] = j
+                nodes[j].enqueue_at(req, stamp)
+            keys = sorted(dead.store.host_pool)
+            rehomed += len(keys)
+            b = int(max(dead.per_bytes, 1.0))
+            shares = [[] for _ in survivors]
+            for i, key in enumerate(keys):
+                shares[i % len(survivors)].append(key)
+            for j, share in zip(survivors, shares):
+                nodes[j].store.net_restore(share, b)
+        else:
+            t = wl[idx]
+            idx += 1
+            j = place(t)
+            assignments[t.rid] = j
+            nodes[j].enqueue_at(t, t.arrival_us)
+
+    total_us = max((nd.store.now for nd in nodes if nd.alive), default=0.0)
+    tokens = sum(c["tokens"] for nd in nodes for c in nd.completions)
+    return {
+        "tps": tokens / (total_us / 1e6) if total_us > 0 else 0.0,
+        "tokens": tokens,
+        "total_us": total_us,
+        "node_us": [nd.store.now for nd in nodes],
+        "errored": errored,
+        "rehomed": rehomed,
+        "net_pulls": sum(nd.store.net_pulls for nd in nodes),
+        "net_bytes": sum(nd.store.net_bytes for nd in nodes),
+        "served": sum(len(nd.completions) for nd in nodes),
+        "errors": sum(1 for nd in nodes for c in nd.completions
+                      if c["error"] is not None),
+        "served_ids": sorted(c["id"] for nd in nodes for c in nd.completions),
+        "assignments": assignments,
+        "alive": [nd.alive for nd in nodes],
+        "per_pull": [nd.store.net_bytes / nd.store.net_pulls
+                     for nd in nodes if nd.store.net_pulls > 0],
+        "node0_net_pulls": nodes[0].store.net_pulls,
+    }
+
+
 def main():
     print("== shard.rs acceptance margins (Floe lru, zipf 1.2, stick 0.5, 11 GB/dev) ==")
     mk = lambda dev, coal, spill: Params(
@@ -1452,13 +1765,75 @@ def main():
           f"{base1['stall_demand']:.0f} -> {ov1['stall_demand']:.0f} us "
           f"(decrease: {ov1['stall_demand'] < base1['stall_demand']})")
 
-    print("== PR 6 replica write-back (pop margins re-verified, writebacks live) ==")
+    print("== PR 6 replica write-back (pop margins re-verified under the carve) ==")
     bal_pop2 = simulate(mkp("balanced", 2, True), 64, 256)
     print(f"  2-dev pop writebacks {bal_pop2['writebacks']} "
-          f"(must be > 0 to exercise the path)")
+          f"(the write-back path itself is pinned by a forced-eviction "
+          f"test in tests/shard_store.rs)")
     print(f"  2-dev tps pop/hash = {bal_pop2['tps']/hash_coop['tps']:.4f} "
           f"(floor 1.02), 4-dev = {bp4['tps']/hc4['tps']:.4f} (floor 1.10), "
           f"4-dev writebacks {bp4['writebacks']}")
+
+    print("== PR 8 cluster tier (coordinator/cluster.rs mirror) ==")
+    # 1-node cluster == simulate_serving, bit-exact (the cluster driver
+    # must degenerate to the flat serving loop)
+    pc = Params(System(FLOE), 14.25)  # cluster.rs::base_params
+    wl_eq = gen_workload(10, 4.0, 8, 32, 16, 64, 23)
+    one_c = simulate_cluster(pc, 1, 1, 14.25, wl_eq)
+    flat = simulate_serving(member_params(pc, 1, "layer", 14.25), wl_eq, 4)
+    print(f"  1-node cluster total_us {one_c['total_us']:.4f} == flat "
+          f"{flat['total_us']:.4f}: {one_c['total_us'] == flat['total_us']}, "
+          f"tokens {one_c['tokens']} == {flat['tokens']}: "
+          f"{one_c['tokens'] == flat['tokens']}, net pulls "
+          f"{one_c['net_pulls']} (must be 0)")
+    # the acceptance margin: 2 nodes beat 1 at fixed 28.5 GB aggregate
+    wl_m = gen_workload(24, 16.0, 8, 32, 16, 64, 7)
+    m1 = simulate_cluster(pc, 1, 1, 28.5, wl_m)
+    m2 = simulate_cluster(pc, 2, 1, 28.5, wl_m)
+    print(f"  margin: 1 node {m1['tps']:.2f} tok/s, 2 nodes {m2['tps']:.2f} "
+          f"tok/s, ratio {m2['tps']/m1['tps']:.4f} "
+          f"(cluster.rs asserts > 1.4), errored {m1['errored']+m2['errored']}, "
+          f"2-node served {m2['served']} of {len(wl_m)}")
+    # corpus point: 2x1 round-robin @ 2x14.25 vs the lockstep artifact
+    wl_c = workload_at(8.0, 12, 23)
+    cc = simulate_cluster(serving_params(), 2, 1, 28.5, wl_c)
+    print(f"  corpus: 2-node {cc['tps']:.2f} tok/s vs 1-node lockstep cap4 "
+          f"{r4['tps']:.2f} ({cc['tps']/r4['tps']:.4f}x, replay_corpus "
+          f"asserts > 1.5), errored {cc['errored']}, served {cc['served']}")
+    # placements all serve everything; tight host RAM forces whole-expert
+    # network pulls whose per-pull payload is identical across placements
+    wl_b = gen_workload(10, 8.0, 8, 32, 16, 64, 19)
+    pulls = []
+    for pl in ("round-robin", "least-loaded", "expert-affinity"):
+        r = simulate_cluster(pc, 2, 1, 28.5, wl_b, placement=pl,
+                             host_ram_gb=4.0)
+        pulls.extend(r["per_pull"])
+        print(f"  {pl:>15}: served {r['served']}/{len(wl_b)} errored "
+              f"{r['errored']} net pulls {r['net_pulls']} "
+              f"({r['net_bytes']/1e6:.1f} MB)")
+    print(f"  per-pull payloads identical: {len(set(pulls)) == 1} "
+          f"({pulls[0]/1e6:.3f} MB each, {len(pulls)} pulls), nonzero: "
+          f"{len(pulls) > 0}")
+    # failure scenario: node 1 down mid-trace, tight host RAM
+    wl_f = gen_workload(14, 8.0, 8, 32, 16, 64, 77)
+    t_fail = wl_f[6].arrival_us + 1.0
+    rf_ = simulate_cluster(pc, 2, 1, 28.5, wl_f, host_ram_gb=4.0,
+                           failure=(1, t_fail))
+    print(f"  failure @ {t_fail:.0f} us: errored {rf_['errored']} "
+          f"(cluster.rs asserts > 0), rehomed {rf_['rehomed']}, "
+          f"served ids complete: "
+          f"{rf_['served_ids'] == list(range(len(wl_f)))}, node1 clock "
+          f"{rf_['node_us'][1]:.0f} >= t_fail: "
+          f"{rf_['node_us'][1] >= t_fail}, survivor outlived: "
+          f"{rf_['total_us'] > rf_['node_us'][1]}, node0 pulls "
+          f"{rf_['node0_net_pulls']} >= rehomed: "
+          f"{rf_['node0_net_pulls'] >= rf_['rehomed']}")
+    # exp-cluster-sweep smoke cell (2x2 @ 28.5, serve-load shape)
+    wl_s = workload_at(8.0, 8, 7)
+    for pl in ("round-robin", "least-loaded", "expert-affinity"):
+        r = simulate_cluster(serving_params(), 2, 2, 28.5, wl_s, placement=pl)
+        print(f"  smoke 2x2 {pl:>15}: tokens {r['tokens']} errored "
+              f"{r['errored']} served {r['served']}/{len(wl_s)}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,730 @@
+//! Cluster tier: multi-node serving above the ExpertStore (DESIGN.md §10).
+//!
+//! A cluster is N node coordinators — each an independent
+//! `SimServeBackend` with its own event heap, expert store and host RAM
+//! pool — joined by a deterministic cluster clock. Requests are
+//! data-parallel: the `ClusterRouter` assigns each workload arrival to
+//! exactly one node (round-robin, least-loaded, or expert-affinity via
+//! the store's popularity tracker) and that node serves the request end
+//! to end. Nodes never share GPU state; what crosses the network link is
+//! expert weights — cross-node demand pulls (`Lookup::RemoteNode`, a
+//! store concern) and failure re-homing copies (driven from here).
+//!
+//! Determinism contract: nodes are stepped in a fixed merge order — the
+//! alive node with the earliest virtual clock, ties broken by the lowest
+//! node id — and cluster-level events (arrivals, the failure instant)
+//! partition the timeline into windows inside which nodes advance
+//! independently. Because node backends share nothing, per-node results
+//! are invariant to interleaving; the merge order only pins *placement*
+//! decisions, which read cluster state (queue depths, popularity mass)
+//! at the event instant. Two runs of the same spec and workload produce
+//! byte-identical per-node event logs, completions and store stats —
+//! the FLTL cluster extension records and replays exactly these.
+//!
+//! Failure injection: `NodeFailure` drops one node mid-session. Its
+//! in-flight requests retire as error completions, its still-queued
+//! requests re-route to survivors with their original arrival stamps,
+//! and its host-pool shard is re-homed: survivors split the dead node's
+//! stageable keys round-robin and pull them over the network link
+//! (`ExpertStore::net_restore`) so later demand fetches pay PCIe, not
+//! the 10-100x slower cross-node link.
+
+use anyhow::{bail, Result};
+
+use crate::store::{ShardPolicy, StoreStats};
+use crate::workload::TimedRequest;
+
+use super::sched::{Scheduler, SeqBackend, ServeCompletion};
+use super::sim::{predicted_first_expert, SimParams, SimServeBackend};
+
+/// How the cluster router assigns an arriving request to a node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterPlacement {
+    /// Arrival order modulo the alive-node count.
+    RoundRobin,
+    /// The node with the fewest in-flight plus queued requests.
+    LeastLoaded,
+    /// The node whose popularity tracker carries the most mass for the
+    /// request's predicted first routed expert (ties fall back to
+    /// least-loaded): requests chase the node already hot for their
+    /// experts, so cross-node pulls and cold demand fetches shrink.
+    ExpertAffinity,
+}
+
+impl ClusterPlacement {
+    pub const ALL: [ClusterPlacement; 3] = [
+        ClusterPlacement::RoundRobin,
+        ClusterPlacement::LeastLoaded,
+        ClusterPlacement::ExpertAffinity,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClusterPlacement::RoundRobin => "round-robin",
+            ClusterPlacement::LeastLoaded => "least-loaded",
+            ClusterPlacement::ExpertAffinity => "expert-affinity",
+        }
+    }
+
+    /// Serialization tag (FLTL cluster extension).
+    pub fn tag(self) -> u8 {
+        match self {
+            ClusterPlacement::RoundRobin => 0,
+            ClusterPlacement::LeastLoaded => 1,
+            ClusterPlacement::ExpertAffinity => 2,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<Self> {
+        Some(match tag {
+            0 => ClusterPlacement::RoundRobin,
+            1 => ClusterPlacement::LeastLoaded,
+            2 => ClusterPlacement::ExpertAffinity,
+            _ => return None,
+        })
+    }
+}
+
+/// Failure injection: `node` drops out of the cluster at `t_us`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeFailure {
+    pub node: usize,
+    pub t_us: f64,
+}
+
+/// One cluster configuration: N identical nodes of `devices_per_node`
+/// devices each, splitting `vram_gb_total` evenly across every device in
+/// the cluster (the fixed-aggregate-VRAM comparisons hold this constant
+/// while varying the node count).
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub n_nodes: usize,
+    pub devices_per_node: usize,
+    /// intra-node expert→device assignment (multi-device nodes).
+    pub shard: ShardPolicy,
+    pub placement: ClusterPlacement,
+    /// aggregate expert-cache VRAM across the whole cluster, GB.
+    pub vram_gb_total: f64,
+    /// per-node host RAM pool for staged expert copies, GB.
+    pub host_ram_gb: f64,
+    /// per-node continuous-batching cap.
+    pub max_batch: usize,
+    pub failure: Option<NodeFailure>,
+}
+
+impl ClusterSpec {
+    pub fn new(n_nodes: usize, devices_per_node: usize, vram_gb_total: f64) -> Self {
+        ClusterSpec {
+            n_nodes: n_nodes.max(1),
+            devices_per_node: devices_per_node.max(1),
+            shard: ShardPolicy::Layer,
+            placement: ClusterPlacement::RoundRobin,
+            vram_gb_total,
+            host_ram_gb: 64.0,
+            max_batch: 4,
+            failure: None,
+        }
+    }
+
+    pub fn with_placement(mut self, placement: ClusterPlacement) -> Self {
+        self.placement = placement;
+        self
+    }
+
+    pub fn with_failure(mut self, node: usize, t_us: f64) -> Self {
+        self.failure = Some(NodeFailure { node, t_us });
+        self
+    }
+}
+
+/// Everything one node reports back from a cluster session — the unit
+/// the FLTL cluster extension records per node and replay compares.
+#[derive(Debug, Clone)]
+pub struct NodeObs {
+    pub node: usize,
+    /// completions this node retired, in retirement order (error
+    /// completions from a failure included).
+    pub completions: Vec<ServeCompletion>,
+    pub admitted_order: Vec<u64>,
+    /// event-core pop log (non-empty only on traced runs).
+    pub event_log: Vec<u8>,
+    pub stats: StoreStats,
+    pub cache_hit_rate: f64,
+    /// this node's final virtual clock. A dead node freezes at the
+    /// boundary that observed its failure: like arrivals, failures take
+    /// effect at the first token boundary at or after their stamp.
+    pub total_us: f64,
+    pub max_batch_seen: usize,
+    pub net_pulls: u64,
+    pub net_bytes: f64,
+    pub alive: bool,
+}
+
+/// A finished cluster session.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    pub nodes: Vec<NodeObs>,
+    /// request id → node that finally served it (re-routed requests
+    /// record their survivor node).
+    pub assignments: Vec<(u64, usize)>,
+    /// cluster makespan: the latest alive node clock.
+    pub total_us: f64,
+    /// error completions retired by the failure.
+    pub errored: usize,
+    /// dead-node host-pool keys re-homed onto survivors.
+    pub rehomed_keys: usize,
+}
+
+impl ClusterReport {
+    /// Tokens decoded across the cluster (error completions count the
+    /// tokens they emitted before the failure).
+    pub fn total_tokens(&self) -> usize {
+        self.nodes
+            .iter()
+            .flat_map(|n| n.completions.iter())
+            .map(|c| c.tokens)
+            .sum()
+    }
+
+    /// Aggregate decode throughput over the cluster makespan, tokens/s.
+    pub fn aggregate_tps(&self) -> f64 {
+        self.total_tokens() as f64 / (self.total_us / 1e6).max(1e-9)
+    }
+
+    /// Cross-node messages over the network link, summed over nodes.
+    pub fn net_pulls(&self) -> u64 {
+        self.nodes.iter().map(|n| n.net_pulls).sum()
+    }
+
+    /// Bytes moved over the network link, summed over nodes.
+    pub fn net_bytes(&self) -> f64 {
+        self.nodes.iter().map(|n| n.net_bytes).sum()
+    }
+
+    pub fn completions(&self) -> impl Iterator<Item = (usize, &ServeCompletion)> {
+        self.nodes
+            .iter()
+            .flat_map(|n| n.completions.iter().map(move |c| (n.node, c)))
+    }
+}
+
+/// One cluster-level event on the deterministic cluster clock.
+enum ClusterEvent<'a> {
+    Arrival(&'a TimedRequest),
+    Failure(NodeFailure),
+}
+
+/// Run `workload` through an N-node cluster. Untraced (no event logs).
+pub fn simulate_cluster(
+    p_base: &SimParams,
+    spec: &ClusterSpec,
+    workload: &[TimedRequest],
+) -> Result<ClusterReport> {
+    simulate_cluster_inner(p_base, spec, workload, false)
+}
+
+/// Traced variant: every node's event core records its pop log — the
+/// determinism pins and the FLTL cluster extension compare these
+/// byte-for-byte.
+pub fn simulate_cluster_traced(
+    p_base: &SimParams,
+    spec: &ClusterSpec,
+    workload: &[TimedRequest],
+) -> Result<ClusterReport> {
+    simulate_cluster_inner(p_base, spec, workload, true)
+}
+
+fn simulate_cluster_inner(
+    p_base: &SimParams,
+    spec: &ClusterSpec,
+    workload: &[TimedRequest],
+    trace: bool,
+) -> Result<ClusterReport> {
+    let n = spec.n_nodes.max(1);
+    if let Some(f) = &spec.failure {
+        if f.node >= n {
+            bail!("failure node {} out of range ({} nodes)", f.node, n);
+        }
+        if n < 2 {
+            bail!("a 1-node cluster has no survivors to re-home onto");
+        }
+        if !f.t_us.is_finite() || f.t_us < 0.0 {
+            bail!("failure instant must be a finite non-negative time");
+        }
+    }
+    debug_assert!(
+        workload.windows(2).all(|w| w[0].arrival_us <= w[1].arrival_us),
+        "workload must be sorted by arrival"
+    );
+
+    // every node sizes its KV reservation off the full workload, so a
+    // 1-node cluster builds the exact backend `simulate_serving` builds
+    // (pinned bit-exact in the tests below)
+    let max_ctx = workload
+        .iter()
+        .map(|t| t.req.prompt.len() + t.req.max_tokens)
+        .max()
+        .unwrap_or(512);
+    let kv_tokens = spec.max_batch.max(1) * max_ctx;
+    let vram_per_device = spec.vram_gb_total / (n * spec.devices_per_node) as f64;
+
+    let mut scheds: Vec<Scheduler<SimServeBackend>> = (0..n)
+        .map(|j| {
+            let mut p = p_base.clone();
+            p.system = p_base
+                .system
+                .clone()
+                .with_devices(spec.devices_per_node, spec.shard)
+                .as_cluster_member(j, n, spec.host_ram_gb);
+            p.vram_gb = vram_per_device;
+            let backend = if trace {
+                SimServeBackend::new_traced(p, kv_tokens)
+            } else {
+                SimServeBackend::new(p, kv_tokens)
+            };
+            Scheduler::new(backend, spec.max_batch)
+        })
+        .collect();
+
+    let mut alive = vec![true; n];
+    let mut node_completions: Vec<Vec<ServeCompletion>> = vec![Vec::new(); n];
+    let mut assignments: Vec<(u64, usize)> = Vec::new();
+    let mut rr = 0usize;
+    let mut errored = 0usize;
+    let mut rehomed_keys = 0usize;
+    let mut pending_failure = spec.failure;
+    let mut idx = 0usize;
+
+    loop {
+        // next cluster-level event: the earlier of the next unplaced
+        // arrival and the pending failure; the failure wins exact ties
+        // (the tied arrival then routes around the dead node)
+        let t_arr = workload.get(idx).map(|t| t.arrival_us);
+        let t_fail = pending_failure.map(|f| f.t_us);
+        let horizon = match (t_arr, t_fail) {
+            (Some(a), Some(f)) => a.min(f),
+            (Some(a), None) => a,
+            (None, Some(f)) => f,
+            (None, None) => f64::INFINITY,
+        };
+
+        // advance the cluster to the event: step the alive node with the
+        // earliest clock (ties: lowest id) until every working node's
+        // clock reached the horizon or the cluster drained
+        while let Some(j) = next_node(&scheds, &alive, horizon) {
+            for c in scheds[j].step() {
+                node_completions[j].push(c);
+            }
+        }
+
+        let ev = match (t_arr, t_fail) {
+            (None, None) => break,
+            (Some(_), None) => ClusterEvent::Arrival(&workload[idx]),
+            (None, Some(_)) => ClusterEvent::Failure(pending_failure.take().unwrap()),
+            (Some(a), Some(f)) => {
+                if f <= a {
+                    ClusterEvent::Failure(pending_failure.take().unwrap())
+                } else {
+                    ClusterEvent::Arrival(&workload[idx])
+                }
+            }
+        };
+        match ev {
+            ClusterEvent::Arrival(t) => {
+                idx += 1;
+                let j = place(spec.placement, p_base, &scheds, &alive, &mut rr, t);
+                assignments.push((t.req.id, j));
+                scheds[j].enqueue_at(t.req.clone(), t.arrival_us);
+            }
+            ClusterEvent::Failure(f) => {
+                if !alive[f.node] {
+                    continue;
+                }
+                // 1. the dead node's clock pops NodeDown at the exact
+                //    failure instant (recorded in its event log), then
+                //    its in-flight batch retires as error completions
+                scheds[f.node]
+                    .backend_mut()
+                    .note_node_down(f.t_us, f.node as u64);
+                let errs = scheds[f.node].fail_active(&format!("node {} down", f.node));
+                errored += errs.len();
+                node_completions[f.node].extend(errs);
+                alive[f.node] = false;
+
+                // 2. still-queued requests re-route to survivors
+                //    round-robin with their original arrival stamps
+                let survivors: Vec<usize> =
+                    (0..n).filter(|&j| alive[j]).collect();
+                for (req, arrival_us) in scheds[f.node].drain_pending() {
+                    let j = survivors[rr % survivors.len()];
+                    rr += 1;
+                    if let Some(a) = assignments.iter_mut().find(|(id, _)| *id == req.id) {
+                        a.1 = j;
+                    }
+                    scheds[j].enqueue_at(req, arrival_us);
+                }
+
+                // 3. re-home the dead node's stageable shard: survivors
+                //    split its host-pool keys round-robin in sorted key
+                //    order and pull their share over the network link
+                let keys = scheds[f.node].backend().store().host_pool_keys(0);
+                rehomed_keys += keys.len();
+                let bytes = scheds[f.node].backend().per_expert_bytes() as usize;
+                let mut shares: Vec<Vec<_>> = vec![Vec::new(); survivors.len()];
+                for (i, key) in keys.into_iter().enumerate() {
+                    shares[i % survivors.len()].push(key);
+                }
+                for (&j, share) in survivors.iter().zip(&shares) {
+                    scheds[j]
+                        .backend_mut()
+                        .store_mut()
+                        .net_restore(share, bytes);
+                }
+            }
+        }
+    }
+
+    let total_us = scheds
+        .iter()
+        .zip(&alive)
+        .filter(|(_, a)| **a)
+        .map(|(s, _)| s.backend().now_us())
+        .fold(0.0f64, f64::max);
+
+    let nodes = scheds
+        .into_iter()
+        .zip(node_completions)
+        .zip(alive)
+        .enumerate()
+        .map(|(j, ((sched, completions), alive))| {
+            let admitted_order = sched.admitted_order().to_vec();
+            let max_batch_seen = sched.max_batch_seen();
+            let backend = sched.into_backend();
+            let store = backend.store();
+            NodeObs {
+                node: j,
+                completions,
+                admitted_order,
+                event_log: backend.event_log().to_vec(),
+                stats: store.stats().clone(),
+                cache_hit_rate: store.cache_stats().hit_rate(),
+                total_us: store.now_us(),
+                max_batch_seen,
+                net_pulls: store.net_pulls(),
+                net_bytes: store.net_bytes(),
+                alive,
+            }
+        })
+        .collect();
+
+    Ok(ClusterReport { nodes, assignments, total_us, errored, rehomed_keys })
+}
+
+/// The alive node with the earliest clock (ties: lowest id) that still
+/// has work and has not reached the horizon.
+fn next_node(
+    scheds: &[Scheduler<SimServeBackend>],
+    alive: &[bool],
+    horizon: f64,
+) -> Option<usize> {
+    let mut best: Option<(f64, usize)> = None;
+    for (j, s) in scheds.iter().enumerate() {
+        if !alive[j] || !s.has_work() {
+            continue;
+        }
+        let now = s.backend().now_us();
+        if now >= horizon {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some((bn, _)) => now.total_cmp(&bn).is_lt(),
+        };
+        if better {
+            best = Some((now, j));
+        }
+    }
+    best.map(|(_, j)| j)
+}
+
+/// Pick the node for one arriving request. Reads cluster state at the
+/// arrival instant; every rule breaks ties toward the lowest node id so
+/// placement is deterministic.
+fn place(
+    placement: ClusterPlacement,
+    p_base: &SimParams,
+    scheds: &[Scheduler<SimServeBackend>],
+    alive: &[bool],
+    rr: &mut usize,
+    t: &TimedRequest,
+) -> usize {
+    let survivors: Vec<usize> = (0..scheds.len()).filter(|&j| alive[j]).collect();
+    debug_assert!(!survivors.is_empty(), "placement with no alive nodes");
+    let load = |j: usize| scheds[j].active_len() + scheds[j].pending_len();
+    match placement {
+        ClusterPlacement::RoundRobin => {
+            let j = survivors[*rr % survivors.len()];
+            *rr += 1;
+            j
+        }
+        ClusterPlacement::LeastLoaded => {
+            let mut best = survivors[0];
+            for &j in &survivors[1..] {
+                if load(j) < load(best) {
+                    best = j;
+                }
+            }
+            best
+        }
+        ClusterPlacement::ExpertAffinity => {
+            let e = predicted_first_expert(
+                &p_base.routing,
+                p_base.dims.n_experts,
+                t.req.seed,
+            );
+            let mass = |j: usize| -> f64 {
+                let store = scheds[j].backend().store();
+                (0..p_base.dims.n_layers)
+                    .map(|l| store.popularity_mass((l, e)))
+                    .sum()
+            };
+            let mut best = survivors[0];
+            let mut best_mass = mass(best);
+            for &j in &survivors[1..] {
+                let m = mass(j);
+                if m.total_cmp(&best_mass).is_gt()
+                    || (m.total_cmp(&best_mass).is_eq() && load(j) < load(best))
+                {
+                    best = j;
+                    best_mass = m;
+                }
+            }
+            best
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::{SystemConfig, SystemKind};
+    use crate::coordinator::sim::simulate_serving;
+    use crate::hwsim::RTX3090;
+    use crate::workload::{generate, WorkloadSpec};
+
+    fn base_params() -> SimParams {
+        SimParams::mixtral_on(
+            RTX3090.clone(),
+            SystemConfig::new(SystemKind::Floe),
+            14.25,
+        )
+    }
+
+    fn workload_at(rate_hz: f64, n: usize, seed: u64) -> Vec<TimedRequest> {
+        generate(&WorkloadSpec {
+            n_requests: n,
+            arrival_rate_hz: rate_hz,
+            seed,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn one_node_cluster_matches_simulate_serving_bit_exactly() {
+        let p = base_params();
+        let workload = workload_at(4.0, 10, 23);
+        let spec = ClusterSpec::new(1, 1, 14.25);
+
+        // the exact per-node params the cluster driver constructs
+        let mut p_node = p.clone();
+        p_node.system = p
+            .system
+            .clone()
+            .with_devices(1, spec.shard)
+            .as_cluster_member(0, 1, spec.host_ram_gb);
+        p_node.vram_gb = 14.25;
+        let flat = simulate_serving(&p_node, &workload, spec.max_batch).unwrap();
+
+        let cluster = simulate_cluster(&p, &spec, &workload).unwrap();
+        assert_eq!(cluster.nodes.len(), 1);
+        let node = &cluster.nodes[0];
+        assert_eq!(node.completions.len(), flat.completions.len());
+        for (a, b) in node.completions.iter().zip(&flat.completions) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens);
+            assert_eq!(a.arrival_us.to_bits(), b.arrival_us.to_bits());
+            assert_eq!(a.queue_wait_us.to_bits(), b.queue_wait_us.to_bits());
+            assert_eq!(a.finished_us.to_bits(), b.finished_us.to_bits());
+            assert_eq!(
+                a.stall.total_us().to_bits(),
+                b.stall.total_us().to_bits()
+            );
+            assert!(a.error.is_none());
+        }
+        assert_eq!(node.admitted_order, flat.admitted_order);
+        assert_eq!(cluster.total_us.to_bits(), flat.total_us.to_bits());
+        assert_eq!(
+            node.stats.transferred_bytes.to_bits(),
+            flat.stats.transferred_bytes.to_bits()
+        );
+        assert_eq!(node.stats.bus_transactions, flat.stats.bus_transactions);
+        // one node, no peers: nothing ever crosses the network link
+        assert_eq!(node.net_pulls, 0);
+    }
+
+    #[test]
+    fn cluster_driver_is_deterministic() {
+        let p = base_params();
+        let workload = workload_at(8.0, 12, 41);
+        let spec = ClusterSpec::new(2, 1, 28.5)
+            .with_placement(ClusterPlacement::LeastLoaded)
+            .with_failure(1, 1_500_000.0);
+        let a = simulate_cluster_traced(&p, &spec, &workload).unwrap();
+        let b = simulate_cluster_traced(&p, &spec, &workload).unwrap();
+        assert_eq!(a.assignments, b.assignments);
+        assert_eq!(a.total_us.to_bits(), b.total_us.to_bits());
+        assert_eq!(a.errored, b.errored);
+        assert_eq!(a.rehomed_keys, b.rehomed_keys);
+        for (na, nb) in a.nodes.iter().zip(&b.nodes) {
+            assert!(!na.event_log.is_empty());
+            assert_eq!(na.event_log, nb.event_log);
+            assert_eq!(na.completions.len(), nb.completions.len());
+            for (ca, cb) in na.completions.iter().zip(&nb.completions) {
+                assert_eq!(ca.id, cb.id);
+                assert_eq!(ca.finished_us.to_bits(), cb.finished_us.to_bits());
+            }
+            assert_eq!(na.net_pulls, nb.net_pulls);
+            assert_eq!(na.net_bytes.to_bits(), nb.net_bytes.to_bits());
+        }
+    }
+
+    #[test]
+    fn cross_node_pulls_move_whole_experts_under_every_placement() {
+        let p = base_params();
+        let workload = workload_at(8.0, 10, 19);
+        // a tight host pool: each node stages its own shard but not the
+        // full roster, so cold fetches of foreign-shard experts cross
+        // the network link
+        let mut per_pull_bits: Vec<u64> = Vec::new();
+        for placement in ClusterPlacement::ALL {
+            let mut spec = ClusterSpec::new(2, 1, 28.5).with_placement(placement);
+            spec.host_ram_gb = 4.0;
+            let r = simulate_cluster(&p, &spec, &workload).unwrap();
+            // every request served, none errored
+            let mut ids: Vec<u64> = r.completions().map(|(_, c)| c.id).collect();
+            ids.sort_unstable();
+            assert_eq!(
+                ids,
+                (0..workload.len() as u64).collect::<Vec<_>>(),
+                "{}",
+                placement.name()
+            );
+            assert!(
+                r.completions().all(|(_, c)| c.error.is_none()),
+                "{}",
+                placement.name()
+            );
+            // without a failure there are no zero-byte handshakes: every
+            // cross-node pull moves exactly one whole compressed expert
+            for node in &r.nodes {
+                assert!(node.net_bytes.is_finite());
+                if node.net_pulls > 0 {
+                    per_pull_bits.push((node.net_bytes / node.net_pulls as f64).to_bits());
+                }
+            }
+        }
+        // ...and the per-pull payload is bit-identical across placements
+        assert!(!per_pull_bits.is_empty(), "no placement exercised the network link");
+        assert!(per_pull_bits.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    fn node_failure_rehomes_and_loses_no_queued_request() {
+        let p = base_params();
+        let workload = workload_at(8.0, 14, 77);
+        // fail node 1 while requests are still arriving and in flight
+        let t_fail = workload[6].arrival_us + 1.0;
+        let spec = ClusterSpec::new(2, 1, 28.5)
+            .with_placement(ClusterPlacement::RoundRobin)
+            .with_failure(1, t_fail);
+        let r = simulate_cluster(&p, &spec, &workload).unwrap();
+
+        assert!(!r.nodes[1].alive);
+        assert!(r.nodes[0].alive);
+        // the dead node's clock froze at the boundary that observed the
+        // failure — at or after the stamp, never before
+        assert!(r.nodes[1].total_us >= t_fail);
+        assert!(r.total_us > r.nodes[1].total_us, "survivor outlived the dead node");
+        // its in-flight batch retired as error completions...
+        assert!(r.errored > 0, "failure hit an idle node");
+        assert!(r.nodes[1]
+            .completions
+            .iter()
+            .all(|c| c.error.is_some() || c.finished_us <= t_fail + 1e-9));
+        // ...and every request id surfaced exactly once cluster-wide:
+        // zero lost (non-errored) requests after re-homing
+        let mut ids: Vec<u64> = r.completions().map(|(_, c)| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..workload.len() as u64).collect::<Vec<_>>());
+        let errored = r
+            .completions()
+            .filter(|(_, c)| c.error.is_some())
+            .count();
+        assert_eq!(errored, r.errored);
+        // survivors completed everything the dead node had queued
+        assert!(r.nodes[0]
+            .completions
+            .iter()
+            .all(|c| c.error.is_none()));
+        // the dead node's stageable shard re-homed over the network
+        assert!(r.rehomed_keys > 0);
+        assert!(r.nodes[0].net_pulls >= r.rehomed_keys as u64);
+        // re-routed requests record their survivor node
+        for (id, node) in &r.assignments {
+            let (served_by, _) = r
+                .completions()
+                .find(|(_, c)| c.id == *id)
+                .expect("assigned request never completed");
+            if r.nodes[*node].alive {
+                assert_eq!(served_by, *node, "request {id}");
+            }
+        }
+    }
+
+    /// The acceptance margin: at a *fixed aggregate* expert-cache budget,
+    /// two nodes out-serve one. Each node keeps the same per-device slice
+    /// (28.5 GB / 2 = the serve-load default), so the win comes from
+    /// splitting the admission queue, not from extra VRAM. The ratio is
+    /// replay-verified: the Python mirror (`python/replay_sim.py`) pins
+    /// 1.5437x on this exact spec and workload.
+    #[test]
+    fn two_nodes_beat_one_at_fixed_aggregate_vram() {
+        let p = base_params();
+        let workload = workload_at(16.0, 24, 7);
+        let one = simulate_cluster(&p, &ClusterSpec::new(1, 1, 28.5), &workload).unwrap();
+        let two = simulate_cluster(&p, &ClusterSpec::new(2, 1, 28.5), &workload).unwrap();
+        assert_eq!(one.errored + two.errored, 0);
+        assert_eq!(two.completions().count(), workload.len());
+        let ratio = two.aggregate_tps() / one.aggregate_tps();
+        assert!(
+            ratio > 1.4,
+            "2 nodes {:.2} tok/s not > 1.4x 1 node {:.2} tok/s at 28.5 GB aggregate \
+             (replay pins 1.5437x)",
+            two.aggregate_tps(),
+            one.aggregate_tps()
+        );
+    }
+
+    #[test]
+    fn affinity_placement_spreads_or_concentrates_deterministically() {
+        let p = base_params();
+        let workload = workload_at(8.0, 16, 11);
+        let spec =
+            ClusterSpec::new(2, 1, 28.5).with_placement(ClusterPlacement::ExpertAffinity);
+        let a = simulate_cluster(&p, &spec, &workload).unwrap();
+        let b = simulate_cluster(&p, &spec, &workload).unwrap();
+        assert_eq!(a.assignments, b.assignments);
+        // affinity must still serve everything
+        assert_eq!(a.completions().count(), workload.len());
+    }
+}

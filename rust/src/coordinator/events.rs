@@ -34,6 +34,10 @@ pub enum EventKind {
     BoundaryBarrier,
     /// A serving request reached its workload arrival time.
     RequestArrival,
+    /// Failure injection (cluster tier, DESIGN.md §10): the node hosting
+    /// this event core dropped out of the cluster at `t_us`. `id` is the
+    /// cluster-level `NodeId`.
+    NodeDown,
 }
 
 impl EventKind {
@@ -43,6 +47,7 @@ impl EventKind {
             EventKind::GemvComplete => 1,
             EventKind::BoundaryBarrier => 2,
             EventKind::RequestArrival => 3,
+            EventKind::NodeDown => 4,
         }
     }
 }

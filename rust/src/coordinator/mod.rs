@@ -20,7 +20,12 @@
 //!   versioned byte artifacts (scheduler decisions + event-core pops +
 //!   per-request accounting), plus the per-request inspector behind the
 //!   server's `stats` command and `floe record`/`floe replay`.
+//! * `cluster` — the multi-node tier above the store (DESIGN.md §10): a
+//!   deterministic router spreading workload arrivals across N node
+//!   coordinators with pluggable placement, cross-node expert pulls
+//!   over the latency-dominated network link, and failure re-homing.
 
+pub mod cluster;
 pub mod events;
 pub mod policy;
 pub mod sched;

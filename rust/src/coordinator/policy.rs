@@ -95,6 +95,19 @@ pub struct SystemConfig {
     /// observable with compute streams on (the single compute timeline
     /// never consults per-device scale)
     pub hetero_fleet: bool,
+    /// spanning cluster form (DESIGN.md §10): this store's devices
+    /// partition into `cluster_span` node groups joined by the network
+    /// link, so cross-group peer hits resolve as `Lookup::RemoteNode`.
+    /// Default 1 (single node) keeps every existing configuration —
+    /// including the serialized FLTL spec — untouched
+    pub cluster_span: usize,
+    /// member cluster form: (node_id, n_nodes) when this store serves as
+    /// one node of a `ClusterRouter` fleet; (0, 1) = single-node world
+    pub node_id: usize,
+    pub n_nodes: usize,
+    /// per-node host RAM pool in GB (expert residency decoupled from the
+    /// serving node); only consulted when a cluster form is active
+    pub host_ram_gb: f64,
 }
 
 impl SystemConfig {
@@ -116,6 +129,10 @@ impl SystemConfig {
             compute_streams: false,
             overlap: false,
             hetero_fleet: false,
+            cluster_span: 1,
+            node_id: 0,
+            n_nodes: 1,
+            host_ram_gb: 64.0,
         }
     }
 
@@ -160,14 +177,38 @@ impl SystemConfig {
         self
     }
 
+    /// Spanning cluster form: partition this store's devices into `span`
+    /// node groups over the network link (DESIGN.md §10). `span = 1` is
+    /// the single-node no-op.
+    pub fn with_cluster_span(mut self, span: usize) -> Self {
+        self.cluster_span = span.max(1);
+        self
+    }
+
+    /// Member cluster form: this configuration serves as node `node_id`
+    /// of an `n_nodes` cluster with `host_ram_gb` of host expert pool.
+    pub fn as_cluster_member(mut self, node_id: usize, n_nodes: usize, host_ram_gb: f64) -> Self {
+        self.n_nodes = n_nodes.max(1);
+        self.node_id = node_id.min(self.n_nodes - 1);
+        self.host_ram_gb = host_ram_gb;
+        self
+    }
+
     /// The store placement this configuration selects, over per-device
     /// host links of spec `h2d`.
     pub fn placement(&self, h2d: PcieSpec) -> Placement {
-        let topo = if self.hetero_fleet {
+        let mut topo = if self.hetero_fleet {
             TopologySpec::heterogeneous(self.devices, h2d)
         } else {
             TopologySpec::uniform(self.devices, h2d)
         };
+        if self.cluster_span > 1 {
+            topo = topo.with_cluster_span(self.cluster_span);
+            topo.host_ram_gb = self.host_ram_gb;
+        }
+        if self.n_nodes > 1 {
+            topo = topo.as_member(self.node_id, self.n_nodes, self.host_ram_gb);
+        }
         Placement {
             shard: self.shard,
             topo,
@@ -250,6 +291,21 @@ mod tests {
             topo.gemv_scale[1] < topo.gemv_scale[0],
             "hetero fleets descend in GEMV throughput"
         );
+    }
+
+    #[test]
+    fn cluster_forms_stay_opt_in_and_thread_into_the_topology() {
+        let base = SystemConfig::new(SystemKind::Floe).with_devices(2, ShardPolicy::Layer);
+        assert_eq!((base.cluster_span, base.n_nodes, base.node_id), (1, 1, 0));
+        assert!(!base.placement(crate::hwsim::PCIE4).topo.clustered());
+        let span = base.clone().with_cluster_span(2);
+        let t = span.placement(crate::hwsim::PCIE4).topo;
+        assert_eq!(t.span_nodes, 2);
+        assert_eq!(t.node_of(1), 1);
+        let member = base.as_cluster_member(1, 3, 8.0);
+        let t = member.placement(crate::hwsim::PCIE4).topo;
+        assert_eq!((t.n_nodes, t.node_id, t.span_nodes), (3, 1, 1));
+        assert_eq!(t.host_ram_gb, 8.0);
     }
 
     #[test]

@@ -242,11 +242,20 @@ impl<B: SeqBackend> Scheduler<B> {
     pub fn has_work(&self) -> bool {
         !self.pending.is_empty() || !self.active.is_empty()
     }
+    pub fn has_active(&self) -> bool {
+        !self.active.is_empty()
+    }
     pub fn active_len(&self) -> usize {
         self.active.len()
     }
     pub fn pending_len(&self) -> usize {
         self.pending.len()
+    }
+    /// Arrival stamp of the queue head — the earliest still-pending
+    /// arrival when requests were enqueued in arrival order. Drivers
+    /// idle the backend to this stamp when the batch is empty.
+    pub fn next_pending_arrival(&self) -> Option<f64> {
+        self.pending.front().map(|(_, t)| *t)
     }
     /// Largest batch any boundary decoded.
     pub fn max_batch_seen(&self) -> usize {
@@ -266,14 +275,40 @@ impl<B: SeqBackend> Scheduler<B> {
         self.backend
     }
 
-    /// One token boundary: admit pending requests (FIFO) up to the batch
-    /// cap, then decode one token for every active sequence. Finished
-    /// sequences retire immediately and are returned. Backend failures
-    /// retire the affected sequence as an error completion — one bad
-    /// request must never take the batch (or the server) down.
+    /// One token boundary: admit *ripe* pending requests (FIFO) up to
+    /// the batch cap, then decode one token for every active sequence.
+    /// Finished sequences retire immediately and are returned. Backend
+    /// failures retire the affected sequence as an error completion —
+    /// one bad request must never take the batch (or the server) down.
+    ///
+    /// Ripeness: a request whose arrival stamp is still in the future is
+    /// not admitted — whole traces can be enqueued up front and the
+    /// scheduler observes each arrival at the first boundary at or after
+    /// its stamp. The gate captures `now` once, *before* any admission:
+    /// a prefill advancing the clock past a later request's arrival must
+    /// not pull that request into the same boundary (it was not in the
+    /// queue yet under lazy per-boundary enqueueing, which this
+    /// reproduces bit-exactly). When the batch has drained and the queue
+    /// head has not arrived yet, the boundary idles the backend to the
+    /// head's stamp first (a `RequestArrival` event on event-driven
+    /// backends) — arrival→admission latency is event-timed, not polled
+    /// by the driver.
     pub fn step(&mut self) -> Vec<ServeCompletion> {
         let mut done = Vec::new();
+        if self.active.is_empty() {
+            if let Some(t) = self.next_pending_arrival() {
+                if t > self.backend.now_us() {
+                    self.backend.idle_until(t);
+                }
+            }
+        }
+        let ripe_before = self.backend.now_us();
         while self.active.len() < self.max_batch {
+            match self.pending.front() {
+                Some((_, arrival_us)) if *arrival_us > ripe_before => break,
+                None => break,
+                Some(_) => {}
+            }
             let Some((req, arrival_us)) = self.pending.pop_front() else {
                 break;
             };
@@ -398,7 +433,42 @@ impl<B: SeqBackend> Scheduler<B> {
         }
     }
 
-    /// Step until the queue and the batch are empty.
+    /// Node failure (cluster tier, DESIGN.md §10): retire every in-flight
+    /// sequence as an error completion through the standard retirement
+    /// path — accounting covers the work done up to the failure. The
+    /// pending queue is untouched (survivor nodes re-admit it via
+    /// `drain_pending`).
+    pub fn fail_active(&mut self, error: &str) -> Vec<ServeCompletion> {
+        let mut done = Vec::new();
+        while !self.active.is_empty() {
+            let a = self.active.remove(0);
+            done.push(self.retired(
+                a.id,
+                a.out,
+                a.tokens,
+                a.arrival_us,
+                a.admitted_us,
+                a.prefill_us,
+                a.decode_us,
+                a.batch_peak,
+                Some(error.to_string()),
+            ));
+        }
+        done
+    }
+
+    /// Remove and return every still-queued request with its arrival
+    /// stamp (failure re-routing: survivor nodes re-admit these with
+    /// their original arrivals so queue-wait accounting stays honest).
+    pub fn drain_pending(&mut self) -> Vec<(Request, f64)> {
+        self.pending.drain(..).collect()
+    }
+
+    /// Step until the queue and the batch are empty. `step` itself idles
+    /// an empty batch to the queue head's arrival stamp, so a whole
+    /// trace enqueued up front drains without the driver polling the
+    /// clock — backends whose `idle_until` is a no-op (wall clocks) only
+    /// reach that idle when time genuinely passes on its own.
     pub fn drain(&mut self) -> Vec<ServeCompletion> {
         let mut out = Vec::new();
         while self.has_work() {

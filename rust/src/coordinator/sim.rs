@@ -121,6 +121,19 @@ impl RoutingModel {
     }
 }
 
+/// The first expert (layer 0, slot 0) a request seeded with `seed` will
+/// route to — the affinity signal `ClusterPlacement::ExpertAffinity`
+/// steers on (coordinator::cluster). Mirrors the first draw of
+/// `RoutingModel::sample` exactly: with empty stickiness history the
+/// very first consumption of `Rng::new(seed)` is one Zipf draw, so the
+/// prediction is the true first routed expert, not a heuristic.
+pub fn predicted_first_expert(routing: &RoutingModel, n_experts: usize, seed: u64) -> usize {
+    let w = routing.zipf_cdf(n_experts);
+    let mut rng = Rng::new(seed);
+    let r = rng.f64() * w[n_experts - 1];
+    w.partition_point(|x| *x < r).min(n_experts - 1)
+}
+
 #[derive(Clone, Debug)]
 pub struct SimParams {
     pub gpu: GpuSpec,
@@ -502,6 +515,38 @@ fn warm_cache(p: &SimParams, c: &SimCtx, store: &mut ExpertStore) {
     }
 }
 
+/// Stage the expert roster into the per-node host pools (cluster tier,
+/// DESIGN.md §10): each node's host RAM adopts its own shard of the
+/// roster first (experts it would home under an expert-mod split across
+/// the cluster), then the remainder, until `host_ram_gb` fills. With
+/// roomy host RAM every node holds a full copy and demand fetches price
+/// PCIe exactly like a single-node run; under tight host RAM the pools
+/// diverge and foreign demand fetches pay the network link — which is
+/// what the failure re-homing scenario measures. Never called for
+/// unclustered topologies (the pools are never consulted there).
+fn seed_cluster_host_pools(p: &SimParams, c: &SimCtx, store: &mut ExpertStore) {
+    let topo = store.placement().topo.clone();
+    let span = topo.span_nodes.max(1);
+    let total = topo.n_nodes.max(topo.node_id + span);
+    let bytes = c.per_expert_bytes.max(1.0) as usize;
+    let d = &p.dims;
+    for local in 0..span {
+        let node = topo.node_id + local;
+        let (mut own, mut rest) = (Vec::new(), Vec::new());
+        for l in 0..d.n_layers {
+            for e in 0..d.n_experts {
+                if e % total == node % total {
+                    own.push((l, e));
+                } else {
+                    rest.push((l, e));
+                }
+            }
+        }
+        store.seed_host_pool(local, &own, bytes);
+        store.seed_host_pool(local, &rest, bytes);
+    }
+}
+
 /// One routed expert, resolved: where its usable bytes are (or will
 /// land), when they land, and what its GEMV costs at this boundary.
 struct ExpertWork {
@@ -544,6 +589,12 @@ fn resolve_expert(
             // the GPU↔GPU link instead of refetching from the host
             (store.peer_fetch(key, from), StallCause::Demand, store.home(key))
         }
+        Lookup::RemoteNode(from) => {
+            // resident only on a device of another node (spanning
+            // topologies, DESIGN.md §10): pull it over the
+            // latency-dominated network link and migrate it home
+            (store.net_fetch(key, from), StallCause::Demand, store.home(key))
+        }
         Lookup::Miss => {
             if let Some((t_done, ())) = store.take_inflight(key) {
                 store.admit(key, c.per_expert_cached);
@@ -557,12 +608,13 @@ fn resolve_expert(
                 core.pop();
                 return None;
             } else {
-                // demand fetch toward the home device
-                let done = store.demand_fetch_for(
-                    key,
-                    p.pcie.copy_us(c.per_expert_bytes.max(1.0)),
-                    c.per_expert_bytes,
-                );
+                // demand fetch toward the home device, priced by the
+                // link the bytes actually cross: the home node's host
+                // PCIe when its host pool holds a copy, the network
+                // link otherwise (unclustered topologies always price
+                // PCIe — `demand_link_us` degenerates to `h2d.copy_us`)
+                let dur = store.demand_link_us(key, c.per_expert_bytes.max(1.0));
+                let done = store.demand_fetch_for(key, dur, c.per_expert_bytes);
                 store.admit(key, c.per_expert_cached);
                 (done, StallCause::Demand, store.home(key))
             }
@@ -1013,6 +1065,9 @@ fn simulate_core(
     };
 
     warm_cache(p, &c, &mut store);
+    if store.placement().topo.clustered() {
+        seed_cluster_host_pools(p, &c, &mut store);
+    }
 
     for tok in 0..output_len {
         compute_us += sim_decode_token(
@@ -1142,6 +1197,9 @@ fn busyuntil_decode_token(
                 Lookup::Local(dev) => (store.now_us(), StallCause::Demand, dev),
                 Lookup::Remote(from) => {
                     (store.peer_fetch(key, from), StallCause::Demand, store.home(key))
+                }
+                Lookup::RemoteNode(_) => {
+                    unreachable!("the frozen reference runs single-node topologies only")
                 }
                 Lookup::Miss => {
                     if let Some((t_done, ())) = store.take_inflight(key) {
@@ -1550,6 +1608,9 @@ pub fn simulate_sharded_reference(
                     Lookup::Remote(from) => {
                         (store.peer_fetch(key, from), StallCause::Demand)
                     }
+                    Lookup::RemoteNode(_) => {
+                        unreachable!("the frozen reference runs single-node topologies only")
+                    }
                     Lookup::Miss => {
                         if let Some((t_done, ())) = store.take_inflight(key) {
                             store.admit(key, c.per_expert_cached);
@@ -1656,6 +1717,9 @@ impl SimServeBackend {
         let mut store = build_store(&p, budget);
         let ctx = SimCtx::new(&p, budget, true);
         warm_cache(&p, &ctx, &mut store);
+        if store.placement().topo.clustered() {
+            seed_cluster_host_pools(&p, &ctx, &mut store);
+        }
         let streams =
             if ctx.streams { Some(ComputeStreams::new(store.n_devices())) } else { None };
         let core = if trace { EventCore::recording() } else { EventCore::new() };
@@ -1672,6 +1736,30 @@ impl SimServeBackend {
 
     pub fn store(&self) -> &ExpertStore {
         &self.store
+    }
+
+    /// Mutable store access for the cluster router (host-pool seeding
+    /// and failure re-homing — `coordinator::cluster`).
+    pub fn store_mut(&mut self) -> &mut ExpertStore {
+        &mut self.store
+    }
+
+    /// Failure injection (cluster tier, DESIGN.md §10): advance this
+    /// node's clock to the failure instant through the event heap, so a
+    /// recorded event log carries the `NodeDown` pop at its exact time.
+    /// `node` is the cluster-level id of the node that dropped.
+    pub fn note_node_down(&mut self, t_us: f64, node: u64) {
+        let t = t_us.max(self.store.now_us());
+        self.core.push(t, EventKind::NodeDown, node);
+        let ev = self.core.pop().expect("node-down event vanished from the heap");
+        debug_assert_eq!(ev.kind, EventKind::NodeDown);
+        self.store.advance_to(ev.t_us);
+    }
+
+    /// Bytes one expert transfer moves under this system's compression
+    /// (the cluster router sizes failure re-homing copies with this).
+    pub fn per_expert_bytes(&self) -> f64 {
+        self.ctx.per_expert_bytes.max(1.0)
     }
 
     /// Same-boundary sharing counters (full vs amortized GEMV visits).
@@ -1847,10 +1935,13 @@ impl ServeSimReport {
 }
 
 /// Replay a workload arrival trace through the continuous-batching
-/// scheduler over the simulated coordinator. Requests join the in-flight
-/// batch at token boundaries once their virtual arrival time has passed;
-/// the timeline skips ahead (idle, not stalled) when the system drains
-/// before the next arrival.
+/// scheduler over the simulated coordinator. The whole trace is enqueued
+/// up front as `(request, arrival)` stamps; `Scheduler::step` observes
+/// each arrival at the first token boundary at or after its stamp and
+/// idles the event heap to the queue head (a `RequestArrival` event)
+/// when the system drains before the next arrival — admission is
+/// event-timed, not polled by this driver (bit-exact with the old lazy
+/// per-boundary enqueue loop, pinned in the tests below).
 pub fn simulate_serving(
     p: &SimParams,
     workload: &[TimedRequest],
@@ -1864,26 +1955,10 @@ pub fn simulate_serving(
     let kv_tokens = max_batch.max(1) * max_ctx;
     let backend = SimServeBackend::new(p.clone(), kv_tokens);
     let mut sched = Scheduler::new(backend, max_batch);
-    let mut next = 0;
-    let mut completions: Vec<ServeCompletion> = Vec::new();
-    loop {
-        while next < workload.len()
-            && workload[next].arrival_us <= sched.backend().now_us()
-        {
-            let t = &workload[next];
-            sched.enqueue_at(t.req.clone(), t.arrival_us);
-            next += 1;
-        }
-        if !sched.has_work() {
-            if next >= workload.len() {
-                break;
-            }
-            let t = workload[next].arrival_us;
-            sched.backend_mut().idle_until(t);
-            continue;
-        }
-        completions.extend(sched.step());
+    for t in workload {
+        sched.enqueue_at(t.req.clone(), t.arrival_us);
     }
+    let completions = sched.drain();
     let total_us = sched.backend().now_us();
     let max_batch_seen = sched.max_batch_seen();
     let admitted_order = sched.admitted_order().to_vec();
@@ -2366,6 +2441,130 @@ mod tests {
             assert_eq!(sa.stall_us.to_bits(), sb.stall_us.to_bits());
             assert_eq!(sa.transferred_bytes.to_bits(), sb.transferred_bytes.to_bits());
         }
+    }
+
+    /// Satellite (event-timed admission): enqueueing the whole trace up
+    /// front and letting `Scheduler::step` observe arrivals itself —
+    /// idling the event heap to the queue head when the batch drains —
+    /// reproduces the old lazy per-boundary enqueue drive bit-exactly:
+    /// same popped-event log (`RequestArrival` pops at the same stamps),
+    /// same store stats.
+    #[test]
+    fn upfront_enqueue_matches_lazy_drive_bit_exactly() {
+        // 4 Hz over 10 requests drains the batch between arrivals, so
+        // the empty-batch idle path is actually exercised
+        let wl = workload_at(4.0, 10, 23);
+        for overlap in [false, true] {
+            let mut p = sweep_params(ResidencyKind::Lru, DEFAULT_VRAM_GB);
+            p.system.overlap = overlap;
+            let (lazy_log, lazy_stats) = traced_serving(&p, &wl, 3);
+            let max_ctx = wl
+                .iter()
+                .map(|t| t.req.prompt.len() + t.req.max_tokens)
+                .max()
+                .unwrap();
+            let backend = SimServeBackend::new_traced(p.clone(), 3 * max_ctx);
+            let mut sched = Scheduler::new(backend, 3);
+            for t in &wl {
+                sched.enqueue_at(t.req.clone(), t.arrival_us);
+            }
+            let done = sched.drain();
+            assert_eq!(done.len(), wl.len());
+            let backend = sched.into_backend();
+            assert_eq!(
+                backend.event_log(),
+                &lazy_log[..],
+                "event logs diverged (overlap {overlap})"
+            );
+            let s = backend.store().stats();
+            assert_eq!(s.stall_us.to_bits(), lazy_stats.stall_us.to_bits());
+            assert_eq!(
+                s.transferred_bytes.to_bits(),
+                lazy_stats.transferred_bytes.to_bits()
+            );
+            assert_eq!(s.bus_transactions, lazy_stats.bus_transactions);
+            assert_eq!(s.demand_fetches, lazy_stats.demand_fetches);
+            assert_eq!(s.prefetches, lazy_stats.prefetches);
+        }
+    }
+
+    /// Cluster tier: re-timing the intra-store links as a spanning
+    /// 2-node topology changes WHEN bytes move (cross-node pulls ride
+    /// the network link) but never WHAT moves — transferred bytes and
+    /// bus transactions stay bit-identical to the single-node run with
+    /// the same devices, across shard policies, and the slower link can
+    /// only cost throughput.
+    #[test]
+    fn spanning_cluster_moves_bit_identical_bytes() {
+        use crate::config::ShardPolicy;
+        for shard in [ShardPolicy::Layer, ShardPolicy::Expert, ShardPolicy::Hash] {
+            let flat_p = SimParams::mixtral_on(
+                RTX3090.clone(),
+                SystemConfig::with_residency(SystemKind::Floe, ResidencyKind::Lru)
+                    .with_devices(4, shard),
+                12.0,
+            );
+            let mut span_p = flat_p.clone();
+            span_p.system = span_p.system.with_cluster_span(2);
+            let flat = simulate(&flat_p, 64, 128);
+            let span = simulate(&span_p, 64, 128);
+            assert_eq!(
+                span.transferred_bytes.to_bits(),
+                flat.transferred_bytes.to_bits(),
+                "{shard:?}: span re-timing changed what moves"
+            );
+            assert_eq!(
+                span.bus_transactions, flat.bus_transactions,
+                "{shard:?}: span re-timing changed transaction count"
+            );
+            assert!(
+                span.tps <= flat.tps * (1.0 + 1e-12),
+                "{shard:?}: the slower cross-node link cannot raise tps \
+                 ({} vs {})",
+                span.tps,
+                flat.tps
+            );
+            assert!(span.tps.is_finite() && span.tps > 0.0);
+        }
+    }
+
+    /// Member-form backends stage the roster into their host pool at
+    /// build time, own expert-mod shard first, until host RAM fills —
+    /// so demand fetches price PCIe while a host copy exists and the
+    /// network link once the pool diverges.
+    #[test]
+    fn member_backend_seeds_host_pool_own_shard_first() {
+        // ~1 GB of host pool holds a fraction of one node's 128-key
+        // shard at FloE's ~27 MB compressed experts
+        let p = SimParams::mixtral_on(
+            RTX3090.clone(),
+            SystemConfig::with_residency(SystemKind::Floe, ResidencyKind::Lru)
+                .as_cluster_member(1, 2, 1.0),
+            14.0,
+        );
+        let backend = SimServeBackend::new(p.clone(), 512);
+        let store = backend.store();
+        assert!(store.host_bytes_of(0) > 0, "host pool never seeded");
+        assert!(
+            store.host_bytes_of(0) <= store.host_budget(),
+            "host pool overran its budget"
+        );
+        // node 1's own shard (odd experts) is staged first
+        assert!(store.host_resident(0, (0, 1)));
+        assert!(
+            !store.host_resident(0, (0, 0)),
+            "foreign-shard key staged before the pool filled with own-shard keys"
+        );
+        // a roomy pool holds the full roster, foreign shard included
+        let roomy = SimParams::mixtral_on(
+            RTX3090.clone(),
+            SystemConfig::with_residency(SystemKind::Floe, ResidencyKind::Lru)
+                .as_cluster_member(1, 2, 64.0),
+            14.0,
+        );
+        let backend = SimServeBackend::new(roomy, 512);
+        assert!(backend.store().host_resident(0, (0, 0)));
+        assert!(backend.store().host_resident(0, (0, 1)));
     }
 
     /// The overlap acceptance at the exp-serve-load operating point:

@@ -24,6 +24,16 @@
 //! through the `GemvComplete`/`TransferComplete` pops in the
 //! byte-compared event log. See DESIGN.md §9 for the byte schema and the
 //! determinism contract.
+//!
+//! Cluster sessions (DESIGN.md §10) extend the same artifact: a
+//! [`ClusterExt`] section — gated by `FLAG_CLUSTER`, appended after the
+//! single-node sections so pre-cluster artifacts stay byte-identical —
+//! records the cluster shape (nodes × devices, placement, aggregate
+//! VRAM, the failure scenario) and per-node observations (each node's
+//! event log, admissions, completions and store stats, plus the
+//! router's request→node assignments). [`record_cluster`] drives
+//! `simulate_cluster_traced`; [`replay_cluster`] re-runs it from the
+//! spec and asserts bit-exact reproduction node by node.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -36,6 +46,10 @@ use crate::store::{DeviceStats, StallSplit, StoreStats};
 use crate::util::json::Json;
 use crate::workload::{self, TimedRequest, WorkloadSpec};
 
+use super::cluster::{
+    simulate_cluster_traced, ClusterPlacement, ClusterReport, ClusterSpec, NodeFailure,
+    NodeObs,
+};
 use super::policy::{SystemConfig, SystemKind};
 use super::sched::{BackendSnapshot, Scheduler, SeqBackend, SeqStep, ServeCompletion};
 use super::serve::Request;
@@ -48,6 +62,9 @@ pub const VERSION: u32 = 1;
 
 const FLAG_OBSERVATIONS: u32 = 1 << 0;
 const FLAG_REPLAYABLE: u32 = 1 << 1;
+/// The artifact carries a cluster section (shape + per-node
+/// observations) appended after the single-node sections.
+const FLAG_CLUSTER: u32 = 1 << 2;
 
 /// Hardware preset a spec's `SimParams` are rebuilt from. Only the
 /// RTX 3090 host model is recordable today — the preset every serving
@@ -298,11 +315,116 @@ pub struct Observations {
     pub cache_hit_rate: f64,
 }
 
+/// The cluster shape a [`ClusterExt`] artifact re-derives per-node
+/// configurations from: everything `simulate_cluster` needs beyond the
+/// base session spec (whose `max_batch` doubles as the per-node cap and
+/// whose `system`/`routing` seed every node's parameters).
+#[derive(Clone, Debug)]
+pub struct ClusterShape {
+    pub n_nodes: usize,
+    pub devices_per_node: usize,
+    /// intra-node expert→device assignment (multi-device nodes).
+    pub shard: ShardPolicy,
+    pub placement: ClusterPlacement,
+    /// aggregate expert-cache VRAM across the whole cluster, GB.
+    pub vram_gb_total: f64,
+    /// per-node host RAM pool, GB.
+    pub host_ram_gb: f64,
+    pub failure: Option<NodeFailure>,
+}
+
+impl ClusterShape {
+    /// The concrete `ClusterSpec` this shape drives (per-node batching
+    /// cap comes from the base session spec).
+    pub fn cluster_spec(&self, max_batch: usize) -> ClusterSpec {
+        ClusterSpec {
+            n_nodes: self.n_nodes,
+            devices_per_node: self.devices_per_node,
+            shard: self.shard,
+            placement: self.placement,
+            vram_gb_total: self.vram_gb_total,
+            host_ram_gb: self.host_ram_gb,
+            max_batch,
+            failure: self.failure,
+        }
+    }
+}
+
+/// One node's recorded observations in a cluster artifact — the
+/// cluster-tier analogue of [`Observations`], with the scheduler channel
+/// reduced to the admission order (per-node arrival stamps live in the
+/// router's assignment list) and the cross-node traffic counters added.
+#[derive(Clone, Debug)]
+pub struct NodeRecord {
+    pub admitted_order: Vec<u64>,
+    pub event_log: Vec<u8>,
+    pub completions: Vec<CompletionRecord>,
+    pub stats: StatsRecord,
+    pub cache_hit_rate: f64,
+    pub total_us: f64,
+    pub max_batch_seen: u64,
+    pub net_pulls: u64,
+    pub net_bytes: f64,
+    pub alive: bool,
+}
+
+impl NodeRecord {
+    pub fn of(n: &NodeObs) -> Self {
+        NodeRecord {
+            admitted_order: n.admitted_order.clone(),
+            event_log: n.event_log.clone(),
+            completions: n.completions.iter().map(CompletionRecord::of).collect(),
+            stats: StatsRecord::of(&n.stats),
+            cache_hit_rate: n.cache_hit_rate,
+            total_us: n.total_us,
+            max_batch_seen: n.max_batch_seen as u64,
+            net_pulls: n.net_pulls,
+            net_bytes: n.net_bytes,
+            alive: n.alive,
+        }
+    }
+}
+
+/// Everything a recorded cluster session produced.
+#[derive(Clone, Debug)]
+pub struct ClusterObservations {
+    /// request id → node, in routing order (re-routed requests record
+    /// their final survivor node).
+    pub assignments: Vec<(u64, u32)>,
+    pub nodes: Vec<NodeRecord>,
+    pub total_us: f64,
+    pub errored: u64,
+    pub rehomed_keys: u64,
+}
+
+impl ClusterObservations {
+    pub fn of(r: &ClusterReport) -> Self {
+        ClusterObservations {
+            assignments: r.assignments.iter().map(|&(id, n)| (id, n as u32)).collect(),
+            nodes: r.nodes.iter().map(NodeRecord::of).collect(),
+            total_us: r.total_us,
+            errored: r.errored as u64,
+            rehomed_keys: r.rehomed_keys as u64,
+        }
+    }
+}
+
+/// The cluster section of an artifact (`FLAG_CLUSTER`).
+#[derive(Clone, Debug)]
+pub struct ClusterExt {
+    pub shape: ClusterShape,
+    pub obs: Option<ClusterObservations>,
+}
+
 /// A serving session as a byte-serializable artifact.
 #[derive(Clone, Debug)]
 pub struct Timeline {
     pub spec: SessionSpec,
     pub obs: Option<Observations>,
+    /// cluster sessions append their shape and per-node observations
+    /// here; `None` for single-node artifacts (whose bytes are unchanged
+    /// by the cluster extension).
+    pub cluster: Option<ClusterExt>,
     /// true when the session is a pure function of the spec (recorded by
     /// the deterministic driver): the replayer asserts bit-exact
     /// reproduction. Live server recordings are *not* replayable —
@@ -461,6 +583,10 @@ fn get_spec(d: &mut Dec) -> Result<SessionSpec, String> {
     let compute_streams = d.u8()? != 0;
     let overlap = d.u8()? != 0;
     let hetero_fleet = d.u8()? != 0;
+    // the cluster dimension (span, node id, host pool) is deliberately
+    // NOT part of the spec schema: cluster artifacts carry the shape in
+    // their `ClusterExt` section and re-derive per-node configs from it,
+    // so the defaults here keep pre-cluster artifacts byte-identical
     let system = SystemConfig {
         kind,
         sparsity,
@@ -477,6 +603,7 @@ fn get_spec(d: &mut Dec) -> Result<SessionSpec, String> {
         compute_streams,
         overlap,
         hetero_fleet,
+        ..SystemConfig::new(kind)
     };
     let vram_gb = d.f64()?;
     let routing = RoutingModel { zipf_s: d.f64()?, stickiness: d.f64()?, seed: d.u64()? };
@@ -524,17 +651,9 @@ fn get_spec(d: &mut Dec) -> Result<SessionSpec, String> {
     })
 }
 
-fn put_obs(e: &mut Enc, o: &Observations) {
-    e.u64(o.entries.len() as u64);
-    for t in &o.entries {
-        e.u8(t.kind.code());
-        e.f64(t.t_us);
-        e.u64(t.id);
-        e.u64(t.ord);
-    }
-    e.bytes(&o.event_log);
-    e.u64(o.completions.len() as u64);
-    for c in &o.completions {
+fn put_completions(e: &mut Enc, completions: &[CompletionRecord]) {
+    e.u64(completions.len() as u64);
+    for c in completions {
         e.u64(c.id);
         e.u64(c.tokens);
         e.u64(c.batch_peak);
@@ -546,7 +665,28 @@ fn put_obs(e: &mut Enc, o: &Observations) {
         e.f64(c.stall.prefetch_us);
         e.f64(c.finished_us);
     }
-    let s = &o.stats;
+}
+
+fn get_completions(d: &mut Dec) -> Result<Vec<CompletionRecord>, String> {
+    let n = d.u64()? as usize;
+    let mut completions = Vec::new();
+    for _ in 0..n {
+        completions.push(CompletionRecord {
+            id: d.u64()?,
+            tokens: d.u64()?,
+            batch_peak: d.u64()?,
+            arrival_us: d.f64()?,
+            queue_wait_us: d.f64()?,
+            prefill_us: d.f64()?,
+            decode_us: d.f64()?,
+            stall: StallSplit { demand_us: d.f64()?, prefetch_us: d.f64()? },
+            finished_us: d.f64()?,
+        });
+    }
+    Ok(completions)
+}
+
+fn put_stats(e: &mut Enc, s: &StatsRecord) {
     e.u64(s.demand_fetches);
     e.u64(s.prefetches);
     e.u64(s.bus_transactions);
@@ -565,38 +705,9 @@ fn put_obs(e: &mut Enc, o: &Observations) {
         e.f64(dev.transferred_bytes);
         e.f64(dev.bus_busy_us);
     }
-    e.f64(o.total_us);
-    e.u64(o.max_batch_seen);
-    e.f64(o.cache_hit_rate);
 }
 
-fn get_obs(d: &mut Dec) -> Result<Observations, String> {
-    let n = d.u64()? as usize;
-    let mut entries = Vec::new();
-    for _ in 0..n {
-        entries.push(TimelineEntry {
-            kind: EntryKind::from_code(d.u8()?)?,
-            t_us: d.f64()?,
-            id: d.u64()?,
-            ord: d.u64()?,
-        });
-    }
-    let event_log = d.bytes()?;
-    let n = d.u64()? as usize;
-    let mut completions = Vec::new();
-    for _ in 0..n {
-        completions.push(CompletionRecord {
-            id: d.u64()?,
-            tokens: d.u64()?,
-            batch_peak: d.u64()?,
-            arrival_us: d.f64()?,
-            queue_wait_us: d.f64()?,
-            prefill_us: d.f64()?,
-            decode_us: d.f64()?,
-            stall: StallSplit { demand_us: d.f64()?, prefetch_us: d.f64()? },
-            finished_us: d.f64()?,
-        });
-    }
+fn get_stats(d: &mut Dec) -> Result<StatsRecord, String> {
     let mut stats = StatsRecord {
         demand_fetches: d.u64()?,
         prefetches: d.u64()?,
@@ -619,6 +730,39 @@ fn get_obs(d: &mut Dec) -> Result<Observations, String> {
             bus_busy_us: d.f64()?,
         });
     }
+    Ok(stats)
+}
+
+fn put_obs(e: &mut Enc, o: &Observations) {
+    e.u64(o.entries.len() as u64);
+    for t in &o.entries {
+        e.u8(t.kind.code());
+        e.f64(t.t_us);
+        e.u64(t.id);
+        e.u64(t.ord);
+    }
+    e.bytes(&o.event_log);
+    put_completions(e, &o.completions);
+    put_stats(e, &o.stats);
+    e.f64(o.total_us);
+    e.u64(o.max_batch_seen);
+    e.f64(o.cache_hit_rate);
+}
+
+fn get_obs(d: &mut Dec) -> Result<Observations, String> {
+    let n = d.u64()? as usize;
+    let mut entries = Vec::new();
+    for _ in 0..n {
+        entries.push(TimelineEntry {
+            kind: EntryKind::from_code(d.u8()?)?,
+            t_us: d.f64()?,
+            id: d.u64()?,
+            ord: d.u64()?,
+        });
+    }
+    let event_log = d.bytes()?;
+    let completions = get_completions(d)?;
+    let stats = get_stats(d)?;
     Ok(Observations {
         entries,
         event_log,
@@ -628,6 +772,121 @@ fn get_obs(d: &mut Dec) -> Result<Observations, String> {
         max_batch_seen: d.u64()?,
         cache_hit_rate: d.f64()?,
     })
+}
+
+fn put_cluster(e: &mut Enc, c: &ClusterExt) {
+    let s = &c.shape;
+    e.u32(s.n_nodes as u32);
+    e.u32(s.devices_per_node as u32);
+    e.u8(enum_code(&ShardPolicy::ALL, s.shard));
+    e.u8(s.placement.tag());
+    e.f64(s.vram_gb_total);
+    e.f64(s.host_ram_gb);
+    match &s.failure {
+        Some(f) => {
+            e.u8(1);
+            e.u32(f.node as u32);
+            e.f64(f.t_us);
+        }
+        None => e.u8(0),
+    }
+    match &c.obs {
+        Some(o) => {
+            e.u8(1);
+            e.u64(o.assignments.len() as u64);
+            for &(id, node) in &o.assignments {
+                e.u64(id);
+                e.u32(node);
+            }
+            e.f64(o.total_us);
+            e.u64(o.errored);
+            e.u64(o.rehomed_keys);
+            e.u64(o.nodes.len() as u64);
+            for n in &o.nodes {
+                e.u64(n.admitted_order.len() as u64);
+                for &id in &n.admitted_order {
+                    e.u64(id);
+                }
+                e.bytes(&n.event_log);
+                put_completions(e, &n.completions);
+                put_stats(e, &n.stats);
+                e.f64(n.cache_hit_rate);
+                e.f64(n.total_us);
+                e.u64(n.max_batch_seen);
+                e.u64(n.net_pulls);
+                e.f64(n.net_bytes);
+                e.u8(n.alive as u8);
+            }
+        }
+        None => e.u8(0),
+    }
+}
+
+fn get_cluster(d: &mut Dec) -> Result<ClusterExt, String> {
+    let n_nodes = d.u32()? as usize;
+    let devices_per_node = d.u32()? as usize;
+    let shard = enum_at(&ShardPolicy::ALL, d.u8()?, "cluster shard policy")?;
+    let placement = {
+        let tag = d.u8()?;
+        ClusterPlacement::from_tag(tag)
+            .ok_or_else(|| format!("bad cluster placement tag {tag}"))?
+    };
+    let vram_gb_total = d.f64()?;
+    let host_ram_gb = d.f64()?;
+    let failure = match d.u8()? {
+        0 => None,
+        1 => Some(NodeFailure { node: d.u32()? as usize, t_us: d.f64()? }),
+        c => return Err(format!("bad failure tag {c}")),
+    };
+    let shape = ClusterShape {
+        n_nodes,
+        devices_per_node,
+        shard,
+        placement,
+        vram_gb_total,
+        host_ram_gb,
+        failure,
+    };
+    let obs = match d.u8()? {
+        0 => None,
+        1 => {
+            let n = d.u64()? as usize;
+            let mut assignments = Vec::new();
+            for _ in 0..n {
+                assignments.push((d.u64()?, d.u32()?));
+            }
+            let total_us = d.f64()?;
+            let errored = d.u64()?;
+            let rehomed_keys = d.u64()?;
+            let n = d.u64()? as usize;
+            let mut nodes = Vec::new();
+            for _ in 0..n {
+                let k = d.u64()? as usize;
+                let mut admitted_order = Vec::new();
+                for _ in 0..k {
+                    admitted_order.push(d.u64()?);
+                }
+                let event_log = d.bytes()?;
+                let completions = get_completions(d)?;
+                let stats = get_stats(d)?;
+                nodes.push(NodeRecord {
+                    admitted_order,
+                    event_log,
+                    completions,
+                    stats,
+                    cache_hit_rate: d.f64()?,
+                    total_us: d.f64()?,
+                    max_batch_seen: d.u64()?,
+                    net_pulls: d.u64()?,
+                    net_bytes: d.f64()?,
+                    alive: d.u8()? != 0,
+                });
+            }
+            Some(ClusterObservations { assignments, nodes, total_us, errored, rehomed_keys })
+        }
+        c => return Err(format!("bad cluster observations tag {c}")),
+    };
+    Ok(ClusterExt { shape, obs })
 }
 
 impl Timeline {
@@ -642,10 +901,16 @@ impl Timeline {
         if self.replayable {
             flags |= FLAG_REPLAYABLE;
         }
+        if self.cluster.is_some() {
+            flags |= FLAG_CLUSTER;
+        }
         e.u32(flags);
         put_spec(&mut e, &self.spec);
         if let Some(o) = &self.obs {
             put_obs(&mut e, o);
+        }
+        if let Some(c) = &self.cluster {
+            put_cluster(&mut e, c);
         }
         e.buf
     }
@@ -666,8 +931,13 @@ impl Timeline {
         } else {
             None
         };
+        let cluster = if flags & FLAG_CLUSTER != 0 {
+            Some(get_cluster(&mut d)?)
+        } else {
+            None
+        };
         d.done()?;
-        Ok(Timeline { spec, obs, replayable: flags & FLAG_REPLAYABLE != 0 })
+        Ok(Timeline { spec, obs, cluster, replayable: flags & FLAG_REPLAYABLE != 0 })
     }
 }
 
@@ -775,9 +1045,12 @@ impl<B: SeqBackend> SeqBackend for RecordingBackend<B> {
 }
 
 /// Record a serving session: drive the spec through the *exact*
-/// `simulate_serving` loop (same admission, idle-skip and batch-step
-/// order) over an event-logging sim backend wrapped in a
-/// [`RecordingBackend`], and capture everything it produced.
+/// `simulate_serving` loop (whole trace enqueued up front, admission
+/// event-timed by `Scheduler::step` itself) over an event-logging sim
+/// backend wrapped in a [`RecordingBackend`], and capture everything it
+/// produced. Arrival entries therefore lead the recorded timeline in
+/// arrival order — they carry their own stamps, so causal rendering
+/// stays honest — followed by the interleaved admit/retire entries.
 pub fn record(spec: &SessionSpec) -> Timeline {
     let workload = spec.trace();
     let max_ctx = workload
@@ -788,25 +1061,12 @@ pub fn record(spec: &SessionSpec) -> Timeline {
     let kv_tokens = spec.max_batch.max(1) * max_ctx;
     let backend = SimServeBackend::new_traced(spec.params(), kv_tokens);
     let mut sched = Scheduler::new(RecordingBackend::new(backend), spec.max_batch);
-    let mut completions: Vec<CompletionRecord> = Vec::new();
-    let mut next = 0usize;
-    loop {
-        while next < workload.len() && workload[next].arrival_us <= sched.backend().now_us() {
-            let t = &workload[next];
-            sched.backend_mut().note_arrival(t.arrival_us, &t.req);
-            sched.enqueue_at(t.req.clone(), t.arrival_us);
-            next += 1;
-        }
-        if !sched.has_work() {
-            if next >= workload.len() {
-                break;
-            }
-            let t = workload[next].arrival_us;
-            sched.backend_mut().idle_until(t);
-            continue;
-        }
-        completions.extend(sched.step().iter().map(CompletionRecord::of));
+    for t in &workload {
+        sched.backend_mut().note_arrival(t.arrival_us, &t.req);
+        sched.enqueue_at(t.req.clone(), t.arrival_us);
     }
+    let completions: Vec<CompletionRecord> =
+        sched.drain().iter().map(CompletionRecord::of).collect();
     let total_us = sched.backend().now_us();
     let max_batch_seen = sched.max_batch_seen() as u64;
     let (backend, entries, _trace) = sched.into_backend().finish();
@@ -822,8 +1082,28 @@ pub fn record(spec: &SessionSpec) -> Timeline {
             max_batch_seen,
             cache_hit_rate: snap.cache_hit_rate,
         }),
+        cluster: None,
         replayable: true,
     }
+}
+
+/// Record a cluster session (DESIGN.md §10): run the deterministic
+/// cluster router over traced per-node backends and capture the shape,
+/// the router's assignments and every node's observations.
+pub fn record_cluster(base: &SessionSpec, shape: &ClusterShape) -> Result<Timeline, String> {
+    let workload = base.trace();
+    let spec = shape.cluster_spec(base.max_batch);
+    let report = simulate_cluster_traced(&base.params(), &spec, &workload)
+        .map_err(|e| format!("{e:#}"))?;
+    Ok(Timeline {
+        spec: base.clone(),
+        obs: None,
+        cluster: Some(ClusterExt {
+            shape: shape.clone(),
+            obs: Some(ClusterObservations::of(&report)),
+        }),
+        replayable: true,
+    })
 }
 
 /// What the server's recording-enabled loop hands back at teardown; the
@@ -856,6 +1136,7 @@ pub fn server_timeline(p: &SimParams, max_batch: usize, rec: &SessionRecording) 
             max_batch_seen: rec.max_batch_seen,
             cache_hit_rate: rec.snapshot.as_ref().map(|s| s.cache_hit_rate).unwrap_or(0.0),
         }),
+        cluster: None,
         replayable: false,
     }
 }
@@ -864,9 +1145,11 @@ pub fn server_timeline(p: &SimParams, max_batch: usize, rec: &SessionRecording) 
 // replayer
 
 /// First mismatching timeline position, with both causal histories.
+/// Cluster replays prefix the channel with the node (`"node 1: event
+/// log"`); cluster-global channels carry no prefix.
 #[derive(Debug)]
 pub struct Divergence {
-    pub channel: &'static str,
+    pub channel: String,
     pub index: usize,
     pub recorded: String,
     pub replayed: String,
@@ -899,6 +1182,12 @@ pub enum ReplayError {
     /// The artifact was recorded live (wall-clock arrivals): inspectable,
     /// but not a pure function of its spec.
     NotReplayable,
+    /// `replay_cluster` was handed an artifact without a cluster section
+    /// (or `replay` was handed one whose session is cluster-only).
+    NotCluster,
+    /// The artifact's cluster shape cannot be simulated (e.g. a failure
+    /// node out of range) — a malformed artifact, not a divergence.
+    Invalid(String),
     Diverged(Box<Divergence>),
 }
 
@@ -908,6 +1197,10 @@ impl fmt::Display for ReplayError {
             ReplayError::NotReplayable => {
                 write!(f, "artifact is a live recording; inspect-only (not replayable)")
             }
+            ReplayError::NotCluster => {
+                write!(f, "artifact carries no cluster section (replay it with `replay`)")
+            }
+            ReplayError::Invalid(e) => write!(f, "cluster shape is not simulatable: {e}"),
             ReplayError::Diverged(d) => write!(f, "{d}"),
         }
     }
@@ -924,13 +1217,13 @@ fn end_or(lines: &[String], idx: usize) -> &str {
 }
 
 fn diverge(
-    channel: &'static str,
+    channel: impl Into<String>,
     idx: usize,
     recorded: &[String],
     replayed: &[String],
 ) -> Box<Divergence> {
     Box::new(Divergence {
-        channel,
+        channel: channel.into(),
         index: idx,
         recorded: end_or(recorded, idx).to_string(),
         replayed: end_or(replayed, idx).to_string(),
@@ -952,6 +1245,7 @@ fn decode_event_log(log: &[u8]) -> Vec<String> {
             1 => "GemvComplete".to_string(),
             2 => "BoundaryBarrier".to_string(),
             3 => "RequestArrival".to_string(),
+            4 => "NodeDown".to_string(),
             k => format!("Unknown({k})"),
         };
         let t = f64::from_bits(u64::from_le_bytes(rec[1..9].try_into().unwrap()));
@@ -971,29 +1265,44 @@ fn f64_row(rows: &mut Vec<ScalarRow>, name: &str, v: f64) {
     rows.push((name.to_string(), v.to_bits(), format!("{v}")));
 }
 
+fn stats_rows(rows: &mut Vec<ScalarRow>, s: &StatsRecord) {
+    int_row(rows, "demand_fetches", s.demand_fetches);
+    int_row(rows, "prefetches", s.prefetches);
+    int_row(rows, "bus_transactions", s.bus_transactions);
+    f64_row(rows, "transferred_bytes", s.transferred_bytes);
+    f64_row(rows, "bus_busy_us", s.bus_busy_us);
+    f64_row(rows, "stall_us", s.stall_us);
+    f64_row(rows, "stall_demand_us", s.stall_demand_us);
+    f64_row(rows, "stall_prefetch_us", s.stall_prefetch_us);
+    f64_row(rows, "retired.demand_us", s.retired.demand_us);
+    f64_row(rows, "retired.prefetch_us", s.retired.prefetch_us);
+    for (i, dev) in s.per_device.iter().enumerate() {
+        int_row(rows, &format!("dev{i}.demand_fetches"), dev.demand_fetches);
+        int_row(rows, &format!("dev{i}.prefetches"), dev.prefetches);
+        int_row(rows, &format!("dev{i}.bus_transactions"), dev.bus_transactions);
+        f64_row(rows, &format!("dev{i}.transferred_bytes"), dev.transferred_bytes);
+        f64_row(rows, &format!("dev{i}.bus_busy_us"), dev.bus_busy_us);
+    }
+}
+
 fn scalar_rows(o: &Observations) -> Vec<ScalarRow> {
     let mut rows = Vec::new();
-    let s = &o.stats;
-    int_row(&mut rows, "demand_fetches", s.demand_fetches);
-    int_row(&mut rows, "prefetches", s.prefetches);
-    int_row(&mut rows, "bus_transactions", s.bus_transactions);
-    f64_row(&mut rows, "transferred_bytes", s.transferred_bytes);
-    f64_row(&mut rows, "bus_busy_us", s.bus_busy_us);
-    f64_row(&mut rows, "stall_us", s.stall_us);
-    f64_row(&mut rows, "stall_demand_us", s.stall_demand_us);
-    f64_row(&mut rows, "stall_prefetch_us", s.stall_prefetch_us);
-    f64_row(&mut rows, "retired.demand_us", s.retired.demand_us);
-    f64_row(&mut rows, "retired.prefetch_us", s.retired.prefetch_us);
-    for (i, dev) in s.per_device.iter().enumerate() {
-        int_row(&mut rows, &format!("dev{i}.demand_fetches"), dev.demand_fetches);
-        int_row(&mut rows, &format!("dev{i}.prefetches"), dev.prefetches);
-        int_row(&mut rows, &format!("dev{i}.bus_transactions"), dev.bus_transactions);
-        f64_row(&mut rows, &format!("dev{i}.transferred_bytes"), dev.transferred_bytes);
-        f64_row(&mut rows, &format!("dev{i}.bus_busy_us"), dev.bus_busy_us);
-    }
+    stats_rows(&mut rows, &o.stats);
     f64_row(&mut rows, "total_us", o.total_us);
     int_row(&mut rows, "max_batch_seen", o.max_batch_seen);
     f64_row(&mut rows, "cache_hit_rate", o.cache_hit_rate);
+    rows
+}
+
+fn node_scalar_rows(n: &NodeRecord) -> Vec<ScalarRow> {
+    let mut rows = Vec::new();
+    stats_rows(&mut rows, &n.stats);
+    f64_row(&mut rows, "cache_hit_rate", n.cache_hit_rate);
+    f64_row(&mut rows, "total_us", n.total_us);
+    int_row(&mut rows, "max_batch_seen", n.max_batch_seen);
+    int_row(&mut rows, "net_pulls", n.net_pulls);
+    f64_row(&mut rows, "net_bytes", n.net_bytes);
+    int_row(&mut rows, "alive", n.alive as u64);
     rows
 }
 
@@ -1056,12 +1365,141 @@ pub fn replay(tl: &Timeline) -> Result<Observations, ReplayError> {
     if !tl.replayable {
         return Err(ReplayError::NotReplayable);
     }
+    if tl.cluster.is_some() {
+        return Err(ReplayError::NotCluster);
+    }
     let fresh = record(&tl.spec).obs.expect("record always attaches observations");
     let reference = match &tl.obs {
         Some(o) => o.clone(),
         None => record(&tl.spec).obs.expect("record always attaches observations"),
     };
     diff_observations(&reference, &fresh).map_err(ReplayError::Diverged)?;
+    Ok(fresh)
+}
+
+fn first_mismatch(a: &[String], b: &[String]) -> usize {
+    let n = a.len().max(b.len());
+    (0..n).find(|&i| a.get(i) != b.get(i)).unwrap_or(0)
+}
+
+fn diff_node(j: usize, a: &NodeRecord, b: &NodeRecord) -> Result<(), Box<Divergence>> {
+    if a.admitted_order != b.admitted_order {
+        let ra: Vec<String> =
+            a.admitted_order.iter().map(|id| format!("admit id={id}")).collect();
+        let rb: Vec<String> =
+            b.admitted_order.iter().map(|id| format!("admit id={id}")).collect();
+        let i = first_mismatch(&ra, &rb);
+        return Err(diverge(format!("node {j}: admitted order"), i, &ra, &rb));
+    }
+    if a.event_log != b.event_log {
+        let ra = decode_event_log(&a.event_log);
+        let rb = decode_event_log(&b.event_log);
+        let i = first_mismatch(&ra, &rb);
+        return Err(diverge(format!("node {j}: event log"), i, &ra, &rb));
+    }
+    let n = a.completions.len().max(b.completions.len());
+    for i in 0..n {
+        let ca = a.completions.get(i).map(CompletionRecord::bits);
+        let cb = b.completions.get(i).map(CompletionRecord::bits);
+        if ca != cb {
+            let ra: Vec<String> = a.completions.iter().map(CompletionRecord::render).collect();
+            let rb: Vec<String> = b.completions.iter().map(CompletionRecord::render).collect();
+            return Err(diverge(format!("node {j}: completions"), i, &ra, &rb));
+        }
+    }
+    let ra = node_scalar_rows(a);
+    let rb = node_scalar_rows(b);
+    for i in 0..ra.len().max(rb.len()) {
+        let va = ra.get(i).map(|(name, bits, _)| (name.clone(), *bits));
+        let vb = rb.get(i).map(|(name, bits, _)| (name.clone(), *bits));
+        if va != vb {
+            let la: Vec<String> = ra.iter().map(|(n, _, v)| format!("{n}={v}")).collect();
+            let lb: Vec<String> = rb.iter().map(|(n, _, v)| format!("{n}={v}")).collect();
+            return Err(diverge(format!("node {j}: store stats"), i, &la, &lb));
+        }
+    }
+    Ok(())
+}
+
+/// Bit-exact comparison of two cluster observation sets, in causal
+/// order: routing assignments first (they decide everything
+/// downstream), then each node's channels, then the cluster totals.
+pub fn diff_cluster(
+    recorded: &ClusterObservations,
+    replayed: &ClusterObservations,
+) -> Result<(), Box<Divergence>> {
+    if recorded.assignments != replayed.assignments {
+        let ra: Vec<String> = recorded
+            .assignments
+            .iter()
+            .map(|(id, n)| format!("req {id} -> node {n}"))
+            .collect();
+        let rb: Vec<String> = replayed
+            .assignments
+            .iter()
+            .map(|(id, n)| format!("req {id} -> node {n}"))
+            .collect();
+        let i = first_mismatch(&ra, &rb);
+        return Err(diverge("assignments", i, &ra, &rb));
+    }
+    if recorded.nodes.len() != replayed.nodes.len() {
+        let row = |nodes: &[NodeRecord]| {
+            nodes
+                .iter()
+                .enumerate()
+                .map(|(j, n)| format!("node {j}: {} completions", n.completions.len()))
+                .collect::<Vec<_>>()
+        };
+        let (ra, rb) = (row(&recorded.nodes), row(&replayed.nodes));
+        let i = first_mismatch(&ra, &rb);
+        return Err(diverge("node count", i, &ra, &rb));
+    }
+    for (j, (a, b)) in recorded.nodes.iter().zip(&replayed.nodes).enumerate() {
+        diff_node(j, a, b)?;
+    }
+    let totals = |o: &ClusterObservations| {
+        let mut rows = Vec::new();
+        f64_row(&mut rows, "total_us", o.total_us);
+        int_row(&mut rows, "errored", o.errored);
+        int_row(&mut rows, "rehomed_keys", o.rehomed_keys);
+        rows
+    };
+    let (ra, rb) = (totals(recorded), totals(replayed));
+    for i in 0..ra.len() {
+        if ra[i].1 != rb[i].1 {
+            let la: Vec<String> = ra.iter().map(|(n, _, v)| format!("{n}={v}")).collect();
+            let lb: Vec<String> = rb.iter().map(|(n, _, v)| format!("{n}={v}")).collect();
+            return Err(diverge("cluster totals", i, &la, &lb));
+        }
+    }
+    Ok(())
+}
+
+/// Re-drive a recorded cluster session from its spec and shape, and
+/// assert bit-exact reproduction node by node. Shape-only artifacts (no
+/// cluster observations) are replayed twice — a pure determinism check.
+/// Returns the freshly replayed cluster observations on success.
+pub fn replay_cluster(tl: &Timeline) -> Result<ClusterObservations, ReplayError> {
+    if !tl.replayable {
+        return Err(ReplayError::NotReplayable);
+    }
+    let Some(ext) = &tl.cluster else {
+        return Err(ReplayError::NotCluster);
+    };
+    let run = || -> Result<ClusterObservations, ReplayError> {
+        Ok(record_cluster(&tl.spec, &ext.shape)
+            .map_err(ReplayError::Invalid)?
+            .cluster
+            .expect("record_cluster always attaches a cluster section")
+            .obs
+            .expect("record_cluster always attaches cluster observations"))
+    };
+    let fresh = run()?;
+    let reference = match &ext.obs {
+        Some(o) => o.clone(),
+        None => run()?,
+    };
+    diff_cluster(&reference, &fresh).map_err(ReplayError::Diverged)?;
     Ok(fresh)
 }
 
@@ -1255,7 +1693,7 @@ mod tests {
     #[test]
     fn spec_roundtrips_through_bytes() {
         let spec = tiny_spec(true, 11);
-        let tl = Timeline { spec, obs: None, replayable: true };
+        let tl = Timeline { spec, obs: None, cluster: None, replayable: true };
         let bytes = tl.to_bytes();
         let back = Timeline::from_bytes(&bytes).unwrap();
         assert!(back.replayable);
@@ -1267,7 +1705,7 @@ mod tests {
         // expanded-trace form
         let trace = tl.spec.trace();
         let spec2 = SessionSpec { workload: WorkloadSource::Trace(trace.clone()), ..tl.spec };
-        let tl2 = Timeline { spec: spec2, obs: None, replayable: false };
+        let tl2 = Timeline { spec: spec2, obs: None, cluster: None, replayable: false };
         let bytes2 = tl2.to_bytes();
         let back2 = Timeline::from_bytes(&bytes2).unwrap();
         assert_eq!(back2.spec.trace(), trace);
@@ -1301,7 +1739,8 @@ mod tests {
             let fresh = replay(&back).unwrap();
             assert_eq!(fresh.event_log, obs.event_log);
             // spec-only artifact: replay is a pure determinism check
-            let spec_only = Timeline { spec: tl.spec.clone(), obs: None, replayable: true };
+            let spec_only =
+                Timeline { spec: tl.spec.clone(), obs: None, cluster: None, replayable: true };
             replay(&spec_only).unwrap();
         }
     }
@@ -1343,6 +1782,137 @@ mod tests {
         }
         let live = Timeline { replayable: false, ..tl };
         assert!(matches!(replay(&live), Err(ReplayError::NotReplayable)));
+    }
+
+    #[test]
+    fn tampered_completion_field_reports_divergence_with_both_histories() {
+        // corrupt one numeric field of one completion record: the
+        // replayer must surface the completions channel, point at the
+        // exact entry and render both causal histories
+        let mut tl = record(&tiny_spec(true, 5));
+        let idx = {
+            let obs = tl.obs.as_mut().unwrap();
+            let idx = obs.completions.len() / 2;
+            obs.completions[idx].queue_wait_us += 1.0;
+            idx
+        };
+        match replay(&tl) {
+            Err(ReplayError::Diverged(d)) => {
+                assert_eq!(d.channel, "completions");
+                assert_eq!(d.index, idx);
+                assert!(!d.recorded_context.is_empty());
+                assert!(!d.replayed_context.is_empty());
+                assert_ne!(d.recorded, d.replayed);
+                // the report renders end to end
+                assert!(format!("{d}").contains("completions"));
+            }
+            other => panic!("expected divergence, got {other:?}"),
+        }
+
+        // an integer-field corruption diverges just the same
+        let mut tl = record(&tiny_spec(false, 5));
+        tl.obs.as_mut().unwrap().completions[0].tokens += 1;
+        match replay(&tl) {
+            Err(ReplayError::Diverged(d)) => {
+                assert_eq!(d.channel, "completions");
+                assert_eq!(d.index, 0);
+            }
+            other => panic!("expected divergence, got {other:?}"),
+        }
+    }
+
+    fn tiny_cluster_shape(failure: Option<NodeFailure>) -> ClusterShape {
+        ClusterShape {
+            n_nodes: 2,
+            devices_per_node: 1,
+            shard: ShardPolicy::Layer,
+            placement: ClusterPlacement::RoundRobin,
+            vram_gb_total: 28.5,
+            host_ram_gb: 64.0,
+            failure,
+        }
+    }
+
+    #[test]
+    fn cluster_artifact_roundtrips_and_replays_bit_exactly() {
+        let base = tiny_spec(false, 5);
+        let shape = tiny_cluster_shape(None);
+        let tl = record_cluster(&base, &shape).unwrap();
+        let bytes = tl.to_bytes();
+        let back = Timeline::from_bytes(&bytes).unwrap();
+        assert_eq!(back.to_bytes(), bytes);
+        let ext = back.cluster.as_ref().unwrap();
+        assert_eq!(ext.shape.n_nodes, 2);
+        let obs = ext.obs.as_ref().unwrap();
+        assert_eq!(obs.nodes.len(), 2);
+        assert_eq!(obs.assignments.len(), 4);
+        assert!(obs.nodes.iter().all(|n| !n.event_log.is_empty()));
+
+        let fresh = replay_cluster(&back).unwrap();
+        assert_eq!(fresh.total_us.to_bits(), obs.total_us.to_bits());
+
+        // shape-only artifact: replay is a pure determinism check
+        let shape_only = Timeline {
+            spec: base,
+            obs: None,
+            cluster: Some(ClusterExt { shape, obs: None }),
+            replayable: true,
+        };
+        let back = Timeline::from_bytes(&shape_only.to_bytes()).unwrap();
+        replay_cluster(&back).unwrap();
+        // the single-node replayer refuses cluster artifacts
+        assert!(matches!(replay(&back), Err(ReplayError::NotCluster)));
+        // and the cluster replayer refuses single-node ones
+        let plain = record(&tiny_spec(false, 5));
+        assert!(matches!(replay_cluster(&plain), Err(ReplayError::NotCluster)));
+    }
+
+    #[test]
+    fn tampered_cluster_artifact_names_the_divergent_node() {
+        let base = tiny_spec(false, 7);
+        let mut tl = record_cluster(&base, &tiny_cluster_shape(None)).unwrap();
+        {
+            let obs = tl.cluster.as_mut().unwrap().obs.as_mut().unwrap();
+            let log = &mut obs.nodes[1].event_log;
+            let n = log.len();
+            log[n - 1] ^= 1;
+        }
+        match replay_cluster(&tl) {
+            Err(ReplayError::Diverged(d)) => {
+                assert_eq!(d.channel, "node 1: event log");
+                assert!(!d.recorded_context.is_empty());
+                assert!(!d.replayed_context.is_empty());
+            }
+            other => panic!("expected divergence, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn failure_scenario_replays_bit_exactly() {
+        let base = tiny_spec(false, 13);
+        // drop node 1 early enough that it still holds work
+        let t_fail = base.trace()[1].arrival_us + 1.0;
+        let shape = tiny_cluster_shape(Some(NodeFailure { node: 1, t_us: t_fail }));
+        let tl = record_cluster(&base, &shape).unwrap();
+        let back = Timeline::from_bytes(&tl.to_bytes()).unwrap();
+        let fresh = replay_cluster(&back).unwrap();
+        let obs = back.cluster.unwrap().obs.unwrap();
+        assert_eq!(fresh.errored, obs.errored);
+        assert_eq!(fresh.rehomed_keys, obs.rehomed_keys);
+        assert!(fresh.rehomed_keys > 0);
+        assert!(!fresh.nodes[1].alive);
+        // the dead node's log carries the NodeDown pop at its exact time
+        let lines = super::decode_event_log(&fresh.nodes[1].event_log);
+        assert!(lines.iter().any(|l| l.starts_with("NodeDown")), "{lines:?}");
+        // an out-of-range failure node is malformed, not divergent
+        let bad = Timeline {
+            cluster: Some(ClusterExt {
+                shape: tiny_cluster_shape(Some(NodeFailure { node: 9, t_us: 1.0 })),
+                obs: None,
+            }),
+            ..record_cluster(&base, &tiny_cluster_shape(None)).unwrap()
+        };
+        assert!(matches!(replay_cluster(&bad), Err(ReplayError::Invalid(_))));
     }
 
     #[test]

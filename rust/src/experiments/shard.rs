@@ -397,8 +397,8 @@ mod tests {
     /// The popularity acceptance shape (margins replay-verified in
     /// python/replay_sim.py): balanced re-homing + top-k replication +
     /// per-device compute streams beats static hash sharding on decode
-    /// TPS at 2 and 4 devices on the skewed trace (replay: 1.061x and
-    /// 1.266x).
+    /// TPS at 2 and 4 devices on the skewed trace (replay, under the
+    /// replica-pool carve: 1.0216x and 1.2657x).
     #[test]
     fn balanced_popularity_beats_hash_on_skewed_trace() {
         for (devices, min_ratio) in [(2usize, 1.02), (4, 1.10)] {
@@ -437,8 +437,8 @@ mod tests {
 
     /// Per-device compute streams must deliver FLOP scaling beyond what
     /// placement alone gives: the same balanced+replicated config with
-    /// streams on beats itself with streams off (replay: 1.082x at 2
-    /// devices).
+    /// streams on beats itself with streams off (replay, under the
+    /// replica-pool carve: 1.0774x at 2 devices).
     #[test]
     fn compute_streams_scale_flops_beyond_single_timeline() {
         let with = sweep_point(

@@ -98,10 +98,29 @@ pub const P2P_LINK: PcieSpec = PcieSpec {
     pageable_gbps: 50.0,
 };
 
+/// Node ↔ node network link (datacenter Ethernet / commodity RDMA class):
+/// 10–100x slower than PCIe and *latency-dominated* — the per-message
+/// setup cost (`api_us`, the Fig-7 treatment) is two orders of magnitude
+/// above a PCIe copy's, so cross-node expert pulls only pay off when the
+/// pulled expert amortizes over many tokens. Used by the cluster tier for
+/// cross-node resolution (`Lookup::RemoteNode`) and failure re-homing.
+pub const NET_LINK: PcieSpec = PcieSpec {
+    gbps: 1.6,
+    api_us: 150.0,
+    pageable_gbps: 1.6,
+};
+
 /// Multi-device transfer topology for the placement-aware `ExpertStore`
-/// (DESIGN.md §3): `n_devices` GPUs, each with its own dedicated
+/// (DESIGN.md §3, §10): `n_devices` GPUs, each with its own dedicated
 /// host→device link (`h2d`, independent busy-until timelines), joined by
-/// a shared-spec peer link (`p2p`) for GPU↔GPU copies.
+/// a shared-spec peer link (`p2p`) for GPU↔GPU copies. The cluster tier
+/// adds a node dimension above the device one: a topology either *spans*
+/// several nodes (`span_nodes > 1` — one store whose devices partition
+/// into node groups joined by `net`) or is a *member* of an N-node
+/// cluster (`n_nodes > 1`, `node_id` = which one — one store per node,
+/// cross-node traffic charged by the cluster router). Every constructor
+/// defaults to the single-node world, so nothing changes until a caller
+/// opts in.
 #[derive(Clone, Debug)]
 pub struct TopologySpec {
     pub n_devices: usize,
@@ -109,6 +128,18 @@ pub struct TopologySpec {
     pub h2d: PcieSpec,
     /// device ↔ device peer link (P2P through the switch / NVLink-class)
     pub p2p: PcieSpec,
+    /// node ↔ node network link (latency-dominated; `NET_LINK` default)
+    pub net: PcieSpec,
+    /// how many cluster nodes exist (1 = the single-node world)
+    pub n_nodes: usize,
+    /// which node this topology's devices live on (member topologies)
+    pub node_id: usize,
+    /// how many nodes this topology's own devices span (spanning
+    /// topologies partition `n_devices` evenly into `span_nodes` groups)
+    pub span_nodes: usize,
+    /// per-node host RAM pool for expert residency decoupled from the
+    /// serving node, GB (sized so the default holds the full roster)
+    pub host_ram_gb: f64,
     /// per-device GEMV throughput relative to the run's `GpuSpec` (1.0 =
     /// that spec; heterogeneous fleets scale each compute stream). Only
     /// consulted when per-device compute streams are on — the legacy
@@ -126,7 +157,17 @@ impl TopologySpec {
     /// connected over `P2P_LINK`.
     pub fn uniform(n: usize, h2d: PcieSpec) -> Self {
         let n = n.max(1);
-        TopologySpec { n_devices: n, h2d, p2p: P2P_LINK, gemv_scale: vec![1.0; n] }
+        TopologySpec {
+            n_devices: n,
+            h2d,
+            p2p: P2P_LINK,
+            net: NET_LINK,
+            n_nodes: 1,
+            node_id: 0,
+            span_nodes: 1,
+            host_ram_gb: 64.0,
+            gemv_scale: vec![1.0; n],
+        }
     }
 
     /// A heterogeneous fleet: device 0 runs at the run's `GpuSpec`
@@ -143,6 +184,47 @@ impl TopologySpec {
             }
         }
         t
+    }
+
+    /// Spanning form: this store's `n_devices` partition evenly into
+    /// `span` node groups over the `net` link (`span` is clamped to a
+    /// divisor-friendly range; `span = 1` is a no-op). Peer hits inside a
+    /// group stay on `p2p`; across groups they resolve as
+    /// `Lookup::RemoteNode` and move over `net`.
+    pub fn with_cluster_span(mut self, span: usize) -> Self {
+        let span = span.clamp(1, self.n_devices.max(1));
+        self.span_nodes = span;
+        self.n_nodes = self.n_nodes.max(span);
+        self
+    }
+
+    /// Member form: this store is node `node_id` of an `n_nodes` cluster
+    /// with `host_ram_gb` of host RAM for its expert pool. Its own
+    /// devices stay single-node (`span_nodes = 1`); cross-node costs are
+    /// charged by the cluster router through the `net` spec.
+    pub fn as_member(mut self, node_id: usize, n_nodes: usize, host_ram_gb: f64) -> Self {
+        let n_nodes = n_nodes.max(1);
+        self.n_nodes = n_nodes;
+        self.node_id = node_id.min(n_nodes - 1);
+        self.host_ram_gb = host_ram_gb;
+        self
+    }
+
+    /// Which node device `dev` lives on. Spanning topologies partition
+    /// devices into contiguous equal groups; member topologies put every
+    /// device on `node_id`.
+    pub fn node_of(&self, dev: usize) -> usize {
+        if self.span_nodes > 1 {
+            let per = (self.n_devices / self.span_nodes).max(1);
+            self.node_id + (dev / per).min(self.span_nodes - 1)
+        } else {
+            self.node_id
+        }
+    }
+
+    /// True once any cluster dimension is active (spanning or member).
+    pub fn clustered(&self) -> bool {
+        self.span_nodes > 1 || self.n_nodes > 1
     }
 
     /// Expert GEMV latency on device `dev` given the homogeneous-spec
@@ -374,6 +456,48 @@ mod tests {
         }
         // degenerate fleets collapse to uniform
         assert_eq!(TopologySpec::heterogeneous(1, PCIE4).gemv_scale, vec![1.0]);
+    }
+
+    #[test]
+    fn net_link_is_latency_dominated_and_much_slower_than_pcie() {
+        // 10-100x slower than PCIe on bandwidth, with a per-message setup
+        // cost an order of magnitude above the PCIe api overhead — the
+        // Fig-7 treatment applied to the node link
+        assert!(PCIE4.gbps / NET_LINK.gbps >= 10.0 && PCIE4.gbps / NET_LINK.gbps <= 100.0);
+        assert!(NET_LINK.api_us >= 10.0 * PCIE4.api_us);
+        // at one-expert granularity (~27 MB) the pull is ~17 ms — far
+        // beyond a PCIe fetch, so host adoption matters
+        let b = 27e6;
+        assert!(NET_LINK.copy_us(b) > 10.0 * PCIE4.copy_us(b));
+        // latency-dominated: a tiny message is almost pure setup cost
+        let tiny = NET_LINK.copy_us(64.0);
+        assert!((tiny - NET_LINK.api_us) / tiny < 0.01, "{tiny}");
+    }
+
+    #[test]
+    fn topology_node_dimension_defaults_to_single_node() {
+        let t = TopologySpec::uniform(4, PCIE4);
+        assert!(!t.clustered());
+        assert_eq!(t.n_nodes, 1);
+        assert_eq!(t.span_nodes, 1);
+        for d in 0..4 {
+            assert_eq!(t.node_of(d), 0);
+        }
+        // spanning: 4 devices over 2 nodes -> contiguous halves
+        let s = TopologySpec::uniform(4, PCIE4).with_cluster_span(2);
+        assert!(s.clustered());
+        assert_eq!(s.span_nodes, 2);
+        assert_eq!([s.node_of(0), s.node_of(1), s.node_of(2), s.node_of(3)], [0, 0, 1, 1]);
+        // span is clamped to the device count; span 1 is a no-op
+        assert_eq!(TopologySpec::uniform(2, PCIE4).with_cluster_span(8).span_nodes, 2);
+        assert!(!TopologySpec::uniform(2, PCIE4).with_cluster_span(1).clustered());
+        // member: every device on node_id, n_nodes recorded
+        let m = TopologySpec::uniform(2, PCIE4).as_member(1, 3, 8.0);
+        assert!(m.clustered());
+        assert_eq!((m.n_nodes, m.node_id, m.span_nodes), (3, 1, 1));
+        assert_eq!(m.node_of(0), 1);
+        assert_eq!(m.node_of(1), 1);
+        assert_eq!(m.host_ram_gb, 8.0);
     }
 
     #[test]

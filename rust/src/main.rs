@@ -229,6 +229,48 @@ fn main() -> Result<()> {
             );
             let bytes = std::fs::read(&path).with_context(|| format!("read {}", path.display()))?;
             let tl = Timeline::from_bytes(&bytes).map_err(|e| anyhow::anyhow!("{e}"))?;
+            if tl.cluster.is_some() {
+                // cluster artifact: re-drive the whole cluster session and
+                // assert every node reproduced bit-exactly
+                match timeline::replay_cluster(&tl) {
+                    Ok(obs) => {
+                        println!(
+                            "cluster replay OK — bit-exact across {} nodes ({})",
+                            obs.nodes.len(),
+                            path.display()
+                        );
+                        let tokens: u64 = obs
+                            .nodes
+                            .iter()
+                            .flat_map(|n| n.completions.iter())
+                            .map(|c| c.tokens)
+                            .sum();
+                        println!(
+                            "  {} requests, {tokens} tokens in {:.1} ms; errored {}, \
+                             re-homed keys {}",
+                            obs.assignments.len(),
+                            obs.total_us / 1e3,
+                            obs.errored,
+                            obs.rehomed_keys
+                        );
+                        for (j, n) in obs.nodes.iter().enumerate() {
+                            println!(
+                                "  node {j}: {} completions, {} net pulls ({:.1} MB), {}",
+                                n.completions.len(),
+                                n.net_pulls,
+                                n.net_bytes / 1e6,
+                                if n.alive { "alive" } else { "down" }
+                            );
+                        }
+                    }
+                    Err(ReplayError::Diverged(d)) => {
+                        eprintln!("{d}");
+                        bail!("cluster replay diverged from the recorded session");
+                    }
+                    Err(e) => bail!("{}: {e}", path.display()),
+                }
+                return Ok(());
+            }
             match timeline::replay(&tl) {
                 Ok(obs) => {
                     println!("replay OK — bit-exact ({})", path.display());
@@ -248,6 +290,7 @@ fn main() -> Result<()> {
                     eprintln!("{d}");
                     bail!("replay diverged from the recorded session");
                 }
+                Err(e) => bail!("{}: {e}", path.display()),
             }
         }
         "eval" => {
@@ -304,6 +347,14 @@ fn main() -> Result<()> {
             args.sparsity_decay(),
             args.overlap(),
         )?,
+        "exp-cluster-sweep" => exp::cluster::run(
+            args.usize("requests", 16),
+            args.usize("seed", 7) as u64,
+            args.f64("rate", 8.0),
+            args.f64("vram-total", exp::cluster::AGGREGATE_VRAM_GB),
+            args.get("nodes").and_then(|v| v.parse().ok()),
+            args.get("devices").and_then(|v| v.parse().ok()),
+        )?,
         "exp-shard-sweep" => exp::shard::run(
             args.residency()?,
             args.usize("seed", 7) as u64,
@@ -324,6 +375,7 @@ fn main() -> Result<()> {
             exp::fig8::run(ResidencyKind::Lru, 1, ShardPolicy::Layer, decay)?;
             exp::fig8::run_policy_sweep(decay)?;
             exp::shard::run(ResidencyKind::Lru, 7, decay)?;
+            exp::cluster::run(16, 7, 8.0, exp::cluster::AGGREGATE_VRAM_GB, None, None)?;
             exp::serveload::run(
                 ResidencyKind::Lru, 16, 7, exp::serveload::DEFAULT_VRAM_GB,
                 1, ShardPolicy::Layer, decay, false,
@@ -345,8 +397,9 @@ fn main() -> Result<()> {
                  usage: floe <cmd> [--flag value]...\n\n\
                  cmds: generate serve record replay eval exp-fig2 exp-fig3a \
                  exp-fig3b exp-fig4 exp-fig6 exp-fig7 exp-fig8 exp-fig9 \
-                 exp-policy-sweep exp-serve-load exp-shard-sweep exp-table1 \
-                 exp-table3 exp-compression exp-all\n\n\
+                 exp-policy-sweep exp-serve-load exp-shard-sweep \
+                 exp-cluster-sweep exp-table1 exp-table3 exp-compression \
+                 exp-all\n\n\
                  common flags: --mode dense|sparse|floe|cats|chess|uniform \
                  --level 0.8 --bits 2 --policy lru|lfu|sparsity \
                  --sparsity-decay 0.999 --prompt '...' --tokens 48\n\
@@ -375,7 +428,12 @@ fn main() -> Result<()> {
                  exp-serve-load system shape as a replayable artifact)\n\
                  replay flags: --artifact <path> (re-drives the recorded \
                  session and asserts bit-exact reproduction, then prints \
-                 the per-request inspector report)\n\
+                 the per-request inspector report; cluster artifacts \
+                 re-drive every node and cross-check per-node logs)\n\
+                 cluster flags (exp-cluster-sweep): --nodes N --devices D \
+                 (restrict the sweep to one cell) --requests 16 --rate 8 \
+                 --vram-total 28.5 (aggregate expert-cache VRAM split \
+                 evenly across all nodes x devices)\n\
                  env: FLOE_ARTIFACTS (default ./artifacts)"
             );
         }

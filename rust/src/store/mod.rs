@@ -25,7 +25,7 @@
 //! Fig-6/8 numbers bit-exactly (pinned by the reference test in
 //! `tests/shard_store.rs`).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 pub mod cache;
 pub mod clock;
@@ -36,8 +36,8 @@ pub mod prefetch;
 pub use cache::{CacheStats, ResidentSet};
 pub use clock::{Clock, VirtualClock, WallClock};
 pub use placement::{
-    DeviceId, Lookup, Placement, PlanMode, TransferItem, TransferPlan,
-    REBALANCE_INTERVAL, REBALANCE_SLACK, REPLICA_BUDGET_FRAC,
+    DeviceId, LinkClass, Lookup, NodeId, Placement, PlanMode, TransferItem,
+    TransferPlan, REBALANCE_INTERVAL, REBALANCE_SLACK, REPLICA_BUDGET_FRAC,
 };
 pub use policy::{
     build_policy, LfuPolicy, LruPolicy, PopularityTracker, ResidencyPolicy,
@@ -83,6 +83,22 @@ pub struct ExpertStore<P = ()> {
     /// replica write-backs executed (home evictions that promoted a
     /// replica holder instead of dropping the expert)
     writebacks: u64,
+    /// per-node host-RAM expert pools (cluster tier, DESIGN.md §10),
+    /// indexed by *local* node (0-based within this store's span): which
+    /// experts each node can stage from its own host memory at PCIe
+    /// cost. A demand fetch for anything else crosses the network link
+    /// (`demand_link_us`), with the pulled bytes adopted on first touch.
+    /// Never consulted by unclustered topologies.
+    host_pools: Vec<BTreeSet<ExpertKey>>,
+    /// bytes resident in each local node's host pool (≤ `host_budget`)
+    host_bytes: Vec<usize>,
+    /// per-node host-RAM byte budget (`TopologySpec::host_ram_gb`)
+    host_budget: usize,
+    /// cross-node messages sent over the network link (demand pulls,
+    /// re-homing copies, zero-byte re-homing handshakes)
+    net_pulls: u64,
+    /// bytes moved over the network link
+    net_bytes: f64,
 }
 
 impl<P> ExpertStore<P> {
@@ -95,7 +111,11 @@ impl<P> ExpertStore<P> {
     /// `budget_per_device` bytes and an independent instance of the
     /// eviction policy (`sparsity_decay` tunes the sparsity policy's
     /// activation EMA — and the store's popularity tracker, which shares
-    /// the same machinery; other policies ignore it).
+    /// the same machinery; other policies ignore it). With
+    /// `replicate_top > 0` the replica pool is *carved out of* that
+    /// budget — the resident set runs on `budget - replica_budget` bytes
+    /// so resident + replica bytes never exceed the configured device
+    /// budget (see `REPLICA_BUDGET_FRAC`).
     pub fn build(
         placement: Placement,
         budget_per_device: usize,
@@ -104,9 +124,17 @@ impl<P> ExpertStore<P> {
         clock: Box<dyn Clock>,
     ) -> Self {
         let n = placement.n_devices();
+        let nodes = placement.topo.span_nodes.max(1);
+        let replica_budget = (budget_per_device as f64 * REPLICA_BUDGET_FRAC) as usize;
+        let resident_budget = if placement.replicate_top > 0 {
+            budget_per_device.saturating_sub(replica_budget)
+        } else {
+            budget_per_device
+        };
+        let host_budget = (placement.topo.host_ram_gb * 1e9) as usize;
         ExpertStore {
             devices: (0..n)
-                .map(|_| ResidentSet::new_tuned(budget_per_device, kind, sparsity_decay))
+                .map(|_| ResidentSet::new_tuned(resident_budget, kind, sparsity_decay))
                 .collect(),
             prefetch: PrefetchPipeline::new(n),
             placement,
@@ -116,10 +144,15 @@ impl<P> ExpertStore<P> {
             home_map: BTreeMap::new(),
             replicas: BTreeMap::new(),
             replica_bytes: vec![0; n],
-            replica_budget: (budget_per_device as f64 * REPLICA_BUDGET_FRAC) as usize,
+            replica_budget,
             boundary_ticks: 0,
             rebalances: 0,
             writebacks: 0,
+            host_pools: vec![BTreeSet::new(); nodes],
+            host_bytes: vec![0; nodes],
+            host_budget,
+            net_pulls: 0,
+            net_bytes: 0.0,
         }
     }
 
@@ -320,11 +353,27 @@ impl<P> ExpertStore<P> {
             self.devices[home].access(key);
             return Lookup::Local(home);
         }
+        // resolution order (DESIGN.md §10): same-node peers before any
+        // cross-node holder — a p2p pull beats a network pull by orders
+        // of magnitude. Unclustered topologies put every device on one
+        // node, so this scan is the pre-cluster peer scan exactly.
+        let home_node = self.placement.topo.node_of(home);
+        let mut foreign: Option<DeviceId> = None;
         for d in 0..self.devices.len() {
-            if d != home && self.devices[d].contains(key) {
+            if d == home || !self.devices[d].contains(key) {
+                continue;
+            }
+            if self.placement.topo.node_of(d) == home_node {
                 self.devices[d].access(key);
                 return Lookup::Remote(d);
             }
+            if foreign.is_none() {
+                foreign = Some(d);
+            }
+        }
+        if let Some(d) = foreign {
+            self.devices[d].access(key);
+            return Lookup::RemoteNode(d);
         }
         self.devices[home].access(key); // records the miss
         Lookup::Miss
@@ -897,6 +946,178 @@ impl<P> ExpertStore<P> {
         done
     }
 
+    // ------------------------------------------------------ cluster tier
+
+    /// Local node index (0-based within this store's span) of `dev`.
+    fn local_node_of(&self, dev: DeviceId) -> usize {
+        self.placement.topo.node_of(dev) - self.placement.topo.node_id
+    }
+
+    /// Seed local node `node`'s host pool with `keys` at `bytes_per_key`
+    /// each, in order, until the host budget fills (the cluster boot
+    /// path: each node stages its shard of the roster — and whatever
+    /// else fits — in host RAM). Keys already pooled are skipped free.
+    pub fn seed_host_pool(&mut self, node: usize, keys: &[ExpertKey], bytes_per_key: usize) {
+        for &key in keys {
+            if self.host_pools[node].contains(&key) {
+                continue;
+            }
+            if self.host_bytes[node] + bytes_per_key > self.host_budget {
+                break;
+            }
+            self.host_pools[node].insert(key);
+            self.host_bytes[node] += bytes_per_key;
+        }
+    }
+
+    /// Is `key` stageable from local node `node`'s host RAM?
+    pub fn host_resident(&self, node: usize, key: ExpertKey) -> bool {
+        self.host_pools.get(node).is_some_and(|p| p.contains(&key))
+    }
+
+    /// Keys in local node `node`'s host pool, sorted (failure re-homing
+    /// enumerates a dead node's stageable shard from here).
+    pub fn host_pool_keys(&self, node: usize) -> Vec<ExpertKey> {
+        self.host_pools[node].iter().copied().collect()
+    }
+
+    /// Host-pool bytes resident on local node `node`.
+    pub fn host_bytes_of(&self, node: usize) -> usize {
+        self.host_bytes[node]
+    }
+
+    /// The per-node host-RAM budget in bytes.
+    pub fn host_budget(&self) -> usize {
+        self.host_budget
+    }
+
+    /// Adopt `key` into local node `node`'s host pool if it fits — the
+    /// first-touch side effect of a cross-node pull (repeats pay PCIe).
+    fn host_adopt(&mut self, node: usize, key: ExpertKey, bytes: usize) {
+        if self.host_bytes[node] + bytes <= self.host_budget
+            && self.host_pools[node].insert(key)
+        {
+            self.host_bytes[node] += bytes;
+        }
+    }
+
+    /// Solo-copy duration for a demand fetch of `key` at `bytes`: the
+    /// host link when the home device's node can stage it from host RAM
+    /// — or the topology is not clustered at all, where this is
+    /// bit-identical to pricing against `h2d` directly — else the
+    /// latency-dominated network link, with the pulled bytes adopted
+    /// into the home node's pool and counted as cross-node traffic.
+    pub fn demand_link_us(&mut self, key: ExpertKey, bytes: f64) -> f64 {
+        if !self.placement.topo.clustered() {
+            return self.placement.topo.h2d.copy_us(bytes);
+        }
+        let node = self.local_node_of(self.home(key));
+        if self.host_pools[node].contains(&key) {
+            return self.placement.topo.h2d.copy_us(bytes);
+        }
+        let dur = self.placement.topo.net.copy_us(bytes);
+        self.net_pulls += 1;
+        self.net_bytes += bytes;
+        self.host_adopt(node, key, bytes as usize);
+        dur
+    }
+
+    /// Pull a `key` resident only on a device of *another node* — the
+    /// `Lookup::RemoteNode` resolution — over the network link: like
+    /// `peer_fetch` but priced against `TopologySpec::net` and counted
+    /// as cross-node traffic, with the bytes adopted into the home
+    /// node's host pool. The copy migrates home when the admission
+    /// filter allows it; otherwise it keeps serving from the remote
+    /// device. Returns when the bytes land.
+    pub fn net_fetch(&mut self, key: ExpertKey, from: DeviceId) -> f64 {
+        let now = self.clock.now_us();
+        let home = self.home(key);
+        debug_assert_ne!(
+            self.placement.topo.node_of(home),
+            self.placement.topo.node_of(from),
+            "net_fetch within one node"
+        );
+        let Some(bytes) = self.devices[from].bytes_of(key) else {
+            return now;
+        };
+        let dur = self.placement.topo.net.copy_us((bytes as f64).max(1.0));
+        self.net_pulls += 1;
+        self.net_bytes += bytes as f64;
+        let done = self.prefetch.demand(home, dur, bytes as f64, now);
+        let node = self.local_node_of(home);
+        self.host_adopt(node, key, bytes);
+        if self.devices[home].would_admit(key) {
+            self.devices[from].remove(key);
+            let (ok, evicted) = self.devices[home].insert_evicting(key, bytes);
+            if !ok {
+                // home cannot take it: the copy keeps serving remotely —
+                // it just vacated that space, so this refit cannot evict
+                self.devices[from].insert(key, bytes);
+            }
+            for victim in evicted {
+                self.rescue_victim(home, victim);
+            }
+        }
+        done
+    }
+
+    /// Re-home a failed peer node's experts from host copies over the
+    /// network link (DESIGN.md §10): each key is pulled at
+    /// `bytes_per_key` toward its home device's node — a full network
+    /// copy, unless that node's host pool already stages the key, which
+    /// costs only the per-message setup (a zero-byte handshake). Pulls
+    /// ride coalesced `LinkClass::Net` transfer plans on the home
+    /// devices' buses; pulled keys are adopted into the receiving node's
+    /// host pool so subsequent demand fetches pay PCIe, not the network.
+    /// Returns when the last plan completes (`now` if `keys` is empty).
+    pub fn net_restore(&mut self, keys: &[ExpertKey], bytes_per_key: usize) -> f64 {
+        let n = self.devices.len();
+        let net = self.placement.topo.net.clone();
+        let mut plans: Vec<TransferPlan<()>> = (0..n)
+            .map(|d| TransferPlan::to(d, PlanMode::Coalesced).via(LinkClass::Net))
+            .collect();
+        for &key in keys {
+            let dev = self.home(key);
+            let node = self.local_node_of(dev);
+            if self.host_pools[node].contains(&key) {
+                plans[dev].push(key, 0.0, net.api_us, net.api_us, ());
+            } else {
+                let b = (bytes_per_key as f64).max(1.0);
+                plans[dev].push(key, bytes_per_key as f64, net.copy_us(b), net.api_us, ());
+                self.host_adopt(node, key, bytes_per_key);
+            }
+        }
+        let now = self.clock.now_us();
+        let mut done = now;
+        for plan in plans {
+            if plan.is_empty() {
+                continue;
+            }
+            self.net_pulls += plan.len() as u64;
+            self.net_bytes += plan.bytes();
+            let items: Vec<(f64, f64, f64)> = plan
+                .items
+                .iter()
+                .map(|it| (it.bytes, it.duration_us, it.overhead_us))
+                .collect();
+            done = done.max(self.prefetch.copy_batch(plan.dst, &items, true, now));
+        }
+        done
+    }
+
+    /// Cross-node messages sent over the network link so far (demand
+    /// pulls, re-homing copies and handshakes).
+    pub fn net_pulls(&self) -> u64 {
+        self.net_pulls
+    }
+
+    /// Bytes moved over the network link so far.
+    pub fn net_bytes(&self) -> f64 {
+        self.net_bytes
+    }
+
+    // -------------------------------------------------- transfers (cont.)
+
     /// Consume the in-flight transfer for `key` on its home device:
     /// (completion time, payload). Releases the prefetch pin taken at
     /// submit so a resident copy becomes evictable again (re-admitting
@@ -1215,6 +1436,103 @@ mod tests {
         assert_eq!(pf, st.prefetches);
         assert_eq!(tx, st.bus_transactions);
         assert_eq!(bytes, st.transferred_bytes, "device-order byte sum must be exact");
+    }
+
+    // ------------------------------------------------------ cluster tier
+
+    /// Satellite: the replica pool is carved out of the device budget —
+    /// replicated placements run their resident sets on `budget - pool`,
+    /// unreplicated ones keep the full budget bit-exactly.
+    #[test]
+    fn replica_carve_shrinks_resident_budget_only_when_replication_is_on() {
+        let p = Placement::sharded(2, ShardPolicy::Layer);
+        let plain: ExpertStore = ExpertStore::with_placement(
+            p.clone(),
+            1000,
+            ResidencyKind::Lru,
+            DEFAULT_SPARSITY_DECAY,
+        );
+        assert_eq!(plain.budget_of(0), 1000);
+        let mut rp = p;
+        rp.replicate_top = 2;
+        let carved: ExpertStore =
+            ExpertStore::with_placement(rp, 1000, ResidencyKind::Lru, DEFAULT_SPARSITY_DECAY);
+        assert_eq!(carved.replica_budget_per_device(), 50);
+        assert_eq!(carved.budget_of(0), 950, "resident set runs on the carved budget");
+        assert_eq!(
+            carved.budget_of(0) + carved.replica_budget_per_device(),
+            1000,
+            "resident + replica capacity equals the configured device budget"
+        );
+    }
+
+    fn spanning(n: usize, span: usize, budget: usize) -> ExpertStore {
+        let mut p = Placement::sharded(n, ShardPolicy::Layer);
+        p.topo = p.topo.with_cluster_span(span);
+        ExpertStore::with_placement(p, budget, ResidencyKind::Lru, DEFAULT_SPARSITY_DECAY)
+    }
+
+    #[test]
+    fn demand_link_prices_host_resident_on_pcie_and_foreign_on_net() {
+        let mut s = spanning(2, 2, 1000); // one device per node
+        s.seed_host_pool(0, &[(0, 0)], 100);
+        let pcie = s.demand_link_us((0, 0), 100.0);
+        assert_eq!(pcie, s.placement().topo.h2d.copy_us(100.0));
+        assert_eq!(s.net_pulls(), 0);
+        // (0,1) also homes on device 0 (node 0) but is not staged there
+        let net = s.demand_link_us((0, 1), 100.0);
+        assert_eq!(net, s.placement().topo.net.copy_us(100.0));
+        assert!(net > 10.0 * pcie, "network pull is latency-dominated");
+        assert_eq!(s.net_pulls(), 1);
+        assert_eq!(s.net_bytes(), 100.0);
+        // first touch adopted the key: the repeat pays PCIe
+        assert!(s.host_resident(0, (0, 1)));
+        assert_eq!(s.demand_link_us((0, 1), 100.0), pcie);
+        assert_eq!(s.net_pulls(), 1);
+        // unclustered stores never consult pools or the network link
+        let mut flat: ExpertStore = ExpertStore::with_virtual_clock(1000, ResidencyKind::Lru);
+        assert_eq!(flat.demand_link_us((9, 9), 100.0), flat.placement().topo.h2d.copy_us(100.0));
+        assert_eq!(flat.net_pulls(), 0);
+    }
+
+    #[test]
+    fn cross_node_residency_resolves_remote_node_and_net_fetch_migrates() {
+        // 4 devices spanning 2 nodes ({0,1} node 0, {2,3} node 1)
+        let mut s = spanning(4, 2, 150);
+        assert!(s.admit((0, 0), 100));
+        // (4,0) also homes on device 0: admitting it evicts (0,0), whose
+        // spill lands on the emptiest peer — device 3, on the other node
+        assert!(s.admit((4, 0), 100));
+        assert_eq!(s.lookup((0, 0)), Lookup::RemoteNode(3));
+        let done = s.net_fetch((0, 0), 3);
+        assert!(done >= s.placement().topo.net.copy_us(100.0));
+        assert_eq!(s.net_pulls(), 1);
+        assert_eq!(s.net_bytes(), 100.0);
+        assert_eq!(s.device_stats(0).demand_fetches, 1);
+        // the pull migrated the copy home and staged it in host RAM
+        assert_eq!(s.lookup((0, 0)), Lookup::Local(0));
+        assert!(s.host_resident(0, (0, 0)));
+    }
+
+    #[test]
+    fn net_restore_stages_keys_and_coalesces_per_home_device() {
+        let mut s = spanning(2, 2, 1000);
+        s.seed_host_pool(0, &[(0, 0)], 100);
+        // (0,0): already staged on node 0 — a zero-byte handshake;
+        // (0,1): full pull toward device 0; (1,0): full pull toward 1
+        let done = s.net_restore(&[(0, 0), (0, 1), (1, 0)], 100);
+        assert_eq!(s.net_pulls(), 3, "handshakes count as messages");
+        assert_eq!(s.net_bytes(), 200.0, "handshakes move no bytes");
+        assert!(s.host_resident(0, (0, 1)) && s.host_resident(1, (1, 0)));
+        assert!(done >= s.placement().topo.net.copy_us(100.0));
+        assert_eq!(
+            s.stats().bus_transactions,
+            2,
+            "one coalesced net plan per destination device"
+        );
+        // restoring already-staged keys again is all handshakes
+        s.net_restore(&[(0, 1)], 100);
+        assert_eq!(s.net_bytes(), 200.0);
     }
 
     #[test]

@@ -24,18 +24,27 @@ use super::ExpertKey;
 /// Index of a device in the store's placement (0-based, dense).
 pub type DeviceId = usize;
 
+/// Index of a node in the cluster tier above the devices (0-based,
+/// dense — DESIGN.md §10). `TopologySpec::node_of` maps a `DeviceId`
+/// into this space.
+pub type NodeId = usize;
+
 /// Fraction of each device's expert-cache budget reserved for *replicas*
 /// of the hottest experts (popularity-proportional copy counts — see
-/// `ExpertStore::rebalance_tick`). Replica bytes are accounted separately
-/// from the resident set: they model a reserved VRAM pool *in addition
-/// to* the cache budget (like the pinned staging buffers), so replicated
-/// configs hold up to this much more modeled memory per device than
-/// non-replicated ones at the same budget. The sweep's tps margins do
-/// not lean on that extra capacity — replication alone is tps-neutral on
-/// the skewed trace (replay: 52.01 vs 52.07 tok/s), the win comes from
-/// compute streams spreading replica-resolved GEMVs — but carving the
-/// pool out of the cache budget instead is a ROADMAP follow-up.
-pub const REPLICA_BUDGET_FRAC: f64 = 0.2;
+/// `ExpertStore::rebalance_tick`). The pool is *carved out of* the
+/// per-device byte budget: when `replicate_top > 0` the resident set
+/// runs on `budget - replica_budget` bytes, so resident + replica bytes
+/// never exceed the configured device budget (property-tested in
+/// tests/shard_store.rs). With replication off the resident set keeps
+/// the full budget — bit-exact with every pre-replication
+/// configuration. The carve costs the replicated configs cache capacity
+/// but keeps the VRAM accounting honest; the sweep's tps win still
+/// comes from compute streams spreading replica-resolved GEMVs, not
+/// from extra modeled memory. 5% keeps the popularity margins of
+/// experiments/shard.rs above their floors (replay-pinned: pop/hash
+/// 1.0216x at 2 devices, 1.2657x at 4) while fitting several copies of
+/// the hottest compressed experts per device.
+pub const REPLICA_BUDGET_FRAC: f64 = 0.05;
 
 /// Layer boundaries between popularity rebalances: `rebalance_tick` is
 /// called once per *processed* layer boundary by both coordinators, so
@@ -110,15 +119,20 @@ impl Placement {
     }
 }
 
-/// Outcome of a routed residency probe (`ExpertStore::lookup`): the expert
-/// is usable in place on a device (its home, or — with replication on —
-/// the replica holder whose bus frees soonest), resident on a peer only as
-/// a spilled copy (reachable over the p2p link via `peer_fetch`), or not
-/// resident anywhere.
+/// Outcome of a routed residency probe (`ExpertStore::lookup`), in
+/// resolution order (DESIGN.md §10): the expert is usable in place on a
+/// device (its home, or — with replication on — the replica holder whose
+/// bus frees soonest); resident on a *same-node* peer as a spilled copy
+/// (reachable over the p2p link via `peer_fetch`); resident only on a
+/// device of *another node* of a spanning topology (reachable over the
+/// network link via `net_fetch`); or not resident anywhere. Single-node
+/// topologies never produce `RemoteNode`, so every pre-cluster
+/// configuration resolves exactly as before.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Lookup {
     Local(DeviceId),
     Remote(DeviceId),
+    RemoteNode(DeviceId),
     Miss,
 }
 
@@ -151,19 +165,42 @@ pub struct TransferItem<P> {
     pub payload: P,
 }
 
+/// Which physical link a `TransferPlan` rides. The link class does not
+/// change how the plan is charged — item durations are priced by the
+/// caller against the matching `PcieSpec` — it classifies the traffic so
+/// the store can account network pulls separately from PCIe/P2P moves
+/// (cluster tier, DESIGN.md §10).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkClass {
+    /// host → device over the destination's dedicated PCIe lanes
+    H2d,
+    /// device ↔ device over the peer link
+    P2p,
+    /// node ↔ node over the latency-dominated network link
+    Net,
+}
+
 /// A batched transfer toward one destination device. Build with
-/// [`TransferPlan::to`], fill with [`TransferPlan::push`], execute with
-/// `ExpertStore::submit`.
+/// [`TransferPlan::to`] (host link) or rebind with [`TransferPlan::via`],
+/// fill with [`TransferPlan::push`], execute with `ExpertStore::submit`.
 #[derive(Debug)]
 pub struct TransferPlan<P> {
     pub dst: DeviceId,
     pub mode: PlanMode,
+    pub link: LinkClass,
     pub items: Vec<TransferItem<P>>,
 }
 
 impl<P> TransferPlan<P> {
     pub fn to(dst: DeviceId, mode: PlanMode) -> Self {
-        TransferPlan { dst, mode, items: Vec::new() }
+        TransferPlan { dst, mode, link: LinkClass::H2d, items: Vec::new() }
+    }
+
+    /// Rebind the plan to another link class (e.g. `Net` for cluster
+    /// re-homing pulls).
+    pub fn via(mut self, link: LinkClass) -> Self {
+        self.link = link;
+        self
     }
 
     pub fn push(
@@ -223,10 +260,13 @@ mod tests {
     fn plan_accumulates_items() {
         let mut plan: TransferPlan<()> = TransferPlan::to(2, PlanMode::Coalesced);
         assert!(plan.is_empty());
+        assert_eq!(plan.link, LinkClass::H2d, "plans default to the host link");
         plan.push((0, 1), 100.0, 10.0, 2.0, ());
         plan.push((0, 2), 50.0, 6.0, 2.0, ());
         assert_eq!(plan.len(), 2);
         assert_eq!(plan.bytes(), 150.0);
         assert_eq!(plan.dst, 2);
+        let net = TransferPlan::<()>::to(0, PlanMode::Coalesced).via(LinkClass::Net);
+        assert_eq!(net.link, LinkClass::Net);
     }
 }

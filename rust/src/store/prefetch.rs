@@ -11,6 +11,11 @@
 //! plans pay the per-copy API overhead once for a whole chunk and land
 //! their items on partial completion, and demand fetches are charged as
 //! stalls by the store when the consumer arrives before the bytes do.
+//! Cross-node pulls (cluster tier, DESIGN.md §10) ride the same
+//! machinery: the store prices them against the network link's
+//! latency-dominated `PcieSpec` and charges them here — demand pulls via
+//! `demand`, coalesced re-homing plans via `copy_batch` — so the bus
+//! occupancy and byte attribution of `LinkClass::Net` traffic is exact.
 //!
 //! Generic over a per-transfer payload `P`: the serving path attaches the
 //! predicted channel mask so recall can be scored when the prefetch is

@@ -299,8 +299,26 @@ fn sharded_store_invariants_under_random_traces() {
             replicate_top: if rng.f64() < 0.5 { 2 } else { 0 },
         };
         let coalesce = placement.coalesce;
+        let replicated = placement.replicate_top > 0;
         let mut s: ExpertStore =
             ExpertStore::with_placement(placement, budget, kind, DEFAULT_SPARSITY_DECAY);
+        // the carve (PR 8 satellite): with replication on, the resident
+        // set runs on exactly the configured budget minus the replica
+        // pool; with it off, the full budget, bit-exactly
+        for d in 0..s.n_devices() {
+            let expect = if replicated {
+                budget - s.replica_budget_per_device()
+            } else {
+                budget
+            };
+            prop_assert!(
+                s.budget_of(d) == expect,
+                "device {} resident budget {} != {}",
+                d,
+                s.budget_of(d),
+                expect
+            );
+        }
         // shadow of keys pinned via the public surface and still expected
         // to be home-resident (inserts/takes reset pins — tracked below)
         let mut pinned: Vec<(usize, usize)> = Vec::new();
@@ -425,6 +443,19 @@ fn sharded_store_invariants_under_random_traces() {
                     s.replica_budget_per_device()
                 );
             }
+            // invariant 5 (PR 8 satellite): the replica pool is carved
+            // out of the configured device budget, so resident + replica
+            // bytes can never exceed what the device was given
+            for d in 0..s.n_devices() {
+                prop_assert!(
+                    s.used_of(d) + s.replica_bytes_of(d) <= budget,
+                    "device {} resident {} + replica {} > configured budget {}",
+                    d,
+                    s.used_of(d),
+                    s.replica_bytes_of(d),
+                    budget
+                );
+            }
         }
         // totals are consistent with the per-device views
         let used: usize = (0..s.n_devices()).map(|d| s.used_of(d)).sum();
@@ -510,7 +541,7 @@ fn balanced_rebalance_spreads_hot_bus_traffic_below_hash() {
 /// (home on ties).
 #[test]
 fn replicas_respect_budget_and_resolve_bus_free_soonest() {
-    let mut s = store_with(ShardPolicy::Balanced, 3, 2, 1000);
+    let mut s = store_with(ShardPolicy::Balanced, 3, 2, 4000);
     let hot = (0usize, 1usize);
     for _ in 0..10 {
         s.lookup(hot);
@@ -529,7 +560,7 @@ fn replicas_respect_budget_and_resolve_bus_free_soonest() {
     let home = s.home(hot);
     assert_eq!(home, seed_home);
     assert_eq!(s.resident_bytes(hot), Some(150));
-    // per-device pool = 20% of 1000 = 200; fleet pool 600; the only hot
+    // per-device pool = 5% of 4000 = 200; fleet pool 600; the only hot
     // expert takes the whole mass share -> floor(600/150) = 4 copies,
     // capped at the 2 peers
     let reps = s.replica_devices_of(hot);
@@ -570,10 +601,11 @@ fn replicas_respect_budget_and_resolve_bus_free_soonest() {
 fn home_eviction_writes_back_to_bus_free_soonest_replica_holder() {
     check("replica-writeback-conservation", 40, |rng: &mut Rng| {
         let n = rng.range(2, 5);
-        let budget = rng.range(800, 1601);
-        // small enough that the popularity-proportional pool replicates
-        // it, and fillers large enough to force home evictions
-        let hot_bytes = rng.range(50, budget / 6 + 1);
+        let budget = rng.range(2400, 4001);
+        // small enough to fit the 5% per-device replica pool (so the
+        // popularity-proportional refresh replicates it), and fillers
+        // large enough to force home evictions
+        let hot_bytes = rng.range(50, budget / 20 + 1);
         let filler = rng.range(150, budget / 3 + 1);
         let mut s = store_with(ShardPolicy::Balanced, n, 2, budget);
         let hot = (0usize, 1usize);

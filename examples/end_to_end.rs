@@ -51,6 +51,7 @@ fn main() -> anyhow::Result<()> {
                 max_tokens: 24,
                 temperature: 0.0,
                 seed: i as u64,
+                slo_us: None,
             })
             .collect();
         let t0 = std::time::Instant::now();

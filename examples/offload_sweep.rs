@@ -27,6 +27,7 @@ fn main() -> anyhow::Result<()> {
                 max_tokens: 32,
                 temperature: 0.0,
                 seed: i,
+                slo_us: None,
             })
             .collect();
         let done = coord.run_batch(&reqs)?;

@@ -11,6 +11,14 @@
 //! `floe serve --record session.fltl`) writes the whole session as a
 //! timeline artifact at exit — `floe replay --artifact session.fltl`
 //! re-derives the same report offline, bit-for-bit.
+//!
+//! Requests may carry a per-request latency budget: `"slo_us":2e6` is
+//! echoed back on the response along with `degraded_hits`, the number
+//! of expert resolutions the quality-elastic fallback (DESIGN.md §11)
+//! served from the always-resident little tier to stay inside the
+//! budget. The fallback only fires when the store carves a little-tier
+//! pool (CLI: `floe serve --little-frac 0.1 --backend sim`); without
+//! the carve the field is accounting-inert and runs stay bit-exact.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -66,7 +74,15 @@ fn main() -> anyhow::Result<()> {
     // `balanced` re-homes experts by measured activation mass,
     // `.with_replication(k)` / `--replicate-top k --compute-streams`
     // replicates the k hottest experts across devices and runs
-    // per-device compute streams so added devices scale FLOPs too.
+    // per-device compute streams so added devices scale FLOPs too,
+    // `--hetero-fleet` gives the devices descending GEMV throughput,
+    // and `--overlap` lets transfer completions release waiting expert
+    // GEMVs mid-boundary. The generation engine side takes
+    // `--kernel-threads N` (native kernel pool; 1 is bit-exact with
+    // single-threaded). `.with_little_frac(f)` / `--little-frac f`
+    // carves the little tier that backs the `slo_us` fallback above,
+    // and `exp-cluster-sweep --nodes N --devices D` lifts the same
+    // store placement to a multi-node fleet.
     let mut system = SystemConfig::new(SystemKind::Floe)
         .with_devices(1, floe::config::ShardPolicy::Layer);
     system.sparsity = 0.8;

@@ -141,7 +141,7 @@ PREFETCH_BACKLOG_US = 2000.0
 class System:
     def __init__(self, kind, residency="lru", devices=1, shard="layer",
                  coalesce=None, spill=None, replicate_top=0, compute_streams=False,
-                 overlap=False):
+                 overlap=False, little_frac=0.0):
         self.kind = kind
         self.sparsity = 0.9
         self.quant_bits = 3
@@ -156,6 +156,9 @@ class System:
         # event-driven compute/transfer overlap (PR 6): a layer's experts
         # resolve upfront, GEMVs dispatch in transfer-readiness order
         self.overlap = overlap
+        # quality-elastic fallback (PR 9): fraction of each device budget
+        # carved into the always-resident little-tier pool
+        self.little_frac = little_frac
 
 
 class Params:
@@ -402,10 +405,19 @@ class Store:
         # with replication on the resident set runs on budget - replica
         # pool, so resident + replica bytes never exceed the device budget
         self.replica_budget = int(budget_per_device * 0.05)
+        # PR 9: the little tier is carved out of the budget too, so
+        # resident + replica + little bytes never exceed the device budget
+        self.little_budget = (int(budget_per_device * system.little_frac)
+                              if system.little_frac > 0.0 else 0)
         resident_budget = (budget_per_device - self.replica_budget
                            if system.replicate_top > 0 else budget_per_device)
+        resident_budget = max(resident_budget - self.little_budget, 0)
         self.devices = [ResidentSet(resident_budget, make_policy(system.residency))
                         for _ in range(n)]
+        self.little_pools = [set() for _ in range(n)]
+        self.little_bytes = [0] * n
+        self.degraded_hits = 0
+        self.degraded_bytes = 0.0
         self.bus_free = [0.0] * n
         self.bus_busy = [0.0] * n
         self.inflight = {}
@@ -850,6 +862,42 @@ class Store:
         m = sum(d.misses for d in self.devices)
         return h / (h + m) if h + m else 0.0
 
+    # -------- little tier (PR 9, mirror of store/mod.rs little tier)
+
+    def seed_little_pool(self, keys, bytes_per_key):
+        if self.little_budget == 0:
+            return
+        for key in keys:
+            dev = self.home(key)
+            if key in self.little_pools[dev]:
+                continue
+            if self.little_bytes[dev] + bytes_per_key > self.little_budget:
+                continue
+            self.little_pools[dev].add(key)
+            self.little_bytes[dev] += bytes_per_key
+
+    def little_resident(self, key):
+        return key in self.little_pools[self.home(key)]
+
+    def degraded_hit(self, key, avoided_bytes):
+        self.degraded_hits += 1
+        self.degraded_bytes += avoided_bytes
+
+    def predict_demand_ready(self, key, dur):
+        """PrefetchPipeline::predict_ready: critical_copy's start rule,
+        read-only — priority lane under overlap, FIFO bus otherwise."""
+        dev = self.home(key)
+        lane = self.demand_free[dev] if self.system.overlap else self.bus_free[dev]
+        return max(self.now, lane) + dur
+
+    def peek_demand_link_us(self, key, bytes_):
+        """demand_link_us without the counters/adoption side effects."""
+        if self.n_nodes <= 1:
+            return pcie_copy_us(bytes_)
+        if key in self.host_pool:
+            return pcie_copy_us(bytes_)
+        return net_copy_us(bytes_)
+
     # ---------------- cluster tier (mirror of store/mod.rs cluster tier)
 
     def seed_host_pool(self, keys, bytes_per_key):
@@ -1153,6 +1201,32 @@ class _SimSeq:
         self.input_len = max(req.plen, 1)
         self.emitted = 0
         self.max_tokens = max(req.max_tokens, 1)
+        # PR 9: SLO deadline (admission + budget; inf = no budget) and
+        # the per-request degraded ledger
+        self.arrival_us = req.arrival_us
+        self.deadline = float("inf")
+        self.degraded_hits = 0
+        self.degraded_bytes = 0.0
+
+
+def _degrade_or_fetch(p, store, seq, key, per_bytes, per_cached):
+    """resolve_expert's Miss/no-inflight branch: the quality-elastic
+    decision first (side-effect-free prediction vs the SLO deadline),
+    the demand fetch otherwise. Returns (ready, cause, degraded)."""
+    if (p.system.little_frac > 0.0
+            and seq.deadline != float("inf")
+            and store.little_resident(key)
+            and store.predict_demand_ready(
+                key, store.peek_demand_link_us(key, max(per_bytes, 1.0)))
+            > seq.deadline):
+        store.degraded_hit(key, per_bytes)
+        seq.degraded_hits += 1
+        seq.degraded_bytes += per_bytes
+        return store.now, "demand", True
+    dur = store.demand_link_us(key, max(per_bytes, 1.0))
+    ready = store.demand_to(store.home(key), dur, per_bytes)
+    store.admit(key, per_cached)
+    return ready, "demand", False
 
 
 def _serving_decode_token(p, store, seq, per_bytes, per_cached, exp_c, reuse,
@@ -1180,10 +1254,12 @@ def _serving_decode_token(p, store, seq, per_bytes, per_cached, exp_c, reuse,
                     store.admit(key, per_cached)
                     ready, cause = done, "prefetch"
                 else:
-                    dur = store.demand_link_us(key, max(per_bytes, 1.0))
-                    ready = store.demand_to(store.home(key), dur, per_bytes)
-                    store.admit(key, per_cached)
-                    cause = "demand"
+                    ready, cause, degraded = _degrade_or_fetch(
+                        p, store, seq, key, per_bytes, per_cached)
+                    if degraded:
+                        # the little variant is pinned on-device: no
+                        # intra-predictor top-up applies
+                        resident = True
             if key not in boundary_seen:
                 boundary_seen.add(key)
                 counters["full"] += 1
@@ -1258,10 +1334,10 @@ def _serving_decode_boundary(p, store, seqs, per_bytes, per_cached, exp_c, reuse
                         store.admit(key, per_cached)
                         ready, cause = done, "prefetch"
                     else:
-                        dur = store.demand_link_us(key, max(per_bytes, 1.0))
-                        ready = store.demand_to(store.home(key), dur, per_bytes)
-                        store.admit(key, per_cached)
-                        cause = "demand"
+                        ready, cause, degraded = _degrade_or_fetch(
+                            p, store, seqs[si], key, per_bytes, per_cached)
+                        if degraded:
+                            resident = True
                 if key not in boundary_seen:
                     boundary_seen.add(key)
                     counters["full"] += 1
@@ -1304,7 +1380,8 @@ def _serving_decode_boundary(p, store, seqs, per_bytes, per_cached, exp_c, reuse
     return computes
 
 
-def simulate_serving(p, wl, cap, per_boundary_check=False):
+def simulate_serving(p, wl, cap, per_boundary_check=False, slo_us=None):
+    import math
     max_ctx = max(t.plen + t.max_tokens for t in wl)
     kv_tokens = max(cap, 1) * max_ctx
     budget = cache_budget_bytes(p, kv_tokens)
@@ -1325,8 +1402,13 @@ def simulate_serving(p, wl, cap, per_boundary_check=False):
             full_flags[dev] = True
             if all(full_flags):
                 break
+    # PR 9: little-tier seeding after warm (seed_little_pools)
+    if p.system.little_frac > 0.0:
+        keys = [(l, e) for l in range(NL) for e in range(NE)]
+        sketch = int(max(math.ceil(per_bytes / 20.0), 1.0))
+        store.seed_little_pool(keys, sketch)
 
-    pending, active = [], []
+    pending, active, completions = [], [], []
     next_i, tokens = 0, 0
     counters = {"full": 0, "reused": 0}
     saw_batch, saw_reuse, checks_ok = False, False, True
@@ -1342,8 +1424,12 @@ def simulate_serving(p, wl, cap, per_boundary_check=False):
         # scheduler step: admit FIFO up to cap (prefill at admission) ...
         while len(active) < max(cap, 1) and pending:
             req = pending.pop(0)
+            t0 = store.now  # admission stamp, BEFORE prefill (sim.rs start)
             _serving_prefill(p, store, per_bytes, exp_c, max(req.plen, 1))
-            active.append(_SimSeq(req))
+            s = _SimSeq(req)
+            if slo_us is not None:
+                s.deadline = t0 + slo_us
+            active.append(s)
         # ... then one boundary-synchronous batch step
         boundary_seen = set()
         full_before = counters["full"]
@@ -1373,7 +1459,27 @@ def simulate_serving(p, wl, cap, per_boundary_check=False):
                 checks_ok = False
             if pair_d > full_d:
                 saw_reuse = True
-        active = [s for s in active if s.emitted < s.max_tokens]
+        still = []
+        for s in active:
+            if s.emitted < s.max_tokens:
+                still.append(s)
+            else:
+                # retirement: finished_us stamped after the whole batch
+                # stepped (the boundary barrier, sched.rs::step)
+                completions.append({
+                    "rid": s.rid,
+                    "latency_us": store.now - s.arrival_us,
+                    "degraded_hits": s.degraded_hits,
+                    "degraded_bytes": s.degraded_bytes,
+                })
+        active = still
+    lat = sorted(c["latency_us"] for c in completions)
+
+    def quantile(q):  # ServeSimReport::latency_quantile (round half up)
+        if not lat:
+            return 0.0
+        return lat[int((len(lat) - 1) * q + 0.5)]
+
     return {
         "tps": tokens / (store.now / 1e6),
         "tokens": tokens,
@@ -1386,6 +1492,14 @@ def simulate_serving(p, wl, cap, per_boundary_check=False):
         "saw_batch": saw_batch,
         "saw_reuse": saw_reuse,
         "per_boundary_ok": checks_ok,
+        "completions": completions,
+        "p95": quantile(0.95),
+        "p99": quantile(0.99),
+        "degraded_hits": store.degraded_hits,
+        "degraded_bytes": store.degraded_bytes,
+        "degraded_req_share": (
+            sum(1 for c in completions if c["degraded_hits"] > 0)
+            / len(completions) if completions else 0.0),
     }
 
 
@@ -1834,6 +1948,57 @@ def main():
         r = simulate_cluster(serving_params(), 2, 2, 28.5, wl_s, placement=pl)
         print(f"  smoke 2x2 {pl:>15}: tokens {r['tokens']} errored "
               f"{r['errored']} served {r['served']}/{len(wl_s)}")
+
+    print("== PR 9 quality-elastic fallback (exp-quality-latency mirror: "
+          "cap 8, overlap, little carve 10%) ==")
+    mkq = lambda vram, lf: Params(
+        System(FLOE, "lru", overlap=True, little_frac=lf),
+        vram, zipf_s=1.2, stickiness=0.5, seed=7)
+    wl_q = workload_at(8.0, 12, 23)
+    base_q = simulate_serving(mkq(11.0, 0.0), wl_q, 8)
+    pin = simulate_serving(mkq(11.0, 0.10), wl_q, 8, slo_us=2.0e6)
+    tpsx = pin["tps"] / base_q["tps"]
+    p99x = base_q["p99"] / pin["p99"]
+    share_b = base_q["stall_demand"] / base_q["total_us"]
+    share_p = pin["stall_demand"] / pin["total_us"]
+    print(f"  pin cell (11 GB, slo 2s): tps {base_q['tps']:.4f} -> "
+          f"{pin['tps']:.4f} ({tpsx:.4f}x, quality.rs asserts > 1.0), p99 "
+          f"{base_q['p99']:.1f} -> {pin['p99']:.1f} us ({p99x:.4f}x, asserts "
+          f">= 1.10), demand share {share_b:.4f} -> {share_p:.4f} "
+          f"(strict decrease: {share_p < share_b})")
+    print(f"  degraded boundaries {pin['degraded_hits']} (asserts > 5000), "
+          f"request share {pin['degraded_req_share']:.2f} (asserts >= 0.9), "
+          f"stall-only degraded {base_q['degraded_hits']} (must be 0)")
+    assert tpsx > 1.0 and p99x >= 1.10 and share_p < share_b
+    assert pin["degraded_hits"] > 5000 and pin["degraded_req_share"] >= 0.9
+    assert base_q["degraded_hits"] == 0
+    # the frontier (quality.rs frontier_is_monotone_in_slo): looser SLO ->
+    # p99 no lower, degraded-request share no higher, at every cap;
+    # boundary counts strictly decrease only at the thrash-depth pin cap
+    for vram in (11.0, 12.5, 14.25):
+        prev_p99, prev_share, prev_hits = float("-inf"), float("inf"), None
+        row = []
+        for slo in (1.0e6, 2.0e6, 4.0e6, 8.0e6):
+            r = simulate_serving(mkq(vram, 0.10), wl_q, 8, slo_us=slo)
+            row.append(f"{slo/1e6:.0f}s: p99 {r['p99']/1e6:.2f} "
+                       f"hits {r['degraded_hits']} "
+                       f"req {r['degraded_req_share']:.2f}")
+            assert r["p99"] >= prev_p99, f"p99 not monotone @ {vram}/{slo}"
+            assert r["degraded_req_share"] <= prev_share
+            if vram == 11.0 and prev_hits is not None:
+                assert r["degraded_hits"] < prev_hits
+            prev_p99, prev_share = r["p99"], r["degraded_req_share"]
+            prev_hits = r["degraded_hits"]
+        print(f"  {vram:>5} GB frontier: " + "; ".join(row))
+    # an SLO budget without the carve never degrades, never moves a bit
+    slo_only = simulate_serving(mkq(11.0, 0.0), wl_q, 8, slo_us=2.0e6)
+    print(f"  slo-without-carve bit-exact: total_us "
+          f"{slo_only['total_us'] == base_q['total_us']}, demand stall "
+          f"{slo_only['stall_demand'] == base_q['stall_demand']}, degraded "
+          f"{slo_only['degraded_hits']} (must be 0)")
+    assert slo_only["total_us"] == base_q["total_us"]
+    assert slo_only["stall_demand"] == base_q["stall_demand"]
+    assert slo_only["degraded_hits"] == 0
 
 
 if __name__ == "__main__":

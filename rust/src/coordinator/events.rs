@@ -38,6 +38,13 @@ pub enum EventKind {
     /// this event core dropped out of the cluster at `t_us`. `id` is the
     /// cluster-level `NodeId`.
     NodeDown,
+    /// Quality-elastic fallback (DESIGN.md §11): a routed expert
+    /// resolved to its degraded little-tier variant instead of stalling
+    /// for the full bytes. `id` is the packed expert key (`key_id`);
+    /// `t_us` is the decision time. Only ever produced with the
+    /// fallback on, so fallback-off event logs are byte-identical to
+    /// pre-fallback builds.
+    Degraded,
 }
 
 impl EventKind {
@@ -48,6 +55,7 @@ impl EventKind {
             EventKind::BoundaryBarrier => 2,
             EventKind::RequestArrival => 3,
             EventKind::NodeDown => 4,
+            EventKind::Degraded => 5,
         }
     }
 }

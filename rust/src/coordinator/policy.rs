@@ -108,6 +108,14 @@ pub struct SystemConfig {
     /// per-node host RAM pool in GB (expert residency decoupled from the
     /// serving node); only consulted when a cluster form is active
     pub host_ram_gb: f64,
+    /// quality-elastic serving (`--little-frac`, DESIGN.md §11): the
+    /// fraction of each device's byte budget carved into the always-
+    /// resident little-tier pool of degraded expert variants. A routed
+    /// expert that would stall past a request's SLO deadline executes
+    /// the little variant instead of waiting for the full bytes.
+    /// Default 0.0 = fallback off — every pre-fallback configuration
+    /// (and every committed FLTL artifact) stays bit-exact
+    pub little_frac: f64,
 }
 
 impl SystemConfig {
@@ -133,6 +141,7 @@ impl SystemConfig {
             node_id: 0,
             n_nodes: 1,
             host_ram_gb: 64.0,
+            little_frac: 0.0,
         }
     }
 
@@ -185,6 +194,14 @@ impl SystemConfig {
         self
     }
 
+    /// Quality-elastic big-little fallback (`--little-frac`): carve
+    /// `frac` of each device's budget into the always-resident little
+    /// tier. 0.0 keeps the fallback machinery off entirely.
+    pub fn with_little_frac(mut self, frac: f64) -> Self {
+        self.little_frac = frac.clamp(0.0, 0.5);
+        self
+    }
+
     /// Member cluster form: this configuration serves as node `node_id`
     /// of an `n_nodes` cluster with `host_ram_gb` of host expert pool.
     pub fn as_cluster_member(mut self, node_id: usize, n_nodes: usize, host_ram_gb: f64) -> Self {
@@ -215,6 +232,7 @@ impl SystemConfig {
             coalesce: self.coalesce,
             spill: self.spill,
             replicate_top: if self.devices > 1 { self.replicate_top } else { 0 },
+            little_frac: self.little_frac,
         }
     }
 

@@ -25,7 +25,7 @@ use std::collections::VecDeque;
 
 use anyhow::Result;
 
-use crate::store::{StallSplit, StoreStats};
+use crate::store::{DegradeCount, StallSplit, StoreStats};
 
 use super::serve::Request;
 
@@ -103,6 +103,21 @@ pub trait SeqBackend {
         self.stalls_of(id)
     }
 
+    /// Cumulative degraded-boundary accounting for request `id`
+    /// (quality-elastic fallback, DESIGN.md §11). Zero for backends
+    /// without a little tier.
+    fn degraded_of(&self, _id: u64) -> DegradeCount {
+        DegradeCount::default()
+    }
+
+    /// Request `id` finished: return its degraded-boundary accounting
+    /// and release the ledger entry — the degraded-ledger mirror of
+    /// `retire`. Defaults to a plain read for backends without
+    /// per-request state.
+    fn take_degraded(&mut self, id: u64) -> DegradeCount {
+        self.degraded_of(id)
+    }
+
     /// Snapshot of the backend's store accounting (globals + per-device
     /// sums + cache hit rate) for the inspector. Defaults to `None` for
     /// backends without a store.
@@ -143,6 +158,12 @@ impl<'a, B: SeqBackend> SeqBackend for &'a mut B {
     fn retire(&mut self, id: u64) -> StallSplit {
         (**self).retire(id)
     }
+    fn degraded_of(&self, id: u64) -> DegradeCount {
+        (**self).degraded_of(id)
+    }
+    fn take_degraded(&mut self, id: u64) -> DegradeCount {
+        (**self).take_degraded(id)
+    }
     fn snapshot(&self) -> Option<BackendSnapshot> {
         (**self).snapshot()
     }
@@ -167,6 +188,12 @@ pub struct ServeCompletion {
     pub decode_us: f64,
     /// attributed stall decomposition (demand-fetch vs prefetch-miss)
     pub stall: StallSplit,
+    /// degraded-boundary accounting (quality-elastic fallback,
+    /// DESIGN.md §11): boundaries this request resolved on the
+    /// little tier, and the demand bytes those resolutions avoided
+    pub degraded: DegradeCount,
+    /// the request's SLO budget, echoed back for the client
+    pub slo_us: Option<f64>,
     /// largest decode batch this request was part of
     pub batch_peak: usize,
     pub finished_us: f64,
@@ -203,6 +230,7 @@ struct ActiveSeq<S> {
     prefill_us: f64,
     decode_us: f64,
     batch_peak: usize,
+    slo_us: Option<f64>,
 }
 
 /// The continuous-batching scheduler over one `SeqBackend`.
@@ -314,6 +342,7 @@ impl<B: SeqBackend> Scheduler<B> {
             };
             let admitted_us = self.backend.now_us();
             let id = req.id;
+            let slo_us = req.slo_us;
             let (seq, prefill_us) = match self.backend.start(&req) {
                 Ok(v) => v,
                 Err(e) => {
@@ -326,6 +355,7 @@ impl<B: SeqBackend> Scheduler<B> {
                         0.0,
                         0.0,
                         0,
+                        slo_us,
                         Some(format!("{e:#}")),
                     ));
                     continue;
@@ -342,6 +372,7 @@ impl<B: SeqBackend> Scheduler<B> {
                 prefill_us,
                 decode_us: 0.0,
                 batch_peak: 0,
+                slo_us,
             });
         }
         let batch = self.active.len();
@@ -396,6 +427,7 @@ impl<B: SeqBackend> Scheduler<B> {
                 a.prefill_us,
                 a.decode_us,
                 a.batch_peak,
+                a.slo_us,
                 error,
             ));
         }
@@ -413,6 +445,7 @@ impl<B: SeqBackend> Scheduler<B> {
         prefill_us: f64,
         decode_us: f64,
         batch_peak: usize,
+        slo_us: Option<f64>,
         error: Option<String>,
     ) -> ServeCompletion {
         ServeCompletion {
@@ -427,6 +460,8 @@ impl<B: SeqBackend> Scheduler<B> {
             // entry folds into its retired bucket so long-running servers
             // never accumulate entries for finished requests
             stall: self.backend.retire(id),
+            degraded: self.backend.take_degraded(id),
+            slo_us,
             batch_peak,
             finished_us: self.backend.now_us(),
             error,
@@ -451,6 +486,7 @@ impl<B: SeqBackend> Scheduler<B> {
                 a.prefill_us,
                 a.decode_us,
                 a.batch_peak,
+                a.slo_us,
                 Some(error.to_string()),
             ));
         }
@@ -546,6 +582,7 @@ mod tests {
             max_tokens: tokens,
             temperature: 0.0,
             seed: id,
+            slo_us: None,
         }
     }
 

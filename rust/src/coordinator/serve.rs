@@ -206,6 +206,16 @@ impl FloePipeline {
                         let ready = self.store.peer_fetch(key, from);
                         self.store.stall_until_for(ready, StallCause::Demand);
                     }
+                    Lookup::RemoteNode(from) => {
+                        // resident only on a device of another node: pull
+                        // over the network link (a single-node serving box
+                        // never resolves here)
+                        let ready = self.store.net_fetch(key, from);
+                        self.store.stall_until_for(ready, StallCause::Demand);
+                    }
+                    Lookup::Degraded(_) => {
+                        unreachable!("lookup never returns Degraded")
+                    }
                     Lookup::Miss => {
                         let dm = self.compact[&key].record_len / 2;
                         let f = self.compact[&key].f;
@@ -247,6 +257,15 @@ impl FloePipeline {
                     // subset approximation, just the p2p move
                     let ready = self.store.peer_fetch(key, from);
                     self.store.stall_until_for(ready, StallCause::Demand);
+                }
+                Lookup::RemoteNode(from) => {
+                    // cross-node copy: the network pull is the whole
+                    // story — no channel-subset approximation either
+                    let ready = self.store.net_fetch(key, from);
+                    self.store.stall_until_for(ready, StallCause::Demand);
+                }
+                Lookup::Degraded(_) => {
+                    unreachable!("lookup never returns Degraded")
                 }
                 Lookup::Miss => {
                     let taken = self.store.take_inflight(key);
@@ -425,6 +444,14 @@ pub struct Request {
     pub max_tokens: usize,
     pub temperature: f32,
     pub seed: u64,
+    /// Per-request latency budget in virtual µs (SLO), measured from
+    /// admission. When set *and* the little tier is carved
+    /// (`--little-frac > 0`), a boundary whose predicted demand-fetch
+    /// completion would bust the budget resolves to the degraded
+    /// little-tier variant instead of stalling (DESIGN.md §11). `None`
+    /// (the default everywhere) keeps every path bit-exact with
+    /// pre-quality builds.
+    pub slo_us: Option<f64>,
 }
 
 #[derive(Clone, Debug)]

@@ -45,7 +45,8 @@ use anyhow::Result;
 
 use crate::hwsim::{CpuSpec, GpuSpec, ModelDims, PcieSpec};
 use crate::store::{
-    ExpertStore, Lookup, PlanMode, StallCause, StallSplit, StoreStats, TransferPlan,
+    DegradeCount, ExpertStore, Lookup, PlanMode, StallCause, StallSplit, StoreStats,
+    TransferPlan,
 };
 use crate::util::rng::Rng;
 use crate::workload::TimedRequest;
@@ -515,6 +516,28 @@ fn warm_cache(p: &SimParams, c: &SimCtx, store: &mut ExpertStore) {
     }
 }
 
+/// Byte size of one expert's degraded little-tier variant (DESIGN.md
+/// §11): the rank-8 low-rank sketch of the INT2 expert — about 1/20th
+/// of the compressed expert bytes. The carve holds as many sketches as
+/// fit (key order, layer-major); at thrash-depth VRAM that is a partial
+/// roster, and `little_resident` gates the fallback per key.
+fn little_sketch_bytes(c: &SimCtx) -> usize {
+    (c.per_expert_bytes / 20.0).ceil().max(1.0) as usize
+}
+
+/// Pin every expert's little-tier sketch on its home device, in key
+/// order, until each device's carve fills (no-op with the carve off).
+fn seed_little_pools(p: &SimParams, c: &SimCtx, store: &mut ExpertStore) {
+    if p.system.little_frac <= 0.0 {
+        return;
+    }
+    let d = &p.dims;
+    let keys: Vec<(usize, usize)> = (0..d.n_layers)
+        .flat_map(|l| (0..d.n_experts).map(move |e| (l, e)))
+        .collect();
+    store.seed_little_pool(&keys, little_sketch_bytes(c));
+}
+
 /// Stage the expert roster into the per-node host pools (cluster tier,
 /// DESIGN.md §10): each node's host RAM adopts its own shard of the
 /// roster first (experts it would home under an expert-mod split across
@@ -564,12 +587,23 @@ struct ExpertWork {
 /// `None`. No RNG is consumed here, so resolving a whole layer upfront
 /// (overlap mode) draws the same stream as resolving one expert at a
 /// time (lockstep mode).
+///
+/// `deadline_us` is the owning request's SLO deadline on the virtual
+/// timeline (`f64::INFINITY` outside serving, or for requests without a
+/// budget). When the little tier is carved (`--little-frac > 0`), the
+/// deadline is finite and a demand fetch's predicted completion would
+/// bust it, the expert resolves to its always-resident degraded variant
+/// instead of stalling (DESIGN.md §11): no bytes move, no cache churn,
+/// the GEMV runs immediately on the home device. With the fallback off
+/// (either gate) this function is bit-exact with pre-quality builds.
+#[allow(clippy::too_many_arguments)]
 fn resolve_expert(
     p: &SimParams,
     c: &SimCtx,
     store: &mut ExpertStore,
     core: &mut EventCore,
     key: (usize, usize),
+    deadline_us: f64,
     boundary: &mut Option<&mut BoundaryShare>,
     compute_us: &mut f64,
 ) -> Option<ExpertWork> {
@@ -581,7 +615,7 @@ fn resolve_expert(
     } else {
         store.lookup(key)
     };
-    let resident = !matches!(looked, Lookup::Miss);
+    let mut degraded = false;
     let (ready_at, cause, exec_dev) = match looked {
         Lookup::Local(dev) => (store.now_us(), StallCause::Demand, dev),
         Lookup::Remote(from) => {
@@ -595,6 +629,7 @@ fn resolve_expert(
             // latency-dominated network link and migrate it home
             (store.net_fetch(key, from), StallCause::Demand, store.home(key))
         }
+        Lookup::Degraded(_) => unreachable!("lookup never returns Degraded"),
         Lookup::Miss => {
             if let Some((t_done, ())) = store.take_inflight(key) {
                 store.admit(key, c.per_expert_cached);
@@ -608,18 +643,46 @@ fn resolve_expert(
                 core.pop();
                 return None;
             } else {
-                // demand fetch toward the home device, priced by the
-                // link the bytes actually cross: the home node's host
-                // PCIe when its host pool holds a copy, the network
-                // link otherwise (unclustered topologies always price
-                // PCIe — `demand_link_us` degenerates to `h2d.copy_us`)
-                let dur = store.demand_link_us(key, c.per_expert_bytes.max(1.0));
-                let done = store.demand_fetch_for(key, dur, c.per_expert_bytes);
-                store.admit(key, c.per_expert_cached);
-                (done, StallCause::Demand, store.home(key))
+                // quality-elastic fallback first: predict (side-effect
+                // free) when the full fetch would land, and if that
+                // busts the SLO, execute the little-tier variant that
+                // is already resident. The avoided demand bytes are
+                // charged to the request's degraded ledger, and the
+                // decision lands in the event log (push+pop at `now`:
+                // every pending completion is strictly later, the
+                // `note_node_down` pattern) so replay re-derives it.
+                if p.system.little_frac > 0.0
+                    && deadline_us.is_finite()
+                    && store.little_resident(key)
+                    && store.predict_demand_ready(
+                        key,
+                        store.peek_demand_link_us(key, c.per_expert_bytes.max(1.0)),
+                    ) > deadline_us
+                {
+                    let hit = store.degraded_hit(key, c.per_expert_bytes);
+                    debug_assert!(matches!(hit, Lookup::Degraded(_)));
+                    core.push(store.now_us(), EventKind::Degraded, key_id(key));
+                    let ev = core.pop().expect("degraded event vanished from the heap");
+                    debug_assert_eq!(ev.kind, EventKind::Degraded);
+                    degraded = true;
+                    (store.now_us(), StallCause::Demand, store.home(key))
+                } else {
+                    // demand fetch toward the home device, priced by the
+                    // link the bytes actually cross: the home node's host
+                    // PCIe when its host pool holds a copy, the network
+                    // link otherwise (unclustered topologies always price
+                    // PCIe — `demand_link_us` degenerates to `h2d.copy_us`)
+                    let dur = store.demand_link_us(key, c.per_expert_bytes.max(1.0));
+                    let done = store.demand_fetch_for(key, dur, c.per_expert_bytes);
+                    store.admit(key, c.per_expert_cached);
+                    (done, StallCause::Demand, store.home(key))
+                }
             }
         }
     };
+    // the little variant counts as resident: it is pinned on-device, so
+    // no intra-predictor top-up applies to a degraded resolution
+    let resident = !matches!(looked, Lookup::Miss) || degraded;
     let t_exp = match boundary.as_deref_mut() {
         // first GEMV of this expert at this boundary pays the
         // weight-bound cost; batched repeats ride the streamed weights
@@ -717,6 +780,7 @@ fn exec_expert(
 /// the older scalar/sharded references); with it on, the layer's fetches
 /// are resolved upfront and transfer completions release their GEMVs in
 /// readiness order, charging only the residual wait.
+#[allow(clippy::too_many_arguments)]
 fn sim_decode_token(
     p: &SimParams,
     c: &SimCtx,
@@ -725,6 +789,7 @@ fn sim_decode_token(
     rng: &mut Rng,
     prev: &mut Vec<Vec<usize>>,
     kv_len: usize,
+    deadline_us: f64,
     mut boundary: Option<&mut BoundaryShare>,
     mut streams: Option<&mut ComputeStreams>,
 ) -> f64 {
@@ -752,6 +817,7 @@ fn sim_decode_token(
                     store,
                     core,
                     key,
+                    deadline_us,
                     &mut boundary,
                     &mut compute_us,
                 ) {
@@ -825,6 +891,7 @@ fn sim_decode_token(
                     store,
                     core,
                     key,
+                    deadline_us,
                     &mut boundary,
                     &mut compute_us,
                 ) else {
@@ -938,6 +1005,7 @@ fn sim_decode_boundary(
                         store,
                         core,
                         key,
+                        seqs[si].deadline_us,
                         &mut share,
                         &mut computes[si],
                     ) {
@@ -1065,6 +1133,7 @@ fn simulate_core(
     };
 
     warm_cache(p, &c, &mut store);
+    seed_little_pools(p, &c, &mut store);
     if store.placement().topo.clustered() {
         seed_cluster_host_pools(p, &c, &mut store);
     }
@@ -1078,6 +1147,7 @@ fn simulate_core(
             &mut rng,
             &mut prev,
             input_len + tok,
+            f64::INFINITY,
             None,
             streams.as_mut(),
         );
@@ -1200,6 +1270,9 @@ fn busyuntil_decode_token(
                 }
                 Lookup::RemoteNode(_) => {
                     unreachable!("the frozen reference runs single-node topologies only")
+                }
+                Lookup::Degraded(_) => {
+                    unreachable!("lookup never returns Degraded")
                 }
                 Lookup::Miss => {
                     if let Some((t_done, ())) = store.take_inflight(key) {
@@ -1611,6 +1684,9 @@ pub fn simulate_sharded_reference(
                     Lookup::RemoteNode(_) => {
                         unreachable!("the frozen reference runs single-node topologies only")
                     }
+                    Lookup::Degraded(_) => {
+                        unreachable!("lookup never returns Degraded")
+                    }
                     Lookup::Miss => {
                         if let Some((t_done, ())) = store.take_inflight(key) {
                             store.admit(key, c.per_expert_cached);
@@ -1675,6 +1751,11 @@ pub struct SimSeq {
     input_len: usize,
     emitted: usize,
     max_tokens: usize,
+    /// SLO deadline on the virtual timeline: admission time + the
+    /// request's `slo_us` budget (`f64::INFINITY` when no budget was
+    /// set, which disables the quality-elastic fallback for this
+    /// sequence regardless of the little-tier carve)
+    deadline_us: f64,
 }
 
 /// `SeqBackend` over the discrete-event model: the continuous-batching
@@ -1717,6 +1798,7 @@ impl SimServeBackend {
         let mut store = build_store(&p, budget);
         let ctx = SimCtx::new(&p, budget, true);
         warm_cache(&p, &ctx, &mut store);
+        seed_little_pools(&p, &ctx, &mut store);
         if store.placement().topo.clustered() {
             seed_cluster_host_pools(&p, &ctx, &mut store);
         }
@@ -1793,6 +1875,9 @@ impl SeqBackend for SimServeBackend {
         self.store.set_attribution(r.id);
         let input_len = r.prompt.len().max(1);
         let t0 = self.store.now_us();
+        // the SLO clock starts at admission, before prefill spends any
+        // of the budget — a long prefill tightens every decode boundary
+        let deadline_us = r.slo_us.map_or(f64::INFINITY, |slo| t0 + slo);
         sim_prefill(&self.p, &self.ctx, &mut self.store, input_len);
         Ok((
             SimSeq {
@@ -1802,6 +1887,7 @@ impl SeqBackend for SimServeBackend {
                 input_len,
                 emitted: 0,
                 max_tokens: r.max_tokens.max(1),
+                deadline_us,
             },
             self.store.now_us() - t0,
         ))
@@ -1817,6 +1903,7 @@ impl SeqBackend for SimServeBackend {
             &mut s.rng,
             &mut s.prev,
             s.input_len + s.emitted,
+            s.deadline_us,
             Some(&mut self.boundary),
             self.streams.as_mut(),
         );
@@ -1885,6 +1972,15 @@ impl SeqBackend for SimServeBackend {
         self.store.take_attribution(id)
     }
 
+    fn degraded_of(&self, id: u64) -> DegradeCount {
+        self.store.degraded_of(id)
+    }
+
+    fn take_degraded(&mut self, id: u64) -> DegradeCount {
+        // the degraded ledger retires exactly like the stall ledger
+        self.store.take_degraded_attribution(id)
+    }
+
     fn snapshot(&self) -> Option<BackendSnapshot> {
         Some(BackendSnapshot {
             stats: self.store.stats().clone(),
@@ -1925,12 +2021,30 @@ impl ServeSimReport {
             / self.completions.len() as f64
     }
     pub fn p95_latency_us(&self) -> f64 {
+        self.latency_quantile(0.95)
+    }
+    pub fn p99_latency_us(&self) -> f64 {
+        self.latency_quantile(0.99)
+    }
+    fn latency_quantile(&self, q: f64) -> f64 {
         if self.completions.is_empty() {
             return 0.0;
         }
         let mut lat: Vec<f64> = self.completions.iter().map(|c| c.latency_us()).collect();
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        lat[((lat.len() - 1) as f64 * 0.95).round() as usize]
+        lat[((lat.len() - 1) as f64 * q).round() as usize]
+    }
+    /// Share of requests that resolved at least one boundary degraded.
+    pub fn degraded_request_share(&self) -> f64 {
+        if self.completions.is_empty() {
+            return 0.0;
+        }
+        self.completions.iter().filter(|c| c.degraded.hits > 0).count() as f64
+            / self.completions.len() as f64
+    }
+    /// Total degraded boundaries across the run.
+    pub fn degraded_hits(&self) -> u64 {
+        self.completions.iter().map(|c| c.degraded.hits).sum()
     }
 }
 

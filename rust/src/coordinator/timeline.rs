@@ -42,7 +42,7 @@ use anyhow::Result;
 
 use crate::config::{ResidencyKind, ShardPolicy};
 use crate::hwsim::RTX3090;
-use crate::store::{DeviceStats, StallSplit, StoreStats};
+use crate::store::{DegradeCount, DeviceStats, StallSplit, StoreStats};
 use crate::util::json::Json;
 use crate::workload::{self, TimedRequest, WorkloadSpec};
 
@@ -65,6 +65,17 @@ const FLAG_REPLAYABLE: u32 = 1 << 1;
 /// The artifact carries a cluster section (shape + per-node
 /// observations) appended after the single-node sections.
 const FLAG_CLUSTER: u32 = 1 << 2;
+/// The artifact carries a quality-elastic section (the little-tier
+/// carve fraction + per-request SLO budgets, DESIGN.md §11) appended
+/// after every other section. Only set when the spec actually uses the
+/// fallback, so pre-quality artifacts stay byte-identical.
+const FLAG_QUALITY: u32 = 1 << 3;
+/// Every flag bit this build understands. `from_bytes` rejects unknown
+/// bits outright: an unknown bit means an appended section this decoder
+/// would misparse as trailing garbage (or worse, silently drop), so
+/// failing loudly is the forward-compatibility contract.
+const KNOWN_FLAGS: u32 =
+    FLAG_OBSERVATIONS | FLAG_REPLAYABLE | FLAG_CLUSTER | FLAG_QUALITY;
 
 /// Hardware preset a spec's `SimParams` are rebuilt from. Only the
 /// RTX 3090 host model is recordable today — the preset every serving
@@ -221,6 +232,9 @@ pub struct CompletionRecord {
     pub decode_us: f64,
     pub stall: StallSplit,
     pub finished_us: f64,
+    /// quality-elastic boundaries this request resolved degraded
+    /// (zero everywhere with the fallback off)
+    pub degraded: DegradeCount,
 }
 
 impl CompletionRecord {
@@ -235,22 +249,24 @@ impl CompletionRecord {
             decode_us: c.decode_us,
             stall: c.stall,
             finished_us: c.finished_us,
+            degraded: c.degraded,
         }
     }
 
     fn render(&self) -> String {
         format!(
-            "id={} tokens={} wait={}us stall=({},{})us finished={}us",
+            "id={} tokens={} wait={}us stall=({},{})us degraded={} finished={}us",
             self.id,
             self.tokens,
             self.queue_wait_us,
             self.stall.demand_us,
             self.stall.prefetch_us,
+            self.degraded.hits,
             self.finished_us
         )
     }
 
-    fn bits(&self) -> [u64; 10] {
+    fn bits(&self) -> [u64; 12] {
         [
             self.id,
             self.tokens,
@@ -262,6 +278,8 @@ impl CompletionRecord {
             self.stall.demand_us.to_bits(),
             self.stall.prefetch_us.to_bits(),
             self.finished_us.to_bits(),
+            self.degraded.hits,
+            self.degraded.bytes.to_bits(),
         ]
     }
 }
@@ -280,6 +298,11 @@ pub struct StatsRecord {
     pub stall_demand_us: f64,
     pub stall_prefetch_us: f64,
     pub retired: StallSplit,
+    /// global quality-elastic counters + the retired bucket of the
+    /// degraded ledger (all zero with the fallback off)
+    pub degraded_hits: u64,
+    pub degraded_bytes: f64,
+    pub retired_degraded: DegradeCount,
     pub per_device: Vec<DeviceStats>,
 }
 
@@ -295,6 +318,9 @@ impl StatsRecord {
             stall_demand_us: s.stall_demand_us,
             stall_prefetch_us: s.stall_prefetch_us,
             retired: s.retired,
+            degraded_hits: s.degraded_hits,
+            degraded_bytes: s.degraded_bytes,
+            retired_degraded: s.retired_degraded,
             per_device: s.per_device.clone(),
         }
     }
@@ -618,6 +644,8 @@ fn get_spec(d: &mut Dec) -> Result<SessionSpec, String> {
             prompt_len: (d.u64()? as usize, d.u64()? as usize),
             output_tokens: (d.u64()? as usize, d.u64()? as usize),
             seed: d.u64()?,
+            // patched from the quality section when FLAG_QUALITY is set
+            slo_us: None,
         }),
         1 => {
             let n = d.u64()? as usize;
@@ -631,7 +659,7 @@ fn get_spec(d: &mut Dec) -> Result<SessionSpec, String> {
                 let prompt = d.bytes()?;
                 trace.push(TimedRequest {
                     arrival_us,
-                    req: Request { id, prompt, max_tokens, temperature, seed },
+                    req: Request { id, prompt, max_tokens, temperature, seed, slo_us: None },
                 });
             }
             WorkloadSource::Trace(trace)
@@ -664,6 +692,8 @@ fn put_completions(e: &mut Enc, completions: &[CompletionRecord]) {
         e.f64(c.stall.demand_us);
         e.f64(c.stall.prefetch_us);
         e.f64(c.finished_us);
+        e.u64(c.degraded.hits);
+        e.f64(c.degraded.bytes);
     }
 }
 
@@ -681,6 +711,7 @@ fn get_completions(d: &mut Dec) -> Result<Vec<CompletionRecord>, String> {
             decode_us: d.f64()?,
             stall: StallSplit { demand_us: d.f64()?, prefetch_us: d.f64()? },
             finished_us: d.f64()?,
+            degraded: DegradeCount { hits: d.u64()?, bytes: d.f64()? },
         });
     }
     Ok(completions)
@@ -697,6 +728,10 @@ fn put_stats(e: &mut Enc, s: &StatsRecord) {
     e.f64(s.stall_prefetch_us);
     e.f64(s.retired.demand_us);
     e.f64(s.retired.prefetch_us);
+    e.u64(s.degraded_hits);
+    e.f64(s.degraded_bytes);
+    e.u64(s.retired_degraded.hits);
+    e.f64(s.retired_degraded.bytes);
     e.u64(s.per_device.len() as u64);
     for dev in &s.per_device {
         e.u64(dev.demand_fetches);
@@ -718,6 +753,9 @@ fn get_stats(d: &mut Dec) -> Result<StatsRecord, String> {
         stall_demand_us: d.f64()?,
         stall_prefetch_us: d.f64()?,
         retired: StallSplit { demand_us: d.f64()?, prefetch_us: d.f64()? },
+        degraded_hits: d.u64()?,
+        degraded_bytes: d.f64()?,
+        retired_degraded: DegradeCount { hits: d.u64()?, bytes: d.f64()? },
         per_device: Vec::new(),
     };
     let n = d.u64()? as usize;
@@ -889,6 +927,60 @@ fn get_cluster(d: &mut Dec) -> Result<ClusterExt, String> {
     Ok(ClusterExt { shape, obs })
 }
 
+/// Whether the spec exercises the quality-elastic fallback and therefore
+/// needs the appended `FLAG_QUALITY` section to round-trip.
+fn quality_needed(spec: &SessionSpec) -> bool {
+    spec.system.little_frac > 0.0
+        || match &spec.workload {
+            WorkloadSource::Spec(w) => w.slo_us.is_some(),
+            WorkloadSource::Trace(t) => t.iter().any(|r| r.req.slo_us.is_some()),
+        }
+}
+
+/// The quality section (DESIGN.md §11): the little-tier carve fraction
+/// followed by the SLO budgets the base workload encoding omits — one
+/// presence-tagged f64 for a `Spec` workload (its uniform budget), one
+/// per request for a `Trace` (the trace length is already fixed by the
+/// base section, so no count is repeated here).
+fn put_quality(e: &mut Enc, spec: &SessionSpec) {
+    e.f64(spec.system.little_frac);
+    let put_slo = |e: &mut Enc, slo: Option<f64>| match slo {
+        Some(s) => {
+            e.u8(1);
+            e.f64(s);
+        }
+        None => e.u8(0),
+    };
+    match &spec.workload {
+        WorkloadSource::Spec(w) => put_slo(e, w.slo_us),
+        WorkloadSource::Trace(t) => {
+            for r in t {
+                put_slo(e, r.req.slo_us);
+            }
+        }
+    }
+}
+
+fn get_quality(d: &mut Dec, spec: &mut SessionSpec) -> Result<(), String> {
+    spec.system.little_frac = d.f64()?;
+    let get_slo = |d: &mut Dec| -> Result<Option<f64>, String> {
+        match d.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(d.f64()?)),
+            c => Err(format!("bad slo presence tag {c}")),
+        }
+    };
+    match &mut spec.workload {
+        WorkloadSource::Spec(w) => w.slo_us = get_slo(d)?,
+        WorkloadSource::Trace(t) => {
+            for r in t.iter_mut() {
+                r.req.slo_us = get_slo(d)?;
+            }
+        }
+    }
+    Ok(())
+}
+
 impl Timeline {
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut e = Enc::new();
@@ -904,6 +996,10 @@ impl Timeline {
         if self.cluster.is_some() {
             flags |= FLAG_CLUSTER;
         }
+        let quality = quality_needed(&self.spec);
+        if quality {
+            flags |= FLAG_QUALITY;
+        }
         e.u32(flags);
         put_spec(&mut e, &self.spec);
         if let Some(o) = &self.obs {
@@ -911,6 +1007,9 @@ impl Timeline {
         }
         if let Some(c) = &self.cluster {
             put_cluster(&mut e, c);
+        }
+        if quality {
+            put_quality(&mut e, &self.spec);
         }
         e.buf
     }
@@ -925,7 +1024,16 @@ impl Timeline {
             return Err(format!("unsupported timeline version {version} (have {VERSION})"));
         }
         let flags = d.u32()?;
-        let spec = get_spec(&mut d)?;
+        if flags & !KNOWN_FLAGS != 0 {
+            return Err(format!(
+                "unknown timeline flag bits {:#x} (this build understands {:#x}) — \
+                 the artifact was written by a newer format revision; refusing to \
+                 misparse its appended sections",
+                flags & !KNOWN_FLAGS,
+                KNOWN_FLAGS
+            ));
+        }
+        let mut spec = get_spec(&mut d)?;
         let obs = if flags & FLAG_OBSERVATIONS != 0 {
             Some(get_obs(&mut d)?)
         } else {
@@ -936,6 +1044,9 @@ impl Timeline {
         } else {
             None
         };
+        if flags & FLAG_QUALITY != 0 {
+            get_quality(&mut d, &mut spec)?;
+        }
         d.done()?;
         Ok(Timeline { spec, obs, cluster, replayable: flags & FLAG_REPLAYABLE != 0 })
     }
@@ -1035,6 +1146,12 @@ impl<B: SeqBackend> SeqBackend for RecordingBackend<B> {
         });
         self.retires += 1;
         split
+    }
+    fn degraded_of(&self, id: u64) -> DegradeCount {
+        self.inner.degraded_of(id)
+    }
+    fn take_degraded(&mut self, id: u64) -> DegradeCount {
+        self.inner.take_degraded(id)
     }
     fn snapshot(&self) -> Option<BackendSnapshot> {
         self.inner.snapshot()
@@ -1528,6 +1645,13 @@ pub struct InspectorReport {
     pub max_batch_seen: u64,
     pub cache_hit_rate: f64,
     pub device_busy_share: Vec<f64>,
+    /// Quality-elastic fallback (DESIGN.md §11): degraded boundaries
+    /// across the session, the full-fetch bytes they avoided, and the
+    /// share of requests that resolved at least one boundary degraded.
+    /// All zero for every fallback-off session.
+    pub degraded_hits: u64,
+    pub degraded_bytes: f64,
+    pub degraded_request_share: f64,
     pub ledger_exact: bool,
 }
 
@@ -1567,9 +1691,13 @@ pub fn inspect_parts(
     // `retired`, so the sums agree bit-for-bit.
     let mut demand = 0.0;
     let mut prefetch = 0.0;
+    let mut deg_hits: u64 = 0;
+    let mut deg_bytes = 0.0;
     for c in completions {
         demand += c.stall.demand_us;
         prefetch += c.stall.prefetch_us;
+        deg_hits += c.degraded.hits;
+        deg_bytes += c.degraded.bytes;
     }
     let ledger_exact = match stats {
         Some(s) => {
@@ -1577,6 +1705,12 @@ pub fn inspect_parts(
                 && prefetch.to_bits() == s.retired.prefetch_us.to_bits()
                 && s.stall_demand_us.to_bits() == s.retired.demand_us.to_bits()
                 && s.stall_prefetch_us.to_bits() == s.retired.prefetch_us.to_bits()
+                // the degraded ledger retires exactly like the stall
+                // ledger: per-request counts re-sum to the globals
+                && deg_hits == s.retired_degraded.hits
+                && deg_bytes.to_bits() == s.retired_degraded.bytes.to_bits()
+                && s.degraded_hits == s.retired_degraded.hits
+                && s.degraded_bytes.to_bits() == s.retired_degraded.bytes.to_bits()
         }
         None => false,
     };
@@ -1607,6 +1741,13 @@ pub fn inspect_parts(
         device_busy_share: stats
             .map(|s| s.per_device.iter().map(|d| d.bus_busy_us / span).collect())
             .unwrap_or_default(),
+        degraded_hits: deg_hits,
+        degraded_bytes: deg_bytes,
+        degraded_request_share: if completions.is_empty() {
+            0.0
+        } else {
+            completions.iter().filter(|c| c.degraded.hits > 0).count() as f64 / n
+        },
         ledger_exact,
     }
 }
@@ -1635,6 +1776,12 @@ impl InspectorReport {
             "device_busy_share".to_string(),
             Json::Arr(self.device_busy_share.iter().map(|&v| Json::Num(v)).collect()),
         );
+        m.insert("degraded_hits".to_string(), Json::Num(self.degraded_hits as f64));
+        m.insert("degraded_bytes".to_string(), Json::Num(self.degraded_bytes));
+        m.insert(
+            "degraded_request_share".to_string(),
+            Json::Num(self.degraded_request_share),
+        );
         m.insert("ledger_exact".to_string(), Json::Bool(self.ledger_exact));
         Json::Obj(m)
     }
@@ -1662,6 +1809,12 @@ impl InspectorReport {
             format!("{:<22}{}", "max_batch_seen", self.max_batch_seen),
             format!("{:<22}{:.4}", "cache_hit_rate", self.cache_hit_rate),
             format!("{:<22}[{}]", "device_busy_share", busy),
+            format!("{:<22}{}", "degraded_hits", self.degraded_hits),
+            format!("{:<22}{:.1}", "degraded_bytes", self.degraded_bytes),
+            format!(
+                "{:<22}{:.4}",
+                "degraded_request_share", self.degraded_request_share
+            ),
             format!("{:<22}{}", "ledger_exact", self.ledger_exact),
         ];
         lines.join("\n")
@@ -1686,6 +1839,7 @@ mod tests {
                 prompt_len: (4, 10),
                 output_tokens: (4, 10),
                 seed,
+                slo_us: None,
             }),
         )
     }
@@ -1710,6 +1864,55 @@ mod tests {
         let back2 = Timeline::from_bytes(&bytes2).unwrap();
         assert_eq!(back2.spec.trace(), trace);
         assert_eq!(back2.to_bytes(), bytes2);
+    }
+
+    /// Forward compatibility is refusal, not tolerance: a flag bit this
+    /// build does not know marks an appended section it would misparse,
+    /// so `from_bytes` must fail loudly — and artifacts written by this
+    /// build must not set the quality bit unless the spec needs it,
+    /// keeping the committed v1 corpus byte-identical.
+    #[test]
+    fn unknown_flag_bits_are_rejected() {
+        let tl = Timeline { spec: tiny_spec(true, 11), obs: None, cluster: None, replayable: true };
+        let mut bytes = tl.to_bytes();
+        // flags live at offset 8..12, little-endian; bit 4 is unassigned
+        assert_eq!(bytes[8] & (1 << 3), 0, "fallback-off spec set FLAG_QUALITY");
+        bytes[8] |= 1 << 4;
+        let err = Timeline::from_bytes(&bytes).unwrap_err();
+        assert!(
+            err.contains("unknown timeline flag bits"),
+            "unhelpful unknown-flag error: {err}"
+        );
+    }
+
+    /// The quality section (FLAG_QUALITY) round-trips the little-tier
+    /// carve and the SLO budgets in both workload encodings.
+    #[test]
+    fn quality_section_roundtrips() {
+        let mut spec = tiny_spec(true, 11);
+        spec.system = spec.system.clone().with_little_frac(0.1);
+        if let WorkloadSource::Spec(w) = &mut spec.workload {
+            w.slo_us = Some(2.0e6);
+        }
+        let tl = Timeline { spec, obs: None, cluster: None, replayable: true };
+        let bytes = tl.to_bytes();
+        assert_ne!(bytes[8] & (1 << 3), 0, "quality spec did not set FLAG_QUALITY");
+        let back = Timeline::from_bytes(&bytes).unwrap();
+        assert_eq!(back.spec.system.little_frac, 0.1);
+        match &back.spec.workload {
+            WorkloadSource::Spec(w) => assert_eq!(w.slo_us, Some(2.0e6)),
+            WorkloadSource::Trace(_) => panic!("workload form changed"),
+        }
+        assert_eq!(back.to_bytes(), bytes);
+
+        // trace form: per-request budgets, only some requests bounded
+        let mut trace = tl.spec.trace();
+        trace[0].req.slo_us = Some(1.5e6);
+        let spec2 = SessionSpec { workload: WorkloadSource::Trace(trace.clone()), ..tl.spec };
+        let tl2 = Timeline { spec: spec2, obs: None, cluster: None, replayable: false };
+        let back2 = Timeline::from_bytes(&tl2.to_bytes()).unwrap();
+        assert_eq!(back2.spec.trace(), trace);
+        assert_eq!(back2.to_bytes(), tl2.to_bytes());
     }
 
     #[test]

@@ -63,6 +63,7 @@ pub fn run(art_dir: &std::path::Path) -> Result<()> {
         max_tokens: 24,
         temperature: 0.0,
         seed: i as u64,
+        slo_us: None,
     })
     .collect();
     let _ = coord.run_batch(&reqs)?;

@@ -143,6 +143,7 @@ pub fn run_real(
                 max_tokens: out_tokens,
                 temperature: 0.0,
                 seed: i,
+                slo_us: None,
             })
             .collect();
         let done = coord.run_batch(&reqs)?;

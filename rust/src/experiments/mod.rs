@@ -9,6 +9,7 @@ pub mod fig4;
 pub mod fig6;
 pub mod fig7;
 pub mod fig8;
+pub mod quality;
 pub mod serveload;
 pub mod shard;
 pub mod table1;

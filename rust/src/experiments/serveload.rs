@@ -57,6 +57,7 @@ pub fn workload_at(
         prompt_len: (8, 24),
         output_tokens: (16, 48),
         seed,
+        slo_us: None,
     })
 }
 

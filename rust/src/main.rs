@@ -102,6 +102,16 @@ impl Args {
     fn kernel_threads(&self) -> Option<usize> {
         self.get("kernel-threads").and_then(|v| v.parse().ok())
     }
+    /// `--slo-us N`: uniform per-request SLO budget, µs from admission
+    /// (None = no budget; the quality-elastic fallback never fires).
+    fn slo_us(&self) -> Option<f64> {
+        self.get("slo-us").and_then(|v| v.parse().ok()).filter(|s: &f64| *s > 0.0)
+    }
+    /// `--little-frac F`: fraction of each device budget carved into the
+    /// always-resident little-tier pool (0 = fallback off).
+    fn little_frac(&self) -> f64 {
+        self.f64("little-frac", 0.0)
+    }
     fn budget(&self) -> EvalBudget {
         EvalBudget {
             n_bytes: self.usize("eval-bytes", 768),
@@ -160,6 +170,7 @@ fn main() -> Result<()> {
                 .with_overlap(args.overlap());
             system.sparsity = args.f64("level", 0.8);
             system.sparsity_decay = args.sparsity_decay();
+            system = system.with_little_frac(args.little_frac());
             if args.devices() > 1 {
                 system.replicate_top = args.replicate_top();
                 system.compute_streams = args.compute_streams();
@@ -201,7 +212,8 @@ fn main() -> Result<()> {
                 .system
                 .clone()
                 .with_devices(args.devices(), args.shard()?)
-                .with_overlap(args.overlap());
+                .with_overlap(args.overlap())
+                .with_little_frac(args.little_frac());
             let spec = SessionSpec::from_params(
                 &p,
                 args.usize("cap", 4),
@@ -211,6 +223,7 @@ fn main() -> Result<()> {
                     prompt_len: (8, 24),
                     output_tokens: (16, 48),
                     seed: args.usize("seed", 23) as u64,
+                    slo_us: args.slo_us(),
                 }),
             );
             let tl = timeline::record(&spec);
@@ -355,6 +368,11 @@ fn main() -> Result<()> {
             args.get("nodes").and_then(|v| v.parse().ok()),
             args.get("devices").and_then(|v| v.parse().ok()),
         )?,
+        "exp-quality-latency" => exp::quality::run(
+            args.usize("requests", 12),
+            args.usize("seed", 23) as u64,
+            args.f64("little-frac", exp::quality::LITTLE_FRAC),
+        )?,
         "exp-shard-sweep" => exp::shard::run(
             args.residency()?,
             args.usize("seed", 7) as u64,
@@ -376,6 +394,7 @@ fn main() -> Result<()> {
             exp::fig8::run_policy_sweep(decay)?;
             exp::shard::run(ResidencyKind::Lru, 7, decay)?;
             exp::cluster::run(16, 7, 8.0, exp::cluster::AGGREGATE_VRAM_GB, None, None)?;
+            exp::quality::run(12, 23, exp::quality::LITTLE_FRAC)?;
             exp::serveload::run(
                 ResidencyKind::Lru, 16, 7, exp::serveload::DEFAULT_VRAM_GB,
                 1, ShardPolicy::Layer, decay, false,
@@ -397,9 +416,9 @@ fn main() -> Result<()> {
                  usage: floe <cmd> [--flag value]...\n\n\
                  cmds: generate serve record replay eval exp-fig2 exp-fig3a \
                  exp-fig3b exp-fig4 exp-fig6 exp-fig7 exp-fig8 exp-fig9 \
-                 exp-policy-sweep exp-serve-load exp-shard-sweep \
-                 exp-cluster-sweep exp-table1 exp-table3 exp-compression \
-                 exp-all\n\n\
+                 exp-policy-sweep exp-quality-latency exp-serve-load \
+                 exp-shard-sweep exp-cluster-sweep exp-table1 exp-table3 \
+                 exp-compression exp-all\n\n\
                  common flags: --mode dense|sparse|floe|cats|chess|uniform \
                  --level 0.8 --bits 2 --policy lru|lfu|sparsity \
                  --sparsity-decay 0.999 --prompt '...' --tokens 48\n\
@@ -434,6 +453,11 @@ fn main() -> Result<()> {
                  (restrict the sweep to one cell) --requests 16 --rate 8 \
                  --vram-total 28.5 (aggregate expert-cache VRAM split \
                  evenly across all nodes x devices)\n\
+                 quality flags (serve, record, exp-quality-latency): \
+                 --slo-us N (per-request latency budget, us from \
+                 admission) --little-frac 0.1 (device-budget fraction \
+                 carved into the always-resident degraded tier; 0 turns \
+                 the big-little fallback off and keeps runs bit-exact)\n\
                  env: FLOE_ARTIFACTS (default ./artifacts)"
             );
         }

@@ -440,8 +440,13 @@ fn response_json(c: &ServeCompletion, tag: Option<Json>) -> Json {
         ("stall_us".to_string(), Json::Num(c.stall.total_us())),
         ("stall_demand_us".to_string(), Json::Num(c.stall.demand_us)),
         ("stall_prefetch_us".to_string(), Json::Num(c.stall.prefetch_us)),
+        ("degraded_boundaries".to_string(), Json::Num(c.degraded.hits as f64)),
+        ("degraded_bytes".to_string(), Json::Num(c.degraded.bytes)),
         ("batch_size".to_string(), Json::Num(c.batch_peak as f64)),
     ];
+    if let Some(s) = c.slo_us {
+        fields.push(("slo_us".to_string(), Json::Num(s)));
+    }
     if let Some(tag) = tag {
         fields.push(("tag".to_string(), tag));
     }
@@ -533,6 +538,7 @@ fn parse_request(line: &str, id: u64) -> Result<(Request, Option<Json>)> {
             .and_then(Json::as_f64)
             .unwrap_or(0.0) as f32,
         seed: j.get("seed").and_then(Json::as_usize).unwrap_or(0) as u64,
+        slo_us: j.get("slo_us").and_then(Json::as_f64).filter(|s| *s > 0.0),
     };
     Ok((req, j.get("tag").cloned()))
 }
@@ -580,6 +586,8 @@ mod tests {
             prefill_us: 100.0,
             decode_us: 200.0,
             stall: crate::store::StallSplit { demand_us: 30.0, prefetch_us: 10.0 },
+            degraded: crate::store::DegradeCount { hits: 2, bytes: 64.0 },
+            slo_us: Some(5000.0),
             batch_peak: 4,
             finished_us: 400.0,
             error: None,

@@ -44,7 +44,8 @@ pub use policy::{
     SparsityPolicy, DEFAULT_SPARSITY_DECAY, SPARSITY_MIN_ADMIT,
 };
 pub use prefetch::{
-    DeviceStats, PinnedPool, PrefetchPipeline, StallCause, StallSplit, StoreStats,
+    DegradeCount, DeviceStats, PinnedPool, PrefetchPipeline, StallCause, StallSplit,
+    StoreStats,
 };
 
 pub use crate::config::{ResidencyKind, ShardPolicy};
@@ -99,6 +100,18 @@ pub struct ExpertStore<P = ()> {
     net_pulls: u64,
     /// bytes moved over the network link
     net_bytes: f64,
+    /// per-device little-tier pools (quality-elastic fallback,
+    /// DESIGN.md §11): always-resident degraded expert variants, seeded
+    /// at session start and never evicted. Like the replica pool the
+    /// little tier is *carved out of* the device byte budget
+    /// (`Placement::little_frac`), so resident + replica + little never
+    /// exceed what the device was given. Empty (and zero-budget) unless
+    /// the fallback is configured on.
+    little_pools: Vec<BTreeSet<ExpertKey>>,
+    /// bytes resident in each device's little pool (≤ `little_budget`)
+    little_bytes: Vec<usize>,
+    /// per-device little-tier byte budget (`little_frac` of the budget)
+    little_budget: usize,
 }
 
 impl<P> ExpertStore<P> {
@@ -126,11 +139,17 @@ impl<P> ExpertStore<P> {
         let n = placement.n_devices();
         let nodes = placement.topo.span_nodes.max(1);
         let replica_budget = (budget_per_device as f64 * REPLICA_BUDGET_FRAC) as usize;
+        let little_budget = if placement.little_frac > 0.0 {
+            (budget_per_device as f64 * placement.little_frac) as usize
+        } else {
+            0
+        };
         let resident_budget = if placement.replicate_top > 0 {
             budget_per_device.saturating_sub(replica_budget)
         } else {
             budget_per_device
-        };
+        }
+        .saturating_sub(little_budget);
         let host_budget = (placement.topo.host_ram_gb * 1e9) as usize;
         ExpertStore {
             devices: (0..n)
@@ -153,6 +172,9 @@ impl<P> ExpertStore<P> {
             host_budget,
             net_pulls: 0,
             net_bytes: 0.0,
+            little_pools: vec![BTreeSet::new(); n],
+            little_bytes: vec![0; n],
+            little_budget,
         }
     }
 
@@ -299,6 +321,90 @@ impl<P> ExpertStore<P> {
     /// retired stall time via the `retired` bucket.
     pub fn take_attribution(&mut self, id: u64) -> StallSplit {
         self.prefetch.stats.retire(id)
+    }
+
+    // ------------------------- little tier (quality-elastic fallback)
+
+    /// Seed the little-tier pools: for each key in order, stage its
+    /// degraded variant (`bytes_per_key` each — a low-rank/INT2-only
+    /// sketch, orders of magnitude below the full expert) on the key's
+    /// home device until that device's little budget fills. The session
+    /// boot path, mirroring `seed_host_pool`; no-op when the carve is
+    /// off. Pool contents are immutable for the session — that is what
+    /// makes `Lookup::Degraded` *always* resolvable without bus traffic.
+    pub fn seed_little_pool(&mut self, keys: &[ExpertKey], bytes_per_key: usize) {
+        if self.little_budget == 0 {
+            return;
+        }
+        for &key in keys {
+            let dev = self.home(key);
+            if self.little_pools[dev].contains(&key) {
+                continue;
+            }
+            if self.little_bytes[dev] + bytes_per_key > self.little_budget {
+                continue;
+            }
+            self.little_pools[dev].insert(key);
+            self.little_bytes[dev] += bytes_per_key;
+        }
+    }
+
+    /// Is `key`'s degraded variant stageable in place on its home
+    /// device's little pool?
+    pub fn little_resident(&self, key: ExpertKey) -> bool {
+        let dev = self.home(key);
+        self.little_pools.get(dev).is_some_and(|p| p.contains(&key))
+    }
+
+    /// Resolve `key` to its little-tier variant (the coordinator
+    /// decided stalling for the full expert would bust the request's
+    /// SLO deadline — DESIGN.md §11): charges one degraded execution to
+    /// the current attribution requester with `avoided_bytes` of
+    /// full-expert traffic it did not move, and returns
+    /// `Lookup::Degraded(home)`. The caller must have checked
+    /// `little_resident` first. Note `lookup` itself never takes this
+    /// path — the split keeps every fallback-off run bit-exact.
+    pub fn degraded_hit(&mut self, key: ExpertKey, avoided_bytes: f64) -> Lookup {
+        let dev = self.home(key);
+        debug_assert!(self.little_pools[dev].contains(&key));
+        self.prefetch.stats.charge_degraded(self.attr, avoided_bytes);
+        Lookup::Degraded(dev)
+    }
+
+    /// Predicted landing time of a demand fetch of `key` taking
+    /// `duration_us` of bus, *without* issuing it — `critical_copy`'s
+    /// start rule read-only (priority lane under overlap, FIFO bus
+    /// otherwise). The quality-elastic decision input.
+    pub fn predict_demand_ready(&self, key: ExpertKey, duration_us: f64) -> f64 {
+        let dev = self.home(key);
+        self.prefetch.predict_ready(dev, duration_us, self.clock.now_us())
+    }
+
+    /// Cumulative degraded-execution count charged to requester `id`.
+    pub fn degraded_of(&self, id: u64) -> DegradeCount {
+        self.prefetch
+            .stats
+            .attributed_degraded
+            .get(&id)
+            .copied()
+            .unwrap_or_default()
+    }
+
+    /// Remove and return requester `id`'s degraded-ledger entry
+    /// (`take_attribution`'s twin for the degraded channel).
+    pub fn take_degraded_attribution(&mut self, id: u64) -> DegradeCount {
+        self.prefetch.stats.retire_degraded(id)
+    }
+
+    /// Little-tier bytes resident on `dev` (≤ `little_budget_per_device`).
+    pub fn little_bytes_of(&self, dev: DeviceId) -> usize {
+        self.little_bytes[dev]
+    }
+
+    /// The per-device little-tier byte budget (`little_frac` of the
+    /// configured device budget; 0 when the fallback is off).
+    pub fn little_budget_per_device(&self) -> usize {
+        self.little_budget
     }
 
     // ---------------------------------------------------------- residency
@@ -1022,6 +1128,22 @@ impl<P> ExpertStore<P> {
         dur
     }
 
+    /// The duration `demand_link_us` *would* return, without its
+    /// side effects (no cross-node traffic counted, nothing adopted into
+    /// a host pool). The quality-elastic degrade decision (DESIGN.md
+    /// §11) prices the hypothetical fetch with this — a fetch that never
+    /// happens must not move accounting.
+    pub fn peek_demand_link_us(&self, key: ExpertKey, bytes: f64) -> f64 {
+        if !self.placement.topo.clustered() {
+            return self.placement.topo.h2d.copy_us(bytes);
+        }
+        let node = self.local_node_of(self.home(key));
+        if self.host_pools[node].contains(&key) {
+            return self.placement.topo.h2d.copy_us(bytes);
+        }
+        self.placement.topo.net.copy_us(bytes)
+    }
+
     /// Pull a `key` resident only on a device of *another node* — the
     /// `Lookup::RemoteNode` resolution — over the network link: like
     /// `peer_fetch` but priced against `TopologySpec::net` and counted
@@ -1464,6 +1586,94 @@ mod tests {
             1000,
             "resident + replica capacity equals the configured device budget"
         );
+    }
+
+    /// Quality-elastic satellite (DESIGN.md §11): the little tier is
+    /// carved out of the device budget exactly like the replica pool —
+    /// resident + replica + little capacity equals what the device was
+    /// given, and a zero `little_frac` changes nothing.
+    #[test]
+    fn little_carve_stacks_with_the_replica_carve() {
+        let mut p = Placement::sharded(2, ShardPolicy::Layer);
+        p.little_frac = 0.05;
+        let little: ExpertStore = ExpertStore::with_placement(
+            p.clone(),
+            1000,
+            ResidencyKind::Lru,
+            DEFAULT_SPARSITY_DECAY,
+        );
+        assert_eq!(little.little_budget_per_device(), 50);
+        assert_eq!(little.budget_of(0), 950, "resident set runs on budget - little");
+        p.replicate_top = 2;
+        let both: ExpertStore = ExpertStore::with_placement(
+            p,
+            1000,
+            ResidencyKind::Lru,
+            DEFAULT_SPARSITY_DECAY,
+        );
+        assert_eq!(both.budget_of(0), 900);
+        assert_eq!(
+            both.budget_of(0)
+                + both.replica_budget_per_device()
+                + both.little_budget_per_device(),
+            1000,
+            "resident + replica + little capacity equals the device budget"
+        );
+    }
+
+    #[test]
+    fn little_pool_seeds_to_budget_and_degraded_ledger_sums_exactly() {
+        let mut p = Placement::sharded(2, ShardPolicy::Layer);
+        p.little_frac = 0.05; // 50 bytes per device at budget 1000
+        let mut s: ExpertStore = ExpertStore::with_placement(
+            p,
+            1000,
+            ResidencyKind::Lru,
+            DEFAULT_SPARSITY_DECAY,
+        );
+        // layers 0/2 home on device 0, layers 1/3 on device 1; at 20
+        // bytes per sketch each device holds 2 of its 3 offered keys
+        let keys: Vec<(usize, usize)> =
+            (0..4).map(|l| (l, 0)).chain((0..2).map(|l| (l, 1))).collect();
+        s.seed_little_pool(&keys, 20);
+        for d in 0..2 {
+            assert_eq!(s.little_bytes_of(d), 40);
+            assert!(s.little_bytes_of(d) <= s.little_budget_per_device());
+        }
+        assert!(s.little_resident((0, 0)) && s.little_resident((1, 0)));
+        assert!(s.little_resident((2, 0)) && s.little_resident((3, 0)));
+        assert!(
+            !s.little_resident((0, 1)),
+            "a third 20-byte sketch cannot fit the 50-byte carve"
+        );
+        // the resident cache never sees little-pool keys
+        assert_eq!(s.resident(), 0);
+        // degraded charges flow through the per-requester ledger with
+        // the stall ledger's exactness contract
+        s.set_attribution(7);
+        assert_eq!(s.degraded_hit((0, 0), 100.0), Lookup::Degraded(0));
+        assert_eq!(s.degraded_hit((1, 0), 50.0), Lookup::Degraded(1));
+        s.set_attribution(9);
+        assert_eq!(s.degraded_hit((0, 1), 25.0), Lookup::Degraded(0));
+        assert_eq!(s.degraded_of(7), DegradeCount { hits: 2, bytes: 150.0 });
+        assert_eq!(s.stats().degraded_hits, 3);
+        assert_eq!(s.stats().degraded_bytes, 175.0);
+        // retiring folds into the retired bucket without losing totals
+        let taken = s.take_degraded_attribution(7);
+        assert_eq!(taken.hits, 2);
+        assert_eq!(s.stats().retired_degraded.bytes, 150.0);
+        assert_eq!(s.stats().degraded_hits, 3);
+        assert_eq!(s.stats().degraded_bytes, 175.0);
+        let (mut hits, mut bytes) = (
+            s.stats().retired_degraded.hits,
+            s.stats().retired_degraded.bytes,
+        );
+        for c in s.stats().attributed_degraded.values() {
+            hits += c.hits;
+            bytes += c.bytes;
+        }
+        assert_eq!(hits, s.stats().degraded_hits, "ledger sum must be exact");
+        assert_eq!(bytes, s.stats().degraded_bytes);
     }
 
     fn spanning(n: usize, span: usize, budget: usize) -> ExpertStore {

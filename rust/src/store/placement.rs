@@ -80,6 +80,16 @@ pub struct Placement {
     /// proportional slice of each device's `REPLICA_BUDGET_FRAC` pool
     /// (0 = replication off — the pre-replication behavior exactly)
     pub replicate_top: usize,
+    /// fraction of each device's byte budget carved into the *little
+    /// tier* (DESIGN.md §11): an always-resident low-rank/INT2-only
+    /// degraded variant per home expert, seeded at build time and never
+    /// evicted, so a saturated bus can resolve to `Lookup::Degraded`
+    /// instead of stalling the batch. Carved exactly like the replica
+    /// pool: when `little_frac > 0` the resident set runs on
+    /// `budget - replica - little` bytes (resident + replica + little
+    /// ≤ budget, property-tested). 0.0 = quality-elastic serving off —
+    /// bit-exact with every pre-fallback configuration
+    pub little_frac: f64,
 }
 
 impl Placement {
@@ -92,6 +102,7 @@ impl Placement {
             coalesce: false,
             spill: false,
             replicate_top: 0,
+            little_frac: 0.0,
         }
     }
 
@@ -104,6 +115,7 @@ impl Placement {
             coalesce: n > 1,
             spill: n > 1,
             replicate_top: 0,
+            little_frac: 0.0,
         }
     }
 
@@ -134,6 +146,14 @@ pub enum Lookup {
     Remote(DeviceId),
     RemoteNode(DeviceId),
     Miss,
+    /// The full expert is not affordable in time, but the little-tier
+    /// degraded variant is resident on this device (DESIGN.md §11).
+    /// `lookup` itself never returns this — a plain residency probe has
+    /// no SLO to weigh — only `ExpertStore::degraded_hit`, called by a
+    /// coordinator whose deadline says stalling would bust the budget,
+    /// resolves here. That split is what keeps every fallback-off
+    /// configuration bit-exact.
+    Degraded(DeviceId),
 }
 
 /// How a `TransferPlan` occupies its destination device's bus.

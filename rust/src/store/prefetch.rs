@@ -58,6 +58,27 @@ impl StallSplit {
     }
 }
 
+/// Degraded-execution counters (quality-elastic fallback, DESIGN.md
+/// §11): how many boundary resolutions ran the little-tier variant
+/// instead of stalling for the full expert, and how many full-expert
+/// bytes that decision *avoided* moving. Totals for one requester, or
+/// one component of the store-wide decomposition — the same exactness
+/// discipline as `StallSplit`.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct DegradeCount {
+    pub hits: u64,
+    /// full-expert bytes the degraded resolutions did NOT move (the bus
+    /// relief the fallback bought)
+    pub bytes: f64,
+}
+
+impl DegradeCount {
+    fn add(&mut self, bytes: f64) {
+        self.hits += 1;
+        self.bytes += bytes;
+    }
+}
+
 /// Movement counters for one device: what its bus actually carried.
 /// Primary storage for the store-wide movement totals — `StoreStats`
 /// re-derives its globals from these in device order on every charge, so
@@ -110,6 +131,15 @@ pub struct StoreStats {
     /// stalls of requesters retired via `take_attribution` — folded into
     /// the totals so retiring never loses accounted time
     pub retired: StallSplit,
+    /// degraded little-tier executions (globals re-derived as
+    /// retired_degraded + the key-order `attributed_degraded` sum on
+    /// every charge — the stall-ledger exactness contract, DESIGN.md §11)
+    pub degraded_hits: u64,
+    pub degraded_bytes: f64,
+    /// per-requester degraded-execution ledger (BTreeMap: deterministic)
+    pub attributed_degraded: BTreeMap<u64, DegradeCount>,
+    /// degraded counts of retired requesters — folded like `retired`
+    pub retired_degraded: DegradeCount,
     /// per-device movement counters (primary; globals are derived)
     pub per_device: Vec<DeviceStats>,
 }
@@ -136,6 +166,10 @@ impl StoreStats {
             stall_prefetch_us: 0.0,
             attributed: BTreeMap::new(),
             retired: StallSplit::default(),
+            degraded_hits: 0,
+            degraded_bytes: 0.0,
+            attributed_degraded: BTreeMap::new(),
+            retired_degraded: DegradeCount::default(),
             per_device: vec![DeviceStats::default(); n_devices.max(1)],
         }
     }
@@ -168,6 +202,37 @@ impl StoreStats {
         self.stall_demand_us = demand;
         self.stall_prefetch_us = prefetch;
         self.stall_us = demand + prefetch;
+    }
+
+    /// Charge one degraded little-tier execution (avoiding `bytes` of
+    /// full-expert traffic) to `who`, then re-derive the globals from
+    /// the ledger — the same exactness rule as `charge_stall`.
+    pub(crate) fn charge_degraded(&mut self, who: u64, bytes: f64) {
+        self.attributed_degraded.entry(who).or_default().add(bytes);
+        self.rederive_degraded();
+    }
+
+    /// Retire `who`'s degraded-ledger entry into `retired_degraded`
+    /// (the `retire` twin for the degraded channel).
+    pub(crate) fn retire_degraded(&mut self, who: u64) -> DegradeCount {
+        let Some(c) = self.attributed_degraded.remove(&who) else {
+            return DegradeCount::default();
+        };
+        self.retired_degraded.hits += c.hits;
+        self.retired_degraded.bytes += c.bytes;
+        self.rederive_degraded();
+        c
+    }
+
+    fn rederive_degraded(&mut self) {
+        let (mut hits, mut bytes) =
+            (self.retired_degraded.hits, self.retired_degraded.bytes);
+        for c in self.attributed_degraded.values() {
+            hits += c.hits;
+            bytes += c.bytes;
+        }
+        self.degraded_hits = hits;
+        self.degraded_bytes = bytes;
     }
 
     fn rederive_movement(&mut self) {
@@ -470,6 +535,17 @@ impl<P> PrefetchPipeline<P> {
     pub fn record_demand(&mut self, dev: DeviceId) {
         self.stats.per_device[dev].demand_fetches += 1;
         self.stats.rederive_movement();
+    }
+
+    /// Predicted landing time of a hypothetical demand fetch toward
+    /// `dev` — `critical_copy`'s start rule without mutating anything:
+    /// the priority lane's cursor in overlap mode, the FIFO bus
+    /// otherwise. The quality-elastic decision (DESIGN.md §11) compares
+    /// this against a request's SLO deadline to decide whether stalling
+    /// for the full expert would bust the budget.
+    pub fn predict_ready(&self, dev: DeviceId, duration_us: f64, now_us: f64) -> f64 {
+        let lane = if self.overlap { self.demand_free_us[dev] } else { self.bus_free_us[dev] };
+        now_us.max(lane) + duration_us
     }
 
     /// Consume an in-flight transfer for `key` on `dev`, if any:

@@ -27,6 +27,11 @@ pub struct WorkloadSpec {
     pub prompt_len: (usize, usize),
     pub output_tokens: (usize, usize),
     pub seed: u64,
+    /// Uniform per-request SLO budget stamped on every generated
+    /// request (DESIGN.md §11). `None` (the default) leaves `slo_us`
+    /// unset and consumes no RNG draws, so traces are byte-identical
+    /// to pre-quality builds.
+    pub slo_us: Option<f64>,
 }
 
 impl Default for WorkloadSpec {
@@ -37,6 +42,7 @@ impl Default for WorkloadSpec {
             prompt_len: (8, 32),
             output_tokens: (16, 64),
             seed: 7,
+            slo_us: None,
         }
     }
 }
@@ -66,6 +72,7 @@ pub fn generate(spec: &WorkloadSpec) -> Vec<TimedRequest> {
                     max_tokens,
                     temperature: 0.0,
                     seed: spec.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    slo_us: spec.slo_us,
                 },
             }
         })

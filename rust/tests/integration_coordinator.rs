@@ -32,6 +32,7 @@ fn reqs(n: u64, tokens: usize) -> Vec<Request> {
             max_tokens: tokens,
             temperature: 0.0,
             seed: i,
+            slo_us: None,
         })
         .collect()
 }

@@ -9,7 +9,10 @@
 //! * completed requests are retired out of the attribution ledger
 //!   (bounded by the in-flight batch), and the retired bucket plus the
 //!   remaining ledger reproduces the store's global stall counters
-//!   *bit-exactly* (key-order component sums).
+//!   *bit-exactly* (key-order component sums),
+//! * the degraded ledger (quality-elastic fallback, DESIGN.md §11)
+//!   obeys the same exactness contract, and never fires without both a
+//!   little-tier carve and an SLO budget.
 
 use floe::config::ResidencyKind;
 use floe::coordinator::policy::{SystemConfig, SystemKind};
@@ -30,18 +33,23 @@ fn params(kind: SystemKind, residency: ResidencyKind, zipf_s: f64, vram: f64) ->
 #[test]
 fn scheduler_invariants_under_random_traces() {
     check("serve-scheduler-invariants", 10, |rng| {
+        let slo_us =
+            if rng.range(0, 2) == 1 { Some(5.0e5 + rng.f64() * 4.0e6) } else { None };
+        let little_frac = if rng.range(0, 2) == 1 { 0.1 } else { 0.0 };
         let spec = WorkloadSpec {
             n_requests: rng.range(2, 9),
             arrival_rate_hz: 0.5 + rng.f64() * 8.0,
             prompt_len: (4, 24),
             output_tokens: (2, 20),
             seed: rng.next_u64(),
+            slo_us,
         };
         let max_batch = rng.range(1, 6);
         let residency = *rng.choice(&ResidencyKind::ALL);
         let zipf_s = 0.4 + rng.f64();
         let wl = generate(&spec);
-        let p = params(SystemKind::Floe, residency, zipf_s, 12.0 + 3.0 * rng.f64());
+        let mut p = params(SystemKind::Floe, residency, zipf_s, 12.0 + 3.0 * rng.f64());
+        p.system = p.system.clone().with_little_frac(little_frac);
         let rep = simulate_serving(&p, &wl, max_batch).map_err(|e| e.to_string())?;
 
         // every request completes, with its requested token count
@@ -123,6 +131,48 @@ fn scheduler_invariants_under_random_traces() {
             "completion splits ({demand}, {prefetch}) != retired {:?}",
             rep.stats.retired
         );
+
+        // degraded ledger: same exactness contract as the stall ledger
+        prop_assert!(
+            !rep.stats.attributed_degraded.contains_key(&StoreStats::UNATTRIBUTED),
+            "degraded hits charged outside any request"
+        );
+        prop_assert!(
+            rep.stats.attributed_degraded.is_empty(),
+            "completed requests left {} degraded-ledger entries",
+            rep.stats.attributed_degraded.len()
+        );
+        let (mut hits, mut bytes) =
+            (rep.stats.retired_degraded.hits, rep.stats.retired_degraded.bytes);
+        for c in rep.stats.attributed_degraded.values() {
+            hits += c.hits;
+            bytes += c.bytes;
+        }
+        prop_assert!(
+            hits == rep.stats.degraded_hits && bytes == rep.stats.degraded_bytes,
+            "retired+ledger degraded sum ({hits}, {bytes}) != global ({}, {})",
+            rep.stats.degraded_hits,
+            rep.stats.degraded_bytes
+        );
+        let (mut hits, mut bytes) = (0u64, 0.0f64);
+        for c in &rep.completions {
+            hits += c.degraded.hits;
+            bytes += c.degraded.bytes;
+        }
+        prop_assert!(
+            hits == rep.stats.retired_degraded.hits
+                && bytes == rep.stats.retired_degraded.bytes,
+            "completion degraded counts ({hits}, {bytes}) != retired {:?}",
+            rep.stats.retired_degraded
+        );
+        // the fallback needs both halves of the opt-in to fire at all
+        if little_frac == 0.0 || slo_us.is_none() {
+            prop_assert!(
+                rep.stats.degraded_hits == 0,
+                "degraded without carve+budget: {} hits",
+                rep.stats.degraded_hits
+            );
+        }
         Ok(())
     });
 }
@@ -140,6 +190,7 @@ fn admission_is_work_conserving() {
             prompt_len: (4, 8),
             output_tokens: (8, 16),
             seed: rng.next_u64(),
+            slo_us: None,
         });
         let p = params(SystemKind::Floe, ResidencyKind::Lru, 1.2, 14.0);
         let rep = simulate_serving(&p, &wl, n).map_err(|e| e.to_string())?;

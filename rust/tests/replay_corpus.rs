@@ -36,6 +36,7 @@ fn corpus_spec(overlap: bool) -> SessionSpec {
             prompt_len: (8, 24),
             output_tokens: (16, 48),
             seed: 23,
+            slo_us: None,
         }),
     )
 }

@@ -297,20 +297,22 @@ fn sharded_store_invariants_under_random_traces() {
             coalesce: rng.f64() < 0.5,
             spill: rng.f64() < 0.5,
             replicate_top: if rng.f64() < 0.5 { 2 } else { 0 },
+            little_frac: if rng.f64() < 0.5 { 0.05 } else { 0.0 },
         };
         let coalesce = placement.coalesce;
         let replicated = placement.replicate_top > 0;
+        let little = placement.little_frac > 0.0;
         let mut s: ExpertStore =
             ExpertStore::with_placement(placement, budget, kind, DEFAULT_SPARSITY_DECAY);
-        // the carve (PR 8 satellite): with replication on, the resident
-        // set runs on exactly the configured budget minus the replica
-        // pool; with it off, the full budget, bit-exactly
+        // the carve (PR 8 satellite, extended by the PR 9 little tier):
+        // the resident set runs on exactly the configured budget minus
+        // whichever reserved pools are on, bit-exactly
         for d in 0..s.n_devices() {
-            let expect = if replicated {
-                budget - s.replica_budget_per_device()
-            } else {
-                budget
-            };
+            let mut expect = budget;
+            if replicated {
+                expect -= s.replica_budget_per_device();
+            }
+            expect -= s.little_budget_per_device();
             prop_assert!(
                 s.budget_of(d) == expect,
                 "device {} resident budget {} != {}",
@@ -318,6 +320,12 @@ fn sharded_store_invariants_under_random_traces() {
                 s.budget_of(d),
                 expect
             );
+        }
+        if little {
+            // stage every key's degraded sketch that fits (session boot)
+            let keys: Vec<(usize, usize)> =
+                (0..6).flat_map(|l| (0..8).map(move |e| (l, e))).collect();
+            s.seed_little_pool(&keys, budget / 64 + 1);
         }
         // shadow of keys pinned via the public surface and still expected
         // to be home-resident (inserts/takes reset pins — tracked below)
@@ -443,16 +451,26 @@ fn sharded_store_invariants_under_random_traces() {
                     s.replica_budget_per_device()
                 );
             }
-            // invariant 5 (PR 8 satellite): the replica pool is carved
-            // out of the configured device budget, so resident + replica
-            // bytes can never exceed what the device was given
+            // invariant 5 (PR 8 satellite, PR 9 little tier): the replica
+            // and little pools are carved out of the configured device
+            // budget, so resident + replica + little bytes can never
+            // exceed what the device was given
             for d in 0..s.n_devices() {
                 prop_assert!(
-                    s.used_of(d) + s.replica_bytes_of(d) <= budget,
-                    "device {} resident {} + replica {} > configured budget {}",
+                    s.little_bytes_of(d) <= s.little_budget_per_device(),
+                    "device {} little bytes {} > little budget {}",
+                    d,
+                    s.little_bytes_of(d),
+                    s.little_budget_per_device()
+                );
+                prop_assert!(
+                    s.used_of(d) + s.replica_bytes_of(d) + s.little_bytes_of(d)
+                        <= budget,
+                    "device {} resident {} + replica {} + little {} > budget {}",
                     d,
                     s.used_of(d),
                     s.replica_bytes_of(d),
+                    s.little_bytes_of(d),
                     budget
                 );
             }
@@ -476,6 +494,7 @@ fn store_with(shard: ShardPolicy, n: usize, replicate_top: usize, budget: usize)
             coalesce: true,
             spill: true,
             replicate_top,
+            little_frac: 0.0,
         },
         budget,
         ResidencyKind::Lru,
@@ -736,6 +755,7 @@ fn timeline_roundtrip_replays_bit_exactly_across_corners() {
                 prompt_len: (4, 12),
                 output_tokens: (4, 12),
                 seed: rng.below(1000) as u64,
+                slo_us: None,
             }),
         );
         let tl = record(&spec);

@@ -455,6 +455,15 @@ class Store:
         self.host_budget = int(64e9)
         self.net_pulls = 0
         self.net_bytes = 0.0
+        # fault schedule (PR 10, mirror of store/mod.rs §12): link
+        # bandwidth windows, bounded-backoff retry, per-requester fault
+        # causes and the dead-device mask. All default to the fault-free
+        # identity so PR 9 traces reprice bit-exactly.
+        self.link_windows = []      # (link, factor, t0_us, t1_us)
+        self.retry_policy = None    # (max_attempts, backoff_base_us)
+        self.retries = 0
+        self.fault_causes = {}      # rid -> cause string (first wins)
+        self.dead = [False] * n
 
     def pop_note(self, key):
         self.pop_step += 1
@@ -481,14 +490,27 @@ class Store:
         # write-back promotion (any placement with replication on)
         if self.system.shard == "balanced" or self.system.replicate_top > 0:
             if key in self.home_map:
-                return self.home_map[key]
+                return self.live_home(self.home_map[key])
         if self.system.shard == "balanced":
-            return e % n  # cold-start seed (expert-style)
+            return self.live_home(e % n)  # cold-start seed (expert-style)
         if self.system.shard == "layer":
-            return l % n
+            return self.live_home(l % n)
         if self.system.shard == "expert":
-            return e % n
-        return ((l * 0x9E3779B1) + e * 0x85EBCA77) % n
+            return self.live_home(e % n)
+        return self.live_home(((l * 0x9E3779B1) + e * 0x85EBCA77) % n)
+
+    def live_home(self, dev):
+        """ExpertStore::live_home: a key whose assigned home dropped
+        resolves to the next alive device in id order — the identity
+        with no faults (the dead mask is all-false)."""
+        if not self.dead[dev]:
+            return dev
+        n = len(self.devices)
+        for step in range(1, n):
+            d = (dev + step) % n
+            if not self.dead[d]:
+                return d
+        return dev
 
     def is_pinned(self, dev, key):
         e = self.devices[dev].entries.get(key)
@@ -893,10 +915,10 @@ class Store:
     def peek_demand_link_us(self, key, bytes_):
         """demand_link_us without the counters/adoption side effects."""
         if self.n_nodes <= 1:
-            return pcie_copy_us(bytes_)
+            return self.link_scaled("pcie", pcie_copy_us(bytes_))
         if key in self.host_pool:
-            return pcie_copy_us(bytes_)
-        return net_copy_us(bytes_)
+            return self.link_scaled("pcie", pcie_copy_us(bytes_))
+        return self.link_scaled("net", net_copy_us(bytes_))
 
     # ---------------- cluster tier (mirror of store/mod.rs cluster tier)
 
@@ -917,12 +939,13 @@ class Store:
     def demand_link_us(self, key, bytes_):
         """ExpertStore::demand_link_us: host PCIe when the home node's
         pool stages the key (or the topology is unclustered), else the
-        network link with first-touch host adoption."""
+        network link with first-touch host adoption. Either duration
+        stretches under a covering link-degrade window."""
         if self.n_nodes <= 1:
-            return pcie_copy_us(bytes_)
+            return self.link_scaled("pcie", pcie_copy_us(bytes_))
         if key in self.host_pool:
-            return pcie_copy_us(bytes_)
-        dur = net_copy_us(bytes_)
+            return self.link_scaled("pcie", pcie_copy_us(bytes_))
+        dur = self.link_scaled("net", net_copy_us(bytes_))
         self.net_pulls += 1
         self.net_bytes += bytes_
         self.host_adopt(key, int(bytes_))
@@ -949,6 +972,92 @@ class Store:
             self.net_bytes += sum(it[0] for it in items)
             done = max(done, self.copy_batch(dev, items, True))
         return done
+
+    # ------------------- faults (PR 10, mirror of store/mod.rs §12)
+
+    def link_factor_at(self, link, t):
+        """Product of every covering window's factor (1.0 = identity)."""
+        f = 1.0
+        for lk, fac, t0, t1 in self.link_windows:
+            if lk == link and t0 <= t < t1:
+                f *= fac
+        return f
+
+    def outage_until(self, link, t):
+        """Latest end among covering zero-factor windows, else None."""
+        end = None
+        for lk, fac, t0, t1 in self.link_windows:
+            if lk == link and fac == 0.0 and t0 <= t < t1:
+                end = t1 if end is None else max(end, t1)
+        return end
+
+    def link_scaled(self, link, dur):
+        f = self.link_factor_at(link, self.now)
+        return dur / f if 0.0 < f < 1.0 else dur
+
+    def demand_link_of(self, key):
+        """Which link a demand fetch of `key` would ride (read-only)."""
+        if self.n_nodes <= 1:
+            return "pcie"
+        return "pcie" if key in self.host_pool else "net"
+
+    def device_down(self, dev):
+        """ExpertStore::device_down: tear down the device's in-flight
+        transfers, little pool, replicas and overlay homes, then re-home
+        its resident set hottest-first (mass desc, key asc) into the
+        surviving peers' free capacity only. Returns (moved, dropped)."""
+        if self.dead[dev]:
+            return 0, 0
+        self.dead[dev] = True
+        for dk in [k for k in self.inflight if k[0] == dev]:
+            del self.inflight[dk]
+        self.little_pools[dev].clear()
+        self.little_bytes[dev] = 0
+        for key in list(self.replicas):
+            b, holders = self.replicas[key]
+            holders = [d for d in holders if d != dev]
+            if holders:
+                self.replicas[key] = (b, holders)
+            else:
+                del self.replicas[key]
+        self.replica_bytes[dev] = 0
+        self.home_map = {k: d for k, d in self.home_map.items() if d != dev}
+        keys = [(k, self.devices[dev].bytes_of(k) or 0, self.pop_mass(k))
+                for k in list(self.devices[dev].entries)]
+        keys.sort(key=lambda kv: (-kv[2], kv[0]))
+        per_dst = [[] for _ in self.devices]
+        moved = dropped = 0
+        for key, bytes_, _mass in keys:
+            self.devices[dev].remove(key)
+            target = self.home(key)  # remapped off the dead device
+            if (target != dev and not self.devices[target].contains(key)
+                    and self.devices[target].free_bytes() >= bytes_):
+                self.devices[target].insert_evicting(key, bytes_)
+                b = max(float(bytes_), 1.0)
+                per_dst[target].append((float(bytes_), p2p_copy_us(b), P2P_API))
+                moved += 1
+            else:
+                dropped += 1
+        for dst, items in enumerate(per_dst):
+            if items:
+                self.copy_batch(dst, items, self.system.coalesce)
+        return moved, dropped
+
+    def wipe_for_rejoin(self):
+        """ExpertStore::wipe_for_rejoin: a rejoining node lost its
+        memory — clear every pool so the driver re-seeds from scratch;
+        the clock and movement ledgers carry across."""
+        for d in self.devices:
+            for key in list(d.entries):
+                d.remove(key)
+        self.host_pool.clear()
+        self.host_bytes = 0
+        for p in self.little_pools:
+            p.clear()
+        self.little_bytes = [0] * len(self.devices)
+        self.replicas.clear()
+        self.replica_bytes = [0] * len(self.devices)
+        self.home_map.clear()
 
 
 def simulate(p, input_len, output_len):
@@ -1212,7 +1321,9 @@ class _SimSeq:
 def _degrade_or_fetch(p, store, seq, key, per_bytes, per_cached):
     """resolve_expert's Miss/no-inflight branch: the quality-elastic
     decision first (side-effect-free prediction vs the SLO deadline),
-    the demand fetch otherwise. Returns (ready, cause, degraded)."""
+    then the outage/retry gate (PR 10, sim.rs §12), then the demand
+    fetch. Returns (ready, cause, degraded); ready is None on a
+    fail-fast transfer fault (the request errors at the boundary)."""
     if (p.system.little_frac > 0.0
             and seq.deadline != float("inf")
             and store.little_resident(key)
@@ -1223,8 +1334,39 @@ def _degrade_or_fetch(p, store, seq, key, per_bytes, per_cached):
         seq.degraded_hits += 1
         seq.degraded_bytes += per_bytes
         return store.now, "demand", True
+    # a full outage on the fetch's link gates the start through the
+    # bounded-backoff retry loop: probe k waits base*2^k after the
+    # block; the first probe past every outage window issues the fetch
+    # with the wait folded into its duration. No policy = fail-fast.
+    now = store.now
+    link = store.demand_link_of(key)
+    extra_wait = 0.0
+    end = store.outage_until(link, now)
+    if end is not None:
+        if store.retry_policy is None:
+            store.fault_causes.setdefault(seq.rid, "link-outage")
+            return None, "demand", False
+        max_attempts, base = store.retry_policy
+        cleared = None
+        for k in range(max_attempts):
+            t_k = now + base * (2.0 ** k)
+            if store.outage_until(link, t_k) is None:
+                cleared = (k + 1, t_k)
+                break
+        if cleared is not None:
+            store.retries += cleared[0]
+            extra_wait = cleared[1] - now
+        else:
+            store.retries += max_attempts
+            store.fault_causes.setdefault(seq.rid, "retry-exhausted")
+            if p.system.little_frac > 0.0 and store.little_resident(key):
+                store.degraded_hit(key, per_bytes)
+                seq.degraded_hits += 1
+                seq.degraded_bytes += per_bytes
+                return store.now, "demand", True
+            extra_wait = end - now
     dur = store.demand_link_us(key, max(per_bytes, 1.0))
-    ready = store.demand_to(store.home(key), dur, per_bytes)
+    ready = store.demand_to(store.home(key), extra_wait + dur, per_bytes)
     store.admit(key, per_cached)
     return ready, "demand", False
 
@@ -1256,6 +1398,10 @@ def _serving_decode_token(p, store, seq, per_bytes, per_cached, exp_c, reuse,
                 else:
                     ready, cause, degraded = _degrade_or_fetch(
                         p, store, seq, key, per_bytes, per_cached)
+                    if ready is None:
+                        # fail-fast transfer fault: no GEMV, no boundary
+                        # visit — the recorded cause errors the request
+                        return None
                     if degraded:
                         # the little variant is pinned on-device: no
                         # intra-predictor top-up applies
@@ -1271,6 +1417,8 @@ def _serving_decode_token(p, store, seq, per_bytes, per_cached, exp_c, reuse,
 
         def exec_one(w):
             nonlocal compute
+            if w is None:
+                return
             ready, cause, key, resident, t_exp = w
             store.stall_until(ready, cause)
             if not resident:
@@ -1336,6 +1484,8 @@ def _serving_decode_boundary(p, store, seqs, per_bytes, per_cached, exp_c, reuse
                     else:
                         ready, cause, degraded = _degrade_or_fetch(
                             p, store, seqs[si], key, per_bytes, per_cached)
+                        if ready is None:
+                            continue  # fail-fast fault: no GEMV, no visit
                         if degraded:
                             resident = True
                 if key not in boundary_seen:
@@ -1606,41 +1756,96 @@ class _ClusterNode:
                 self.p, store, self.active, self.per_bytes, self.per_cached,
                 self.exp_c, self.reuse, self.weights, boundary_seen,
                 self.counters)
-            for s in self.active:
-                s.emitted += 1
-                self.tokens += 1
         else:
             for s in self.active:
                 _serving_decode_token(
                     self.p, store, s, self.per_bytes, self.per_cached,
                     self.exp_c, self.reuse, self.weights, boundary_seen,
                     self.counters)
-                s.emitted += 1
-                self.tokens += 1
-        done = [s for s in self.active if s.emitted >= s.max_tokens]
-        self.active = [s for s in self.active if s.emitted < s.max_tokens]
-        for s in done:
-            self.completions.append({"id": s.rid, "tokens": s.emitted,
-                                     "error": None, "finished_us": store.now})
+        # retire in batch order: a recorded fault errors the sequence
+        # with its pre-fault tokens and the structured cause (sched.rs
+        # step + take_fault_cause); clean steps emit and retire at max
+        still = []
+        for s in self.active:
+            cause = store.fault_causes.pop(s.rid, None)
+            if cause is not None:
+                self.completions.append({
+                    "id": s.rid, "tokens": s.emitted,
+                    "error": "transfer fault: " + cause,
+                    "fault_cause": cause, "finished_us": store.now})
+                continue
+            s.emitted += 1
+            self.tokens += 1
+            if s.emitted >= s.max_tokens:
+                self.completions.append({"id": s.rid, "tokens": s.emitted,
+                                         "error": None,
+                                         "finished_us": store.now})
+            else:
+                still.append(s)
+        self.active = still
 
-    def fail_active(self, msg):
+    def fail_active(self, msg, cause="node-down"):
         n = len(self.active)
         for s in self.active:
             self.completions.append({"id": s.rid, "tokens": s.emitted,
-                                     "error": msg, "finished_us": self.store.now})
+                                     "error": msg, "fault_cause":
+                                     self.store.fault_causes.pop(s.rid, cause),
+                                     "finished_us": self.store.now})
         self.active = []
         return n
+
+    def abort_active(self):
+        """sched.rs::abort_active: release in-flight sequences WITHOUT
+        completions — the cluster driver re-dispatches the originals to
+        survivors, where they restart value-idempotently. Per-request
+        fault causes drain with the aborted run."""
+        ids = [s.rid for s in self.active]
+        for s in self.active:
+            self.store.fault_causes.pop(s.rid, None)
+        self.active = []
+        return ids
 
     def drain_pending(self):
         out = self.pending
         self.pending = []
         return out
 
+    def rejoin_restock(self):
+        """SimServeBackend::rejoin_restock: wipe every pool, re-pin the
+        little tier locally, restock the own-shard-first host roster
+        over the network as full pulls, truncated to the host budget."""
+        import math
+        store = self.store
+        store.wipe_for_rejoin()
+        if self.p.system.little_frac > 0.0 and store.little_budget > 0:
+            keys = [(l, e) for l in range(NL) for e in range(NE)]
+            sketch = int(max(math.ceil(self.per_bytes / 20.0), 1.0))
+            store.seed_little_pool(keys, sketch)
+        total = max(store.n_nodes, 1)
+        own, rest = [], []
+        for l in range(NL):
+            for e in range(NE):
+                (own if e % total == store.node_id % total
+                 else rest).append((l, e))
+        own.extend(rest)
+        b = int(max(self.per_bytes, 1.0))
+        used, take = 0, []
+        for key in own:
+            if used + b > store.host_budget:
+                break
+            used += b
+            take.append(key)
+        store.net_restore(take, b)
+
 
 def simulate_cluster(base, n_nodes, devices_per_node, vram_total, wl,
                      placement="round-robin", host_ram_gb=64.0, cap=4,
-                     failure=None, shard="layer"):
-    """cluster.rs::simulate_cluster. `failure` is (node, t_us) or None."""
+                     failure=None, shard="layer", faults=None, retry=None):
+    """cluster.rs::simulate_cluster. `failure` is the legacy (node, t_us)
+    single drop; `faults` is the PR 10 schedule, a list of
+    ("node-down", node, t) / ("node-rejoin", node, t) /
+    ("dev-down", dev, t) / ("link", link, factor, t0, t1) tuples;
+    `retry` is (max_attempts, backoff_base_us) or None (fail-fast)."""
     n = max(n_nodes, 1)
     max_ctx = max(t.plen + t.max_tokens for t in wl)
     kv_tokens = max(cap, 1) * max_ctx
@@ -1648,12 +1853,31 @@ def simulate_cluster(base, n_nodes, devices_per_node, vram_total, wl,
     nodes = [_ClusterNode(
         member_params(base, devices_per_node, shard, vram_per_device),
         kv_tokens, cap, j, n, host_ram_gb) for j in range(n)]
+    # merge the legacy failure into the schedule, stable-sorted by
+    # activation time (validate_faults); install link windows and the
+    # retry policy into every node's store up front — pricing is a pure
+    # function of (schedule, clock)
+    sched_faults = []
+    if failure is not None:
+        sched_faults.append(("node-down", failure[0], failure[1]))
+    sched_faults.extend(faults or [])
+    fault_t = lambda f: f[3] if f[0] == "link" else f[2]
+    sched_faults.sort(key=fault_t)
+    for nd in nodes:
+        nd.store.retry_policy = retry
+        for f in sched_faults:
+            if f[0] == "link":
+                nd.store.link_windows.append((f[1], f[2], f[3], f[4]))
+    req_by_id = {t.rid: t for t in wl}
     rr = [0]
     assignments = {}
-    errored = 0
     rehomed = 0
+    redispatched = 0
+    rejoins = 0
+    dev_moved = 0
+    dev_dropped = 0
+    fi = 0
     idx = 0
-    pending_failure = failure
 
     def load(j):
         return len(nodes[j].active) + len(nodes[j].pending)
@@ -1683,11 +1907,11 @@ def simulate_cluster(base, n_nodes, devices_per_node, vram_total, wl,
 
     while True:
         t_arr = wl[idx].arrival_us if idx < len(wl) else None
-        t_fail = pending_failure[1] if pending_failure else None
-        if t_arr is None and t_fail is None:
+        t_fault = fault_t(sched_faults[fi]) if fi < len(sched_faults) else None
+        if t_arr is None and t_fault is None:
             horizon = float("inf")
         else:
-            horizon = min(t for t in (t_arr, t_fail) if t is not None)
+            horizon = min(t for t in (t_arr, t_fault) if t is not None)
         # advance every working alive node to the horizon (earliest
         # clock first, ties toward the lowest id)
         while True:
@@ -1696,31 +1920,70 @@ def simulate_cluster(base, n_nodes, devices_per_node, vram_total, wl,
             if not cands:
                 break
             nodes[min(cands, key=lambda j: (nodes[j].store.now, j))].step()
-        if t_arr is None and t_fail is None:
+        if t_arr is None and t_fault is None:
             break
-        if t_fail is not None and (t_arr is None or t_fail <= t_arr):
-            fnode, ft = pending_failure
-            pending_failure = None
-            if not nodes[fnode].alive:
-                continue
-            dead = nodes[fnode]
-            dead.store.advance_to(ft)
-            errored += dead.fail_active("node %d down" % fnode)
-            dead.alive = False
-            survivors = [j for j in range(n) if nodes[j].alive]
-            for req, stamp in dead.drain_pending():
-                j = survivors[rr[0] % len(survivors)]
-                rr[0] += 1
-                assignments[req.rid] = j
-                nodes[j].enqueue_at(req, stamp)
-            keys = sorted(dead.store.host_pool)
-            rehomed += len(keys)
-            b = int(max(dead.per_bytes, 1.0))
-            shares = [[] for _ in survivors]
-            for i, key in enumerate(keys):
-                shares[i % len(survivors)].append(key)
-            for j, share in zip(survivors, shares):
-                nodes[j].store.net_restore(share, b)
+        # the fault wins exact ties (the tied arrival then routes
+        # around the new topology), matching cluster.rs
+        if t_fault is not None and (t_arr is None or t_fault <= t_arr):
+            f = sched_faults[fi]
+            fi += 1
+            if f[0] == "node-down":
+                fnode, ft = f[1], f[2]
+                if not nodes[fnode].alive:
+                    continue
+                dead = nodes[fnode]
+                dead.store.advance_to(ft)
+                dead.alive = False
+                survivors = [j for j in range(n) if nodes[j].alive]
+                if not survivors:
+                    dead.fail_active("node %d down" % fnode)
+                    continue
+                # in-flight requests abort WITHOUT completions and
+                # re-dispatch from the originals (value-idempotent:
+                # per-request seeds — every id retires exactly once)
+                for rid in dead.abort_active():
+                    t = req_by_id[rid]
+                    j = survivors[rr[0] % len(survivors)]
+                    rr[0] += 1
+                    assignments[rid] = j
+                    nodes[j].enqueue_at(t, t.arrival_us)
+                    redispatched += 1
+                for req, stamp in dead.drain_pending():
+                    j = survivors[rr[0] % len(survivors)]
+                    rr[0] += 1
+                    assignments[req.rid] = j
+                    nodes[j].enqueue_at(req, stamp)
+                keys = sorted(dead.store.host_pool)
+                rehomed += len(keys)
+                b = int(max(dead.per_bytes, 1.0))
+                shares = [[] for _ in survivors]
+                for i, key in enumerate(keys):
+                    shares[i % len(survivors)].append(key)
+                for j, share in zip(survivors, shares):
+                    nodes[j].store.net_restore(share, b)
+            elif f[0] == "node-rejoin":
+                fnode, ft = f[1], f[2]
+                if nodes[fnode].alive:
+                    continue
+                nodes[fnode].store.advance_to(ft)
+                nodes[fnode].rejoin_restock()
+                nodes[fnode].alive = True
+                rejoins += 1
+            elif f[0] == "dev-down":
+                dev, ft = f[1], f[2]
+                fnode = dev // devices_per_node
+                if not nodes[fnode].alive:
+                    continue
+                nodes[fnode].store.advance_to(ft)
+                m, d = nodes[fnode].store.device_down(dev % devices_per_node)
+                dev_moved += m
+                dev_dropped += d
+            else:  # link window: pricing was installed at setup — the
+                # activation only advances every alive node's clock (the
+                # note_link_degrade event-log stamp)
+                for j in range(n):
+                    if nodes[j].alive:
+                        nodes[j].store.advance_to(f[3])
         else:
             t = wl[idx]
             idx += 1
@@ -1730,21 +1993,32 @@ def simulate_cluster(base, n_nodes, devices_per_node, vram_total, wl,
 
     total_us = max((nd.store.now for nd in nodes if nd.alive), default=0.0)
     tokens = sum(c["tokens"] for nd in nodes for c in nd.completions)
+    clean = sum(c["tokens"] for nd in nodes for c in nd.completions
+                if c["error"] is None)
+    errored = sum(1 for nd in nodes for c in nd.completions
+                  if c["error"] is not None)
     return {
         "tps": tokens / (total_us / 1e6) if total_us > 0 else 0.0,
+        "goodput_tps": clean / (total_us / 1e6) if total_us > 0 else 0.0,
         "tokens": tokens,
         "total_us": total_us,
         "node_us": [nd.store.now for nd in nodes],
         "errored": errored,
         "rehomed": rehomed,
+        "redispatched": redispatched,
+        "rejoins": rejoins,
+        "dev_moved": dev_moved,
+        "dev_dropped": dev_dropped,
+        "retries": sum(nd.store.retries for nd in nodes),
         "net_pulls": sum(nd.store.net_pulls for nd in nodes),
         "net_bytes": sum(nd.store.net_bytes for nd in nodes),
         "served": sum(len(nd.completions) for nd in nodes),
-        "errors": sum(1 for nd in nodes for c in nd.completions
-                      if c["error"] is not None),
+        "errors": errored,
         "served_ids": sorted(c["id"] for nd in nodes for c in nd.completions),
         "assignments": assignments,
         "alive": [nd.alive for nd in nodes],
+        "node_finishes": [[c["finished_us"] for c in nd.completions]
+                          for nd in nodes],
         "per_pull": [nd.store.net_bytes / nd.store.net_pulls
                      for nd in nodes if nd.store.net_pulls > 0],
         "node0_net_pulls": nodes[0].store.net_pulls,
@@ -1928,20 +2202,24 @@ def main():
     print(f"  per-pull payloads identical: {len(set(pulls)) == 1} "
           f"({pulls[0]/1e6:.3f} MB each, {len(pulls)} pulls), nonzero: "
           f"{len(pulls) > 0}")
-    # failure scenario: node 1 down mid-trace, tight host RAM
+    # failure scenario: node 1 down mid-trace, tight host RAM. PR 10
+    # re-dispatches the dead node's in-flight batch to survivors, so a
+    # drop with survivors errors nothing and every id retires once
     wl_f = gen_workload(14, 8.0, 8, 32, 16, 64, 77)
     t_fail = wl_f[6].arrival_us + 1.0
     rf_ = simulate_cluster(pc, 2, 1, 28.5, wl_f, host_ram_gb=4.0,
                            failure=(1, t_fail))
     print(f"  failure @ {t_fail:.0f} us: errored {rf_['errored']} "
-          f"(cluster.rs asserts > 0), rehomed {rf_['rehomed']}, "
-          f"served ids complete: "
+          f"(re-dispatch: must be 0), redispatched {rf_['redispatched']}, "
+          f"rehomed {rf_['rehomed']}, served ids complete: "
           f"{rf_['served_ids'] == list(range(len(wl_f)))}, node1 clock "
           f"{rf_['node_us'][1]:.0f} >= t_fail: "
           f"{rf_['node_us'][1] >= t_fail}, survivor outlived: "
           f"{rf_['total_us'] > rf_['node_us'][1]}, node0 pulls "
           f"{rf_['node0_net_pulls']} >= rehomed: "
           f"{rf_['node0_net_pulls'] >= rf_['rehomed']}")
+    assert rf_["errored"] == 0
+    assert rf_["served_ids"] == list(range(len(wl_f)))
     # exp-cluster-sweep smoke cell (2x2 @ 28.5, serve-load shape)
     wl_s = workload_at(8.0, 8, 7)
     for pl in ("round-robin", "least-loaded", "expert-affinity"):
@@ -1999,6 +2277,92 @@ def main():
     assert slo_only["total_us"] == base_q["total_us"]
     assert slo_only["stall_demand"] == base_q["stall_demand"]
     assert slo_only["degraded_hits"] == 0
+
+    print("== PR 10 deterministic fault schedules (exp-chaos-sweep mirror: "
+          "2 nodes x 2 dev, host 4 GB; 57 GB full / 28.5 GB thin) ==")
+    ps = serving_params()
+    # fault-free identity: a retry policy with no outage windows never
+    # fires — bit-identical clocks, zero retries (cluster.rs
+    # retry_policy_without_outages_is_bit_identical)
+    wl_k = workload_at(8.0, 12, 7)
+    plain = simulate_cluster(ps, 2, 2, 28.5, wl_k, host_ram_gb=4.0)
+    armed = simulate_cluster(ps, 2, 2, 28.5, wl_k, host_ram_gb=4.0,
+                             retry=(8, 10_000.0))
+    print(f"  retry-without-outages bit-exact: total_us "
+          f"{plain['total_us'] == armed['total_us']}, retries "
+          f"{armed['retries']} (must be 0)")
+    assert plain["total_us"] == armed["total_us"]
+    assert armed["retries"] == 0
+    # pinned drop+rejoin cell (chaos.rs smoke + timeline replay): node 1
+    # drops after the first quartile arrival, rejoins before the last —
+    # zero errors, exactly-once retirement, restock pulls real bytes.
+    # 57 GB aggregate = 14.25 GB/device, the serveload default, so the
+    # devices hold real resident sets worth tearing down
+    nq = len(wl_k)
+    q1 = wl_k[nq // 4].arrival_us
+    mid = wl_k[nq // 2].arrival_us
+    q3 = wl_k[(3 * nq) // 4].arrival_us
+    dr = simulate_cluster(ps, 2, 2, 57.0, wl_k, host_ram_gb=4.0,
+                          faults=[("node-down", 1, q1 + 1.0),
+                                  ("node-rejoin", 1, q3 - 1.0)])
+    print(f"  drop+rejoin: errored {dr['errored']} (must be 0), "
+          f"redispatched {dr['redispatched']}, rehomed {dr['rehomed']}, "
+          f"rejoins {dr['rejoins']}, served ids complete: "
+          f"{dr['served_ids'] == list(range(nq))}, node1 alive at end: "
+          f"{dr['alive'][1]}, net {dr['net_bytes']/1e6:.1f} MB")
+    assert dr["errored"] == 0
+    assert dr["served_ids"] == list(range(nq))
+    assert dr["rejoins"] == 1
+    assert dr["redispatched"] > 0 or dr["rehomed"] > 0
+    # the rejoined node re-enters placement: it retires at least one
+    # completion after its rejoin stamp (post-rejoin share > 0)
+    n1_post = sum(1 for f in dr["node_finishes"][1] if f >= q3 - 1.0)
+    print(f"  drop+rejoin: node1 completions after rejoin {n1_post} "
+          f"(must be > 0)")
+    assert n1_post > 0
+    # device drop: the dead device's residents re-home hottest-first
+    # into surviving free capacity; requests keep retiring cleanly
+    dd = simulate_cluster(ps, 2, 2, 57.0, wl_k, host_ram_gb=4.0,
+                          faults=[("dev-down", 1, mid + 1.0)])
+    print(f"  dev-drop: errored {dd['errored']} (must be 0), moved "
+          f"{dd['dev_moved']}, dropped {dd['dev_dropped']}, served ids "
+          f"complete: {dd['served_ids'] == list(range(nq))}")
+    assert dd["errored"] == 0
+    assert dd["served_ids"] == list(range(nq))
+    assert dd["dev_moved"] + dd["dev_dropped"] > 0
+    # pinned link-flap cell (chaos.rs margin test): a full cross-node
+    # NET outage across the middle half of a 16-request trace, at the
+    # thin-cache point (28.5 GB aggregate -> zero cache budget, every
+    # access demand-fetches; keys past the 4 GB host pool ride NET).
+    # Fail-fast errors the requests whose demand fetches land in the
+    # window; 8 x 10 ms bounded backoff outlasts every window and
+    # converts the losses into stall — the goodput margin the Rust
+    # test pins at >= 1.10x
+    wl_g = workload_at(8.0, 16, 7)
+    ng = len(wl_g)
+    flap = [("link", "net", 0.0, wl_g[ng // 4].arrival_us + 1.0,
+             wl_g[(3 * ng) // 4].arrival_us + 1.0)]
+    ff = simulate_cluster(ps, 2, 2, 28.5, wl_g, host_ram_gb=4.0,
+                          faults=flap)
+    rt = simulate_cluster(ps, 2, 2, 28.5, wl_g, host_ram_gb=4.0,
+                          faults=flap, retry=(8, 10_000.0))
+    ratio = (rt["goodput_tps"] / ff["goodput_tps"]
+             if ff["goodput_tps"] > 0 else float("inf"))
+    print(f"  flap fail-fast: errored {ff['errored']} (must be > 0), "
+          f"goodput {ff['goodput_tps']:.2f} tok/s, retries {ff['retries']} "
+          f"(must be 0)")
+    print(f"  flap+retry   : errored {rt['errored']} (must be 0), "
+          f"goodput {rt['goodput_tps']:.2f} tok/s, retries {rt['retries']} "
+          f"(must be > 0), served ids complete: "
+          f"{rt['served_ids'] == list(range(ng))}")
+    print(f"  retry/fail-fast goodput = {ratio:.4f} "
+          f"(chaos.rs asserts >= 1.10)")
+    assert ff["errored"] > 0
+    assert ff["retries"] == 0
+    assert rt["errored"] == 0
+    assert rt["retries"] > 0
+    assert rt["served_ids"] == list(range(ng))
+    assert ratio >= 1.10
 
 
 if __name__ == "__main__":

@@ -45,6 +45,18 @@ pub enum EventKind {
     /// fallback on, so fallback-off event logs are byte-identical to
     /// pre-fallback builds.
     Degraded,
+    /// Fault schedule (DESIGN.md §12): a single device on this node
+    /// dropped at `t_us` — in-flight transfers torn down, resident
+    /// experts re-homed to survivors. `id` is the local `DeviceId`.
+    DeviceDown,
+    /// Fault schedule (DESIGN.md §12): a transfer link's bandwidth
+    /// window opened at `t_us` (degrade or full outage). `id` packs the
+    /// link tag so two links flapping at the same instant stay ordered.
+    LinkDegrade,
+    /// Fault schedule (DESIGN.md §12): a previously-failed node came
+    /// back at `t_us`, re-seeded its host pool over the network and
+    /// re-entered the placement rotation. `id` is the cluster `NodeId`.
+    NodeRejoin,
 }
 
 impl EventKind {
@@ -56,6 +68,9 @@ impl EventKind {
             EventKind::RequestArrival => 3,
             EventKind::NodeDown => 4,
             EventKind::Degraded => 5,
+            EventKind::DeviceDown => 6,
+            EventKind::LinkDegrade => 7,
+            EventKind::NodeRejoin => 8,
         }
     }
 }

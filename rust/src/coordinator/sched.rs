@@ -25,7 +25,7 @@ use std::collections::VecDeque;
 
 use anyhow::Result;
 
-use crate::store::{DegradeCount, StallSplit, StoreStats};
+use crate::store::{DegradeCount, FaultCause, StallSplit, StoreStats};
 
 use super::serve::Request;
 
@@ -118,6 +118,14 @@ pub trait SeqBackend {
         self.degraded_of(id)
     }
 
+    /// Request `id` finished: drain the structured fault cause the
+    /// backend recorded for it, if any (DESIGN.md §12 — link outage
+    /// under fail-fast, exhausted retries). `None` for backends without
+    /// fault injection, and for every request that never hit a fault.
+    fn take_fault_cause(&mut self, _id: u64) -> Option<FaultCause> {
+        None
+    }
+
     /// Snapshot of the backend's store accounting (globals + per-device
     /// sums + cache hit rate) for the inspector. Defaults to `None` for
     /// backends without a store.
@@ -164,6 +172,9 @@ impl<'a, B: SeqBackend> SeqBackend for &'a mut B {
     fn take_degraded(&mut self, id: u64) -> DegradeCount {
         (**self).take_degraded(id)
     }
+    fn take_fault_cause(&mut self, id: u64) -> Option<FaultCause> {
+        (**self).take_fault_cause(id)
+    }
     fn snapshot(&self) -> Option<BackendSnapshot> {
         (**self).snapshot()
     }
@@ -200,6 +211,10 @@ pub struct ServeCompletion {
     /// backend failure (bad prompt, engine error): the request retired
     /// without finishing; accounting covers work done up to the failure
     pub error: Option<String>,
+    /// structured cause when the failure was an injected fault
+    /// (DESIGN.md §12) — echoed in the protocol response alongside the
+    /// partial `text`/`tokens` emitted before the fault
+    pub fault_cause: Option<FaultCause>,
 }
 
 impl ServeCompletion {
@@ -465,19 +480,24 @@ impl<B: SeqBackend> Scheduler<B> {
             batch_peak,
             finished_us: self.backend.now_us(),
             error,
+            // drained unconditionally so the backend's per-request fault
+            // ledger stays bounded, like the stall/degraded ledgers
+            fault_cause: self.backend.take_fault_cause(id),
         }
     }
 
-    /// Node failure (cluster tier, DESIGN.md §10): retire every in-flight
-    /// sequence as an error completion through the standard retirement
-    /// path — accounting covers the work done up to the failure. The
-    /// pending queue is untouched (survivor nodes re-admit it via
-    /// `drain_pending`).
-    pub fn fail_active(&mut self, error: &str) -> Vec<ServeCompletion> {
+    /// Node failure with NO survivors (cluster tier, DESIGN.md §10/§12):
+    /// retire every in-flight sequence as an error completion through
+    /// the standard retirement path — accounting and the partial `text`
+    /// cover the work done up to the failure, and `cause` is attached as
+    /// the structured `fault_cause` (unless the backend recorded a more
+    /// specific one). The pending queue is untouched (survivor nodes
+    /// re-admit it via `drain_pending`).
+    pub fn fail_active(&mut self, error: &str, cause: FaultCause) -> Vec<ServeCompletion> {
         let mut done = Vec::new();
         while !self.active.is_empty() {
             let a = self.active.remove(0);
-            done.push(self.retired(
+            let mut c = self.retired(
                 a.id,
                 a.out,
                 a.tokens,
@@ -488,9 +508,32 @@ impl<B: SeqBackend> Scheduler<B> {
                 a.batch_peak,
                 a.slo_us,
                 Some(error.to_string()),
-            ));
+            );
+            c.fault_cause.get_or_insert(cause);
+            done.push(c);
         }
         done
+    }
+
+    /// Node failure WITH survivors (DESIGN.md §12): abort every
+    /// in-flight sequence *without* producing completions — the cluster
+    /// driver re-dispatches the original requests to surviving nodes,
+    /// where they restart value-idempotently (per-request seeds) and
+    /// retire exactly once. Per-request backend ledgers (stall,
+    /// degraded, fault, retry) are drained and discarded here: the
+    /// aborted partial work died with the node and must not leak into
+    /// the survivor's accounting of the restarted run. Returns the
+    /// aborted request ids in batch order.
+    pub fn abort_active(&mut self) -> Vec<u64> {
+        let mut ids = Vec::new();
+        while !self.active.is_empty() {
+            let a = self.active.remove(0);
+            let _ = self.backend.retire(a.id);
+            let _ = self.backend.take_degraded(a.id);
+            let _ = self.backend.take_fault_cause(a.id);
+            ids.push(a.id);
+        }
+        ids
     }
 
     /// Remove and return every still-queued request with its arrival
@@ -718,5 +761,44 @@ mod tests {
             assert!(c.error.is_none());
             assert_eq!(c.tokens, 2);
         }
+    }
+
+    #[test]
+    fn fail_active_carries_partial_output_and_fault_cause() {
+        let fake = Fake { now: 0.0, stalls: Default::default(), boundaries: 0 };
+        let mut s = Scheduler::new(fake, 2);
+        s.enqueue(req(0, 5));
+        s.enqueue(req(1, 5));
+        let _ = s.step(); // both decoded one token before the fault
+        let done = s.fail_active("node 1 failed", FaultCause::NodeDown);
+        assert_eq!(done.len(), 2);
+        for c in &done {
+            assert!(c.error.is_some());
+            assert_eq!(c.fault_cause, Some(FaultCause::NodeDown));
+            assert_eq!(c.tokens, 1, "pre-fault tokens survive in the completion");
+            assert_eq!(c.text, b"a");
+        }
+        // ordinary (non-fault) completions carry no cause
+        s.enqueue(req(2, 1));
+        let ok = s.drain();
+        assert_eq!(ok.len(), 1);
+        assert!(ok[0].error.is_none() && ok[0].fault_cause.is_none());
+    }
+
+    #[test]
+    fn abort_active_releases_sequences_without_completions() {
+        let fake = Fake { now: 0.0, stalls: Default::default(), boundaries: 0 };
+        let mut s = Scheduler::new(fake, 2);
+        s.enqueue(req(7, 5));
+        s.enqueue(req(8, 5));
+        s.enqueue(req(9, 5)); // still pending at the fault
+        let _ = s.step();
+        let ids = s.abort_active();
+        assert_eq!(ids, vec![7, 8], "aborted in batch order, no completions");
+        assert_eq!(s.active_len(), 0);
+        assert_eq!(s.pending_len(), 1, "the queue survives for drain_pending");
+        let rest = s.drain();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].id, 9);
     }
 }

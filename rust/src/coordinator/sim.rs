@@ -45,8 +45,8 @@ use anyhow::Result;
 
 use crate::hwsim::{CpuSpec, GpuSpec, ModelDims, PcieSpec};
 use crate::store::{
-    DegradeCount, ExpertStore, Lookup, PlanMode, StallCause, StallSplit, StoreStats,
-    TransferPlan,
+    DegradeCount, DeviceDownReport, ExpertStore, FaultCause, LinkId, Lookup, PlanMode,
+    StallCause, StallSplit, StoreStats, TransferPlan,
 };
 use crate::util::rng::Rng;
 use crate::workload::TimedRequest;
@@ -671,11 +671,72 @@ fn resolve_expert(
                     // link the bytes actually cross: the home node's host
                     // PCIe when its host pool holds a copy, the network
                     // link otherwise (unclustered topologies always price
-                    // PCIe — `demand_link_us` degenerates to `h2d.copy_us`)
-                    let dur = store.demand_link_us(key, c.per_expert_bytes.max(1.0));
-                    let done = store.demand_fetch_for(key, dur, c.per_expert_bytes);
-                    store.admit(key, c.per_expert_cached);
-                    (done, StallCause::Demand, store.home(key))
+                    // PCIe — `demand_link_us` degenerates to `h2d.copy_us`).
+                    // A full outage on that link (DESIGN.md §12) gates the
+                    // fetch start through the bounded-backoff retry loop:
+                    // probe k waits `base·2^k` after the block; the first
+                    // probe past every outage window issues the fetch with
+                    // the wait folded into its duration. Exhaustion falls
+                    // back to the little tier when it holds the key, else
+                    // rides out the outage as a charged stall. With no
+                    // retry policy the outage is fail-fast: the cause is
+                    // recorded and the serving backend errors the request.
+                    let now = store.now_us();
+                    let link = store.demand_link_of(key);
+                    let mut extra_wait = 0.0;
+                    if let Some(end) = store.outage_until(link, now) {
+                        match store.retry_policy() {
+                            Some(rp) => {
+                                let mut cleared = None;
+                                for k in 0..rp.max_attempts {
+                                    let t_k = now + rp.backoff_base_us * 2f64.powi(k as i32);
+                                    if store.outage_until(link, t_k).is_none() {
+                                        cleared = Some((u64::from(k) + 1, t_k));
+                                        break;
+                                    }
+                                }
+                                match cleared {
+                                    Some((probes, t_k)) => {
+                                        store.charge_retries(probes);
+                                        extra_wait = t_k - now;
+                                    }
+                                    None => {
+                                        store.charge_retries(u64::from(rp.max_attempts));
+                                        store.record_fault(FaultCause::RetryExhausted);
+                                        if p.system.little_frac > 0.0
+                                            && store.little_resident(key)
+                                        {
+                                            let hit =
+                                                store.degraded_hit(key, c.per_expert_bytes);
+                                            debug_assert!(matches!(hit, Lookup::Degraded(_)));
+                                            core.push(
+                                                store.now_us(),
+                                                EventKind::Degraded,
+                                                key_id(key),
+                                            );
+                                            core.pop();
+                                            degraded = true;
+                                        } else {
+                                            extra_wait = end - now;
+                                        }
+                                    }
+                                }
+                            }
+                            None => {
+                                store.record_fault(FaultCause::LinkOutage);
+                                return None;
+                            }
+                        }
+                    }
+                    if degraded {
+                        (store.now_us(), StallCause::Demand, store.home(key))
+                    } else {
+                        let dur = store.demand_link_us(key, c.per_expert_bytes.max(1.0));
+                        let done =
+                            store.demand_fetch_for(key, extra_wait + dur, c.per_expert_bytes);
+                        store.admit(key, c.per_expert_cached);
+                        (done, StallCause::Demand, store.home(key))
+                    }
                 }
             }
         }
@@ -1838,6 +1899,88 @@ impl SimServeBackend {
         self.store.advance_to(ev.t_us);
     }
 
+    /// Fault schedule (DESIGN.md §12): one of this node's devices dropped
+    /// at `t_us`. The `DeviceDown` pop lands in the event log at its
+    /// exact time, then the store tears down the device — in-flight
+    /// transfers voided, partial migrations rolled back, residents
+    /// re-homed to survivors hottest-first. Returns the conservation
+    /// report the property suite checks.
+    pub fn note_device_down(&mut self, t_us: f64, dev: usize) -> DeviceDownReport {
+        let t = t_us.max(self.store.now_us());
+        self.core.push(t, EventKind::DeviceDown, dev as u64);
+        let ev = self.core.pop().expect("device-down event vanished from the heap");
+        debug_assert_eq!(ev.kind, EventKind::DeviceDown);
+        self.store.advance_to(ev.t_us);
+        self.store.device_down(dev)
+    }
+
+    /// Fault schedule (DESIGN.md §12): a link-degrade window opened at
+    /// `t_us`. The window itself was installed into the store at session
+    /// setup (pricing is a pure function of the schedule and the clock);
+    /// this only stamps the `LinkDegrade` pop into the event log so two
+    /// runs' logs carry the flap at the same byte offset.
+    pub fn note_link_degrade(&mut self, t_us: f64, link: LinkId) {
+        let t = t_us.max(self.store.now_us());
+        self.core.push(t, EventKind::LinkDegrade, u64::from(link.tag()));
+        let ev = self.core.pop().expect("link-degrade event vanished from the heap");
+        debug_assert_eq!(ev.kind, EventKind::LinkDegrade);
+        self.store.advance_to(ev.t_us);
+    }
+
+    /// Fault schedule (DESIGN.md §12): cluster node `node` rejoined at
+    /// `t_us` — stamp the `NodeRejoin` pop and advance the clock. The
+    /// driver re-seeds the returning node's pools and host copies over
+    /// the network around this call (it owns the key lists).
+    pub fn note_node_rejoin(&mut self, t_us: f64, node: u64) {
+        let t = t_us.max(self.store.now_us());
+        self.core.push(t, EventKind::NodeRejoin, node);
+        let ev = self.core.pop().expect("node-rejoin event vanished from the heap");
+        debug_assert_eq!(ev.kind, EventKind::NodeRejoin);
+        self.store.advance_to(ev.t_us);
+    }
+
+    /// Rejoin protocol (DESIGN.md §12): the node lost its memory while
+    /// down, so every pool is wiped and rebuilt from scratch — the
+    /// little-tier sketches re-pin locally (they ship with the node
+    /// image), and the host pool restocks its own-shard-first stageable
+    /// list over the network as *full* pulls (`net_restore` — nothing is
+    /// host-resident after the wipe, so every key pays real bytes),
+    /// truncated to the host budget exactly like the boot seeding. VRAM
+    /// resident sets stay cold: demand fetches refill them against the
+    /// restocked host pool. Returns when the last restore plan lands.
+    pub fn rejoin_restock(&mut self) -> f64 {
+        self.store.wipe_for_rejoin();
+        seed_little_pools(&self.p, &self.ctx, &mut self.store);
+        let topo = self.store.placement().topo.clone();
+        let span = topo.span_nodes.max(1);
+        let total = topo.n_nodes.max(topo.node_id + span);
+        let node = topo.node_id;
+        let d = &self.p.dims;
+        let (mut own, mut rest) = (Vec::new(), Vec::new());
+        for l in 0..d.n_layers {
+            for e in 0..d.n_experts {
+                if e % total == node % total {
+                    own.push((l, e));
+                } else {
+                    rest.push((l, e));
+                }
+            }
+        }
+        own.extend(rest);
+        let bytes = self.ctx.per_expert_bytes.max(1.0) as usize;
+        let budget = self.store.host_budget();
+        let mut used = 0usize;
+        let mut take = Vec::new();
+        for key in own {
+            if used + bytes > budget {
+                break;
+            }
+            used += bytes;
+            take.push(key);
+        }
+        self.store.net_restore(&take, bytes)
+    }
+
     /// Bytes one expert transfer moves under this system's compression
     /// (the cluster router sizes failure re-homing copies with this).
     pub fn per_expert_bytes(&self) -> f64 {
@@ -1907,6 +2050,12 @@ impl SeqBackend for SimServeBackend {
             Some(&mut self.boundary),
             self.streams.as_mut(),
         );
+        // fail-fast outage (no retry policy): the store recorded the
+        // structured cause mid-token; the step errors and the scheduler
+        // retires the request with its pre-fault tokens attached
+        if let Some(cause) = self.store.fault_of(s.id) {
+            anyhow::bail!("transfer fault: {}", cause.as_str());
+        }
         s.emitted += 1;
         Ok(SeqStep {
             token: Some(b'.'),
@@ -1938,6 +2087,9 @@ impl SeqBackend for SimServeBackend {
         seqs.iter_mut()
             .zip(computes)
             .map(|(s, compute_us)| {
+                if let Some(cause) = self.store.fault_of(s.id) {
+                    anyhow::bail!("transfer fault: {}", cause.as_str());
+                }
                 s.emitted += 1;
                 Ok(SeqStep {
                     token: Some(b'.'),
@@ -1979,6 +2131,10 @@ impl SeqBackend for SimServeBackend {
     fn take_degraded(&mut self, id: u64) -> DegradeCount {
         // the degraded ledger retires exactly like the stall ledger
         self.store.take_degraded_attribution(id)
+    }
+
+    fn take_fault_cause(&mut self, id: u64) -> Option<FaultCause> {
+        self.store.take_fault(id)
     }
 
     fn snapshot(&self) -> Option<BackendSnapshot> {

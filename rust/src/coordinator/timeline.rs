@@ -42,13 +42,15 @@ use anyhow::Result;
 
 use crate::config::{ResidencyKind, ShardPolicy};
 use crate::hwsim::RTX3090;
-use crate::store::{DegradeCount, DeviceStats, StallSplit, StoreStats};
+use crate::store::{
+    DegradeCount, DeviceStats, FaultCause, LinkId, RetryPolicy, StallSplit, StoreStats,
+};
 use crate::util::json::Json;
 use crate::workload::{self, TimedRequest, WorkloadSpec};
 
 use super::cluster::{
-    simulate_cluster_traced, ClusterPlacement, ClusterReport, ClusterSpec, NodeFailure,
-    NodeObs,
+    simulate_cluster_traced, ClusterPlacement, ClusterReport, ClusterSpec, Fault,
+    NodeFailure, NodeObs,
 };
 use super::policy::{SystemConfig, SystemKind};
 use super::sched::{BackendSnapshot, Scheduler, SeqBackend, SeqStep, ServeCompletion};
@@ -70,12 +72,19 @@ const FLAG_CLUSTER: u32 = 1 << 2;
 /// after every other section. Only set when the spec actually uses the
 /// fallback, so pre-quality artifacts stay byte-identical.
 const FLAG_QUALITY: u32 = 1 << 3;
+/// The artifact carries a fault-schedule section (DESIGN.md §12):
+/// the cluster's timed `Fault` list, the retry/backoff policy and the
+/// fault-recovery counters, appended after every other section. Only
+/// set when the shape actually schedules faults or arms retries, so
+/// fault-free artifacts — the committed corpus included — stay
+/// byte-identical.
+const FLAG_FAULTS: u32 = 1 << 4;
 /// Every flag bit this build understands. `from_bytes` rejects unknown
 /// bits outright: an unknown bit means an appended section this decoder
 /// would misparse as trailing garbage (or worse, silently drop), so
 /// failing loudly is the forward-compatibility contract.
 const KNOWN_FLAGS: u32 =
-    FLAG_OBSERVATIONS | FLAG_REPLAYABLE | FLAG_CLUSTER | FLAG_QUALITY;
+    FLAG_OBSERVATIONS | FLAG_REPLAYABLE | FLAG_CLUSTER | FLAG_QUALITY | FLAG_FAULTS;
 
 /// Hardware preset a spec's `SimParams` are rebuilt from. Only the
 /// RTX 3090 host model is recordable today — the preset every serving
@@ -303,6 +312,11 @@ pub struct StatsRecord {
     pub degraded_hits: u64,
     pub degraded_bytes: f64,
     pub retired_degraded: DegradeCount,
+    /// bounded-backoff transfer retries (DESIGN.md §12): the global
+    /// counter and the retired bucket of the retry ledger (equal at
+    /// quiescence; both zero for every retry-free session)
+    pub retries: u64,
+    pub retired_retries: u64,
     pub per_device: Vec<DeviceStats>,
 }
 
@@ -321,6 +335,8 @@ impl StatsRecord {
             degraded_hits: s.degraded_hits,
             degraded_bytes: s.degraded_bytes,
             retired_degraded: s.retired_degraded,
+            retries: s.retries,
+            retired_retries: s.retired_retries,
             per_device: s.per_device.clone(),
         }
     }
@@ -357,6 +373,12 @@ pub struct ClusterShape {
     /// per-node host RAM pool, GB.
     pub host_ram_gb: f64,
     pub failure: Option<NodeFailure>,
+    /// deterministic fault schedule (DESIGN.md §12), carried in the
+    /// appended `FLAG_FAULTS` section so fault-free artifacts keep
+    /// their pre-fault bytes.
+    pub faults: Vec<Fault>,
+    /// bounded-backoff retry policy for outage-blocked demand fetches.
+    pub retry: Option<RetryPolicy>,
 }
 
 impl ClusterShape {
@@ -372,6 +394,8 @@ impl ClusterShape {
             host_ram_gb: self.host_ram_gb,
             max_batch,
             failure: self.failure,
+            faults: self.faults.clone(),
+            retry: self.retry,
         }
     }
 }
@@ -421,6 +445,12 @@ pub struct ClusterObservations {
     pub total_us: f64,
     pub errored: u64,
     pub rehomed_keys: u64,
+    /// fault-recovery counters (DESIGN.md §12), serialized in the
+    /// appended `FLAG_FAULTS` section; all zero for fault-free runs.
+    pub redispatched: u64,
+    pub rejoins: u64,
+    pub dev_moved_keys: u64,
+    pub dev_dropped_keys: u64,
 }
 
 impl ClusterObservations {
@@ -431,6 +461,10 @@ impl ClusterObservations {
             total_us: r.total_us,
             errored: r.errored as u64,
             rehomed_keys: r.rehomed_keys as u64,
+            redispatched: r.redispatched as u64,
+            rejoins: r.rejoins as u64,
+            dev_moved_keys: r.dev_moved_keys as u64,
+            dev_dropped_keys: r.dev_dropped_keys as u64,
         }
     }
 }
@@ -732,6 +766,8 @@ fn put_stats(e: &mut Enc, s: &StatsRecord) {
     e.f64(s.degraded_bytes);
     e.u64(s.retired_degraded.hits);
     e.f64(s.retired_degraded.bytes);
+    e.u64(s.retries);
+    e.u64(s.retired_retries);
     e.u64(s.per_device.len() as u64);
     for dev in &s.per_device {
         e.u64(dev.demand_fetches);
@@ -756,6 +792,8 @@ fn get_stats(d: &mut Dec) -> Result<StatsRecord, String> {
         degraded_hits: d.u64()?,
         degraded_bytes: d.f64()?,
         retired_degraded: DegradeCount { hits: d.u64()?, bytes: d.f64()? },
+        retries: d.u64()?,
+        retired_retries: d.u64()?,
         per_device: Vec::new(),
     };
     let n = d.u64()? as usize;
@@ -884,6 +922,9 @@ fn get_cluster(d: &mut Dec) -> Result<ClusterExt, String> {
         vram_gb_total,
         host_ram_gb,
         failure,
+        // patched from the faults section when FLAG_FAULTS is set
+        faults: Vec::new(),
+        retry: None,
     };
     let obs = match d.u8()? {
         0 => None,
@@ -920,11 +961,115 @@ fn get_cluster(d: &mut Dec) -> Result<ClusterExt, String> {
                     alive: d.u8()? != 0,
                 });
             }
-            Some(ClusterObservations { assignments, nodes, total_us, errored, rehomed_keys })
+            Some(ClusterObservations {
+                assignments,
+                nodes,
+                total_us,
+                errored,
+                rehomed_keys,
+                // patched from the faults section when FLAG_FAULTS is set
+                redispatched: 0,
+                rejoins: 0,
+                dev_moved_keys: 0,
+                dev_dropped_keys: 0,
+            })
         }
         c => return Err(format!("bad cluster observations tag {c}")),
     };
     Ok(ClusterExt { shape, obs })
+}
+
+/// Whether the cluster shape exercises the fault machinery and therefore
+/// needs the appended `FLAG_FAULTS` section to round-trip.
+fn faults_needed(cluster: Option<&ClusterExt>) -> bool {
+    cluster.map_or(false, |c| !c.shape.faults.is_empty() || c.shape.retry.is_some())
+}
+
+/// The fault-schedule section (DESIGN.md §12): the retry policy, the
+/// timed fault list (one fixed-width record per fault: tag, node-or-dev,
+/// aux link tag, degrade factor, window start/end — unused fields encode
+/// as zero) and, when observations are present, the fault-recovery
+/// counters the base cluster section omits.
+fn put_faults(e: &mut Enc, c: &ClusterExt) {
+    match &c.shape.retry {
+        Some(r) => {
+            e.u8(1);
+            e.u32(r.max_attempts);
+            e.f64(r.backoff_base_us);
+        }
+        None => e.u8(0),
+    }
+    e.u32(c.shape.faults.len() as u32);
+    for f in &c.shape.faults {
+        e.u8(f.tag());
+        let (node, aux, factor, t0, t1) = match *f {
+            Fault::DeviceDown { dev, t_us } => (dev as u32, 0u32, 0.0, t_us, 0.0),
+            Fault::LinkDegrade { link, factor, t0_us, t1_us } => {
+                (0, u32::from(link.tag()), factor, t0_us, t1_us)
+            }
+            Fault::NodeDown { node, t_us } => (node as u32, 0, 0.0, t_us, 0.0),
+            Fault::NodeRejoin { node, t_us } => (node as u32, 0, 0.0, t_us, 0.0),
+        };
+        e.u32(node);
+        e.u32(aux);
+        e.f64(factor);
+        e.f64(t0);
+        e.f64(t1);
+    }
+    match &c.obs {
+        Some(o) => {
+            e.u8(1);
+            e.u64(o.redispatched);
+            e.u64(o.rejoins);
+            e.u64(o.dev_moved_keys);
+            e.u64(o.dev_dropped_keys);
+        }
+        None => e.u8(0),
+    }
+}
+
+fn get_faults(d: &mut Dec, c: &mut ClusterExt) -> Result<(), String> {
+    c.shape.retry = match d.u8()? {
+        0 => None,
+        1 => Some(RetryPolicy { max_attempts: d.u32()?, backoff_base_us: d.f64()? }),
+        t => return Err(format!("bad retry presence tag {t}")),
+    };
+    let n = d.u32()? as usize;
+    for _ in 0..n {
+        let tag = d.u8()?;
+        let node = d.u32()? as usize;
+        let aux = d.u32()?;
+        let factor = d.f64()?;
+        let t0 = d.f64()?;
+        let t1 = d.f64()?;
+        c.shape.faults.push(match tag {
+            0 => Fault::DeviceDown { dev: node, t_us: t0 },
+            1 => {
+                let link = LinkId::from_tag(aux as u8)
+                    .ok_or_else(|| format!("bad link tag {aux}"))?;
+                Fault::LinkDegrade { link, factor, t0_us: t0, t1_us: t1 }
+            }
+            2 => Fault::NodeDown { node, t_us: t0 },
+            3 => Fault::NodeRejoin { node, t_us: t0 },
+            t => return Err(format!("bad fault tag {t}")),
+        });
+    }
+    match d.u8()? {
+        0 => Ok(()),
+        1 => {
+            let (redispatched, rejoins, moved, dropped) =
+                (d.u64()?, d.u64()?, d.u64()?, d.u64()?);
+            let Some(o) = &mut c.obs else {
+                return Err("fault counters without cluster observations".to_string());
+            };
+            o.redispatched = redispatched;
+            o.rejoins = rejoins;
+            o.dev_moved_keys = moved;
+            o.dev_dropped_keys = dropped;
+            Ok(())
+        }
+        t => Err(format!("bad fault counters tag {t}")),
+    }
 }
 
 /// Whether the spec exercises the quality-elastic fallback and therefore
@@ -1000,6 +1145,10 @@ impl Timeline {
         if quality {
             flags |= FLAG_QUALITY;
         }
+        let faults = faults_needed(self.cluster.as_ref());
+        if faults {
+            flags |= FLAG_FAULTS;
+        }
         e.u32(flags);
         put_spec(&mut e, &self.spec);
         if let Some(o) = &self.obs {
@@ -1010,6 +1159,9 @@ impl Timeline {
         }
         if quality {
             put_quality(&mut e, &self.spec);
+        }
+        if faults {
+            put_faults(&mut e, self.cluster.as_ref().expect("faults imply cluster"));
         }
         e.buf
     }
@@ -1039,13 +1191,21 @@ impl Timeline {
         } else {
             None
         };
-        let cluster = if flags & FLAG_CLUSTER != 0 {
+        let mut cluster = if flags & FLAG_CLUSTER != 0 {
             Some(get_cluster(&mut d)?)
         } else {
             None
         };
         if flags & FLAG_QUALITY != 0 {
             get_quality(&mut d, &mut spec)?;
+        }
+        if flags & FLAG_FAULTS != 0 {
+            match &mut cluster {
+                Some(c) => get_faults(&mut d, c)?,
+                None => {
+                    return Err("fault section without a cluster section".to_string());
+                }
+            }
         }
         d.done()?;
         Ok(Timeline { spec, obs, cluster, replayable: flags & FLAG_REPLAYABLE != 0 })
@@ -1152,6 +1312,9 @@ impl<B: SeqBackend> SeqBackend for RecordingBackend<B> {
     }
     fn take_degraded(&mut self, id: u64) -> DegradeCount {
         self.inner.take_degraded(id)
+    }
+    fn take_fault_cause(&mut self, id: u64) -> Option<FaultCause> {
+        self.inner.take_fault_cause(id)
     }
     fn snapshot(&self) -> Option<BackendSnapshot> {
         self.inner.snapshot()
@@ -1363,6 +1526,10 @@ fn decode_event_log(log: &[u8]) -> Vec<String> {
             2 => "BoundaryBarrier".to_string(),
             3 => "RequestArrival".to_string(),
             4 => "NodeDown".to_string(),
+            5 => "Degraded".to_string(),
+            6 => "DeviceDown".to_string(),
+            7 => "LinkDegrade".to_string(),
+            8 => "NodeRejoin".to_string(),
             k => format!("Unknown({k})"),
         };
         let t = f64::from_bits(u64::from_le_bytes(rec[1..9].try_into().unwrap()));
@@ -1393,6 +1560,8 @@ fn stats_rows(rows: &mut Vec<ScalarRow>, s: &StatsRecord) {
     f64_row(rows, "stall_prefetch_us", s.stall_prefetch_us);
     f64_row(rows, "retired.demand_us", s.retired.demand_us);
     f64_row(rows, "retired.prefetch_us", s.retired.prefetch_us);
+    int_row(rows, "retries", s.retries);
+    int_row(rows, "retired_retries", s.retired_retries);
     for (i, dev) in s.per_device.iter().enumerate() {
         int_row(rows, &format!("dev{i}.demand_fetches"), dev.demand_fetches);
         int_row(rows, &format!("dev{i}.prefetches"), dev.prefetches);
@@ -1579,6 +1748,10 @@ pub fn diff_cluster(
         f64_row(&mut rows, "total_us", o.total_us);
         int_row(&mut rows, "errored", o.errored);
         int_row(&mut rows, "rehomed_keys", o.rehomed_keys);
+        int_row(&mut rows, "redispatched", o.redispatched);
+        int_row(&mut rows, "rejoins", o.rejoins);
+        int_row(&mut rows, "dev_moved_keys", o.dev_moved_keys);
+        int_row(&mut rows, "dev_dropped_keys", o.dev_dropped_keys);
         rows
     };
     let (ra, rb) = (totals(recorded), totals(replayed));
@@ -1652,6 +1825,9 @@ pub struct InspectorReport {
     pub degraded_hits: u64,
     pub degraded_bytes: f64,
     pub degraded_request_share: f64,
+    /// Bounded-backoff transfer retries charged across the session
+    /// (DESIGN.md §12); zero for every retry-free run.
+    pub retries: u64,
     pub ledger_exact: bool,
 }
 
@@ -1711,6 +1887,9 @@ pub fn inspect_parts(
                 && deg_bytes.to_bits() == s.retired_degraded.bytes.to_bits()
                 && s.degraded_hits == s.retired_degraded.hits
                 && s.degraded_bytes.to_bits() == s.retired_degraded.bytes.to_bits()
+                // the retry ledger retires the same way: at quiescence
+                // the global equals the retired bucket exactly
+                && s.retries == s.retired_retries
         }
         None => false,
     };
@@ -1748,6 +1927,7 @@ pub fn inspect_parts(
         } else {
             completions.iter().filter(|c| c.degraded.hits > 0).count() as f64 / n
         },
+        retries: stats.map(|s| s.retries).unwrap_or(0),
         ledger_exact,
     }
 }
@@ -1782,6 +1962,7 @@ impl InspectorReport {
             "degraded_request_share".to_string(),
             Json::Num(self.degraded_request_share),
         );
+        m.insert("retries".to_string(), Json::Num(self.retries as f64));
         m.insert("ledger_exact".to_string(), Json::Bool(self.ledger_exact));
         Json::Obj(m)
     }
@@ -1815,6 +1996,7 @@ impl InspectorReport {
                 "{:<22}{:.4}",
                 "degraded_request_share", self.degraded_request_share
             ),
+            format!("{:<22}{}", "retries", self.retries),
             format!("{:<22}{}", "ledger_exact", self.ledger_exact),
         ];
         lines.join("\n")
@@ -1875,9 +2057,10 @@ mod tests {
     fn unknown_flag_bits_are_rejected() {
         let tl = Timeline { spec: tiny_spec(true, 11), obs: None, cluster: None, replayable: true };
         let mut bytes = tl.to_bytes();
-        // flags live at offset 8..12, little-endian; bit 4 is unassigned
+        // flags live at offset 8..12, little-endian; bit 5 is unassigned
         assert_eq!(bytes[8] & (1 << 3), 0, "fallback-off spec set FLAG_QUALITY");
-        bytes[8] |= 1 << 4;
+        assert_eq!(bytes[8] & (1 << 4), 0, "fault-free spec set FLAG_FAULTS");
+        bytes[8] |= 1 << 5;
         let err = Timeline::from_bytes(&bytes).unwrap_err();
         assert!(
             err.contains("unknown timeline flag bits"),
@@ -2033,6 +2216,8 @@ mod tests {
             vram_gb_total: 28.5,
             host_ram_gb: 64.0,
             failure,
+            faults: Vec::new(),
+            retry: None,
         }
     }
 
@@ -2113,6 +2298,59 @@ mod tests {
                 shape: tiny_cluster_shape(Some(NodeFailure { node: 9, t_us: 1.0 })),
                 obs: None,
             }),
+            ..record_cluster(&base, &tiny_cluster_shape(None)).unwrap()
+        };
+        assert!(matches!(replay_cluster(&bad), Err(ReplayError::Invalid(_))));
+    }
+
+    /// The fault-schedule section (FLAG_FAULTS) round-trips the fault
+    /// list, the retry policy and the recovery counters, and a recorded
+    /// fault schedule replays bit-exactly from the artifact alone.
+    #[test]
+    fn fault_schedule_roundtrips_and_replays_bit_exactly() {
+        let base = tiny_spec(false, 13);
+        let trace = base.trace();
+        let mut shape = tiny_cluster_shape(None);
+        let t_down = trace[1].arrival_us + 1.0;
+        shape.faults = vec![
+            Fault::LinkDegrade {
+                link: LinkId::Pcie,
+                factor: 0.25,
+                t0_us: trace[0].arrival_us + 1.0,
+                t1_us: t_down,
+            },
+            Fault::NodeDown { node: 1, t_us: t_down },
+            Fault::NodeRejoin { node: 1, t_us: t_down + 500_000.0 },
+        ];
+        shape.retry = Some(RetryPolicy { max_attempts: 4, backoff_base_us: 25_000.0 });
+        let tl = record_cluster(&base, &shape).unwrap();
+        let bytes = tl.to_bytes();
+        assert_ne!(bytes[8] & (1 << 4), 0, "fault schedule did not set FLAG_FAULTS");
+
+        let back = Timeline::from_bytes(&bytes).unwrap();
+        assert_eq!(back.to_bytes(), bytes);
+        let ext = back.cluster.as_ref().unwrap();
+        assert_eq!(ext.shape.faults, shape.faults);
+        assert_eq!(ext.shape.retry, shape.retry);
+        let obs = ext.obs.as_ref().unwrap();
+        assert_eq!(obs.rejoins, 1);
+        assert_eq!(obs.errored, 0, "a survivor existed: re-dispatch, not errors");
+
+        // replays bit-exactly from the decoded artifact, counters
+        // included (diff_cluster compares the recovery totals)
+        let fresh = replay_cluster(&back).unwrap();
+        assert_eq!(fresh.total_us.to_bits(), obs.total_us.to_bits());
+        assert_eq!(fresh.redispatched, obs.redispatched);
+        assert_eq!(fresh.rejoins, obs.rejoins);
+        // the dead node's log carries the rejoin pop by name
+        let lines = super::decode_event_log(&fresh.nodes[1].event_log);
+        assert!(lines.iter().any(|l| l.starts_with("NodeRejoin")), "{lines:?}");
+
+        // a malformed schedule is Invalid, not divergent
+        let mut bad_shape = tiny_cluster_shape(None);
+        bad_shape.faults = vec![Fault::NodeRejoin { node: 0, t_us: 1.0 }];
+        let bad = Timeline {
+            cluster: Some(ClusterExt { shape: bad_shape, obs: None }),
             ..record_cluster(&base, &tiny_cluster_shape(None)).unwrap()
         };
         assert!(matches!(replay_cluster(&bad), Err(ReplayError::Invalid(_))));

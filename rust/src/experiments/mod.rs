@@ -2,6 +2,7 @@
 //! Every `run` prints a markdown table (paste-ready for EXPERIMENTS.md)
 //! and writes machine-readable JSON under `artifacts/results/`.
 
+pub mod chaos;
 pub mod cluster;
 pub mod fig2;
 pub mod fig3;

@@ -184,6 +184,7 @@ fn main() -> Result<()> {
                 max_batch: args.usize("max-batch", 8),
                 gather_ms: args.usize("gather-ms", 0) as u64,
                 record: args.get("record").map(PathBuf::from),
+                read_timeout_ms: args.usize("read-timeout-ms", 30_000) as u64,
             };
             match args.get("backend").unwrap_or("real") {
                 // full TCP path over the simulated coordinator: no
@@ -360,6 +361,12 @@ fn main() -> Result<()> {
             args.sparsity_decay(),
             args.overlap(),
         )?,
+        "exp-chaos-sweep" => exp::chaos::run(
+            args.usize("requests", 16),
+            args.usize("seed", 7) as u64,
+            args.f64("rate", 8.0),
+            args.get("nodes").and_then(|v| v.parse().ok()),
+        )?,
         "exp-cluster-sweep" => exp::cluster::run(
             args.usize("requests", 16),
             args.usize("seed", 7) as u64,
@@ -394,6 +401,7 @@ fn main() -> Result<()> {
             exp::fig8::run_policy_sweep(decay)?;
             exp::shard::run(ResidencyKind::Lru, 7, decay)?;
             exp::cluster::run(16, 7, 8.0, exp::cluster::AGGREGATE_VRAM_GB, None, None)?;
+            exp::chaos::run(16, 7, 8.0, None)?;
             exp::quality::run(12, 23, exp::quality::LITTLE_FRAC)?;
             exp::serveload::run(
                 ResidencyKind::Lru, 16, 7, exp::serveload::DEFAULT_VRAM_GB,
@@ -417,7 +425,8 @@ fn main() -> Result<()> {
                  cmds: generate serve record replay eval exp-fig2 exp-fig3a \
                  exp-fig3b exp-fig4 exp-fig6 exp-fig7 exp-fig8 exp-fig9 \
                  exp-policy-sweep exp-quality-latency exp-serve-load \
-                 exp-shard-sweep exp-cluster-sweep exp-table1 exp-table3 \
+                 exp-shard-sweep exp-cluster-sweep exp-chaos-sweep \
+                 exp-table1 exp-table3 \
                  exp-compression exp-all\n\n\
                  common flags: --mode dense|sparse|floe|cats|chess|uniform \
                  --level 0.8 --bits 2 --policy lru|lfu|sparsity \
@@ -439,9 +448,13 @@ fn main() -> Result<()> {
                  (native kernel pool size; default = available cores; \
                  1 reproduces single-threaded output bit-exactly)\n\
                  serve flags: --backend real|sim --max-batch 8 --gather-ms 0 \
-                 --port 7399 --max-requests 0 --record session.fltl (write \
+                 --port 7399 --max-requests 0 --read-timeout-ms 30000 \
+                 (drop a connection silent this long; 0 = never) \
+                 --record session.fltl (write \
                  the session as a timeline artifact at exit; protocol cmd \
-                 {{\"cmd\":\"stats\"}} returns the live inspector report)\n\
+                 {{\"cmd\":\"stats\"}} returns the live inspector report, \
+                 {{\"cmd\":\"shutdown\"}} drains in-flight requests, flushes \
+                 the recording and exits 0)\n\
                  record flags: --out serveload_timeline.fltl --cap 4 \
                  --rate 8 --requests 12 --seed 23 --overlap (records the \
                  exp-serve-load system shape as a replayable artifact)\n\
@@ -453,6 +466,10 @@ fn main() -> Result<()> {
                  (restrict the sweep to one cell) --requests 16 --rate 8 \
                  --vram-total 28.5 (aggregate expert-cache VRAM split \
                  evenly across all nodes x devices)\n\
+                 chaos flags (exp-chaos-sweep): --nodes N (restrict to one \
+                 node count) --requests 16 --rate 8 --seed 7 (deterministic \
+                 fault schedules: link flap priced fail-fast vs retried, \
+                 device drop, node drop + rejoin)\n\
                  quality flags (serve, record, exp-quality-latency): \
                  --slo-us N (per-request latency budget, us from \
                  admission) --little-frac 0.1 (device-budget fraction \

@@ -9,15 +9,27 @@
 //!              "queue_wait_us": us, "stall_us": us, "stall_demand_us": us,
 //!              "stall_prefetch_us": us, "batch_size": n}
 //!   error:    {"error": "..."} for a malformed request line, or
-//!             {"id": n, "error": "...", "tag": ...} when an admitted
-//!             request fails in the backend — either way the connection
-//!             (and the server) keeps serving
+//!             {"id": n, "error": "...", "text": "...", "tokens": n,
+//!             "tag": ...} when an admitted request fails in the backend
+//!             — the partial `text`/`tokens` are whatever the request
+//!             produced before the failure, and an injected fault adds
+//!             "fault_cause": "node-down" | "link-outage" |
+//!             "retry-exhausted" | "device-down" (DESIGN.md §12) so
+//!             callers can tell infrastructure faults from bad requests;
+//!             either way the connection (and the server) keeps serving
 //!   stats:    {"cmd": "stats", "tag": ...} → one JSON object with the
 //!             per-request inspector report over everything served so
 //!             far (queue-wait p50/p95/p99, demand-vs-prefetch stall
-//!             split, batch occupancy, per-device bus busy share —
+//!             split, batch occupancy, per-device bus busy share,
+//!             transfer retry count —
 //!             `coordinator::timeline::InspectorReport`); a stats reply
 //!             counts toward `--max-requests`
+//!   shutdown: {"cmd": "shutdown", "tag": ...} → graceful drain: the
+//!             server acks {"shutdown": "draining", "active": n} at
+//!             once, stops admitting (late requests get {"error":
+//!             "server draining"}), finishes the in-flight batch and
+//!             everything already queued, flushes any recording, and
+//!             exits 0 — `--max-requests` rides the same drain path
 //!
 //! Recording: with `ServerOpts::record` set (CLI `--record <path>`), the
 //! session is captured through `coordinator::timeline::RecordingBackend`
@@ -33,6 +45,13 @@
 //! decomposed into `stall_demand_us` (nothing was in flight) and
 //! `stall_prefetch_us` (a predicted transfer landed late); `batch_size`
 //! is the largest decode batch the request was part of.
+//!
+//! Read robustness: each reader thread runs under a per-connection read
+//! timeout (`ServerOpts::read_timeout_ms`) and a hard 64 KiB frame cap,
+//! so a client that stalls mid-frame or streams an unterminated line
+//! cannot pin a reader thread or grow its buffer without bound — the
+//! oversized frame gets one error reply, the stalled connection is
+//! dropped, and the rest of the server never notices.
 //!
 //! Concurrency model: the accept loop and one reader thread per
 //! connection parse request lines into a shared mpsc admission queue.
@@ -87,6 +106,11 @@ pub struct ServerOpts {
     /// write the session as a timeline artifact here at exit (sim
     /// backend: includes the event-core log)
     pub record: Option<PathBuf>,
+    /// per-connection socket read timeout: a client that goes silent
+    /// (including mid-frame) for this long has its connection dropped
+    /// by the reader thread (0 = wait forever); queued responses still
+    /// flow — only the read half dies
+    pub read_timeout_ms: u64,
 }
 
 impl Default for ServerOpts {
@@ -99,6 +123,7 @@ impl Default for ServerOpts {
             max_batch: 8,
             gather_ms: 0,
             record: None,
+            read_timeout_ms: 30_000,
         }
     }
 }
@@ -194,6 +219,9 @@ enum Inbound {
     Req(InboundReq),
     /// `{"cmd":"stats"}` — answered inline from the running accounting
     Stats { tag: Option<Json>, conn: ConnTx },
+    /// `{"cmd":"shutdown"}` — ack, stop admission, drain the in-flight
+    /// batch, flush any recording, exit 0
+    Shutdown { tag: Option<Json>, conn: ConnTx },
 }
 
 /// What the coordinator loop hands back at exit: the backend plus the
@@ -252,9 +280,11 @@ pub fn serve_sim_listener(
 }
 
 /// The coordinator loop over any `SeqBackend`. Returns the backend and
-/// the session recording after `opts.max_requests` responses (the accept
-/// thread exits with the process; its listener keeps the port until
-/// then).
+/// the session recording after `opts.max_requests` responses or a
+/// `{"cmd":"shutdown"}` drain — both exit through the same path: stop
+/// admitting, finish the in-flight batch, flush the writer threads (the
+/// accept thread exits with the process; its listener keeps the port
+/// until then).
 pub fn serve_on<B: SeqBackend>(
     listener: TcpListener,
     backend: B,
@@ -263,7 +293,8 @@ pub fn serve_on<B: SeqBackend>(
     let addr = listener.local_addr()?;
     println!("floe serving on {addr} (max-batch {})", opts.max_batch.max(1));
     let (tx, rx) = mpsc::channel::<Inbound>();
-    thread::spawn(move || accept_loop(listener, tx));
+    let read_timeout_ms = opts.read_timeout_ms;
+    thread::spawn(move || accept_loop(listener, tx, read_timeout_ms));
 
     let mut sched = Scheduler::new(RecordingBackend::new(backend), opts.max_batch);
     // per-request accounting history, in retirement order — feeds the
@@ -271,14 +302,20 @@ pub fn serve_on<B: SeqBackend>(
     let mut history: Vec<CompletionRecord> = Vec::new();
     // per-request response route: connection + echoed tag
     let mut routes: HashMap<u64, (ConnTx, Option<Json>)> = HashMap::new();
-    // connections with responses in flight, drained before a capped exit
-    // (keyed per connection, not per request — a capped run over many
-    // short-lived connections must not retain one sender clone, and so
-    // one live writer thread, per served request)
+    // connections with responses in flight, drained before a capped or
+    // shutdown exit (keyed per connection, not per request — a capped
+    // run over many short-lived connections must not retain one sender
+    // clone, and so one live writer thread, per served request)
     let mut to_drain: HashMap<usize, ConnTx> = HashMap::new();
     let mut served = 0usize;
+    // `{"cmd":"shutdown"}` or reaching `--max-requests` flips this: stop
+    // admitting, finish what's in flight, exit through the writer drain
+    let mut draining = false;
     loop {
         if !sched.has_work() {
+            if draining {
+                break;
+            }
             // idle: block for the next arrival, then optionally hold the
             // batch-formation window so co-arrivals decode together
             match rx.recv_timeout(Duration::from_millis(100)) {
@@ -291,6 +328,9 @@ pub fn serve_on<B: SeqBackend>(
                 Ok(Inbound::Stats { tag, conn }) => {
                     handle_stats(&sched, &history, tag, conn, opts, &mut to_drain, &mut served);
                 }
+                Ok(Inbound::Shutdown { tag, conn }) => {
+                    begin_drain(&sched, tag, conn, &mut to_drain, &mut draining);
+                }
                 Err(RecvTimeoutError::Timeout) => continue,
                 Err(RecvTimeoutError::Disconnected) => return Ok(finish(sched, history)),
             }
@@ -298,29 +338,66 @@ pub fn serve_on<B: SeqBackend>(
         // token boundary: drain whatever arrived while decoding
         while let Ok(inb) = rx.try_recv() {
             match inb {
+                Inbound::Req(inb) if draining => {
+                    // admission is closed: answer and drop
+                    let err = Json::Obj(
+                        [("error".to_string(), Json::Str("server draining".to_string()))]
+                            .into(),
+                    );
+                    inb.conn.send_line(jwrite(&err));
+                }
                 Inbound::Req(inb) => admit(&mut sched, &mut routes, inb),
                 Inbound::Stats { tag, conn } => {
                     handle_stats(&sched, &history, tag, conn, opts, &mut to_drain, &mut served);
+                }
+                Inbound::Shutdown { tag, conn } => {
+                    begin_drain(&sched, tag, conn, &mut to_drain, &mut draining);
                 }
             }
         }
         for done in sched.step() {
             history.push(CompletionRecord::of(&done));
             if let Some(conn) = respond(&mut routes, &done) {
-                if opts.max_requests > 0 {
+                if opts.max_requests > 0 || draining {
                     to_drain.insert(conn.key(), conn);
                 }
             }
             served += 1;
         }
         if opts.max_requests > 0 && served >= opts.max_requests {
-            // let the writer threads flush the final responses
-            for conn in to_drain.values() {
-                conn.drain(Duration::from_secs(2));
-            }
-            return Ok(finish(sched, history));
+            draining = true;
+        }
+        if draining && !sched.has_work() {
+            break;
         }
     }
+    // let the writer threads flush the final responses before the
+    // recording is written and the process exits
+    for conn in to_drain.values() {
+        conn.drain(Duration::from_secs(2));
+    }
+    Ok(finish(sched, history))
+}
+
+/// Ack a `shutdown` command and close admission; the main loop finishes
+/// the in-flight batch before exiting through the writer drain.
+fn begin_drain<B: SeqBackend>(
+    sched: &Scheduler<RecordingBackend<B>>,
+    tag: Option<Json>,
+    conn: ConnTx,
+    to_drain: &mut HashMap<usize, ConnTx>,
+    draining: &mut bool,
+) {
+    let mut fields = vec![
+        ("shutdown".to_string(), Json::Str("draining".to_string())),
+        ("active".to_string(), Json::Num(sched.active_len() as f64)),
+    ];
+    if let Some(tag) = tag {
+        fields.push(("tag".to_string(), tag));
+    }
+    conn.send_line(jwrite(&Json::Obj(fields.into_iter().collect())));
+    to_drain.insert(conn.key(), conn);
+    *draining = true;
 }
 
 /// Tear the scheduler down into the exit outcome.
@@ -413,19 +490,33 @@ fn respond(
     let resp = match &c.error {
         Some(msg) => {
             eprintln!("request {} failed: {msg}", c.id);
-            let mut fields = vec![
-                ("id".to_string(), Json::Num(c.id as f64)),
-                ("error".to_string(), Json::Str(msg.clone())),
-            ];
-            if let Some(tag) = tag {
-                fields.push(("tag".to_string(), tag));
-            }
-            Json::Obj(fields.into_iter().collect())
+            error_json(c, msg, tag)
         }
         None => response_json(c, tag),
     };
     conn.send_line(jwrite(&resp));
     Some(conn)
+}
+
+/// Error reply for a request that retired without finishing: alongside
+/// the error it carries whatever output the request produced before the
+/// failure, and — when the failure was an injected fault — the
+/// structured cause, so a caller can resume from the partial text and
+/// tell a node drop from a bad prompt.
+fn error_json(c: &ServeCompletion, msg: &str, tag: Option<Json>) -> Json {
+    let mut fields = vec![
+        ("id".to_string(), Json::Num(c.id as f64)),
+        ("error".to_string(), Json::Str(msg.to_string())),
+        ("text".to_string(), Json::Str(ByteTokenizer::decode(&c.text))),
+        ("tokens".to_string(), Json::Num(c.tokens as f64)),
+    ];
+    if let Some(cause) = c.fault_cause {
+        fields.push(("fault_cause".to_string(), Json::Str(cause.as_str().to_string())));
+    }
+    if let Some(tag) = tag {
+        fields.push(("tag".to_string(), tag));
+    }
+    Json::Obj(fields.into_iter().collect())
 }
 
 fn response_json(c: &ServeCompletion, tag: Option<Json>) -> Json {
@@ -453,38 +544,129 @@ fn response_json(c: &ServeCompletion, tag: Option<Json>) -> Json {
     Json::Obj(fields.into_iter().collect())
 }
 
-fn accept_loop(listener: TcpListener, tx: mpsc::Sender<Inbound>) {
+fn accept_loop(listener: TcpListener, tx: mpsc::Sender<Inbound>, read_timeout_ms: u64) {
     let next_id = Arc::new(AtomicU64::new(0));
     for stream in listener.incoming() {
         let Ok(stream) = stream else { continue };
         let tx = tx.clone();
         let ids = Arc::clone(&next_id);
-        thread::spawn(move || reader_loop(stream, tx, ids));
+        thread::spawn(move || reader_loop(stream, tx, ids, read_timeout_ms));
+    }
+}
+
+/// Hard cap on one protocol frame (a newline-terminated request line):
+/// a client streaming an unterminated line is cut off here instead of
+/// growing the reader's buffer without bound. Generous next to
+/// `MAX_PROMPT_BYTES` — the cap bounds memory *before* parsing, the
+/// prompt limit rejects oversized prompts *after*.
+const MAX_FRAME_BYTES: usize = 64 * 1024;
+
+/// Read one newline-terminated frame under the connection's read
+/// timeout. `Ok(Some(line))` is a frame (terminator stripped),
+/// `Ok(None)` is clean EOF; `InvalidData` means the frame ran past
+/// `MAX_FRAME_BYTES`, `WouldBlock`/`TimedOut` means the client went
+/// silent for the whole timeout window.
+fn read_frame(
+    reader: &mut BufReader<TcpStream>,
+    buf: &mut Vec<u8>,
+) -> std::io::Result<Option<String>> {
+    buf.clear();
+    loop {
+        let chunk = reader.fill_buf()?;
+        if chunk.is_empty() {
+            // EOF: yield a trailing unterminated frame, then None
+            return Ok(if buf.is_empty() {
+                None
+            } else {
+                Some(String::from_utf8_lossy(buf).into_owned())
+            });
+        }
+        let (used, done) = match chunk.iter().position(|&b| b == b'\n') {
+            Some(pos) => {
+                buf.extend_from_slice(&chunk[..pos]);
+                (pos + 1, true)
+            }
+            None => {
+                buf.extend_from_slice(chunk);
+                (chunk.len(), false)
+            }
+        };
+        reader.consume(used);
+        if buf.len() > MAX_FRAME_BYTES {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("frame exceeds {MAX_FRAME_BYTES} bytes"),
+            ));
+        }
+        if done {
+            return Ok(Some(String::from_utf8_lossy(buf).into_owned()));
+        }
     }
 }
 
 /// Per-connection reader: parse request lines into the admission queue;
 /// answer malformed lines inline with an error object (ordered with the
 /// coordinator's responses by the connection's writer-thread channel).
-fn reader_loop(stream: TcpStream, tx: mpsc::Sender<Inbound>, ids: Arc<AtomicU64>) {
+/// Frames are read through `read_frame` under `read_timeout_ms`, so a
+/// stalled or hostile client costs one bounded buffer and then its
+/// connection — dropping the read half leaves the writer thread's clone
+/// of the socket open, so responses already queued still flow.
+fn reader_loop(
+    stream: TcpStream,
+    tx: mpsc::Sender<Inbound>,
+    ids: Arc<AtomicU64>,
+    read_timeout_ms: u64,
+) {
     let Ok(write_half) = stream.try_clone() else { return };
     let writer = ConnTx::spawn(write_half);
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let Ok(line) = line else { break };
+    if read_timeout_ms > 0 {
+        let _ = stream.set_read_timeout(Some(Duration::from_millis(read_timeout_ms)));
+    }
+    let mut reader = BufReader::new(stream);
+    let mut buf = Vec::new();
+    loop {
+        let line = match read_frame(&mut reader, &mut buf) {
+            Ok(Some(line)) => line,
+            Ok(None) => break, // clean EOF
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                // oversized frame: one error reply, then the connection
+                // is done — the client has already proven it won't frame
+                let err = Json::Obj(
+                    [("error".to_string(), Json::Str(format!("{e}")))].into(),
+                );
+                writer.send_line(jwrite(&err));
+                break;
+            }
+            // read timeout (WouldBlock on unix, TimedOut on windows) or
+            // any socket error: drop the connection's read half
+            Err(_) => break,
+        };
         if line.trim().is_empty() {
             continue;
         }
         if let Ok(j) = parse(&line) {
-            if j.get("cmd").and_then(Json::as_str) == Some("stats") {
-                let inb = Inbound::Stats {
-                    tag: j.get("tag").cloned(),
-                    conn: writer.clone(),
-                };
-                if tx.send(inb).is_err() {
-                    break; // coordinator exited
+            match j.get("cmd").and_then(Json::as_str) {
+                Some("stats") => {
+                    let inb = Inbound::Stats {
+                        tag: j.get("tag").cloned(),
+                        conn: writer.clone(),
+                    };
+                    if tx.send(inb).is_err() {
+                        break; // coordinator exited
+                    }
+                    continue;
                 }
-                continue;
+                Some("shutdown") => {
+                    let inb = Inbound::Shutdown {
+                        tag: j.get("tag").cloned(),
+                        conn: writer.clone(),
+                    };
+                    if tx.send(inb).is_err() {
+                        break; // coordinator exited
+                    }
+                    continue;
+                }
+                _ => {}
             }
         }
         let id = ids.fetch_add(1, Ordering::Relaxed);
@@ -591,6 +773,7 @@ mod tests {
             batch_peak: 4,
             finished_us: 400.0,
             error: None,
+            fault_cause: None,
         };
         let j = response_json(&c, Some(Json::Str("t".into())));
         assert_eq!(j.get("id").and_then(Json::as_usize), Some(3));
@@ -602,5 +785,39 @@ mod tests {
         // round-trips through the wire format
         let wire = jwrite(&j);
         assert_eq!(parse(&wire).unwrap(), j);
+    }
+
+    #[test]
+    fn error_response_carries_partial_output_and_fault_cause() {
+        let c = ServeCompletion {
+            id: 5,
+            text: b"part".to_vec(),
+            tokens: 4,
+            arrival_us: 10.0,
+            queue_wait_us: 5.0,
+            prefill_us: 100.0,
+            decode_us: 200.0,
+            stall: crate::store::StallSplit::default(),
+            degraded: crate::store::DegradeCount::default(),
+            slo_us: None,
+            batch_peak: 1,
+            finished_us: 400.0,
+            error: Some("node 1 down".to_string()),
+            fault_cause: Some(crate::store::FaultCause::NodeDown),
+        };
+        let j = error_json(&c, c.error.as_deref().unwrap(), Some(Json::Num(7.0)));
+        assert_eq!(j.get("error").and_then(Json::as_str), Some("node 1 down"));
+        // the partial output produced before the fault rides along
+        assert_eq!(j.get("text").and_then(Json::as_str), Some("part"));
+        assert_eq!(j.get("tokens").and_then(Json::as_usize), Some(4));
+        assert_eq!(j.get("fault_cause").and_then(Json::as_str), Some("node-down"));
+        assert_eq!(j.get("tag").and_then(Json::as_usize), Some(7));
+        let wire = jwrite(&j);
+        assert_eq!(parse(&wire).unwrap(), j);
+        // a plain backend failure has no fault_cause field at all
+        let plain = ServeCompletion { fault_cause: None, ..c };
+        let j = error_json(&plain, "bad prompt", None);
+        assert!(j.get("fault_cause").is_none());
+        assert!(j.get("tag").is_none());
     }
 }

@@ -44,13 +44,92 @@ pub use policy::{
     SparsityPolicy, DEFAULT_SPARSITY_DECAY, SPARSITY_MIN_ADMIT,
 };
 pub use prefetch::{
-    DegradeCount, DeviceStats, PinnedPool, PrefetchPipeline, StallCause, StallSplit,
-    StoreStats,
+    DegradeCount, DeviceStats, FaultCause, PinnedPool, PrefetchPipeline, StallCause,
+    StallSplit, StoreStats,
 };
 
 pub use crate::config::{ResidencyKind, ShardPolicy};
 
 pub type ExpertKey = (usize, usize); // (layer, expert)
+
+/// Which transfer link a fault schedule's `LinkDegrade` flaps
+/// (DESIGN.md §12): the host↔device PCIe path or the node↔node network
+/// path. The peer link is not flappable — the schedule targets the two
+/// links the demand path prices fetches against.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LinkId {
+    Pcie,
+    Net,
+}
+
+impl LinkId {
+    pub fn tag(self) -> u8 {
+        match self {
+            LinkId::Pcie => 0,
+            LinkId::Net => 1,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<Self> {
+        match tag {
+            0 => Some(LinkId::Pcie),
+            1 => Some(LinkId::Net),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LinkId::Pcie => "pcie",
+            LinkId::Net => "net",
+        }
+    }
+}
+
+/// One bandwidth-degradation window on a transfer link, installed at
+/// session setup from the fault schedule (absolute times on the
+/// deterministic clock, so installation order cannot matter). `factor`
+/// scales the link's effective bandwidth while `t0_us <= t < t1_us`:
+/// `0 < factor < 1` stretches demand-fetch durations by `1/factor`;
+/// `factor == 0` is a full outage — demand fetches cannot *start*
+/// inside the window and go through the retry/backoff gate instead.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkWindow {
+    pub link: LinkId,
+    pub factor: f64,
+    pub t0_us: f64,
+    pub t1_us: f64,
+}
+
+/// Bounded-exponential-backoff retry policy for demand fetches that hit
+/// a link outage (DESIGN.md §12): probe k waits `backoff_base_us · 2^k`
+/// after the blocked attempt, up to `max_attempts` probes; the first
+/// probe clear of every outage window issues the fetch. Exhaustion
+/// falls back to the little tier when it holds the key, else charges a
+/// stall to the outage's end. Absent (the default), outages are
+/// fail-fast: the request errors with `FaultCause::LinkOutage`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    pub max_attempts: u32,
+    pub backoff_base_us: f64,
+}
+
+/// What a device drop tore down and salvaged (DESIGN.md §12) — the
+/// conservation accounting the random-fault property suite checks:
+/// `moved_bytes + dropped_bytes` equals the dead device's resident
+/// bytes at the drop.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct DeviceDownReport {
+    /// in-flight transfers toward the device voided mid-wire
+    pub cancelled: usize,
+    /// resident experts re-homed onto surviving peers
+    pub moved_keys: usize,
+    pub moved_bytes: f64,
+    /// resident experts with no surviving free capacity — lost with the
+    /// device (a later demand fetch re-pulls them)
+    pub dropped_keys: usize,
+    pub dropped_bytes: f64,
+}
 
 /// Unified residency facade: per-device resident sets + prefetch pipeline
 /// + placement + popularity tracking + clock. `P` is the per-transfer
@@ -112,6 +191,21 @@ pub struct ExpertStore<P = ()> {
     little_bytes: Vec<usize>,
     /// per-device little-tier byte budget (`little_frac` of the budget)
     little_budget: usize,
+    /// devices dropped by the fault schedule (DESIGN.md §12): a dead
+    /// device is never a home, copy target or replica holder again this
+    /// session. All-false unless `device_down` ran.
+    dead: Vec<bool>,
+    /// link bandwidth windows from the fault schedule, installed at
+    /// setup; empty unless faults are configured, in which case every
+    /// factor read returns 1.0 and nothing changes
+    link_windows: Vec<LinkWindow>,
+    /// bounded-backoff policy for outage-blocked demand fetches; None =
+    /// fail-fast (the request errors with `FaultCause::LinkOutage`)
+    retry_policy: Option<RetryPolicy>,
+    /// fault causes recorded against requesters that could not be saved
+    /// (BTreeMap: deterministic), drained on retirement into the error
+    /// completion's `fault_cause`
+    fault_causes: BTreeMap<u64, FaultCause>,
 }
 
 impl<P> ExpertStore<P> {
@@ -175,6 +269,10 @@ impl<P> ExpertStore<P> {
             little_pools: vec![BTreeSet::new(); n],
             little_bytes: vec![0; n],
             little_budget,
+            dead: vec![false; n],
+            link_windows: Vec::new(),
+            retry_policy: None,
+            fault_causes: BTreeMap::new(),
         }
     }
 
@@ -241,10 +339,40 @@ impl<P> ExpertStore<P> {
             || self.placement.replicate_top > 0
         {
             if let Some(dev) = self.home_map.get(&key) {
-                return *dev;
+                return self.live_home(*dev);
             }
         }
-        self.placement.home(key)
+        self.live_home(self.placement.home(key))
+    }
+
+    /// Dead-device remap (DESIGN.md §12): a key whose assigned home
+    /// dropped resolves to the next alive device in id order, for EVERY
+    /// shard policy — the static seed is not rewritten, so the remap is
+    /// a pure function of the dead mask and two runs with the same
+    /// fault schedule agree. With no faults the mask is all-false and
+    /// this is the identity.
+    fn live_home(&self, dev: DeviceId) -> DeviceId {
+        if !self.dead[dev] {
+            return dev;
+        }
+        let n = self.devices.len();
+        for step in 1..n {
+            let d = (dev + step) % n;
+            if !self.dead[d] {
+                return d;
+            }
+        }
+        dev // every device is dead: the node is gone anyway
+    }
+
+    /// Is `dev` still alive under the fault schedule?
+    pub fn device_alive(&self, dev: DeviceId) -> bool {
+        !self.dead[dev]
+    }
+
+    /// Surviving devices (all of them unless `device_down` ran).
+    pub fn devices_alive(&self) -> usize {
+        self.dead.iter().filter(|d| !**d).count()
     }
 
     // ---------------------------------------------------------- timeline
@@ -601,7 +729,7 @@ impl<P> ExpertStore<P> {
             return; // a copy survives elsewhere — nothing to save
         }
         let to = (0..self.devices.len())
-            .filter(|d| *d != from && self.devices[*d].free_bytes() >= bytes)
+            .filter(|d| *d != from && !self.dead[*d] && self.devices[*d].free_bytes() >= bytes)
             .max_by_key(|d| self.devices[*d].free_bytes());
         let Some(to) = to else { return };
         let dur = self.placement.topo.p2p.copy_us((bytes as f64).max(1.0));
@@ -672,10 +800,15 @@ impl<P> ExpertStore<P> {
             homes.push(h);
             load[h] += *mass;
         }
+        // dead devices carry no load and must attract none (§12)
+        let alive: Vec<DeviceId> = (0..n).filter(|d| !self.dead[*d]).collect();
+        if alive.len() <= 1 {
+            return;
+        }
         let mut moves: Vec<(ExpertKey, DeviceId, DeviceId)> = Vec::new();
         for _ in 0..masses.len() {
-            let (mut hi, mut lo) = (0, 0);
-            for d in 1..n {
+            let (mut hi, mut lo) = (alive[0], alive[0]);
+            for &d in &alive[1..] {
                 if load[d] > load[hi] {
                     hi = d;
                 }
@@ -773,7 +906,8 @@ impl<P> ExpertStore<P> {
                 continue;
             }
             // peers by replica headroom, deterministic tie on device id
-            let mut peers: Vec<DeviceId> = (0..n).filter(|d| *d != home).collect();
+            let mut peers: Vec<DeviceId> =
+                (0..n).filter(|d| *d != home && !self.dead[*d]).collect();
             peers.sort_by_key(|d| (self.replica_bytes[*d], *d));
             let mut placed = Vec::new();
             for d in peers.into_iter().take(copies) {
@@ -1107,21 +1241,33 @@ impl<P> ExpertStore<P> {
         }
     }
 
+    /// Stretch a demand-fetch duration by the link's degrade factor at
+    /// the clock's now (DESIGN.md §12): a window at factor `f` divides
+    /// delivered bandwidth by `1/f`, so the copy takes `dur / f`. With
+    /// no covering window the factor is 1.0 and this is the identity —
+    /// fault-free runs price fetches bit-identically to PR 9. Callers
+    /// gate full outages (factor 0) with `outage_until` before fetching.
+    fn link_scaled(&self, link: LinkId, dur: f64) -> f64 {
+        let f = self.link_factor_at(link, self.clock.now_us());
+        if f > 0.0 && f < 1.0 { dur / f } else { dur }
+    }
+
     /// Solo-copy duration for a demand fetch of `key` at `bytes`: the
     /// host link when the home device's node can stage it from host RAM
     /// — or the topology is not clustered at all, where this is
     /// bit-identical to pricing against `h2d` directly — else the
     /// latency-dominated network link, with the pulled bytes adopted
     /// into the home node's pool and counted as cross-node traffic.
+    /// Either duration stretches under a covering link-degrade window.
     pub fn demand_link_us(&mut self, key: ExpertKey, bytes: f64) -> f64 {
         if !self.placement.topo.clustered() {
-            return self.placement.topo.h2d.copy_us(bytes);
+            return self.link_scaled(LinkId::Pcie, self.placement.topo.h2d.copy_us(bytes));
         }
         let node = self.local_node_of(self.home(key));
         if self.host_pools[node].contains(&key) {
-            return self.placement.topo.h2d.copy_us(bytes);
+            return self.link_scaled(LinkId::Pcie, self.placement.topo.h2d.copy_us(bytes));
         }
-        let dur = self.placement.topo.net.copy_us(bytes);
+        let dur = self.link_scaled(LinkId::Net, self.placement.topo.net.copy_us(bytes));
         self.net_pulls += 1;
         self.net_bytes += bytes;
         self.host_adopt(node, key, bytes as usize);
@@ -1135,13 +1281,13 @@ impl<P> ExpertStore<P> {
     /// happens must not move accounting.
     pub fn peek_demand_link_us(&self, key: ExpertKey, bytes: f64) -> f64 {
         if !self.placement.topo.clustered() {
-            return self.placement.topo.h2d.copy_us(bytes);
+            return self.link_scaled(LinkId::Pcie, self.placement.topo.h2d.copy_us(bytes));
         }
         let node = self.local_node_of(self.home(key));
         if self.host_pools[node].contains(&key) {
-            return self.placement.topo.h2d.copy_us(bytes);
+            return self.link_scaled(LinkId::Pcie, self.placement.topo.h2d.copy_us(bytes));
         }
-        self.placement.topo.net.copy_us(bytes)
+        self.link_scaled(LinkId::Net, self.placement.topo.net.copy_us(bytes))
     }
 
     /// Pull a `key` resident only on a device of *another node* — the
@@ -1236,6 +1382,192 @@ impl<P> ExpertStore<P> {
     /// Bytes moved over the network link so far.
     pub fn net_bytes(&self) -> f64 {
         self.net_bytes
+    }
+
+    // ------------------------------------------- faults (DESIGN.md §12)
+
+    /// Install one link bandwidth window from the fault schedule. Done
+    /// at session setup with absolute times, so the resulting factor
+    /// reads are a pure function of the schedule and the clock.
+    pub fn install_link_window(&mut self, w: LinkWindow) {
+        self.link_windows.push(w);
+    }
+
+    /// Install the bounded-backoff retry policy (None = fail-fast).
+    pub fn set_retry_policy(&mut self, policy: Option<RetryPolicy>) {
+        self.retry_policy = policy;
+    }
+
+    pub fn retry_policy(&self) -> Option<RetryPolicy> {
+        self.retry_policy
+    }
+
+    /// Effective bandwidth factor of `link` at time `t`: the product of
+    /// every covering window's factor (1.0 with no windows — the
+    /// fault-free identity). A zero factor means full outage.
+    pub fn link_factor_at(&self, link: LinkId, t: f64) -> f64 {
+        let mut f = 1.0;
+        for w in &self.link_windows {
+            if w.link == link && t >= w.t0_us && t < w.t1_us {
+                f *= w.factor;
+            }
+        }
+        f
+    }
+
+    /// If `link` is fully out at time `t`, the latest end among the
+    /// covering zero-factor windows; None when a fetch may start.
+    pub fn outage_until(&self, link: LinkId, t: f64) -> Option<f64> {
+        let mut end: Option<f64> = None;
+        for w in &self.link_windows {
+            if w.link == link && w.factor == 0.0 && t >= w.t0_us && t < w.t1_us {
+                end = Some(end.map_or(w.t1_us, |e: f64| e.max(w.t1_us)));
+            }
+        }
+        end
+    }
+
+    /// Which link a demand fetch of `key` would ride — `demand_link_us`'s
+    /// routing rule, read-only: PCIe when unclustered or the home node
+    /// stages the key in host RAM, else the network link.
+    pub fn demand_link_of(&self, key: ExpertKey) -> LinkId {
+        if !self.placement.topo.clustered() {
+            return LinkId::Pcie;
+        }
+        let node = self.local_node_of(self.home(key));
+        if self.host_pools[node].contains(&key) {
+            LinkId::Pcie
+        } else {
+            LinkId::Net
+        }
+    }
+
+    /// Charge `n` bounded-backoff retries to the current attribution
+    /// requester (ledger-exact, like stalls and degraded hits).
+    pub fn charge_retries(&mut self, n: u64) {
+        self.prefetch.stats.charge_retries(self.attr, n);
+    }
+
+    /// Cumulative retries charged to requester `id`.
+    pub fn retries_of(&self, id: u64) -> u64 {
+        self.prefetch
+            .stats
+            .attributed_retries
+            .get(&id)
+            .copied()
+            .unwrap_or_default()
+    }
+
+    /// Remove and return requester `id`'s retry-ledger entry
+    /// (`take_attribution`'s twin for the retry channel).
+    pub fn take_retries_attribution(&mut self, id: u64) -> u64 {
+        self.prefetch.stats.retire_retries(id)
+    }
+
+    /// Record that the current attribution requester hit an unavoidable
+    /// fault (first cause wins); drained into the error completion by
+    /// `take_fault`.
+    pub fn record_fault(&mut self, cause: FaultCause) {
+        self.fault_causes.entry(self.attr).or_insert(cause);
+    }
+
+    /// Remove and return requester `id`'s recorded fault cause.
+    pub fn take_fault(&mut self, id: u64) -> Option<FaultCause> {
+        self.fault_causes.remove(&id)
+    }
+
+    /// Requester `id`'s recorded fault cause, without draining it.
+    pub fn fault_of(&self, id: u64) -> Option<FaultCause> {
+        self.fault_causes.get(&id).copied()
+    }
+
+    /// Drop device `dev` (DESIGN.md §12): tear down its in-flight
+    /// transfers, roll back partial migrations that pointed at it, and
+    /// re-home its resident set to surviving peers hottest-first
+    /// through the migration copy path (batched per-destination plans,
+    /// coalesced when the placement coalesces, into *free capacity
+    /// only* — no cascading evictions, so bytes are conserved:
+    /// moved + dropped equals the device's resident bytes). Replica
+    /// copies and the little pool die with the device. Idempotent.
+    pub fn device_down(&mut self, dev: DeviceId) -> DeviceDownReport {
+        let mut rep = DeviceDownReport::default();
+        if self.dead[dev] {
+            return rep;
+        }
+        self.dead[dev] = true;
+        rep.cancelled = self.prefetch.cancel_device(dev).len();
+        self.little_pools[dev].clear();
+        self.little_bytes[dev] = 0;
+        // dead replica holders stop resolving; entries they carried
+        // alone disappear (the home copy, if any, still serves)
+        let mut gone: Vec<ExpertKey> = Vec::new();
+        for (key, (_, holders)) in self.replicas.iter_mut() {
+            holders.retain(|d| *d != dev);
+            if holders.is_empty() {
+                gone.push(*key);
+            }
+        }
+        for key in gone {
+            self.replicas.remove(&key);
+        }
+        self.replica_bytes[dev] = 0;
+        // partial-migration rollback: overlay homes on the dead device
+        // revert to the (remapped) static seed
+        self.home_map.retain(|_, d| *d != dev);
+        // hottest-first re-home of the resident set: mass desc, key asc
+        // (mass is 0 for placements that never feed the tracker, so the
+        // order degrades to key asc — still deterministic)
+        let mut keys: Vec<(ExpertKey, usize, f64)> = self.devices[dev]
+            .keys()
+            .into_iter()
+            .map(|k| (k, self.devices[dev].bytes_of(k).unwrap_or(0), self.popularity.mass(k)))
+            .collect();
+        keys.sort_by(|a, b| b.2.total_cmp(&a.2).then(a.0.cmp(&b.0)));
+        let n = self.devices.len();
+        let mut per_dst: Vec<Vec<(f64, f64, f64)>> = vec![Vec::new(); n];
+        for (key, bytes, _) in keys {
+            self.devices[dev].remove(key);
+            let target = self.home(key); // remapped off the dead device
+            if target != dev
+                && !self.devices[target].contains(key)
+                && self.devices[target].free_bytes() >= bytes
+            {
+                self.devices[target].insert(key, bytes);
+                per_dst[target].push(self.p2p_item(bytes));
+                rep.moved_keys += 1;
+                rep.moved_bytes += bytes as f64;
+            } else {
+                rep.dropped_keys += 1;
+                rep.dropped_bytes += bytes as f64;
+            }
+        }
+        self.flush_copy_batches(&per_dst);
+        rep
+    }
+
+    /// A rejoining node lost its memory while down (DESIGN.md §12):
+    /// clear every resident set, host pool, little pool, replica and
+    /// overlay home so the caller can re-seed from scratch (little
+    /// pools locally, the host pool over the network via
+    /// `net_restore`). Movement/stall accounting and the clock carry
+    /// across — the session's ledgers are continuous.
+    pub fn wipe_for_rejoin(&mut self) {
+        for d in &mut self.devices {
+            for key in d.keys() {
+                d.remove(key);
+            }
+        }
+        for p in &mut self.host_pools {
+            p.clear();
+        }
+        self.host_bytes.iter_mut().for_each(|b| *b = 0);
+        for p in &mut self.little_pools {
+            p.clear();
+        }
+        self.little_bytes.iter_mut().for_each(|b| *b = 0);
+        self.replicas.clear();
+        self.replica_bytes.iter_mut().for_each(|b| *b = 0);
+        self.home_map.clear();
     }
 
     // -------------------------------------------------- transfers (cont.)
@@ -1743,6 +2075,143 @@ mod tests {
         // restoring already-staged keys again is all handshakes
         s.net_restore(&[(0, 1)], 100);
         assert_eq!(s.net_bytes(), 200.0);
+    }
+
+    // ------------------------------------------- faults (DESIGN.md §12)
+
+    #[test]
+    fn link_windows_stretch_demand_pricing_and_empty_schedule_is_identity() {
+        let mut s: ExpertStore = ExpertStore::with_virtual_clock(1000, ResidencyKind::Lru);
+        let base = s.placement().topo.h2d.copy_us(100.0);
+        // no windows installed: pricing is the PR 9 identity, bit-exactly
+        assert_eq!(s.peek_demand_link_us((0, 0), 100.0), base);
+        assert_eq!(s.demand_link_us((0, 0), 100.0), base);
+        s.install_link_window(LinkWindow {
+            link: LinkId::Pcie,
+            factor: 0.5,
+            t0_us: 10.0,
+            t1_us: 20.0,
+        });
+        // clock before the window: untouched
+        assert_eq!(s.peek_demand_link_us((0, 0), 100.0), base);
+        s.tick(15.0); // inside: bandwidth halved, duration doubled
+        assert_eq!(s.peek_demand_link_us((0, 0), 100.0), base * 2.0);
+        assert_eq!(s.demand_link_us((0, 0), 100.0), base * 2.0);
+        s.tick(10.0); // past t1: identity again (half-open window)
+        assert_eq!(s.peek_demand_link_us((0, 0), 100.0), base);
+        // overlapping windows compound multiplicatively
+        s.install_link_window(LinkWindow {
+            link: LinkId::Pcie,
+            factor: 0.5,
+            t0_us: 24.0,
+            t1_us: 30.0,
+        });
+        s.install_link_window(LinkWindow {
+            link: LinkId::Pcie,
+            factor: 0.5,
+            t0_us: 24.0,
+            t1_us: 30.0,
+        });
+        assert_eq!(s.link_factor_at(LinkId::Pcie, 26.0), 0.25);
+        // the net link is unaffected by PCIe windows
+        assert_eq!(s.link_factor_at(LinkId::Net, 26.0), 1.0);
+    }
+
+    #[test]
+    fn outage_until_reports_latest_covering_zero_window() {
+        let mut s: ExpertStore = ExpertStore::with_virtual_clock(1000, ResidencyKind::Lru);
+        s.install_link_window(LinkWindow {
+            link: LinkId::Net,
+            factor: 0.0,
+            t0_us: 10.0,
+            t1_us: 30.0,
+        });
+        s.install_link_window(LinkWindow {
+            link: LinkId::Net,
+            factor: 0.0,
+            t0_us: 20.0,
+            t1_us: 50.0,
+        });
+        assert_eq!(s.outage_until(LinkId::Net, 5.0), None);
+        assert_eq!(s.outage_until(LinkId::Net, 15.0), Some(30.0));
+        assert_eq!(s.outage_until(LinkId::Net, 25.0), Some(50.0), "latest end wins");
+        assert_eq!(s.outage_until(LinkId::Net, 50.0), None, "half-open at t1");
+        // a degraded (non-zero) window is not an outage
+        assert_eq!(s.outage_until(LinkId::Pcie, 15.0), None);
+    }
+
+    #[test]
+    fn device_down_conserves_bytes_and_voids_inflight() {
+        let mut s = sharded(2, ShardPolicy::Layer, 1000);
+        assert!(s.admit((0, 0), 100));
+        assert!(s.admit((0, 1), 200));
+        s.begin_prefetch((0, 2), 50.0, 64.0, ()); // in flight toward device 0
+        let before = s.used_of(0);
+        let rep = s.device_down(0);
+        assert_eq!(rep.cancelled, 1, "mid-wire transfer torn down");
+        assert!(!s.inflight((0, 2)));
+        assert_eq!(rep.moved_keys, 2);
+        assert_eq!(
+            rep.moved_bytes + rep.dropped_bytes,
+            before as f64,
+            "conservation: moved + dropped equals the dead resident bytes"
+        );
+        assert_eq!(rep.dropped_keys, 0, "survivor had free capacity for everything");
+        assert_eq!(s.used_of(0), 0);
+        assert_eq!(s.used_of(1), before);
+        // homes remap off the dead device for every key it owned
+        assert_eq!(s.home((0, 0)), 1);
+        assert_eq!(s.lookup((0, 0)), Lookup::Local(1));
+        assert!(!s.device_alive(0));
+        assert_eq!(s.devices_alive(), 1);
+        // idempotent: a second drop reports nothing new
+        assert_eq!(s.device_down(0), DeviceDownReport::default());
+    }
+
+    #[test]
+    fn device_down_drops_what_cannot_fit_without_evicting_survivors() {
+        let mut s = sharded(2, ShardPolicy::Layer, 250);
+        assert!(s.admit((0, 0), 100));
+        assert!(s.admit((0, 1), 100));
+        assert!(s.admit((1, 0), 200)); // survivor nearly full
+        let rep = s.device_down(0);
+        assert_eq!(rep.moved_keys + rep.dropped_keys, 2);
+        assert_eq!(rep.dropped_keys, 1, "no cascading evictions on the survivor");
+        assert_eq!(rep.moved_bytes + rep.dropped_bytes, 200.0);
+        assert!(s.contains((1, 0)), "survivor's own residents untouched");
+    }
+
+    #[test]
+    fn wipe_for_rejoin_clears_residency_but_keeps_ledgers_and_clock() {
+        let mut s = spanning(2, 2, 1000);
+        assert!(s.admit((0, 0), 100));
+        s.seed_host_pool(0, &[(0, 1)], 100);
+        s.seed_little_pool(&[(0, 2)], 40);
+        let ready = s.demand_fetch(30.0, 64.0);
+        s.stall_until(ready);
+        let (stall, now) = (s.stats().stall_us, s.now_us());
+        s.wipe_for_rejoin();
+        assert_eq!(s.resident(), 0);
+        assert!(s.host_pool_keys(0).is_empty());
+        assert!(!s.little_resident((0, 2)));
+        assert_eq!(s.stats().stall_us, stall, "ledgers are continuous across rejoin");
+        assert_eq!(s.now_us(), now);
+    }
+
+    #[test]
+    fn fault_causes_record_first_and_drain_once() {
+        let mut s: ExpertStore = ExpertStore::with_virtual_clock(1000, ResidencyKind::Lru);
+        s.set_attribution(3);
+        s.record_fault(FaultCause::LinkOutage);
+        s.record_fault(FaultCause::RetryExhausted); // first cause wins
+        s.charge_retries(2);
+        s.charge_retries(0); // no-op keeps the ledger clean
+        assert_eq!(s.retries_of(3), 2);
+        assert_eq!(s.take_fault(3), Some(FaultCause::LinkOutage));
+        assert_eq!(s.take_fault(3), None);
+        assert_eq!(s.take_retries_attribution(3), 2);
+        assert_eq!(s.stats().retries, 2, "global retry total survives retirement");
+        assert_eq!(s.stats().retired_retries, 2);
     }
 
     #[test]

@@ -58,6 +58,36 @@ impl StallSplit {
     }
 }
 
+/// Why a request died (or nearly died) to a scheduled fault (DESIGN.md
+/// §12). Carried on error completions next to the partial output and
+/// echoed as a structured `fault_cause` field in the protocol response,
+/// so callers can tell an infrastructure fault from a bad request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultCause {
+    /// The node serving the request dropped with no survivor to
+    /// re-dispatch to.
+    NodeDown,
+    /// A demand fetch hit a link outage window with fail-fast semantics
+    /// (no retry policy installed).
+    LinkOutage,
+    /// Bounded-backoff retries exhausted without clearing the outage and
+    /// no degraded fallback held the expert.
+    RetryExhausted,
+    /// A device drop stranded the request's working set beyond recovery.
+    DeviceDown,
+}
+
+impl FaultCause {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultCause::NodeDown => "node-down",
+            FaultCause::LinkOutage => "link-outage",
+            FaultCause::RetryExhausted => "retry-exhausted",
+            FaultCause::DeviceDown => "device-down",
+        }
+    }
+}
+
 /// Degraded-execution counters (quality-elastic fallback, DESIGN.md
 /// §11): how many boundary resolutions ran the little-tier variant
 /// instead of stalling for the full expert, and how many full-expert
@@ -140,6 +170,15 @@ pub struct StoreStats {
     pub attributed_degraded: BTreeMap<u64, DegradeCount>,
     /// degraded counts of retired requesters — folded like `retired`
     pub retired_degraded: DegradeCount,
+    /// transfer retries issued under the bounded-backoff policy
+    /// (DESIGN.md §12) — global re-derived as retired_retries + the
+    /// key-order `attributed_retries` sum on every charge, the same
+    /// exactness contract as the stall and degraded ledgers
+    pub retries: u64,
+    /// per-requester retry ledger (BTreeMap: deterministic order)
+    pub attributed_retries: BTreeMap<u64, u64>,
+    /// retry counts of retired requesters — folded like `retired`
+    pub retired_retries: u64,
     /// per-device movement counters (primary; globals are derived)
     pub per_device: Vec<DeviceStats>,
 }
@@ -170,6 +209,9 @@ impl StoreStats {
             degraded_bytes: 0.0,
             attributed_degraded: BTreeMap::new(),
             retired_degraded: DegradeCount::default(),
+            retries: 0,
+            attributed_retries: BTreeMap::new(),
+            retired_retries: 0,
             per_device: vec![DeviceStats::default(); n_devices.max(1)],
         }
     }
@@ -222,6 +264,35 @@ impl StoreStats {
         self.retired_degraded.bytes += c.bytes;
         self.rederive_degraded();
         c
+    }
+
+    /// Charge `n` transfer retries to `who`, then re-derive the global
+    /// from the ledger — the `charge_stall` rule on the retry channel.
+    pub(crate) fn charge_retries(&mut self, who: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        *self.attributed_retries.entry(who).or_default() += n;
+        self.rederive_retries();
+    }
+
+    /// Retire `who`'s retry-ledger entry into `retired_retries` (the
+    /// `retire` twin for the retry channel). Returns the count retired.
+    pub(crate) fn retire_retries(&mut self, who: u64) -> u64 {
+        let Some(n) = self.attributed_retries.remove(&who) else {
+            return 0;
+        };
+        self.retired_retries += n;
+        self.rederive_retries();
+        n
+    }
+
+    fn rederive_retries(&mut self) {
+        let mut n = self.retired_retries;
+        for v in self.attributed_retries.values() {
+            n += v;
+        }
+        self.retries = n;
     }
 
     fn rederive_degraded(&mut self) {
@@ -553,6 +624,26 @@ impl<P> PrefetchPipeline<P> {
     pub fn take(&mut self, dev: DeviceId, key: ExpertKey) -> Option<(f64, P)> {
         self.inflight.remove(&(dev, key))
     }
+
+    /// Device-drop teardown (DESIGN.md §12): cancel every in-flight
+    /// transfer toward `dev` and return the cancelled keys in sorted
+    /// order (the inflight map is a HashMap, so the drain order is made
+    /// deterministic explicitly). The bus timeline is left as-is — the
+    /// bytes already occupied the wire before the drop; only the
+    /// landings are voided so nothing can be consumed off a dead device.
+    pub fn cancel_device(&mut self, dev: DeviceId) -> Vec<ExpertKey> {
+        let mut keys: Vec<ExpertKey> = self
+            .inflight
+            .keys()
+            .filter(|(d, _)| *d == dev)
+            .map(|(_, k)| *k)
+            .collect();
+        keys.sort_unstable();
+        for &k in &keys {
+            self.inflight.remove(&(dev, k));
+        }
+        keys
+    }
 }
 
 /// Simulated pinned staging-buffer pool for the transfer engine: fixed
@@ -706,6 +797,36 @@ mod tests {
         p.begin(0, (1, 2), 10.0, 8.0, 0.0, vec![true, false]);
         let (_, mask) = p.take(0, (1, 2)).unwrap();
         assert_eq!(mask, vec![true, false]);
+    }
+
+    #[test]
+    fn cancel_device_voids_inflight_landings_deterministically() {
+        let mut p: PrefetchPipeline = PrefetchPipeline::new(2);
+        p.begin(0, (1, 3), 10.0, 8.0, 0.0, ());
+        p.begin(0, (0, 5), 10.0, 8.0, 0.0, ());
+        p.begin(1, (0, 5), 10.0, 8.0, 0.0, ());
+        let cancelled = p.cancel_device(0);
+        assert_eq!(cancelled, vec![(0, 5), (1, 3)], "sorted drain order");
+        assert!(!p.inflight(0, (1, 3)) && !p.inflight(0, (0, 5)));
+        assert!(p.inflight(1, (0, 5)), "other devices keep their transfers");
+        assert!(p.cancel_device(0).is_empty());
+    }
+
+    #[test]
+    fn retry_ledger_rederives_exactly_like_stalls() {
+        let mut s = StoreStats::new(1);
+        s.charge_retries(7, 2);
+        s.charge_retries(9, 1);
+        s.charge_retries(7, 0); // zero charges are no-ops, no ledger entry
+        assert_eq!(s.retries, 3);
+        assert_eq!(s.attributed_retries.len(), 2);
+        assert_eq!(s.retire_retries(7), 2);
+        assert_eq!(s.retired_retries, 2);
+        assert_eq!(s.retries, 3, "retiring never loses accounted retries");
+        assert_eq!(s.retire_retries(42), 0);
+        assert_eq!(s.retire_retries(9), 1);
+        assert!(s.attributed_retries.is_empty());
+        assert_eq!(s.retries, s.retired_retries);
     }
 
     #[test]

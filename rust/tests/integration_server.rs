@@ -22,27 +22,39 @@ type ServerHandle = (
     thread::JoinHandle<anyhow::Result<ServeOutcome<SimServeBackend>>>,
 );
 
+fn sim_server_opts(
+    max_requests: usize,
+    max_batch: usize,
+    gather_ms: u64,
+    record: Option<PathBuf>,
+) -> ServerOpts {
+    ServerOpts {
+        port: 0,
+        system: SystemConfig::new(SystemKind::Floe),
+        vram_budget_bytes: 0,
+        max_requests,
+        max_batch,
+        gather_ms,
+        record,
+        read_timeout_ms: 30_000,
+    }
+}
+
+fn sim_server_with(opts: ServerOpts) -> ServerHandle {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let params = SimParams::mixtral_on(RTX3090.clone(), opts.system.clone(), 14.0);
+    let handle = thread::spawn(move || serve_sim_listener(listener, params, opts));
+    (addr, handle)
+}
+
 fn sim_server_recording(
     max_requests: usize,
     max_batch: usize,
     gather_ms: u64,
     record: Option<PathBuf>,
 ) -> ServerHandle {
-    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = listener.local_addr().unwrap();
-    let system = SystemConfig::new(SystemKind::Floe);
-    let params = SimParams::mixtral_on(RTX3090.clone(), system.clone(), 14.0);
-    let opts = ServerOpts {
-        port: 0,
-        system,
-        vram_budget_bytes: 0,
-        max_requests,
-        max_batch,
-        gather_ms,
-        record,
-    };
-    let handle = thread::spawn(move || serve_sim_listener(listener, params, opts));
-    (addr, handle)
+    sim_server_with(sim_server_opts(max_requests, max_batch, gather_ms, record))
 }
 
 fn sim_server(max_requests: usize, max_batch: usize, gather_ms: u64) -> ServerHandle {
@@ -204,4 +216,126 @@ fn stats_rederived_offline_from_artifact_matches_live_protocol() {
     assert!(offline.ledger_exact, "quiescent session must re-derive the ledger exactly");
     assert_eq!(offline.requests, M as u64);
     assert_eq!(live.trim(), jwrite(&offline.to_json()));
+}
+
+/// Read robustness: a client that stalls mid-frame is dropped by the
+/// per-connection read timeout; the rest of the server never notices —
+/// a concurrent well-formed request is served in full.
+#[test]
+fn stalled_client_is_dropped_and_server_keeps_serving() {
+    let mut opts = sim_server_opts(1, 2, 0, None);
+    opts.read_timeout_ms = 200;
+    let (addr, server) = sim_server_with(opts);
+
+    // the stalled client: half a frame, then silence
+    let mut stalled = TcpStream::connect(addr).unwrap();
+    stalled.write_all(br#"{"prompt":"#).unwrap();
+    stalled.flush().unwrap();
+
+    // a healthy client is served while the stalled one waits out its cap
+    let mut conn = TcpStream::connect(addr).unwrap();
+    writeln!(conn, r#"{{"prompt":"still serving","max_tokens":5}}"#).unwrap();
+    let mut line = String::new();
+    BufReader::new(conn).read_line(&mut line).unwrap();
+    let j = parse(line.trim()).unwrap();
+    assert_eq!(j.get("tokens").and_then(Json::as_usize), Some(5), "{j:?}");
+    server.join().unwrap().unwrap();
+
+    // the reader timeout closes the stalled connection: its next read
+    // sees EOF (not a hang) once the writer thread winds down
+    stalled
+        .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+        .unwrap();
+    let mut buf = [0u8; 64];
+    let n = std::io::Read::read(&mut stalled, &mut buf).unwrap();
+    assert_eq!(n, 0, "stalled connection must be closed, got {n} bytes");
+}
+
+/// Read robustness: an unterminated frame past the 64 KiB cap gets one
+/// error reply and a closed connection instead of an unbounded buffer;
+/// the server keeps serving new connections.
+#[test]
+fn oversized_frame_is_rejected_with_bounded_memory() {
+    let (addr, server) = sim_server(1, 2, 0);
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    // one byte past the cap, then the terminator: every byte is consumed
+    // before the reader rejects, so the close is a clean FIN and the
+    // error line survives to the client
+    let mut frame = vec![b'x'; 64 * 1024 + 1];
+    frame.push(b'\n');
+    conn.write_all(&frame).unwrap();
+    let mut reader = BufReader::new(conn);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let err = parse(line.trim()).unwrap();
+    let msg = err.get("error").and_then(Json::as_str).unwrap_or_default();
+    assert!(msg.contains("frame exceeds"), "{err:?}");
+    // the connection is done after the rejection
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "connection must close");
+
+    // the server itself is unharmed
+    let mut conn = TcpStream::connect(addr).unwrap();
+    writeln!(conn, r#"{{"prompt":"after the flood","max_tokens":3}}"#).unwrap();
+    let mut line = String::new();
+    BufReader::new(conn).read_line(&mut line).unwrap();
+    let j = parse(line.trim()).unwrap();
+    assert_eq!(j.get("tokens").and_then(Json::as_usize), Some(3), "{j:?}");
+    server.join().unwrap().unwrap();
+}
+
+/// Graceful drain: `{"cmd":"shutdown"}` acks at once, finishes the
+/// in-flight requests, flushes the recording, and the (uncapped) server
+/// exits cleanly — no request is lost to the shutdown.
+#[test]
+fn shutdown_drains_in_flight_requests_and_flushes_recording() {
+    const M: usize = 2;
+    let path = std::env::temp_dir().join(format!("floe_drain_{}.fltl", std::process::id()));
+    // max_requests 0: without the shutdown command this server would run
+    // forever — the drain is the only exit
+    let (addr, server) = sim_server_recording(0, 2, 0, Some(path.clone()));
+
+    let mut conn = TcpStream::connect(addr).unwrap();
+    for i in 0..M {
+        writeln!(conn, r#"{{"prompt":"drain me","max_tokens":{},"tag":{i}}}"#, 3 + i).unwrap();
+    }
+    writeln!(conn, r#"{{"cmd":"shutdown","tag":"bye"}}"#).unwrap();
+    // half-close: the reader thread sees EOF instead of waiting out its
+    // read timeout, so the connection tears down as soon as the drain
+    // finishes
+    conn.shutdown(std::net::Shutdown::Write).unwrap();
+
+    // three lines come back: the shutdown ack plus both completions
+    // (order on the wire is not fixed — the ack races the decodes)
+    let mut reader = BufReader::new(conn);
+    let mut acks = 0usize;
+    let mut tokens = Vec::new();
+    for _ in 0..M + 1 {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = parse(line.trim()).unwrap();
+        if j.get("shutdown").and_then(Json::as_str) == Some("draining") {
+            assert_eq!(j.get("tag").and_then(Json::as_str), Some("bye"), "{j:?}");
+            acks += 1;
+        } else {
+            assert!(j.get("error").is_none(), "no request may fail the drain: {j:?}");
+            tokens.push(j.get("tokens").and_then(Json::as_usize).unwrap());
+        }
+    }
+    assert_eq!(acks, 1, "exactly one shutdown ack");
+    tokens.sort();
+    assert_eq!(tokens, vec![3, 4], "both in-flight requests completed");
+    // then EOF: the server is gone, not wedged
+    let mut line = String::new();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0);
+
+    // exits cleanly and the recording hit the disk with every completion
+    let out = server.join().unwrap().unwrap();
+    assert!(out.backend.store().stats().attributed.is_empty());
+    let bytes = std::fs::read(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let tl = Timeline::from_bytes(&bytes).unwrap();
+    let obs = tl.obs.as_ref().expect("drained recording carries observations");
+    assert_eq!(obs.completions.len(), M, "recording must include the drained batch");
 }

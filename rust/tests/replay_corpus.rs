@@ -88,6 +88,10 @@ fn corpus_cluster_shape() -> ClusterShape {
         vram_gb_total: 2.0 * serveload::DEFAULT_VRAM_GB,
         host_ram_gb: 64.0,
         failure: None,
+        // fault-free: FLAG_FAULTS stays clear and the committed bytes
+        // predate (and must survive) the fault-schedule extension
+        faults: Vec::new(),
+        retry: None,
     }
 }
 
